@@ -1,0 +1,44 @@
+//! Quickstart: schedule one INT8 GEMM across a simulated hybrid CPU with
+//! the paper's dynamic method and watch the ratio table converge.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dynpar::cpu::{presets, Isa};
+use dynpar::exec::{ParallelRuntime, PhantomWork};
+use dynpar::kernels::{cost, KernelClass};
+use dynpar::perf::PerfConfig;
+use dynpar::sched::DynamicScheduler;
+use dynpar::sim::{SimConfig, SimExecutor};
+
+fn main() {
+    // 1. a hybrid CPU: Intel Core Ultra 7 125H (4 P + 8 E + 2 LP-E cores)
+    let spec = presets::ultra_125h();
+    println!("CPU: {} with {} cores", spec.name, spec.n_cores());
+
+    // 2. the paper's loop: dynamic scheduler + per-core ratio table
+    let mut rt = ParallelRuntime::new(
+        SimExecutor::new(spec, SimConfig::noiseless()),
+        Box::new(DynamicScheduler),
+        PerfConfig::default(), // α = 0.3, ratios start at 1.0
+    );
+
+    // 3. the paper's Figure-2 GEMM: 1024×4096×4096 int8
+    let work = PhantomWork::new(cost::gemm_i8_cost(1024, 4096, 4096));
+
+    println!("\niter  latency      imbalance  P-core ratio");
+    for i in 0..10 {
+        let res = rt.run(&work);
+        let ratio = rt
+            .relative_ratios(KernelClass::GemmI8, Isa::AvxVnni)
+            .map(|r| r[0])
+            .unwrap_or(1.0);
+        println!(
+            "{i:>4}  {:>9.3} ms  {:>8.3}  {ratio:>6.2}",
+            res.wall_secs * 1e3,
+            res.imbalance()
+        );
+    }
+    println!("\nThe first iteration splits evenly (ratios = 1), so the E-cores");
+    println!("drag the wall time; after one measurement the table learns the");
+    println!("~2.9× P:E ratio and every core finishes simultaneously.");
+}

@@ -1,0 +1,67 @@
+//! Serving demo: start the TCP front-end on an ephemeral port, fire a few
+//! concurrent clients at it, and print the streamed responses + server
+//! metrics.
+//!
+//! Run: `cargo run --release --example serve_demo`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use dynpar::cpu::presets;
+use dynpar::engine::Engine;
+use dynpar::model::{ModelConfig, ModelWeights};
+use dynpar::perf::PerfConfig;
+use dynpar::sched::DynamicScheduler;
+use dynpar::server::{serve, ServerOpts};
+use dynpar::sim::{SimConfig, SimExecutor};
+
+fn main() {
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, 7));
+    let exec = SimExecutor::new(
+        presets::ultra_125h(),
+        SimConfig { execute_real: true, ..SimConfig::noiseless() },
+    );
+    let engine =
+        Engine::new(cfg, weights, exec, Box::new(DynamicScheduler), PerfConfig::default());
+    let handle = serve("127.0.0.1:0", engine, ServerOpts { max_batch: 4 }).unwrap();
+    println!("serving on {}\n", handle.addr);
+
+    let addr = handle.addr;
+    let clients: Vec<_> = (0..3)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                writeln!(
+                    stream,
+                    r#"{{"id": {i}, "prompt": [{}, {}, 3], "max_new_tokens": 6}}"#,
+                    i + 1,
+                    i + 2
+                )
+                .unwrap();
+                let reader = BufReader::new(stream);
+                for line in reader.lines() {
+                    let line = line.unwrap();
+                    println!("client {i} ← {line}");
+                    if line.contains("\"done\"") || line.contains("\"error\"") {
+                        break;
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    // query server metrics
+    let mut stream = TcpStream::connect(addr).unwrap();
+    writeln!(stream, r#"{{"cmd":"metrics"}}"#).unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    println!("\nserver metrics: {}", line.trim());
+
+    handle.shutdown();
+    println!("server shut down cleanly");
+}

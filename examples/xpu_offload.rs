@@ -1,0 +1,62 @@
+//! Extension demo (paper §4 future work): dispatch the prefill GEMM
+//! across hybrid compute units — CPU cores + NPU + iGPU — with the same
+//! ratio-learning split applied at device granularity.
+//!
+//! Run: `cargo run --release --example xpu_offload`
+
+use dynpar::cpu::{presets, Isa};
+use dynpar::kernels::cost;
+use dynpar::sim::xpu::{AcceleratorSpec, XpuSim};
+use dynpar::sim::SimConfig;
+
+fn main() {
+    let spec = presets::ultra_125h();
+    let cpu_ratios = spec.ideal_ratios(Isa::AvxVnni);
+    let mut x = XpuSim::new(
+        spec,
+        SimConfig::noiseless(),
+        vec![AcceleratorSpec::npu(), AcceleratorSpec::igpu()],
+    );
+
+    println!("prefill GEMM 1024x4096x4096 on ultra_125h + NPU + iGPU\n");
+    let c = cost::gemm_i8_cost(1024, 4096, 4096);
+    let cpu_only = x.cpu_only(&c, &cpu_ratios);
+    println!("CPU-only (dynamic over cores): {:.2} ms", cpu_only * 1e3);
+
+    println!("\niter  wall      cpu/npu/igpu units      device ratios");
+    for i in 0..12 {
+        let res = x.execute(&c, &cpu_ratios);
+        println!(
+            "{i:>4}  {:>6.2} ms  {:>4}/{:>4}/{:>4}          [{:.2}, {:.2}, {:.2}]",
+            res.wall_secs * 1e3,
+            res.device_units[0],
+            res.device_units[1],
+            res.device_units[2],
+            x.device_ratios[0],
+            x.device_ratios[1],
+            x.device_ratios[2],
+        );
+    }
+    let final_wall = x.execute(&c, &cpu_ratios).wall_secs;
+    println!(
+        "\nconverged hybrid-unit speedup vs CPU-only: x{:.2}",
+        cpu_only / final_wall
+    );
+
+    // the memory-bound decode GEMV barely gains: same bus, no new bandwidth
+    let g = cost::gemv_q4_cost(4096, 4096);
+    let mut x2 = XpuSim::new(
+        presets::ultra_125h(),
+        SimConfig::noiseless(),
+        vec![AcceleratorSpec::npu()],
+    );
+    let cpu_g = x2.cpu_only(&g, &cpu_ratios);
+    let mut wall_g = f64::INFINITY;
+    for _ in 0..15 {
+        wall_g = x2.execute(&g, &cpu_ratios).wall_secs;
+    }
+    println!(
+        "decode GEMV (memory-bound): x{:.2} — shared bus adds no bandwidth,\nwhich is why the paper targets the *prefill* phase with hybrid units.",
+        cpu_g / wall_g
+    );
+}

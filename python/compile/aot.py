@@ -1,0 +1,169 @@
+"""AOT entry point: lower the L2 model (+ standalone L1 kernels) to HLO text.
+
+HLO *text* (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Outputs (``--out-dir``, default ``../artifacts``):
+    tiny_decode.hlo.txt    decode_step  (S = 1)
+    tiny_prefill.hlo.txt   prefill_chunk (S = cfg.prefill_len)
+    micro_decode.hlo.txt / micro_prefill.hlo.txt   (smaller test model)
+    qgemv.hlo.txt          standalone fused-dequant GEMV  (runtime tests)
+    qgemm.hlo.txt          standalone u8×i8→i32 GEMM      (runtime tests)
+    manifest.json          parameter ABI for the Rust runtime
+
+Python runs only here (``make artifacts``); never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .model import MICRO, TINY, ModelConfig, make_decode_fn, make_prefill_fn, param_order
+
+_DTYPES = {"f32": jnp.float32, "i8": jnp.int8, "i32": jnp.int32, "u8": jnp.uint8}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (ids reassigned by the parser)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype: str):
+    return jax.ShapeDtypeStruct(tuple(shape), _DTYPES[dtype])
+
+
+def _model_entry(cfg: ModelConfig, which: str):
+    """Build (fn, arg_specs, param_meta) for decode/prefill of a config."""
+    kv = (cfg.n_layers, cfg.n_heads, cfg.t_max, cfg.head_dim)
+    params = param_order(cfg)
+    flat_specs = [_spec(shape, dt) for _, shape, dt in params]
+    if which == "decode":
+        fn = make_decode_fn(cfg)
+        args = [_spec((), "i32"), _spec((), "i32"), _spec(kv, "f32"), _spec(kv, "f32")]
+        arg_meta = [
+            {"name": "token", "shape": [], "dtype": "i32"},
+            {"name": "pos", "shape": [], "dtype": "i32"},
+            {"name": "kv_k", "shape": list(kv), "dtype": "f32"},
+            {"name": "kv_v", "shape": list(kv), "dtype": "f32"},
+        ]
+        outs = [
+            {"name": "logits", "shape": [cfg.vocab], "dtype": "f32"},
+            {"name": "kv_k", "shape": list(kv), "dtype": "f32"},
+            {"name": "kv_v", "shape": list(kv), "dtype": "f32"},
+        ]
+    else:
+        fn = make_prefill_fn(cfg)
+        s = cfg.prefill_len
+        args = [_spec((s,), "i32"), _spec((), "i32"), _spec(kv, "f32"), _spec(kv, "f32")]
+        arg_meta = [
+            {"name": "tokens", "shape": [s], "dtype": "i32"},
+            {"name": "pos0", "shape": [], "dtype": "i32"},
+            {"name": "kv_k", "shape": list(kv), "dtype": "f32"},
+            {"name": "kv_v", "shape": list(kv), "dtype": "f32"},
+        ]
+        outs = [
+            {"name": "logits", "shape": [cfg.vocab], "dtype": "f32"},
+            {"name": "kv_k", "shape": list(kv), "dtype": "f32"},
+            {"name": "kv_v", "shape": list(kv), "dtype": "f32"},
+        ]
+    param_meta = [
+        {"name": name, "shape": list(shape), "dtype": dt} for name, shape, dt in params
+    ]
+    return fn, args + flat_specs, arg_meta + param_meta, outs
+
+
+def _kernel_entries():
+    """Standalone kernel artifacts for runtime integration tests."""
+    n, k = 256, 256
+    qgemv_fn = lambda qs, sc, x: (kernels.qgemv(qs, sc, x),)  # noqa: E731
+    qgemv_args = [_spec((n, k), "i8"), _spec((n, k // 32), "f32"), _spec((k,), "f32")]
+    qgemv_meta = [
+        {"name": "qs", "shape": [n, k], "dtype": "i8"},
+        {"name": "scales", "shape": [n, k // 32], "dtype": "f32"},
+        {"name": "x", "shape": [k], "dtype": "f32"},
+    ]
+    qgemv_outs = [{"name": "y", "shape": [n], "dtype": "f32"}]
+
+    m, kk, nn = 64, 64, 64
+    qgemm_fn = lambda a, b: (kernels.gemm_i8(a, b),)  # noqa: E731
+    qgemm_args = [_spec((m, kk), "u8"), _spec((kk, nn), "i8")]
+    qgemm_meta = [
+        {"name": "a", "shape": [m, kk], "dtype": "u8"},
+        {"name": "b", "shape": [kk, nn], "dtype": "i8"},
+    ]
+    qgemm_outs = [{"name": "c", "shape": [m, nn], "dtype": "i32"}]
+    return [
+        ("qgemv", qgemv_fn, qgemv_args, qgemv_meta, qgemv_outs),
+        ("qgemm", qgemm_fn, qgemm_args, qgemm_meta, qgemm_outs),
+    ]
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "quant": {"scheme": "q4_0", "qk": 32}, "artifacts": {}}
+
+    for cfg_name, cfg in (("tiny", TINY), ("micro", MICRO)):
+        for which in ("decode", "prefill"):
+            fn, specs, arg_meta, outs = _model_entry(cfg, which)
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{cfg_name}_{which}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"][f"{cfg_name}_{which}"] = {
+                "file": fname,
+                "params": arg_meta,
+                "outputs": outs,
+                "model": {
+                    "vocab": cfg.vocab,
+                    "d_model": cfg.d_model,
+                    "n_layers": cfg.n_layers,
+                    "n_heads": cfg.n_heads,
+                    "d_ff": cfg.d_ff,
+                    "t_max": cfg.t_max,
+                    "prefill_len": cfg.prefill_len,
+                    "rope_theta": cfg.rope_theta,
+                    "rms_eps": cfg.rms_eps,
+                },
+            }
+            print(f"wrote {fname}: {len(text)} chars, {len(arg_meta)} params")
+
+    for name, fn, specs, arg_meta, outs in _kernel_entries():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {"file": fname, "params": arg_meta, "outputs": outs}
+        print(f"wrote {fname}: {len(text)} chars")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Pallas kernels (L1) + pure-jnp oracles. See DESIGN.md §Hardware-Adaptation."""
+
+from .attn import attn_decode
+from .gemm_i8 import gemm_i8
+from .qmatmul import qgemv, qgemv_int, qmatmul
+
+__all__ = ["attn_decode", "gemm_i8", "qgemv", "qgemv_int", "qmatmul"]

@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: single-query (decode) attention, one head per grid step.
+
+q [H, Dh] · K-cache [H, T, Dh] → masked softmax → · V-cache [H, T, Dh].
+The additive mask (0 attendable / −1e9 future) is computed by the caller
+(L2 model), so the kernel stays shape-static and position-free.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_decode_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, dh: int):
+    q = q_ref[0, :]                        # [Dh]
+    k = k_ref[0]                           # [T, Dh]
+    v = v_ref[0]                           # [T, Dh]
+    scores = k @ q / jnp.sqrt(jnp.float32(dh)) + m_ref[...]  # [T]
+    mx = scores.max()
+    p = jnp.exp(scores - mx)
+    p = p / p.sum()
+    o_ref[0, :] = p @ v
+
+
+def attn_decode(q, k, v, mask):
+    """q: f32 [H, Dh]; k, v: f32 [H, T, Dh]; mask: f32 [T] → f32 [H, Dh]."""
+    h, dh = q.shape
+    t = k.shape[1]
+    return pl.pallas_call(
+        functools.partial(_attn_decode_kernel, dh=dh),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda i: (i, 0)),
+            pl.BlockSpec((1, t, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v, mask)

@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: fused Q4_0-dequant matmul (decode & prefill hot path).
+
+This is the TPU-minded formulation of the paper's GEMV/GEMM hot spot: the
+parallel dimension that the L3 scheduler splits across heterogeneous cores
+(rows of the weight matrix, ``N``) becomes the Pallas **grid** dimension;
+each grid step dequantizes one ``(block_n, K)`` weight slab in VMEM and
+contracts it against the activations. ``interpret=True`` is mandatory on the
+CPU PJRT plugin (real TPU lowering emits a Mosaic custom-call).
+
+VMEM budget per grid step (defaults, K = 4096, block_n = 64):
+    qs slab   64 × 4096 × 1 B   = 256 KiB
+    scales    64 × 128 × 4 B    =  32 KiB
+    x         S × 4096 × 4 B    =  16 KiB (S = 1)
+    out       S × 64 × 4 B      ≈   0.25 KiB
+    total ≈ 0.3 MiB  → fits a ~16 MiB VMEM with deep double-buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QK = 32
+
+
+def _qmatmul_kernel(x_ref, qs_ref, sc_ref, o_ref, *, block_n: int, k: int):
+    """One grid step: o[:, i·bn:(i+1)·bn] = x @ dequant(qs, sc).T."""
+    nb = k // QK
+    codes = qs_ref[...].astype(jnp.float32) - 8.0  # [bn, K]
+    w = codes.reshape(block_n, nb, QK) * sc_ref[...][:, :, None]
+    o_ref[...] = x_ref[...] @ w.reshape(block_n, k).T
+
+
+def qmatmul(qs, scales, x, *, block_n: int = 64):
+    """Fused dequant matmul: ``x [S, K] · dequant(qs, scales).T → [S, N]``.
+
+    qs: int8 [N, K] codes in [0, 15]; scales: f32 [N, K // QK].
+    ``N`` must be a multiple of ``block_n``.
+    """
+    n, k = qs.shape
+    s = x.shape[0]
+    if n % block_n != 0:
+        raise ValueError(f"N={n} not a multiple of block_n={block_n}")
+    if x.shape[1] != k:
+        raise ValueError(f"x K={x.shape[1]} != weight K={k}")
+    grid = (n // block_n,)
+    kernel = functools.partial(_qmatmul_kernel, block_n=block_n, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s, k), lambda i: (0, 0)),          # x: whole
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),     # qs slab
+            pl.BlockSpec((block_n, k // QK), lambda i: (i, 0)),  # scales slab
+        ],
+        out_specs=pl.BlockSpec((s, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
+        interpret=True,
+    )(x, qs, scales)
+
+
+def qgemv(qs, scales, x, *, block_n: int = 64):
+    """GEMV wrapper: ``x [K] → [N]`` (the decode-phase hot path)."""
+    return qmatmul(qs, scales, x[None, :], block_n=block_n)[0]
+
+
+def _qgemv_int_kernel(xq_ref, xs_ref, qs_ref, sc_ref, o_ref, *, block_n: int, k: int):
+    """Integer-dot variant: per-block i32 dot, scaled by d_w · d_x."""
+    nb = k // QK
+    wq = qs_ref[...].astype(jnp.int32).reshape(block_n, nb, QK) - 8
+    xb = xq_ref[...].astype(jnp.int32).reshape(nb, QK)
+    # Per-block integer dot (the VNNI vpdpbusd analog), then scale combine.
+    bsum = (wq * xb[None, :, :]).sum(axis=-1).astype(jnp.float32)  # [bn, nb]
+    o_ref[...] = (bsum * sc_ref[...]).sum(axis=-1) * xs_ref[0]
+
+
+def qgemv_int(qs, scales, xq, xscale, *, block_n: int = 64):
+    """Q8-activation × Q4_0-weight integer GEMV (paper's VNNI decode kernel).
+
+    xq: int8 [K]; xscale: f32 scalar array shape (1,);
+    qs: int8 [N, K]; scales: f32 [N, K // QK]. Returns f32 [N].
+    """
+    n, k = qs.shape
+    if n % block_n != 0:
+        raise ValueError(f"N={n} not a multiple of block_n={block_n}")
+    grid = (n // block_n,)
+    kernel = functools.partial(_qgemv_int_kernel, block_n=block_n, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, k // QK), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(xq, xscale, qs, scales)

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+Each function here is the mathematically transparent version of a kernel in
+this package; pytest asserts ``assert_allclose(kernel(...), ref(...))`` over
+hypothesis-generated shapes. Nothing here is ever lowered into artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QK = 32
+
+
+def ref_qmatmul(qs, scales, x):
+    """Fused Q4_0 dequant matmul oracle.
+
+    qs:      int8  [N, K]   codes in [0, 15]
+    scales:  f32   [N, K/QK]
+    x:       f32   [S, K]  (or [K] for GEMV)
+    returns  f32   [S, N]  (or [N])
+    """
+    n, k = qs.shape
+    w = (qs.astype(jnp.float32) - 8.0).reshape(n, k // QK, QK)
+    w = (w * scales[..., None]).reshape(n, k)
+    return x @ w.T
+
+
+def ref_qgemv(qs, scales, x):
+    """GEMV special case of :func:`ref_qmatmul` (x is rank-1)."""
+    return ref_qmatmul(qs, scales, x)
+
+
+def ref_gemm_i8(a, b):
+    """u8 × i8 → i32 GEMM oracle (the AVX-VNNI analog).
+
+    a: uint8 [M, K], b: int8 [K, N] → int32 [M, N].
+    """
+    return jnp.matmul(
+        a.astype(jnp.int32), b.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def ref_gemv_q8q4(xq, xscale, qs, scales):
+    """Integer-dot Q8-activation × Q4_0-weight GEMV oracle.
+
+    xq: int8 [K] (dynamic-quantized activation), xscale: f32 scalar,
+    qs/scales: Q4_0 weight. Per-block integer dot scaled by (d_w * d_x):
+        y[n] = sum_b d[n,b] * xscale * sum_i (qs[n,b,i]-8) * xq[b,i]
+    """
+    n, k = qs.shape
+    wq = qs.astype(jnp.int32).reshape(n, k // QK, QK) - 8
+    xb = xq.astype(jnp.int32).reshape(k // QK, QK)
+    dots = jnp.einsum("nbk,bk->nb", wq, xb).astype(jnp.float32)
+    return (dots * scales).sum(axis=-1) * xscale
+
+
+def ref_attn_decode(q, k, v, mask):
+    """Single-token decode attention oracle.
+
+    q: f32 [H, Dh]; k, v: f32 [H, T, Dh]; mask: f32 [T] (0 where attendable,
+    a large negative value where masked). Returns f32 [H, Dh].
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("hd,htd->ht", q, k) / jnp.sqrt(jnp.float32(dh))
+    scores = scores + mask[None, :]
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("ht,htd->hd", p, v)
+
+
+def ref_rmsnorm(x, w, eps=1e-5):
+    """RMSNorm oracle. x: f32 [..., D], w: f32 [D]."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * w
+
+
+def ref_rope(x, pos, theta=10000.0):
+    """Rotary embedding oracle on interleaved pairs.
+
+    x: f32 [..., H, Dh] (Dh even); pos: int32 scalar (or [S] leading axis
+    aligned with x's first axis). Pairs (x[2i], x[2i+1]) are rotated by
+    angle ``pos / theta^(2i/Dh)``.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) * 2.0 / dh))
+    ang = jnp.asarray(pos, dtype=jnp.float32)[..., None] * freqs  # [..., half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x0 = x[..., 0::2]
+    x1 = x[..., 1::2]
+    # x is [..., H, Dh]; ang broadcasts over the head axis.
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    y0 = x0 * cos - x1 * sin
+    y1 = x0 * sin + x1 * cos
+    return jnp.stack([y0, y1], axis=-1).reshape(x.shape)
+
+
+def ref_silu_mul(gate, up):
+    """SwiGLU elementwise oracle: silu(gate) * up."""
+    return gate / (1.0 + jnp.exp(-gate)) * up
+
+
+def ref_softmax(x, axis=-1):
+    m = x.max(axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / e.sum(axis=axis, keepdims=True)

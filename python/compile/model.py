@@ -1,0 +1,230 @@
+"""L2: llama-style transformer forward (prefill + decode) on Q4_0 weights.
+
+This is the compute graph the Rust engine executes through PJRT; every
+matmul goes through the L1 Pallas kernels (``kernels.qmatmul``) and decode
+attention goes through ``kernels.attn_decode``. A ``use_pallas=False`` twin
+path uses the pure-jnp oracles so tests can assert the two agree.
+
+Weights are *parameters* of the lowered HLO (not baked constants): the Rust
+side quantizes its own deterministic weights and feeds identical
+``(qs, scales)`` tensors to both its native kernels and the PJRT artifact,
+which makes the native-vs-PJRT logits parity test meaningful.
+
+KV cache layout: ``[n_layers, n_heads, t_max, head_dim]`` f32, functional
+in/out (the caller threads it between steps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+QK = 32
+NEG_INF = jnp.float32(-1e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static llama-style architecture description."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 704
+    t_max: int = 64
+    prefill_len: int = 16
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def validate(self) -> None:
+        assert self.d_model % self.n_heads == 0
+        assert self.head_dim % 2 == 0, "RoPE needs an even head_dim"
+        for dim in (self.d_model, self.d_ff, self.vocab):
+            assert dim % 64 == 0, f"dim {dim} must tile by block_n=64"
+        assert self.d_model % QK == 0 and self.d_ff % QK == 0
+
+
+TINY = ModelConfig()
+MICRO = ModelConfig(vocab=128, d_model=64, n_layers=2, n_heads=2, d_ff=128, t_max=32, prefill_len=8)
+
+
+def param_order(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """The canonical flat parameter list: (name, shape, dtype) in order.
+
+    This order is the ABI between ``aot.py`` (manifest), the Rust runtime
+    (literal marshalling) and ``flatten_params`` below.
+    """
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def q4(name: str, n: int, k: int):
+        return [
+            (f"{name}.qs", (n, k), "i8"),
+            (f"{name}.sc", (n, k // QK), "f32"),
+        ]
+
+    out: List[Tuple[str, Tuple[int, ...], str]] = [("embed", (v, d), "f32")]
+    for i in range(cfg.n_layers):
+        out.append((f"l{i}.attn_norm", (d,), "f32"))
+        for w in ("wq", "wk", "wv", "wo"):
+            out += q4(f"l{i}.{w}", d, d)
+        out.append((f"l{i}.ffn_norm", (d,), "f32"))
+        out += q4(f"l{i}.w1", f, d)
+        out += q4(f"l{i}.w3", f, d)
+        out += q4(f"l{i}.w2", d, f)
+    out.append(("final_norm", (d,), "f32"))
+    out += q4("lm_head", v, d)
+    return out
+
+
+def flatten_params(cfg: ModelConfig, params: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    return [params[name] for name, _, _ in param_order(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> Dict[str, jnp.ndarray]:
+    order = param_order(cfg)
+    if len(flat) != len(order):
+        raise ValueError(f"expected {len(order)} params, got {len(flat)}")
+    return {name: arr for (name, _, _), arr in zip(order, flat)}
+
+
+# ---------------------------------------------------------------------------
+# building blocks (kernel / oracle switchable)
+# ---------------------------------------------------------------------------
+
+
+def _qmm(p, name: str, x2d, use_pallas: bool):
+    """x2d [S, K] × Q4_0 weight ``name`` → [S, N]."""
+    qs, sc = p[f"{name}.qs"], p[f"{name}.sc"]
+    if use_pallas:
+        return kernels.qmatmul(qs, sc, x2d)
+    return ref.ref_qmatmul(qs, sc, x2d)
+
+
+def _rmsnorm(x, w, eps):
+    return ref.ref_rmsnorm(x, w, eps)  # elementwise; XLA fuses it
+
+
+def _attention_decode(cfg: ModelConfig, q, k_cache, v_cache, pos, use_pallas: bool):
+    """q [H, Dh], caches [H, T, Dh], pos scalar → [H, Dh]."""
+    t = cfg.t_max
+    mask = jnp.where(jnp.arange(t) <= pos, jnp.float32(0), NEG_INF)
+    if use_pallas:
+        return kernels.attn_decode(q, k_cache, v_cache, mask)
+    return ref.ref_attn_decode(q, k_cache, v_cache, mask)
+
+
+def _layer_decode(cfg, p, i, x, kv_k, kv_v, pos, use_pallas):
+    """One transformer layer, single token. x [D] → [D]; caches updated."""
+    h, dh, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    xa = _rmsnorm(x, p[f"l{i}.attn_norm"], cfg.rms_eps)
+    x2 = xa[None, :]
+    q = _qmm(p, f"l{i}.wq", x2, use_pallas)[0].reshape(h, dh)
+    k = _qmm(p, f"l{i}.wk", x2, use_pallas)[0].reshape(h, dh)
+    v = _qmm(p, f"l{i}.wv", x2, use_pallas)[0].reshape(h, dh)
+    q = ref.ref_rope(q, pos, cfg.rope_theta)
+    k = ref.ref_rope(k, pos, cfg.rope_theta)
+    # write k, v at position `pos` of layer i's cache
+    k_l = jax.lax.dynamic_update_slice(kv_k[i], k[:, None, :], (0, pos, 0))
+    v_l = jax.lax.dynamic_update_slice(kv_v[i], v[:, None, :], (0, pos, 0))
+    kv_k = kv_k.at[i].set(k_l)
+    kv_v = kv_v.at[i].set(v_l)
+    attn = _attention_decode(cfg, q, k_l, v_l, pos, use_pallas).reshape(d)
+    x = x + _qmm(p, f"l{i}.wo", attn[None, :], use_pallas)[0]
+    xf = _rmsnorm(x, p[f"l{i}.ffn_norm"], cfg.rms_eps)
+    gate = _qmm(p, f"l{i}.w1", xf[None, :], use_pallas)[0]
+    up = _qmm(p, f"l{i}.w3", xf[None, :], use_pallas)[0]
+    x = x + _qmm(p, f"l{i}.w2", ref.ref_silu_mul(gate, up)[None, :], use_pallas)[0]
+    return x, kv_k, kv_v
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, kv_k, kv_v, use_pallas: bool = True):
+    """One autoregressive step.
+
+    token, pos: i32 scalars; kv_*: f32 [L, H, T, Dh].
+    Returns (logits [V], kv_k, kv_v).
+    """
+    x = jnp.take(params["embed"], token, axis=0)
+    for i in range(cfg.n_layers):
+        x, kv_k, kv_v = _layer_decode(cfg, params, i, x, kv_k, kv_v, pos, use_pallas)
+    x = _rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = _qmm(params, "lm_head", x[None, :], use_pallas)[0]
+    return logits, kv_k, kv_v
+
+
+def _layer_prefill(cfg, p, i, xs, kv_k, kv_v, pos0, use_pallas):
+    """One layer over a chunk of S tokens. xs [S, D]."""
+    s = xs.shape[0]
+    h, dh, d, t = cfg.n_heads, cfg.head_dim, cfg.d_model, cfg.t_max
+    positions = pos0 + jnp.arange(s)
+    xa = _rmsnorm(xs, p[f"l{i}.attn_norm"], cfg.rms_eps)
+    q = _qmm(p, f"l{i}.wq", xa, use_pallas).reshape(s, h, dh)
+    k = _qmm(p, f"l{i}.wk", xa, use_pallas).reshape(s, h, dh)
+    v = _qmm(p, f"l{i}.wv", xa, use_pallas).reshape(s, h, dh)
+    q = ref.ref_rope(q, positions, cfg.rope_theta)
+    k = ref.ref_rope(k, positions, cfg.rope_theta)
+    k_l = jax.lax.dynamic_update_slice(kv_k[i], k.transpose(1, 0, 2), (0, pos0, 0))
+    v_l = jax.lax.dynamic_update_slice(kv_v[i], v.transpose(1, 0, 2), (0, pos0, 0))
+    kv_k = kv_k.at[i].set(k_l)
+    kv_v = kv_v.at[i].set(v_l)
+    # causal attention over the cache: row s may attend to t <= pos0 + s
+    scores = jnp.einsum("shd,htd->hst", q, k_l) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.where(
+        jnp.arange(t)[None, :] <= positions[:, None], jnp.float32(0), NEG_INF
+    )  # [S, T]
+    p_attn = ref.ref_softmax(scores + mask[None, :, :], axis=-1)
+    attn = jnp.einsum("hst,htd->shd", p_attn, v_l).reshape(s, d)
+    xs = xs + _qmm(p, f"l{i}.wo", attn, use_pallas)
+    xf = _rmsnorm(xs, p[f"l{i}.ffn_norm"], cfg.rms_eps)
+    gate = _qmm(p, f"l{i}.w1", xf, use_pallas)
+    up = _qmm(p, f"l{i}.w3", xf, use_pallas)
+    xs = xs + _qmm(p, f"l{i}.w2", ref.ref_silu_mul(gate, up), use_pallas)
+    return xs, kv_k, kv_v
+
+
+def prefill_chunk(cfg: ModelConfig, params, tokens, pos0, kv_k, kv_v, use_pallas: bool = True):
+    """Process a fixed-size chunk of ``prefill_len`` tokens starting at pos0.
+
+    tokens: i32 [S]; returns (logits of the last token [V], kv_k, kv_v).
+    """
+    xs = jnp.take(params["embed"], tokens, axis=0)
+    for i in range(cfg.n_layers):
+        xs, kv_k, kv_v = _layer_prefill(cfg, params, i, xs, kv_k, kv_v, pos0, use_pallas)
+    x = _rmsnorm(xs[-1], params["final_norm"], cfg.rms_eps)
+    logits = _qmm(params, "lm_head", x[None, :], use_pallas)[0]
+    return logits, kv_k, kv_v
+
+
+def init_kv(cfg: ModelConfig):
+    shape = (cfg.n_layers, cfg.n_heads, cfg.t_max, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def make_decode_fn(cfg: ModelConfig, use_pallas: bool = True):
+    """Flat-signature decode step for AOT lowering."""
+
+    def fn(token, pos, kv_k, kv_v, *flat):
+        params = unflatten_params(cfg, flat)
+        return decode_step(cfg, params, token, pos, kv_k, kv_v, use_pallas)
+
+    return fn
+
+
+def make_prefill_fn(cfg: ModelConfig, use_pallas: bool = True):
+    """Flat-signature prefill chunk for AOT lowering."""
+
+    def fn(tokens, pos0, kv_k, kv_v, *flat):
+        params = unflatten_params(cfg, flat)
+        return prefill_chunk(cfg, params, tokens, pos0, kv_k, kv_v, use_pallas)
+
+    return fn

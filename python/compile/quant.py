@@ -1,0 +1,80 @@
+"""Q4_0 block quantization — the reference semantics for the whole repo.
+
+Layout follows llama.cpp's Q4_0: blocks of ``QK = 32`` values, one f16 scale
+per block, 4-bit unsigned codes with an implicit offset of 8:
+
+    max  = the element with the largest magnitude in the block (signed)
+    d    = max / -8                      (f32, then rounded to f16 storage)
+    id   = 1/d if d != 0 else 0          (f32, computed from the *f32* d)
+    q    = clamp(floor(x * id + 8.5), 0, 15)
+    deq  = (q - 8) * f32(f16(d))
+
+The Rust implementation (``rust/src/quant/q4_0.rs``) mirrors these exact
+operations so that the native engine and the AOT PJRT artifacts consume
+bit-identical ``(qs, scales)`` tensors and produce matching logits.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+QK = 32  # block size (values per scale)
+
+
+def _f16_round(x: np.ndarray) -> np.ndarray:
+    """Round f32 → f16 storage → f32, the scale precision used everywhere."""
+    return x.astype(np.float16).astype(np.float32)
+
+
+def quantize_q4_0(w: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Quantize a 2-D f32 weight matrix ``[N, K]`` row-block-wise.
+
+    Returns ``(qs, scales)`` with ``qs`` int8 in ``[0, 15]`` of shape
+    ``[N, K]`` (unpacked codes) and ``scales`` f32 (f16-rounded) of shape
+    ``[N, K // QK]``.
+    """
+    w = np.asarray(w, dtype=np.float32)
+    if w.ndim != 2:
+        raise ValueError(f"expected 2-D weight, got shape {w.shape}")
+    n, k = w.shape
+    if k % QK != 0:
+        raise ValueError(f"K={k} not a multiple of QK={QK}")
+    blocks = w.reshape(n, k // QK, QK)
+    # Signed element with the largest magnitude per block (first on ties,
+    # matching a linear scan).
+    idx = np.argmax(np.abs(blocks), axis=-1)
+    mx = np.take_along_axis(blocks, idx[..., None], axis=-1)[..., 0]
+    d = mx / -8.0
+    inv = np.where(d != 0.0, np.float32(1.0) / np.where(d != 0.0, d, 1.0), 0.0)
+    q = np.floor(blocks * inv[..., None] + np.float32(8.5))
+    qs = np.clip(q, 0.0, 15.0).astype(np.int8).reshape(n, k)
+    scales = _f16_round(d)
+    return qs, scales
+
+
+def dequantize_q4_0(qs: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`quantize_q4_0` → f32 ``[N, K]``."""
+    n, k = qs.shape
+    w = (qs.astype(np.float32) - 8.0).reshape(n, k // QK, QK)
+    return (w * scales[..., None].astype(np.float32)).reshape(n, k)
+
+
+def quantize_q8_dynamic(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-row symmetric int8 dynamic quantization of activations.
+
+    ``x`` is ``[M, K]`` f32 (or ``[K]``). Returns ``(q, scale)`` with ``q``
+    int8 in ``[-127, 127]`` and ``scale`` f32 per row such that
+    ``x ≈ q * scale``. Used by the INT8-activation GEMV path (the paper's
+    "dynamic quantization for the FLOAT32 input tensor").
+    """
+    x = np.asarray(x, dtype=np.float32)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    amax = np.max(np.abs(x), axis=-1)
+    scale = np.where(amax > 0, amax / np.float32(127.0), np.float32(1.0))
+    q = np.clip(np.round(x / scale[:, None]), -127, 127).astype(np.int8)
+    scale = scale.astype(np.float32)
+    if squeeze:
+        return q[0], scale[0]
+    return q, scale

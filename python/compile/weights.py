@@ -1,0 +1,42 @@
+"""Deterministic random weight construction for tests and demos.
+
+Weights are f32, generated from a seeded ``np.random.Generator`` (PCG64),
+then Q4_0-quantized via :mod:`compile.quant`. The Rust side has its own
+generator; parity across languages is achieved by feeding the *quantized*
+tensors through both paths, not by matching RNGs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from . import quant
+from .model import ModelConfig, param_order
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Generate the full flat param dict (quantized where the ABI says i8)."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+    d = cfg.d_model
+    scale = 1.0 / np.sqrt(d)
+    pending_f32: Dict[str, np.ndarray] = {}
+    for name, shape, dtype in param_order(cfg):
+        if name.endswith(".qs"):
+            base = name[: -len(".qs")]
+            w = (rng.standard_normal(shape, dtype=np.float32) * scale).astype(np.float32)
+            qs, sc = quant.quantize_q4_0(w)
+            out[name] = qs
+            pending_f32[f"{base}.sc"] = sc
+        elif name.endswith(".sc"):
+            out[name] = pending_f32.pop(name)
+        elif name.endswith("norm"):
+            out[name] = np.ones(shape, dtype=np.float32)
+        else:  # embed
+            out[name] = (rng.standard_normal(shape, dtype=np.float32) * scale).astype(
+                np.float32
+            )
+    assert not pending_f32
+    return out

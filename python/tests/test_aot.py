@@ -1,0 +1,82 @@
+"""AOT path: HLO text generation + manifest ABI consistency."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.model import MICRO, TINY, param_order
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestHloText:
+    def test_simple_fn_lowers_to_hlo_text(self):
+        fn = lambda x: (x * 2.0 + 1.0,)  # noqa: E731
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text and "f32[4]" in text
+
+    def test_pallas_kernel_lowers_to_plain_hlo(self):
+        from compile import kernels
+
+        qs = jax.ShapeDtypeStruct((64, 32), jnp.int8)
+        sc = jax.ShapeDtypeStruct((64, 1), jnp.float32)
+        x = jax.ShapeDtypeStruct((32,), jnp.float32)
+        lowered = jax.jit(lambda a, b, c: (kernels.qgemv(a, b, c),)).lower(qs, sc, x)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text
+        # interpret=True must not leave an unexecutable custom-call target
+        assert "mosaic" not in text.lower()
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(ARTIFACT_DIR, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_schema(self, manifest):
+        assert manifest["format"] == "hlo-text"
+        assert manifest["quant"] == {"scheme": "q4_0", "qk": 32}
+        for key in ("tiny_decode", "tiny_prefill", "micro_decode", "micro_prefill", "qgemv", "qgemm"):
+            assert key in manifest["artifacts"], key
+
+    def test_files_exist(self, manifest):
+        for name, art in manifest["artifacts"].items():
+            path = os.path.join(ARTIFACT_DIR, art["file"])
+            assert os.path.exists(path), name
+            with open(path) as f:
+                head = f.read(4096)
+            assert "ENTRY" in head or "HloModule" in head
+
+    @pytest.mark.parametrize("cfg_name,cfg", [("tiny", TINY), ("micro", MICRO)])
+    def test_model_param_abi(self, manifest, cfg_name, cfg):
+        """Manifest parameter list == 4 leading args + param_order(cfg)."""
+        for which in ("decode", "prefill"):
+            art = manifest["artifacts"][f"{cfg_name}_{which}"]
+            meta = art["params"]
+            expected_lead = 4  # token(s), pos, kv_k, kv_v
+            order = param_order(cfg)
+            assert len(meta) == expected_lead + len(order)
+            for (name, shape, dtype), entry in zip(order, meta[expected_lead:]):
+                assert entry["name"] == name
+                assert tuple(entry["shape"]) == tuple(shape)
+                assert entry["dtype"] == dtype
+            kv_shape = [cfg.n_layers, cfg.n_heads, cfg.t_max, cfg.head_dim]
+            assert meta[2]["shape"] == kv_shape and meta[3]["shape"] == kv_shape
+
+    def test_model_metadata(self, manifest):
+        m = manifest["artifacts"]["tiny_decode"]["model"]
+        assert m["vocab"] == TINY.vocab and m["n_layers"] == TINY.n_layers
+
+    def test_outputs_declared(self, manifest):
+        for key in ("tiny_decode", "micro_prefill"):
+            outs = manifest["artifacts"][key]["outputs"]
+            assert [o["name"] for o in outs] == ["logits", "kv_k", "kv_v"]

@@ -1,0 +1,179 @@
+"""Pallas kernels vs pure-jnp oracles — the L1 correctness signal.
+
+Hypothesis sweeps shapes (multiples of the tiling constraints); every kernel
+must match its oracle to tight tolerances on every draw.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels, quant
+from compile.kernels import ref
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return (np.random.default_rng(seed).standard_normal(shape) * scale).astype(np.float32)
+
+
+def _qweight(n, k, seed=0):
+    qs, sc = quant.quantize_q4_0(_rand((n, k), seed=seed))
+    return jnp.asarray(qs), jnp.asarray(sc)
+
+
+class TestQMatmul:
+    def test_gemv_matches_ref(self):
+        qs, sc = _qweight(128, 96, seed=1)
+        x = jnp.asarray(_rand(96, seed=2))
+        np.testing.assert_allclose(
+            kernels.qgemv(qs, sc, x), ref.ref_qgemv(qs, sc, x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_gemm_matches_ref(self):
+        qs, sc = _qweight(192, 64, seed=3)
+        x = jnp.asarray(_rand((8, 64), seed=4))
+        np.testing.assert_allclose(
+            kernels.qmatmul(qs, sc, x), ref.ref_qmatmul(qs, sc, x), rtol=1e-5, atol=1e-5
+        )
+
+    @pytest.mark.parametrize("block_n", [64, 128])
+    def test_block_n_invariance(self, block_n):
+        qs, sc = _qweight(256, 64, seed=5)
+        x = jnp.asarray(_rand((2, 64), seed=6))
+        np.testing.assert_allclose(
+            kernels.qmatmul(qs, sc, x, block_n=block_n),
+            ref.ref_qmatmul(qs, sc, x),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_rejects_untiled_n(self):
+        qs, sc = _qweight(96, 64)
+        with pytest.raises(ValueError):
+            kernels.qmatmul(qs, sc, jnp.zeros((1, 64)), block_n=64)
+
+    def test_rejects_k_mismatch(self):
+        qs, sc = _qweight(64, 64)
+        with pytest.raises(ValueError):
+            kernels.qmatmul(qs, sc, jnp.zeros((1, 32)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        nb=st.integers(1, 4),
+        kb=st.integers(1, 4),
+        s=st.integers(1, 8),
+        seed=st.integers(0, 10**6),
+    )
+    def test_property_matches_ref(self, nb, kb, s, seed):
+        n, k = nb * 64, kb * 32
+        qs, sc = _qweight(n, k, seed=seed)
+        x = jnp.asarray(_rand((s, k), seed=seed + 1))
+        np.testing.assert_allclose(
+            kernels.qmatmul(qs, sc, x), ref.ref_qmatmul(qs, sc, x), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestGemmI8:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.integers(0, 255, (64, 96), dtype=np.uint8))
+        b = jnp.asarray(rng.integers(-127, 127, (96, 128), dtype=np.int8))
+        assert (np.asarray(kernels.gemm_i8(a, b)) == np.asarray(ref.ref_gemm_i8(a, b))).all()
+
+    def test_saturating_inputs_exact(self):
+        # extreme values: 255 * -128 * K accumulates exactly in i32
+        a = jnp.full((64, 64), 255, dtype=jnp.uint8)
+        b = jnp.full((64, 64), -128, dtype=jnp.int8)
+        out = np.asarray(kernels.gemm_i8(a, b))
+        assert (out == 255 * -128 * 64).all()
+
+    def test_rejects_k_mismatch(self):
+        with pytest.raises(ValueError):
+            kernels.gemm_i8(jnp.zeros((64, 32), jnp.uint8), jnp.zeros((64, 64), jnp.int8))
+
+    def test_rejects_untiled(self):
+        with pytest.raises(ValueError):
+            kernels.gemm_i8(jnp.zeros((65, 64), jnp.uint8), jnp.zeros((64, 64), jnp.int8))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        mb=st.integers(1, 3), kk=st.integers(1, 96), nb=st.integers(1, 3), seed=st.integers(0, 10**6)
+    )
+    def test_property_exact(self, mb, kk, nb, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.integers(0, 255, (mb * 64, kk), dtype=np.uint8))
+        b = jnp.asarray(rng.integers(-127, 127, (kk, nb * 64), dtype=np.int8))
+        assert (np.asarray(kernels.gemm_i8(a, b)) == np.asarray(ref.ref_gemm_i8(a, b))).all()
+
+
+class TestQGemvInt:
+    def test_matches_ref(self):
+        qs, sc = _qweight(128, 64, seed=9)
+        x = _rand(64, seed=10)
+        xq, xs = quant.quantize_q8_dynamic(x)
+        got = kernels.qgemv_int(qs, sc, jnp.asarray(xq), jnp.asarray([xs]))
+        want = ref.ref_gemv_q8q4(jnp.asarray(xq), jnp.asarray(xs), qs, sc)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_integer_dot_approximates_f32(self):
+        # the q8·q4 integer path should track the dequant-f32 path closely
+        qs, sc = _qweight(256, 128, seed=11)
+        x = _rand(128, seed=12)
+        xq, xs = quant.quantize_q8_dynamic(x)
+        got = np.asarray(kernels.qgemv_int(qs, sc, jnp.asarray(xq), jnp.asarray([xs])))
+        f32 = np.asarray(ref.ref_qgemv(qs, sc, jnp.asarray(x)))
+        denom = max(1e-3, float(np.abs(f32).max()))
+        assert np.abs(got - f32).max() / denom < 0.02
+
+    @settings(max_examples=15, deadline=None)
+    @given(nb=st.integers(1, 4), kb=st.integers(1, 4), seed=st.integers(0, 10**6))
+    def test_property_matches_ref(self, nb, kb, seed):
+        n, k = nb * 64, kb * 32
+        qs, sc = _qweight(n, k, seed=seed)
+        xq, xs = quant.quantize_q8_dynamic(_rand(k, seed=seed + 1))
+        got = kernels.qgemv_int(qs, sc, jnp.asarray(xq), jnp.asarray([xs]))
+        want = ref.ref_gemv_q8q4(jnp.asarray(xq), jnp.asarray(xs), qs, sc)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+class TestAttnDecode:
+    def _case(self, h, t, dh, pos, seed=0):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.standard_normal((h, dh)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((h, t, dh)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((h, t, dh)).astype(np.float32))
+        mask = jnp.asarray(np.where(np.arange(t) <= pos, 0.0, -1e9).astype(np.float32))
+        return q, k, v, mask
+
+    def test_matches_ref(self):
+        q, k, v, m = self._case(8, 64, 32, pos=17)
+        np.testing.assert_allclose(
+            kernels.attn_decode(q, k, v, m), ref.ref_attn_decode(q, k, v, m), rtol=1e-5, atol=1e-5
+        )
+
+    def test_mask_pos0_uses_only_first_token(self):
+        q, k, v, m = self._case(2, 16, 8, pos=0, seed=3)
+        out = np.asarray(kernels.attn_decode(q, k, v, m))
+        np.testing.assert_allclose(out, np.asarray(v[:, 0, :]), rtol=1e-5, atol=1e-5)
+
+    def test_output_is_convex_combination(self):
+        q, k, v, m = self._case(4, 32, 16, pos=31, seed=4)
+        out = np.asarray(kernels.attn_decode(q, k, v, m))
+        vmin = np.asarray(v).min(axis=1)
+        vmax = np.asarray(v).max(axis=1)
+        assert np.all(out >= vmin - 1e-5) and np.all(out <= vmax + 1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        h=st.integers(1, 8),
+        t=st.integers(2, 48),
+        dh=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 10**6),
+    )
+    def test_property_matches_ref(self, h, t, dh, seed):
+        pos = seed % t
+        q, k, v, m = self._case(h, t, dh, pos=pos, seed=seed)
+        np.testing.assert_allclose(
+            kernels.attn_decode(q, k, v, m), ref.ref_attn_decode(q, k, v, m), rtol=1e-4, atol=1e-4
+        )

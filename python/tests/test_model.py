@@ -1,0 +1,147 @@
+"""L2 model semantics: pallas path ≡ oracle path, prefill ≡ sequential decode."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import weights
+from compile.model import (
+    MICRO,
+    TINY,
+    ModelConfig,
+    decode_step,
+    flatten_params,
+    init_kv,
+    param_order,
+    prefill_chunk,
+    unflatten_params,
+)
+
+
+@pytest.fixture(scope="module")
+def micro_params():
+    return {k: jnp.asarray(v) for k, v in weights.init_params(MICRO, seed=1).items()}
+
+
+class TestParamABI:
+    def test_order_is_deterministic(self):
+        assert param_order(MICRO) == param_order(MICRO)
+
+    def test_flatten_roundtrip(self, micro_params):
+        flat = flatten_params(MICRO, micro_params)
+        back = unflatten_params(MICRO, flat)
+        assert set(back) == set(micro_params)
+        for k in micro_params:
+            assert back[k] is micro_params[k]
+
+    def test_unflatten_rejects_wrong_arity(self, micro_params):
+        flat = flatten_params(MICRO, micro_params)
+        with pytest.raises(ValueError):
+            unflatten_params(MICRO, flat[:-1])
+
+    def test_qs_tensors_paired_with_scales(self):
+        order = param_order(TINY)
+        names = [n for n, _, _ in order]
+        for n in names:
+            if n.endswith(".qs"):
+                assert n[:-3] + ".sc" in names
+
+    def test_shapes_match_config(self):
+        for name, shape, dtype in param_order(MICRO):
+            if name == "embed":
+                assert shape == (MICRO.vocab, MICRO.d_model) and dtype == "f32"
+            if name.endswith(".qs"):
+                assert dtype == "i8" and shape[1] % 32 == 0
+
+    def test_configs_validate(self):
+        TINY.validate()
+        MICRO.validate()
+
+    def test_bad_config_rejected(self):
+        with pytest.raises(AssertionError):
+            ModelConfig(d_model=100).validate()  # not divisible by 64
+
+
+class TestDecode:
+    def test_pallas_matches_oracle(self, micro_params):
+        kv_k, kv_v = init_kv(MICRO)
+        lp, kp, vp = decode_step(MICRO, micro_params, jnp.int32(3), jnp.int32(0), kv_k, kv_v, True)
+        lr, kr, vr = decode_step(MICRO, micro_params, jnp.int32(3), jnp.int32(0), kv_k, kv_v, False)
+        np.testing.assert_allclose(lp, lr, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(kp, kr, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(vp, vr, rtol=1e-4, atol=1e-5)
+
+    def test_kv_written_only_at_pos(self, micro_params):
+        kv_k, kv_v = init_kv(MICRO)
+        pos = 5
+        _, kp, vp = decode_step(
+            MICRO, micro_params, jnp.int32(7), jnp.int32(pos), kv_k, kv_v, False
+        )
+        kp, vp = np.asarray(kp), np.asarray(vp)
+        mask = np.ones(MICRO.t_max, dtype=bool)
+        mask[pos] = False
+        assert np.all(kp[:, :, mask, :] == 0) and np.all(vp[:, :, mask, :] == 0)
+        assert np.any(kp[:, :, pos, :] != 0)
+
+    def test_logits_shape_and_finite(self, micro_params):
+        kv_k, kv_v = init_kv(MICRO)
+        logits, _, _ = decode_step(
+            MICRO, micro_params, jnp.int32(1), jnp.int32(0), kv_k, kv_v, False
+        )
+        assert logits.shape == (MICRO.vocab,)
+        assert np.all(np.isfinite(logits))
+
+    def test_different_tokens_different_logits(self, micro_params):
+        kv_k, kv_v = init_kv(MICRO)
+        l1, _, _ = decode_step(MICRO, micro_params, jnp.int32(1), jnp.int32(0), kv_k, kv_v, False)
+        l2, _, _ = decode_step(MICRO, micro_params, jnp.int32(2), jnp.int32(0), kv_k, kv_v, False)
+        assert not np.allclose(l1, l2)
+
+    def test_history_affects_logits(self, micro_params):
+        kv_k, kv_v = init_kv(MICRO)
+        _, k1, v1 = decode_step(MICRO, micro_params, jnp.int32(5), jnp.int32(0), kv_k, kv_v, False)
+        la, _, _ = decode_step(MICRO, micro_params, jnp.int32(9), jnp.int32(1), k1, v1, False)
+        _, k2, v2 = decode_step(MICRO, micro_params, jnp.int32(6), jnp.int32(0), kv_k, kv_v, False)
+        lb, _, _ = decode_step(MICRO, micro_params, jnp.int32(9), jnp.int32(1), k2, v2, False)
+        assert not np.allclose(la, lb)
+
+
+class TestPrefill:
+    def test_prefill_equals_sequential_decode(self, micro_params):
+        kv_k, kv_v = init_kv(MICRO)
+        toks = np.array([3, 7, 11, 2, 9, 4, 1, 8], dtype=np.int32)
+        lp, kp, vp = prefill_chunk(
+            MICRO, micro_params, jnp.asarray(toks), jnp.int32(0), kv_k, kv_v, True
+        )
+        kk, vv = kv_k, kv_v
+        for i, t in enumerate(toks):
+            ld, kk, vv = decode_step(
+                MICRO, micro_params, jnp.int32(int(t)), jnp.int32(i), kk, vv, False
+            )
+        np.testing.assert_allclose(lp, ld, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(kp, kk, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(vp, vv, rtol=1e-4, atol=1e-5)
+
+    def test_chunked_prefill_continues(self, micro_params):
+        """Two consecutive chunks == one longer sequential decode."""
+        kv_k, kv_v = init_kv(MICRO)
+        toks = np.arange(16, dtype=np.int32) % MICRO.vocab
+        _, k1, v1 = prefill_chunk(
+            MICRO, micro_params, jnp.asarray(toks[:8]), jnp.int32(0), kv_k, kv_v, False
+        )
+        l2, k2, v2 = prefill_chunk(
+            MICRO, micro_params, jnp.asarray(toks[8:]), jnp.int32(8), k1, v1, False
+        )
+        kk, vv = kv_k, kv_v
+        for i, t in enumerate(toks):
+            ld, kk, vv = decode_step(
+                MICRO, micro_params, jnp.int32(int(t)), jnp.int32(i), kk, vv, False
+            )
+        np.testing.assert_allclose(l2, ld, rtol=1e-3, atol=1e-4)
+
+    def test_pallas_matches_oracle(self, micro_params):
+        kv_k, kv_v = init_kv(MICRO)
+        toks = jnp.asarray(np.array([1, 2, 3, 4, 5, 6, 7, 8], dtype=np.int32))
+        lp, _, _ = prefill_chunk(MICRO, micro_params, toks, jnp.int32(0), kv_k, kv_v, True)
+        lr, _, _ = prefill_chunk(MICRO, micro_params, toks, jnp.int32(0), kv_k, kv_v, False)
+        np.testing.assert_allclose(lp, lr, rtol=1e-4, atol=1e-5)

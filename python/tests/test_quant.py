@@ -1,0 +1,121 @@
+"""Q4_0 / Q8-dynamic quantization semantics — the cross-language ABI."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return (np.random.default_rng(seed).standard_normal(shape) * scale).astype(np.float32)
+
+
+class TestQ4_0:
+    def test_shapes(self):
+        qs, sc = quant.quantize_q4_0(_rand((8, 64)))
+        assert qs.shape == (8, 64) and qs.dtype == np.int8
+        assert sc.shape == (8, 2) and sc.dtype == np.float32
+
+    def test_codes_in_range(self):
+        qs, _ = quant.quantize_q4_0(_rand((16, 128), seed=3, scale=5.0))
+        assert qs.min() >= 0 and qs.max() <= 15
+
+    def test_roundtrip_error_bound(self):
+        w = _rand((32, 256), seed=1)
+        qs, sc = quant.quantize_q4_0(w)
+        deq = quant.dequantize_q4_0(qs, sc)
+        # max quantization step is |d| = absmax/8; error ≤ |d| (floor+0.5 bias)
+        blocks = np.abs(w.reshape(32, -1, quant.QK)).max(axis=-1) / 8.0
+        step = np.repeat(blocks, quant.QK, axis=-1)
+        assert np.all(np.abs(deq - w) <= step + 1e-6)
+
+    def test_zero_block(self):
+        w = np.zeros((1, 32), dtype=np.float32)
+        qs, sc = quant.quantize_q4_0(w)
+        assert np.all(sc == 0.0)
+        assert np.all(quant.dequantize_q4_0(qs, sc) == 0.0)
+
+    def test_extreme_element_is_exact(self):
+        # The element with the largest magnitude maps to code 0 (q = -8),
+        # so it is reconstructed as -8 * (max / -8) = max up to f16 rounding.
+        w = _rand((4, 64), seed=7)
+        qs, sc = quant.quantize_q4_0(w)
+        deq = quant.dequantize_q4_0(qs, sc)
+        blocks_w = w.reshape(4, 2, 32)
+        blocks_d = deq.reshape(4, 2, 32)
+        idx = np.argmax(np.abs(blocks_w), axis=-1)
+        mx_w = np.take_along_axis(blocks_w, idx[..., None], -1)
+        mx_d = np.take_along_axis(blocks_d, idx[..., None], -1)
+        assert np.allclose(mx_w, mx_d, rtol=2e-3)
+
+    def test_scale_is_f16_representable(self):
+        _, sc = quant.quantize_q4_0(_rand((8, 96), seed=5))
+        assert np.array_equal(sc, sc.astype(np.float16).astype(np.float32))
+
+    def test_rejects_bad_k(self):
+        with pytest.raises(ValueError):
+            quant.quantize_q4_0(_rand((4, 33)))
+
+    def test_rejects_non_2d(self):
+        with pytest.raises(ValueError):
+            quant.quantize_q4_0(np.zeros(64, dtype=np.float32))
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n=st.integers(1, 16),
+        kb=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.floats(1e-3, 1e3),
+    )
+    def test_roundtrip_property(self, n, kb, seed, scale):
+        w = _rand((n, kb * quant.QK), seed=seed, scale=scale)
+        qs, sc = quant.quantize_q4_0(w)
+        deq = quant.dequantize_q4_0(qs, sc)
+        amax = np.abs(w).max()
+        if amax > 0:
+            assert np.abs(deq - w).max() <= amax / 8.0 * 1.01 + 1e-6
+        assert qs.min() >= 0 and qs.max() <= 15
+
+
+class TestQ8Dynamic:
+    def test_roundtrip(self):
+        x = _rand((4, 64), seed=2, scale=3.0)
+        q, s = quant.quantize_q8_dynamic(x)
+        deq = q.astype(np.float32) * s[:, None]
+        assert np.abs(deq - x).max() <= np.abs(x).max() / 127.0 * 0.51 + 1e-6
+
+    def test_rank1(self):
+        x = _rand(64, seed=4)
+        q, s = quant.quantize_q8_dynamic(x)
+        assert q.shape == (64,) and np.isscalar(float(s))
+
+    def test_zero_row(self):
+        q, s = quant.quantize_q8_dynamic(np.zeros((2, 32), dtype=np.float32))
+        assert np.all(q == 0) and np.all(s == 1.0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(k=st.integers(1, 128), seed=st.integers(0, 10**6))
+    def test_codes_bounded(self, k, seed):
+        x = _rand(k, seed=seed, scale=100.0)
+        q, s = quant.quantize_q8_dynamic(x)
+        assert q.min() >= -127 and q.max() <= 127
+
+
+class TestCrossLanguageGolden:
+    """Golden values pinned in rust/src/quant/{q4_0,q8}.rs::golden_tests —
+    the two quantizers must stay bit-identical (they are the weights ABI
+    between the native engine and the PJRT artifacts)."""
+
+    def test_q4_golden(self):
+        x = (np.sin(np.arange(1, 65, dtype=np.float32)) * np.float32(2.0)).reshape(1, 64)
+        qs, sc = quant.quantize_q4_0(x)
+        assert list(qs[0][:16]) == [15, 15, 9, 2, 0, 6, 13, 15, 11, 4, 0, 4, 11, 15, 13, 6]
+        bits = [int(np.float32(s).astype(np.float16).view(np.uint16)) for s in sc[0]]
+        assert bits == [0x3400, 0xB400]
+
+    def test_q8_golden(self):
+        x = np.sin(np.arange(1, 33, dtype=np.float32)).astype(np.float32)
+        q, s = quant.quantize_q8_dynamic(x)
+        assert list(q[:8]) == [107, 115, 18, -96, -122, -35, 83, 126]
+        assert abs(float(s) - 0.0078739384) < 1e-9

@@ -1,0 +1,26 @@
+//! `cargo bench --bench fig2_gemm` — regenerates Figure 2-left:
+//! INT8 GEMM 1024×4096×4096 latency for every scheduler on both hybrid
+//! CPUs (simulated, virtual time; see DESIGN.md substitution table).
+
+use dynpar::bench_harness::{fig2, FIG2_SCHEDULERS, PAPER_CPUS};
+use dynpar::util::bench::BenchReport;
+
+fn main() {
+    let mut report = BenchReport::new("fig2_gemm: INT8 GEMM 1024x4096x4096 (virtual time)");
+    let results = fig2::run_gemm(&PAPER_CPUS, &FIG2_SCHEDULERS, 1024, 4096, 4096, 20, 30, false);
+    for r in &results {
+        report.record(
+            &format!("{}/{}", r.cpu, r.scheduler),
+            vec![r.latency.min, r.latency.p50, r.latency.max],
+            None,
+            Some((r.gops * r.latency.p50 * 1e9) as u64),
+        );
+    }
+    println!("\n{}", fig2::gemm_table(&results).render());
+    for cpu in PAPER_CPUS {
+        let sp = fig2::speedup_vs_static(&results, cpu, "dynamic").unwrap();
+        println!(
+            "{cpu}: dynamic vs static speedup x{sp:.2} (paper: x1.65 on 125H, x1.85 on 12900K)"
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! `cargo bench --bench fig2_gemv` — regenerates Figure 2-right:
+//! INT4 GEMV 1×4096×4096 achieved bandwidth vs the MLC-like reference.
+
+use dynpar::bench_harness::{fig2, FIG2_SCHEDULERS, PAPER_CPUS};
+use dynpar::util::bench::BenchReport;
+
+fn main() {
+    let mut report = BenchReport::new("fig2_gemv: INT4 GEMV 1x4096x4096 (virtual time)");
+    let results = fig2::run_gemv(&PAPER_CPUS, &FIG2_SCHEDULERS, 4096, 4096, 20, 30, false);
+    for r in &results {
+        report.record(
+            &format!("{}/{}", r.cpu, r.scheduler),
+            vec![r.latency.min, r.latency.p50, r.latency.max],
+            Some((r.bandwidth_gbps * r.latency.p50 * 1e9) as u64),
+            None,
+        );
+    }
+    println!("\n{}", fig2::gemv_table(&results).render());
+    for cpu in PAPER_CPUS {
+        let d = results.iter().find(|r| r.cpu == cpu && r.scheduler == "dynamic").unwrap();
+        println!(
+            "{cpu}: dynamic achieves {:.1}% of MLC reference (paper: >90%)",
+            d.bandwidth_utilization() * 100.0
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! `cargo bench --bench fig3_e2e` — regenerates Figure 3: llama2-7B Q4_0
+//! end-to-end prefill/decode latency for llama.cpp, Neural Speed + OpenMP
+//! and Neural Speed + dynamic on both hybrid CPUs (prompt 1024).
+
+use dynpar::bench_harness::fig3;
+
+fn main() {
+    println!("=== fig3_e2e: llama2-7B Q4_0, prompt 1024, 32 decode tokens (virtual time) ===");
+    let results = fig3::run(&["ultra_125h", "core_12900k"], 1024, 32, false);
+    println!("{}", fig3::table(&results).render());
+    for cpu in ["ultra_125h", "core_12900k"] {
+        let ns = fig3::find(&results, cpu, "ns_openmp").unwrap();
+        let dy = fig3::find(&results, cpu, "ns_dynamic").unwrap();
+        let lc = fig3::find(&results, cpu, "llama.cpp").unwrap();
+        println!(
+            "{cpu}: prefill -{:.0}% vs NS-OpenMP (paper 20-30%), decode -{:.0}% (paper 9-22%), x{:.2} vs llama.cpp prefill",
+            (1.0 - dy.metrics.prefill_secs / ns.metrics.prefill_secs) * 100.0,
+            (1.0 - dy.metrics.decode_secs / ns.metrics.decode_secs) * 100.0,
+            lc.metrics.prefill_secs / dy.metrics.prefill_secs,
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! `cargo bench --bench kernels_host` — native kernel throughput on the
+//! *host* CPU (wall clock, single core in this sandbox). These numbers
+//! feed the §Perf roofline discussion in EXPERIMENTS.md.
+
+use dynpar::kernels::{gemm_i8, gemv_q4};
+use dynpar::quant::{quantize_q8_dynamic, MatQ4};
+use dynpar::tensor::{MatI8, MatU8};
+use dynpar::util::bench::{black_box, BenchOpts, BenchReport};
+use dynpar::util::rng::Rng;
+
+fn main() {
+    let mut report = BenchReport::new("kernels_host (wall clock, host CPU)");
+    let opts = BenchOpts { warmup_iters: 3, iters: 10 };
+    let mut rng = Rng::new(1);
+
+    // Q4_0 GEMV 4096x4096 — the decode hot path
+    let (n, k) = (4096, 4096);
+    let mut wdata = vec![0.0f32; n * k];
+    rng.fill_normal_f32(&mut wdata, 1.0);
+    let w = MatQ4::quantize(&wdata, n, k);
+    let mut x = vec![0.0f32; k];
+    rng.fill_normal_f32(&mut x, 1.0);
+    let bytes = w.packed_bytes() as u64;
+
+    let mut y = vec![0.0f32; n];
+    let r = report.bench("gemv_q4_f32_4096x4096", &opts, || {
+        gemv_q4::gemv_q4_f32_range(&w, &x, &mut y, 0..n);
+        black_box(&y);
+    });
+    let f32_p50 = r.summary().p50;
+    println!("  → streams {:.2} GB/s of packed weights", bytes as f64 / f32_p50 / 1e9);
+
+    let xq = quantize_q8_dynamic(&x);
+    let r = report.bench("gemv_q8q4_int_4096x4096", &opts, || {
+        gemv_q4::gemv_q8q4_range(&w, &xq, &mut y, 0..n);
+        black_box(&y);
+    });
+    println!("  → streams {:.2} GB/s of packed weights", bytes as f64 / r.summary().p50 / 1e9);
+
+    // INT8 GEMM 256x1024x1024 (scaled-down prefill tile; full 1024³·4 is
+    // too slow for a single sandbox core)
+    let (m, kk, nn) = (256, 1024, 1024);
+    let mut a = MatU8::zeros(m, kk);
+    rng.fill_u8(&mut a.data, 0, 256);
+    let mut bt = MatI8::zeros(nn, kk);
+    rng.fill_i8(&mut bt.data, -127, 128);
+    let mut c = vec![0i32; m * nn];
+    let ops = (m * kk * nn) as f64;
+    let r = report.bench("gemm_i8_256x1024x1024", &opts, || {
+        gemm_i8::gemm_i8_range(&a, &bt, &mut c, nn, 0..m);
+        black_box(&c);
+    });
+    println!("  → {:.2} Gmac/s", ops / r.summary().p50 / 1e9);
+
+    // quantization itself
+    let r = report.bench("quantize_q4_0_4096x4096", &opts, || {
+        black_box(MatQ4::quantize(&wdata, n, k));
+    });
+    println!(
+        "  → {:.2} GB/s of f32 input",
+        (n * k * 4) as f64 / r.summary().p50 / 1e9
+    );
+}

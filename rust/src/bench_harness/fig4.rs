@@ -1,0 +1,157 @@
+//! Figure 4: the performance ratio of one P-core (AVX-VNNI) over the
+//! course of an inference — seeded at a stale value of 5, stabilizing at
+//! ~3–3.5 during the compute-bound prefill, then shifting to a lower
+//! level when the decode phase's memory-bound bottleneck takes over.
+//!
+//! Phase hand-off: §2.2 says "the performance ratio will be distributed
+//! among different schedulers" — we model that by seeding the decode
+//! kernel's (GemvQ4, AVX-VNNI) row from the converged prefill row at the
+//! phase boundary, which is what produces the visible "second change" in
+//! the paper's trace.
+
+use crate::cpu::{presets::preset_by_name, Isa};
+use crate::engine::phantom::{decode_invocations, prefill_invocations, PhantomSystem};
+use crate::exec::PhantomWork;
+use crate::kernels::KernelClass;
+use crate::perf::PerfConfig;
+use crate::sim::SimConfig;
+use crate::trace::RatioTrace;
+
+/// Parameters of the trace experiment.
+#[derive(Clone, Debug)]
+pub struct Fig4Params {
+    pub cpu: String,
+    /// EWMA gain (paper: 0.3)
+    pub alpha: f64,
+    /// stale initial ratio of the traced P-core (paper: 5)
+    pub init_ratio: f64,
+    /// traced core id (0 = first P-core)
+    pub core: usize,
+    pub prompt_len: usize,
+    pub n_decode: usize,
+    /// prefill is chunked so the table updates several times
+    pub prefill_chunk: usize,
+    pub noisy: bool,
+}
+
+impl Default for Fig4Params {
+    fn default() -> Self {
+        Fig4Params {
+            cpu: "ultra_125h".into(),
+            alpha: 0.3,
+            init_ratio: 5.0,
+            core: 0,
+            prompt_len: 1024,
+            n_decode: 64,
+            prefill_chunk: 64,
+            noisy: true,
+        }
+    }
+}
+
+/// Run the trace. Returns the per-kernel-invocation relative ratio of the
+/// traced core (prefill samples keyed on the GEMM row, decode samples on
+/// the GEMV row — both AVX-VNNI, as in the paper).
+pub fn run(p: &Fig4Params) -> RatioTrace {
+    let spec = preset_by_name(&p.cpu).unwrap_or_else(|| panic!("unknown preset {}", p.cpu));
+    let n = spec.n_cores();
+    let sim_cfg = if p.noisy { SimConfig::default() } else { SimConfig::noiseless() };
+    let mut rt = super::sim_runtime(
+        spec,
+        "dynamic",
+        sim_cfg,
+        PerfConfig { alpha: p.alpha, init_ratio: 1.0 },
+    );
+    // stale table: the traced core starts at `init_ratio`, everyone else at 1
+    let mut seed = vec![1.0; n];
+    seed[p.core] = p.init_ratio;
+    rt.table.set_ratios(KernelClass::GemmI8, Isa::AvxVnni, seed);
+
+    let cfg = crate::model::ModelConfig::llama2_7b();
+    let sys = PhantomSystem::neural_speed();
+    let mut trace = RatioTrace::new(p.core, KernelClass::GemmI8, Isa::AvxVnni);
+
+    // ---- prefill, chunked so the table updates repeatedly ----
+    let mut done = 0;
+    while done < p.prompt_len {
+        let s = p.prefill_chunk.min(p.prompt_len - done);
+        for c in prefill_invocations(&cfg, &sys, s) {
+            rt.run(&PhantomWork::new(c));
+            if c.class == KernelClass::GemmI8 {
+                trace.record(&rt.table, rt.exec.sim.now, "prefill");
+            }
+        }
+        done += s;
+    }
+
+    // ---- phase hand-off: decode GEMV row inherits the converged ratios ----
+    let converged = rt.table.ratios(KernelClass::GemmI8, Isa::AvxVnni).to_vec();
+    rt.table.set_ratios(KernelClass::GemvQ4, Isa::AvxVnni, converged);
+    trace.class = KernelClass::GemvQ4;
+
+    for step in 0..p.n_decode {
+        for c in decode_invocations(&cfg, &sys, p.prompt_len + step) {
+            rt.run(&PhantomWork::new(c));
+            if c.class == KernelClass::GemvQ4 {
+                trace.record(&rt.table, rt.exec.sim.now, "decode");
+            }
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_params() -> Fig4Params {
+        Fig4Params {
+            prompt_len: 256,
+            n_decode: 24,
+            prefill_chunk: 64,
+            noisy: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn trace_reproduces_fig4_shape() {
+        let trace = run(&quick_params());
+        let prefill: Vec<f64> = trace
+            .samples
+            .iter()
+            .filter(|s| s.phase == "prefill")
+            .map(|s| s.ratio)
+            .collect();
+        let decode_mean = trace.phase_mean("decode").unwrap();
+
+        // change 1: starts high (stale 5), stabilizes in the 3–3.5 band
+        assert!(prefill[0] > 3.4, "first sample {}", prefill[0]);
+        let tail = &prefill[prefill.len() / 2..];
+        let tail_mean: f64 = tail.iter().sum::<f64>() / tail.len() as f64;
+        assert!((2.8..3.5).contains(&tail_mean), "prefill tail mean {tail_mean}");
+
+        // change 2: decode settles at a *different* (lower) ratio
+        assert!(decode_mean < tail_mean - 0.2, "decode {decode_mean} vs prefill {tail_mean}");
+    }
+
+    #[test]
+    fn alpha_zero_converges_fastest() {
+        let mut p = quick_params();
+        p.alpha = 0.0;
+        let fast = run(&p);
+        p.alpha = 0.9;
+        let slow = run(&p);
+        // after the very first update, α=0 must be closer to the ideal ~2.9
+        let f0 = fast.samples[0].ratio;
+        let s0 = slow.samples[0].ratio;
+        assert!((f0 - 2.9).abs() < (s0 - 2.9).abs(), "f0={f0} s0={s0}");
+    }
+
+    #[test]
+    fn csv_has_both_phases() {
+        let trace = run(&quick_params());
+        let csv = trace.to_csv();
+        assert!(csv.contains("prefill") && csv.contains("decode"));
+    }
+}

@@ -1,0 +1,30 @@
+//! Figure-regeneration harness: the code behind `cargo bench` targets and
+//! the `dynpar bench` CLI. One module per figure of the paper; see the
+//! experiment index in DESIGN.md.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod report;
+
+use crate::cpu::CpuSpec;
+use crate::exec::ParallelRuntime;
+use crate::perf::PerfConfig;
+use crate::sched::scheduler_by_name;
+use crate::sim::{SimConfig, SimExecutor};
+
+/// Build a simulator-backed runtime for (cpu, scheduler).
+pub fn sim_runtime(spec: CpuSpec, sched: &str, sim_cfg: SimConfig, perf: PerfConfig) -> ParallelRuntime<SimExecutor> {
+    ParallelRuntime::new(
+        SimExecutor::new(spec, sim_cfg),
+        scheduler_by_name(sched).unwrap_or_else(|| panic!("unknown scheduler {sched}")),
+        perf,
+    )
+}
+
+/// The two hybrid CPUs evaluated in the paper.
+pub const PAPER_CPUS: [&str; 2] = ["ultra_125h", "core_12900k"];
+
+/// The scheduler line-up for figure 2 (paper compares OpenMP vs ours;
+/// work-stealing and guided are the extra baselines we ablate).
+pub const FIG2_SCHEDULERS: [&str; 4] = ["static", "workstealing", "guided", "dynamic"];

@@ -1,0 +1,117 @@
+//! Fixed-width table / JSON rendering for benchmark results.
+
+use crate::util::json::Json;
+
+/// A simple column-aligned table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON form: array of objects keyed by header.
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.rows.iter().map(|row| {
+            Json::Object(
+                self.headers
+                    .iter()
+                    .zip(row)
+                    .map(|(h, c)| {
+                        let v = c
+                            .trim_end_matches('x')
+                            .parse::<f64>()
+                            .map(Json::Num)
+                            .unwrap_or_else(|_| Json::Str(c.clone()));
+                        (h.clone(), v)
+                    })
+                    .collect(),
+            )
+        }))
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new(&["cpu", "sched", "latency"]);
+        t.row(vec!["ultra_125h".into(), "dynamic".into(), "1.2 ms".into()]);
+        t.row(vec!["core_12900k".into(), "static".into(), "2.0 ms".into()]);
+        let s = t.render();
+        assert!(s.contains("ultra_125h"));
+        assert_eq!(s.lines().count(), 4);
+        // columns aligned: both data lines have 'static'/'dynamic' at same offset
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[2].find("dynamic"), lines[3].find("static"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn json_form_parses_numbers() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["x".into(), "2.5".into()]);
+        let j = t.to_json();
+        assert_eq!(j.idx(0).unwrap().get("value"), Some(&Json::Num(2.5)));
+        assert_eq!(j.idx(0).unwrap().get("name"), Some(&Json::Str("x".into())));
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert!(fmt_secs(5e-6).contains("µs"));
+        assert!(fmt_secs(5e-3).contains("ms"));
+        assert!(fmt_secs(5.0).contains("s"));
+    }
+}

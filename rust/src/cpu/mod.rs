@@ -1,0 +1,10 @@
+//! CPU descriptions: ISAs, core kinds, per-core capability specs and the
+//! calibrated presets for the paper's two testbeds (Core i9-12900K and
+//! Core Ultra 7 125H), plus host topology probing.
+
+pub mod presets;
+pub mod spec;
+pub mod topology;
+
+pub use presets::{core_12900k, homogeneous, preset_by_name, ultra_125h, PRESET_NAMES};
+pub use spec::{CoreKind, CoreSpec, CpuSpec, Isa};

@@ -1,0 +1,273 @@
+//! Core and CPU capability specifications.
+//!
+//! A [`CoreSpec`] captures what the paper's CPU runtime ultimately observes
+//! through timing: per-ISA instruction throughput × frequency (compute
+//! rate) and achievable memory bandwidth (streaming rate + contention
+//! weight). A [`CpuSpec`] is a set of cores sharing one memory bus.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Instruction-set families the runtime keys performance ratios by
+/// (paper §2.1: "different ISAs should have varying performance ratios").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Isa {
+    /// scalar fallback
+    Scalar,
+    /// 256-bit f32 FMA (the f32 dequant/GEMV path)
+    Avx2,
+    /// 256-bit int8 dot-product (`vpdpbusd`) — the paper's GEMM/GEMV kernels
+    AvxVnni,
+    /// pure streaming (tensor copy, memset) — throughput set by the bus
+    Stream,
+}
+
+impl Isa {
+    pub const ALL: [Isa; 4] = [Isa::Scalar, Isa::Avx2, Isa::AvxVnni, Isa::Stream];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::AvxVnni => "avx_vnni",
+            Isa::Stream => "stream",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Isa> {
+        Isa::ALL.iter().copied().find(|i| i.name() == s)
+    }
+}
+
+/// Microarchitectural class of a core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CoreKind {
+    /// P-core (e.g. Golden Cove / Redwood Cove)
+    Performance,
+    /// E-core (e.g. Gracemont / Crestmont)
+    Efficiency,
+    /// low-power E-core on the SoC tile (Meteor Lake)
+    LowPower,
+}
+
+impl CoreKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CoreKind::Performance => "P",
+            CoreKind::Efficiency => "E",
+            CoreKind::LowPower => "LPE",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<CoreKind> {
+        match s {
+            "P" => Some(CoreKind::Performance),
+            "E" => Some(CoreKind::Efficiency),
+            "LPE" => Some(CoreKind::LowPower),
+            _ => None,
+        }
+    }
+}
+
+/// One physical core's capabilities (the paper binds one thread per core).
+#[derive(Clone, Debug)]
+pub struct CoreSpec {
+    pub id: usize,
+    pub kind: CoreKind,
+    /// sustained all-core frequency (GHz) under vector load
+    pub freq_ghz: f64,
+    /// effective MAC-like ops per cycle, per ISA (calibrated, includes
+    /// kernel efficiency — see DESIGN.md substitution table)
+    pub ops_per_cycle: BTreeMap<Isa, f64>,
+    /// max sustained per-core stream bandwidth (GB/s)
+    pub mem_bw_gbps: f64,
+    /// contention weight: relative share of the bus under full contention
+    /// (proxy for memory-level parallelism / outstanding misses)
+    pub mem_weight: f64,
+}
+
+impl CoreSpec {
+    /// Compute rate in ops/second for an ISA.
+    pub fn compute_rate(&self, isa: Isa) -> f64 {
+        let opc = self.ops_per_cycle.get(&isa).copied().unwrap_or_else(|| {
+            // fall back to the scalar column if the ISA is not listed
+            self.ops_per_cycle.get(&Isa::Scalar).copied().unwrap_or(1.0)
+        });
+        self.freq_ghz * 1e9 * opc
+    }
+}
+
+/// A hybrid CPU: cores plus the shared memory subsystem.
+#[derive(Clone, Debug)]
+pub struct CpuSpec {
+    pub name: String,
+    pub cores: Vec<CoreSpec>,
+    /// effective total memory bandwidth (GB/s) — the realistic achievable
+    /// number (what MLC would report), not the theoretical peak
+    pub bus_bw_gbps: f64,
+}
+
+impl CpuSpec {
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn count_kind(&self, kind: CoreKind) -> usize {
+        self.cores.iter().filter(|c| c.kind == kind).count()
+    }
+
+    /// Ideal compute-rate ratios for an ISA (what a perfect perf table
+    /// would converge to), normalized so the slowest core is 1.0.
+    pub fn ideal_ratios(&self, isa: Isa) -> Vec<f64> {
+        let rates: Vec<f64> = self.cores.iter().map(|c| c.compute_rate(isa)).collect();
+        let min = rates.iter().cloned().fold(f64::INFINITY, f64::min).max(1e-30);
+        rates.iter().map(|r| r / min).collect()
+    }
+
+    /// Total compute throughput for an ISA (ops/s) if perfectly balanced.
+    pub fn total_compute_rate(&self, isa: Isa) -> f64 {
+        self.cores.iter().map(|c| c.compute_rate(isa)).sum()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cores.is_empty() {
+            return Err("no cores".into());
+        }
+        if self.bus_bw_gbps <= 0.0 {
+            return Err("bus bandwidth must be positive".into());
+        }
+        for (i, c) in self.cores.iter().enumerate() {
+            if c.id != i {
+                return Err(format!("core {i} has id {}", c.id));
+            }
+            if c.freq_ghz <= 0.0 || c.mem_bw_gbps <= 0.0 || c.mem_weight <= 0.0 {
+                return Err(format!("core {i} has non-positive rates"));
+            }
+        }
+        Ok(())
+    }
+
+    // ---- JSON config round trip (custom CPUs via --cpu-config file) ----
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("bus_bw_gbps", Json::num(self.bus_bw_gbps)),
+            (
+                "cores",
+                Json::arr(self.cores.iter().map(|c| {
+                    Json::obj(vec![
+                        ("id", Json::num(c.id as f64)),
+                        ("kind", Json::str(c.kind.name())),
+                        ("freq_ghz", Json::num(c.freq_ghz)),
+                        ("mem_bw_gbps", Json::num(c.mem_bw_gbps)),
+                        ("mem_weight", Json::num(c.mem_weight)),
+                        (
+                            "ops_per_cycle",
+                            Json::Object(
+                                c.ops_per_cycle
+                                    .iter()
+                                    .map(|(isa, v)| (isa.name().to_string(), Json::num(*v)))
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CpuSpec, String> {
+        let name = v.get("name").and_then(Json::as_str).ok_or("missing name")?.to_string();
+        let bus = v.get("bus_bw_gbps").and_then(Json::as_f64).ok_or("missing bus_bw_gbps")?;
+        let cores_json = v.get("cores").and_then(Json::as_array).ok_or("missing cores")?;
+        let mut cores = Vec::new();
+        for (i, cj) in cores_json.iter().enumerate() {
+            let kind_name = cj.get("kind").and_then(Json::as_str).ok_or("core missing kind")?;
+            let kind = CoreKind::from_name(kind_name).ok_or_else(|| format!("bad kind {kind_name}"))?;
+            let mut ops = BTreeMap::new();
+            if let Some(m) = cj.get("ops_per_cycle").and_then(Json::as_object) {
+                for (k, val) in m {
+                    let isa = Isa::from_name(k).ok_or_else(|| format!("bad isa {k}"))?;
+                    ops.insert(isa, val.as_f64().ok_or("bad ops value")?);
+                }
+            }
+            cores.push(CoreSpec {
+                id: cj.get("id").and_then(Json::as_usize).unwrap_or(i),
+                kind,
+                freq_ghz: cj.get("freq_ghz").and_then(Json::as_f64).ok_or("core missing freq_ghz")?,
+                ops_per_cycle: ops,
+                mem_bw_gbps: cj.get("mem_bw_gbps").and_then(Json::as_f64).unwrap_or(8.0),
+                mem_weight: cj.get("mem_weight").and_then(Json::as_f64).unwrap_or(1.0),
+            });
+        }
+        let spec = CpuSpec { name, cores, bus_bw_gbps: bus };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::presets;
+
+    #[test]
+    fn isa_names_roundtrip() {
+        for isa in Isa::ALL {
+            assert_eq!(Isa::from_name(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn core_kind_names_roundtrip() {
+        for k in [CoreKind::Performance, CoreKind::Efficiency, CoreKind::LowPower] {
+            assert_eq!(CoreKind::from_name(k.name()), Some(k));
+        }
+    }
+
+    #[test]
+    fn compute_rate_scales_with_freq() {
+        let spec = presets::core_12900k();
+        let p = &spec.cores[0];
+        let rate = p.compute_rate(Isa::AvxVnni);
+        assert!((rate - p.freq_ghz * 1e9 * p.ops_per_cycle[&Isa::AvxVnni]).abs() < 1.0);
+    }
+
+    #[test]
+    fn ideal_ratios_min_is_one() {
+        let spec = presets::ultra_125h();
+        let ratios = spec.ideal_ratios(Isa::AvxVnni);
+        let min = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((min - 1.0).abs() < 1e-12);
+        assert_eq!(ratios.len(), spec.n_cores());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = presets::core_12900k();
+        let j = spec.to_json();
+        let back = CpuSpec::from_json(&j).unwrap();
+        assert_eq!(back.name, spec.name);
+        assert_eq!(back.n_cores(), spec.n_cores());
+        for (a, b) in back.cores.iter().zip(&spec.cores) {
+            assert_eq!(a.kind, b.kind);
+            assert!((a.freq_ghz - b.freq_ghz).abs() < 1e-12);
+            assert_eq!(a.ops_per_cycle, b.ops_per_cycle);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let mut spec = presets::core_12900k();
+        spec.bus_bw_gbps = 0.0;
+        assert!(spec.validate().is_err());
+        let mut spec2 = presets::core_12900k();
+        spec2.cores[3].id = 99;
+        assert!(spec2.validate().is_err());
+        let spec3 = CpuSpec { name: "x".into(), cores: vec![], bus_bw_gbps: 10.0 };
+        assert!(spec3.validate().is_err());
+    }
+}

@@ -1,0 +1,71 @@
+//! Host topology probe: how many real cores we have to pin workers to.
+//!
+//! This sandbox exposes a single core, so the *figure* experiments run on
+//! the simulator; the probe exists so the host thread pool binds correctly
+//! on real hybrid machines (and degrades gracefully here).
+
+use super::spec::{CoreKind, CoreSpec, CpuSpec, Isa};
+use std::collections::BTreeMap;
+
+/// Number of logical CPUs visible to this process.
+pub fn n_logical_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A neutral spec describing the host (unknown microarchitecture):
+/// used when running the real thread pool without a simulator preset.
+pub fn host_spec() -> CpuSpec {
+    let n = n_logical_cpus();
+    let cores = (0..n)
+        .map(|id| {
+            let mut ops = BTreeMap::new();
+            ops.insert(Isa::Scalar, 1.0);
+            ops.insert(Isa::Avx2, 8.0);
+            ops.insert(Isa::AvxVnni, 32.0);
+            ops.insert(Isa::Stream, f64::INFINITY);
+            CoreSpec {
+                id,
+                kind: CoreKind::Performance,
+                freq_ghz: 2.7,
+                ops_per_cycle: ops,
+                mem_bw_gbps: 10.0,
+                mem_weight: 1.0,
+            }
+        })
+        .collect();
+    CpuSpec { name: format!("host_{n}"), cores, bus_bw_gbps: 20.0 }
+}
+
+/// Model-name string from /proc/cpuinfo (informational only).
+pub fn host_model_name() -> Option<String> {
+    let text = std::fs::read_to_string("/proc/cpuinfo").ok()?;
+    text.lines()
+        .find(|l| l.starts_with("model name"))
+        .and_then(|l| l.split(':').nth(1))
+        .map(|s| s.trim().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_least_one_cpu() {
+        assert!(n_logical_cpus() >= 1);
+    }
+
+    #[test]
+    fn host_spec_validates() {
+        host_spec().validate().unwrap();
+        assert_eq!(host_spec().n_cores(), n_logical_cpus());
+    }
+
+    #[test]
+    fn model_name_readable_on_linux() {
+        // present on Linux; don't assert content
+        let name = host_model_name();
+        if cfg!(target_os = "linux") {
+            assert!(name.is_some());
+        }
+    }
+}

@@ -1,0 +1,436 @@
+//! The inference engine: every matmul / attention kernel of the llama
+//! forward pass dispatched through the paper's dynamic-parallel loop
+//! ([`ParallelRuntime`]): query ratio table → proportional partition →
+//! execute on cores → measure per-core times → update table.
+//!
+//! Generic over the executor, so the *same* engine runs on the real
+//! core-bound thread pool and on the simulated hybrid CPU.
+
+pub mod phantom;
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::exec::{Executor, FnWork, ParallelRuntime, SharedSlice};
+use crate::kernels::{attention, cost, elementwise, gemv_q4, rope};
+use crate::metrics::PhaseMetrics;
+use crate::model::{argmax, ModelConfig, ModelWeights, Session};
+use crate::perf::PerfConfig;
+use crate::quant::{quantize_q8_dynamic, MatQ4};
+use crate::sched::Scheduler;
+
+/// Engine knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOpts {
+    /// use the integer (q8 activation × q4 weight) GEMV for decode — the
+    /// paper's VNNI path. `false` keeps the f32 path, which is bit-exact
+    /// with the serial oracle and the PJRT artifact.
+    pub int_gemv: bool,
+    /// partition grain (rows) for matmul kernels
+    pub grain: usize,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts { int_gemv: false, grain: 1 }
+    }
+}
+
+pub struct Engine<E: Executor> {
+    pub cfg: ModelConfig,
+    pub weights: Arc<ModelWeights>,
+    pub rt: ParallelRuntime<E>,
+    pub opts: EngineOpts,
+    /// accumulated kernel time (virtual for sim executors, wall for host)
+    pub kernel_secs: f64,
+}
+
+impl<E: Executor> Engine<E> {
+    pub fn new(
+        cfg: ModelConfig,
+        weights: Arc<ModelWeights>,
+        exec: E,
+        sched: Box<dyn Scheduler>,
+        perf_cfg: PerfConfig,
+    ) -> Engine<E> {
+        cfg.validate().expect("invalid model config");
+        Engine {
+            cfg,
+            weights,
+            rt: ParallelRuntime::new(exec, sched, perf_cfg),
+            opts: EngineOpts::default(),
+            kernel_secs: 0.0,
+        }
+    }
+
+    pub fn new_session(&self) -> Session {
+        Session::new(&self.cfg)
+    }
+
+    // ---- scheduled kernels ----
+
+    /// GEMV through the dynamic-parallel loop.
+    fn gemv(&mut self, w: &MatQ4, x: &[f32]) -> Vec<f32> {
+        let n = w.rows;
+        let mut y = vec![0.0f32; n];
+        let c = cost::gemv_q4_cost(w.cols, n);
+        let wall;
+        {
+            let shared = SharedSlice::new(&mut y);
+            if self.opts.int_gemv {
+                let xq = quantize_q8_dynamic(x);
+                let work = FnWork::new(c, self.opts.grain, move |_wk, r: Range<usize>| {
+                    // SAFETY: scheduler ranges are disjoint
+                    let out = unsafe { shared.slice_mut(r.clone()) };
+                    gemv_q4::gemv_q8q4_rows_into(w, &xq, r, out);
+                });
+                wall = self.rt.run(&work).wall_secs;
+            } else {
+                let work = FnWork::new(c, self.opts.grain, move |_wk, r: Range<usize>| {
+                    let out = unsafe { shared.slice_mut(r.clone()) };
+                    gemv_q4::gemv_q4_f32_rows_into(w, x, r, out);
+                });
+                wall = self.rt.run(&work).wall_secs;
+            }
+        }
+        self.kernel_secs += wall;
+        y
+    }
+
+    /// Prefill matmul (`x` is S×K) through the dynamic-parallel loop.
+    /// Returns row-major `[S, N]`.
+    fn qmatmul(&mut self, w: &MatQ4, x: &[f32], s: usize) -> Vec<f32> {
+        let n = w.rows;
+        let k = w.cols;
+        let mut out_t = vec![0.0f32; n * s]; // transposed: worker-contiguous
+        let c = cost::qmatmul_cost(s, k, n);
+        {
+            let shared = SharedSlice::new(&mut out_t);
+            let work = FnWork::new(c, self.opts.grain, move |_wk, r: Range<usize>| {
+                let out = unsafe { shared.slice_mut(r.start * s..r.end * s) };
+                let mut scratch = vec![0.0f32; k];
+                gemv_q4::qmatmul_f32_rows_into_t(w, x, s, r, out, &mut scratch);
+            });
+            self.kernel_secs += self.rt.run(&work).wall_secs;
+        }
+        // transpose [N, S] → [S, N]
+        let mut out = vec![0.0f32; s * n];
+        for nn in 0..n {
+            for si in 0..s {
+                out[si * n + nn] = out_t[nn * s + si];
+            }
+        }
+        out
+    }
+
+    /// Decode attention through the dynamic-parallel loop (heads split).
+    fn attention(&mut self, cache: &attention::KvLayer, q: &[f32], pos: usize) -> Vec<f32> {
+        let (h, dh) = (cache.h, cache.dh);
+        let mut out = vec![0.0f32; h * dh];
+        let c = cost::attention_decode_cost(h, pos + 1, dh);
+        {
+            let shared = SharedSlice::new(&mut out);
+            let work = FnWork::new(c, 1, move |_wk, r: Range<usize>| {
+                let full = unsafe { shared.slice_mut(r.start * dh..r.end * dh) };
+                let mut scratch = Vec::new();
+                // compute heads r into the window (relative indexing)
+                for (hi, head) in r.enumerate() {
+                    let mut tmp = vec![0.0f32; cache.h * dh];
+                    attention::attention_decode_range(
+                        q,
+                        cache,
+                        pos,
+                        &mut tmp,
+                        &mut scratch,
+                        head..head + 1,
+                    );
+                    full[hi * dh..(hi + 1) * dh].copy_from_slice(&tmp[head * dh..(head + 1) * dh]);
+                }
+            });
+            self.kernel_secs += self.rt.run(&work).wall_secs;
+        }
+        out
+    }
+
+    // ---- model forward ----
+
+    /// One scheduled decode step — must produce exactly the logits of
+    /// [`crate::model::decode_step_serial`] when `int_gemv` is off.
+    pub fn decode_step(&mut self, session: &mut Session, token: u32) -> Vec<f32> {
+        let weights = Arc::clone(&self.weights);
+        let cfg = self.cfg.clone();
+        let d = cfg.d_model;
+        let (h, dh) = (cfg.n_heads, cfg.head_dim());
+        let pos = session.pos;
+        assert!(pos < cfg.t_max, "KV cache exhausted");
+        let mut x = weights.embed.row(token as usize).to_vec();
+
+        for (li, layer) in weights.layers.iter().enumerate() {
+            let mut xa = vec![0.0f32; d];
+            elementwise::rmsnorm(&x, &layer.attn_norm, cfg.rms_eps, &mut xa);
+            let mut q = self.gemv(&layer.wq, &xa);
+            let mut k = self.gemv(&layer.wk, &xa);
+            let v = self.gemv(&layer.wv, &xa);
+            rope::rope_heads(&mut q, h, dh, pos as i32, cfg.rope_theta);
+            rope::rope_heads(&mut k, h, dh, pos as i32, cfg.rope_theta);
+            let cache = &mut session.kv[li];
+            for head in 0..h {
+                cache.write(
+                    head,
+                    pos,
+                    &k[head * dh..(head + 1) * dh],
+                    &v[head * dh..(head + 1) * dh],
+                );
+            }
+            let attn = self.attention(&session.kv[li], &q, pos);
+            let proj = self.gemv(&layer.wo, &attn);
+            elementwise::add_inplace(&mut x, &proj);
+
+            let mut xf = vec![0.0f32; d];
+            elementwise::rmsnorm(&x, &layer.ffn_norm, cfg.rms_eps, &mut xf);
+            let gate = self.gemv(&layer.w1, &xf);
+            let up = self.gemv(&layer.w3, &xf);
+            let mut act = vec![0.0f32; cfg.d_ff];
+            elementwise::silu_mul(&gate, &up, &mut act);
+            let down = self.gemv(&layer.w2, &act);
+            elementwise::add_inplace(&mut x, &down);
+        }
+
+        let mut xn = vec![0.0f32; d];
+        elementwise::rmsnorm(&x, &weights.final_norm, cfg.rms_eps, &mut xn);
+        session.pos += 1;
+        self.gemv(&weights.lm_head, &xn)
+    }
+
+    /// Scheduled prefill of a whole prompt chunk (any length ≤ capacity).
+    /// Returns the last token's logits.
+    pub fn prefill(&mut self, session: &mut Session, tokens: &[u32]) -> Vec<f32> {
+        let weights = Arc::clone(&self.weights);
+        let cfg = self.cfg.clone();
+        let s = tokens.len();
+        assert!(s > 0, "empty prompt");
+        assert!(session.pos + s <= cfg.t_max, "prompt exceeds KV capacity");
+        let d = cfg.d_model;
+        let (h, dh) = (cfg.n_heads, cfg.head_dim());
+        let pos0 = session.pos;
+
+        let mut xs = vec![0.0f32; s * d];
+        for (si, &t) in tokens.iter().enumerate() {
+            xs[si * d..(si + 1) * d].copy_from_slice(weights.embed.row(t as usize));
+        }
+
+        for (li, layer) in weights.layers.iter().enumerate() {
+            // projections, batched over the chunk
+            let mut xa = vec![0.0f32; s * d];
+            for si in 0..s {
+                let (src, dst) = (&xs[si * d..(si + 1) * d], &mut xa[si * d..(si + 1) * d]);
+                elementwise::rmsnorm(src, &layer.attn_norm, cfg.rms_eps, dst);
+            }
+            let mut q = self.qmatmul(&layer.wq, &xa, s);
+            let mut k = self.qmatmul(&layer.wk, &xa, s);
+            let v = self.qmatmul(&layer.wv, &xa, s);
+            for si in 0..s {
+                let p = (pos0 + si) as i32;
+                rope::rope_heads(&mut q[si * d..(si + 1) * d], h, dh, p, cfg.rope_theta);
+                rope::rope_heads(&mut k[si * d..(si + 1) * d], h, dh, p, cfg.rope_theta);
+            }
+            {
+                let cache = &mut session.kv[li];
+                for si in 0..s {
+                    for head in 0..h {
+                        let o = si * d + head * dh;
+                        cache.write(head, pos0 + si, &k[o..o + dh], &v[o..o + dh]);
+                    }
+                }
+            }
+            // causal attention per chunk position (heads scheduled)
+            let mut attn = vec![0.0f32; s * d];
+            for si in 0..s {
+                let out =
+                    self.attention(&session.kv[li], &q[si * d..(si + 1) * d], pos0 + si);
+                attn[si * d..(si + 1) * d].copy_from_slice(&out);
+            }
+            let proj = self.qmatmul(&layer.wo, &attn, s);
+            elementwise::add_inplace(&mut xs, &proj);
+
+            let mut xf = vec![0.0f32; s * d];
+            for si in 0..s {
+                let (src, dst) = (&xs[si * d..(si + 1) * d], &mut xf[si * d..(si + 1) * d]);
+                elementwise::rmsnorm(src, &layer.ffn_norm, cfg.rms_eps, dst);
+            }
+            let gate = self.qmatmul(&layer.w1, &xf, s);
+            let up = self.qmatmul(&layer.w3, &xf, s);
+            let mut act = vec![0.0f32; s * cfg.d_ff];
+            elementwise::silu_mul(&gate, &up, &mut act);
+            let down = self.qmatmul(&layer.w2, &act, s);
+            elementwise::add_inplace(&mut xs, &down);
+        }
+
+        session.pos += s;
+        let mut xn = vec![0.0f32; d];
+        elementwise::rmsnorm(&xs[(s - 1) * d..], &weights.final_norm, cfg.rms_eps, &mut xn);
+        self.gemv(&weights.lm_head, &xn)
+    }
+
+    /// Full generation: prefill the prompt, then greedy-decode `n_new`
+    /// tokens. Returns generated tokens + per-phase timing.
+    pub fn generate(
+        &mut self,
+        session: &mut Session,
+        prompt: &[u32],
+        n_new: usize,
+    ) -> (Vec<u32>, PhaseMetrics) {
+        let mut metrics = PhaseMetrics {
+            prompt_tokens: prompt.len(),
+            decoded_tokens: 0,
+            ..Default::default()
+        };
+        let t0 = self.kernel_secs;
+        let logits = self.prefill(session, prompt);
+        metrics.prefill_secs = self.kernel_secs - t0;
+
+        let mut out = Vec::with_capacity(n_new);
+        let mut next = argmax(&logits);
+        let t1 = self.kernel_secs;
+        for _ in 0..n_new {
+            if session.remaining_capacity(&self.cfg) == 0 {
+                break;
+            }
+            out.push(next);
+            let logits = self.decode_step(session, next);
+            next = argmax(&logits);
+            metrics.decoded_tokens += 1;
+        }
+        metrics.decode_secs = self.kernel_secs - t1;
+        (out, metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::presets;
+    use crate::model::decode_step_serial;
+    use crate::pool::HostPool;
+    use crate::sched::DynamicScheduler;
+    use crate::sim::{SimConfig, SimExecutor};
+
+    fn sim_engine(n_cores_preset: &str) -> Engine<SimExecutor> {
+        let cfg = ModelConfig::micro();
+        let weights = Arc::new(ModelWeights::random_init(&cfg, 11));
+        let spec = presets::preset_by_name(n_cores_preset).unwrap();
+        let exec = SimExecutor::new(
+            spec,
+            SimConfig { execute_real: true, ..SimConfig::noiseless() },
+        );
+        Engine::new(cfg, weights, exec, Box::new(DynamicScheduler), PerfConfig::default())
+    }
+
+    #[test]
+    fn scheduled_decode_matches_serial_oracle_exactly() {
+        let mut e = sim_engine("ultra_125h");
+        let mut s1 = e.new_session();
+        let mut s2 = e.new_session();
+        for (i, t) in [3u32, 9, 1, 7].iter().enumerate() {
+            let scheduled = e.decode_step(&mut s1, *t);
+            let serial = decode_step_serial(&e.cfg.clone(), &e.weights.clone(), &mut s2, *t);
+            assert_eq!(scheduled, serial, "step {i}");
+        }
+    }
+
+    #[test]
+    fn prefill_matches_sequential_decode() {
+        let mut e = sim_engine("core_12900k");
+        let toks = [5u32, 2, 9, 14, 3, 8, 1, 0];
+        let mut s1 = e.new_session();
+        let lp = e.prefill(&mut s1, &toks);
+        let mut s2 = e.new_session();
+        let mut ld = Vec::new();
+        for &t in &toks {
+            ld = e.decode_step(&mut s2, t);
+        }
+        assert_eq!(s1.pos, s2.pos);
+        for (a, b) in lp.iter().zip(&ld) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        // KV caches identical
+        for (k1, k2) in s1.kv.iter().zip(&s2.kv) {
+            for (a, b) in k1.k.iter().zip(&k2.k) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn generate_reports_phase_metrics() {
+        let mut e = sim_engine("ultra_125h");
+        let mut s = e.new_session();
+        let (tokens, m) = e.generate(&mut s, &[1, 2, 3, 4], 6);
+        assert_eq!(tokens.len(), 6);
+        assert_eq!(m.prompt_tokens, 4);
+        assert_eq!(m.decoded_tokens, 6);
+        assert!(m.prefill_secs > 0.0 && m.decode_secs > 0.0);
+        assert!(m.decode_tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_executor_independent() {
+        // same tokens whether simulated on 125H or 12900K (virtual timing
+        // differs, computation must not)
+        let mut e1 = sim_engine("ultra_125h");
+        let mut e2 = sim_engine("core_12900k");
+        let mut s1 = e1.new_session();
+        let mut s2 = e2.new_session();
+        let (t1, _) = e1.generate(&mut s1, &[1, 2, 3], 8);
+        let (t2, _) = e2.generate(&mut s2, &[1, 2, 3], 8);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn host_pool_engine_matches_sim_engine() {
+        let cfg = ModelConfig::micro();
+        let weights = Arc::new(ModelWeights::random_init(&cfg, 11));
+        let pool = HostPool::new(2);
+        let mut host_engine = Engine::new(
+            cfg,
+            Arc::clone(&weights),
+            pool,
+            Box::new(DynamicScheduler),
+            PerfConfig::default(),
+        );
+        let mut sim = sim_engine("ultra_125h");
+        let mut sh = host_engine.new_session();
+        let mut ss = sim.new_session();
+        let lh = host_engine.decode_step(&mut sh, 7);
+        let ls = sim.decode_step(&mut ss, 7);
+        assert_eq!(lh, ls);
+    }
+
+    #[test]
+    fn int_gemv_tracks_f32_path() {
+        let mut e = sim_engine("ultra_125h");
+        let mut ef = sim_engine("ultra_125h");
+        e.opts.int_gemv = true;
+        let mut s1 = e.new_session();
+        let mut s2 = ef.new_session();
+        let li = e.decode_step(&mut s1, 5);
+        let lf = ef.decode_step(&mut s2, 5);
+        let denom = lf.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-3);
+        for (a, b) in li.iter().zip(&lf) {
+            assert!((a - b).abs() / denom < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn perf_table_learns_during_inference() {
+        let mut e = sim_engine("core_12900k");
+        let mut s = e.new_session();
+        e.generate(&mut s, &[1, 2, 3, 4, 5, 6, 7, 8], 4);
+        let rel = e
+            .rt
+            .relative_ratios(crate::kernels::KernelClass::GemvQ4, crate::cpu::Isa::AvxVnni)
+            .unwrap();
+        // P-cores must have learned a higher ratio than E-cores
+        assert!(rel[0] > 1.2, "P-core ratio {rel:?}");
+    }
+}

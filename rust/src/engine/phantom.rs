@@ -1,0 +1,224 @@
+//! Cost-only ("phantom") model execution at paper scale.
+//!
+//! llama2-7B weights don't fit this sandbox, but the *schedule* of kernel
+//! invocations and their analytic costs do — which is all the simulator
+//! needs to regenerate Figure 3. A [`PhantomSystem`] describes one of the
+//! paper's three systems (llama.cpp, Neural Speed + OpenMP, Neural Speed +
+//! dynamic); calibration notes live in DESIGN.md.
+
+use crate::exec::{Executor, ParallelRuntime, PhantomWork};
+use crate::kernels::{cost, WorkCost};
+use crate::metrics::PhaseMetrics;
+use crate::model::ModelConfig;
+
+/// Efficiency knobs distinguishing the compared systems.
+#[derive(Clone, Debug)]
+pub struct PhantomSystem {
+    pub name: String,
+    /// compute efficiency of the micro-kernels relative to Neural Speed's
+    /// AVX-VNNI kernels (llama.cpp ≈ 0.5, per [16] in the paper)
+    pub kernel_eff: f64,
+    /// achieved-bandwidth efficiency (software prefetch quality)
+    pub mem_eff: f64,
+}
+
+impl PhantomSystem {
+    pub fn neural_speed() -> PhantomSystem {
+        PhantomSystem { name: "neural_speed".into(), kernel_eff: 1.0, mem_eff: 1.0 }
+    }
+
+    pub fn llama_cpp() -> PhantomSystem {
+        PhantomSystem { name: "llama.cpp".into(), kernel_eff: 0.5, mem_eff: 0.9 }
+    }
+
+    fn scale(&self, mut c: WorkCost) -> WorkCost {
+        c.ops_per_unit /= self.kernel_eff;
+        c.bytes_per_unit /= self.mem_eff;
+        c
+    }
+}
+
+/// The per-layer kernel schedule of one decoded token at position `pos`.
+pub fn decode_invocations(cfg: &ModelConfig, sys: &PhantomSystem, pos: usize) -> Vec<WorkCost> {
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let mut out = Vec::with_capacity(cfg.n_layers * 8 + 1);
+    for _ in 0..cfg.n_layers {
+        out.push(sys.scale(cost::gemv_q4_cost(d, d))); // wq
+        out.push(sys.scale(cost::gemv_q4_cost(d, d))); // wk
+        out.push(sys.scale(cost::gemv_q4_cost(d, d))); // wv
+        out.push(sys.scale(cost::attention_decode_cost(cfg.n_heads, pos + 1, cfg.head_dim())));
+        out.push(sys.scale(cost::gemv_q4_cost(d, d))); // wo
+        out.push(sys.scale(cost::gemv_q4_cost(d, ff))); // w1
+        out.push(sys.scale(cost::gemv_q4_cost(d, ff))); // w3
+        out.push(sys.scale(cost::gemv_q4_cost(ff, d))); // w2
+    }
+    out.push(sys.scale(cost::gemv_q4_cost(d, cfg.vocab))); // lm_head
+    out
+}
+
+/// The kernel schedule of a prefill over `s` prompt tokens (the paper's
+/// INT8-GEMM compute path: dynamic-quantized activations × int8 weights).
+pub fn prefill_invocations(cfg: &ModelConfig, sys: &PhantomSystem, s: usize) -> Vec<WorkCost> {
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let mut out = Vec::with_capacity(cfg.n_layers * 8 + 1);
+    for _ in 0..cfg.n_layers {
+        out.push(sys.scale(cost::gemm_i8_cost(s, d, d))); // wq
+        out.push(sys.scale(cost::gemm_i8_cost(s, d, d))); // wk
+        out.push(sys.scale(cost::gemm_i8_cost(s, d, d))); // wv
+        // causal attention ≈ s·(s+1)/2 score+mix MACs per head-dim pair;
+        // modelled as one Avx2 kernel over heads. MHA_OVERHEAD folds in the
+        // non-MAC work (softmax exp, masking, transposes) that makes the
+        // paper's *unscheduled* MHA a substantial share of prefill time —
+        // the stated reason model-level gains (20–30 %) are below
+        // kernel-level gains (65–85 %).
+        let t_avg = s.div_ceil(2);
+        out.push(sys.scale(WorkCost::new(
+            crate::kernels::KernelClass::Attention,
+            cfg.n_heads,
+            MHA_OVERHEAD * 2.0 * (s * t_avg * cfg.head_dim()) as f64,
+            (s * t_avg * cfg.head_dim() * 8) as f64 / cfg.n_heads as f64,
+        )));
+        out.push(sys.scale(cost::gemm_i8_cost(s, d, d))); // wo
+        out.push(sys.scale(cost::gemm_i8_cost(s, d, ff))); // w1
+        out.push(sys.scale(cost::gemm_i8_cost(s, d, ff))); // w3
+        out.push(sys.scale(cost::gemm_i8_cost(s, ff, d))); // w2
+    }
+    out.push(sys.scale(cost::gemm_i8_cost(1, d, cfg.vocab))); // lm_head (last tok)
+    out
+}
+
+/// Non-MAC overhead factor of the unoptimized multi-head-attention kernel
+/// (softmax exponentials, masking, layout shuffles) relative to its MAC
+/// count. Calibrated so the model-level prefill gain lands in the paper's
+/// 20–30 % band while the kernel-level GEMM gain stays at 65–85 %.
+pub const MHA_OVERHEAD: f64 = 8.0;
+
+/// Run one kernel invocation the way the paper's integration does:
+/// GEMM/GEMV kernels go through the dynamic-parallel loop; **attention is
+/// always statically split** ("we only apply our method to GEMM kernels.
+/// Other kernels, like multi-head attention, do not benefit").
+fn run_one<E: Executor>(rt: &mut ParallelRuntime<E>, c: WorkCost) -> f64 {
+    if c.class == crate::kernels::KernelClass::Attention {
+        use crate::sched::Scheduler;
+        let n = rt.exec.n_workers();
+        let plan = crate::sched::StaticEven.plan(c.units, 1, &vec![1.0; n]);
+        rt.exec.execute(&PhantomWork::new(c), &plan).wall_secs
+    } else {
+        rt.run(&PhantomWork::new(c)).wall_secs
+    }
+}
+
+/// Run a full phantom generation through a runtime: prefill of
+/// `prompt_len` tokens then `n_decode` decode steps. Returns phase timing
+/// (virtual seconds for sim executors).
+pub fn run_phantom_generation<E: Executor>(
+    rt: &mut ParallelRuntime<E>,
+    cfg: &ModelConfig,
+    sys: &PhantomSystem,
+    prompt_len: usize,
+    n_decode: usize,
+) -> PhaseMetrics {
+    let mut m = PhaseMetrics {
+        prompt_tokens: prompt_len,
+        decoded_tokens: n_decode,
+        ..Default::default()
+    };
+    for c in prefill_invocations(cfg, sys, prompt_len) {
+        m.prefill_secs += run_one(rt, c);
+    }
+    for step in 0..n_decode {
+        for c in decode_invocations(cfg, sys, prompt_len + step) {
+            m.decode_secs += run_one(rt, c);
+        }
+    }
+    m
+}
+
+/// Total Q4_0 weight bytes streamed per decode step (the paper's GEMV
+/// bandwidth accounting counts weight traffic only).
+pub fn decode_bytes_per_token(cfg: &ModelConfig) -> f64 {
+    decode_invocations(cfg, &PhantomSystem::neural_speed(), 0)
+        .iter()
+        .filter(|c| c.class == crate::kernels::KernelClass::GemvQ4)
+        .map(|c| c.total_bytes())
+        .sum()
+}
+
+/// All decode-step bytes (weights + KV-cache attention traffic) at a
+/// given position — the number that bounds long-context tokens/s.
+pub fn decode_total_bytes_at(cfg: &ModelConfig, pos: usize) -> f64 {
+    decode_invocations(cfg, &PhantomSystem::neural_speed(), pos)
+        .iter()
+        .map(|c| c.total_bytes())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::presets;
+    use crate::perf::PerfConfig;
+    use crate::sched::scheduler_by_name;
+    use crate::sim::{SimConfig, SimExecutor};
+
+    fn rt(preset: &str, sched: &str) -> ParallelRuntime<SimExecutor> {
+        let spec = presets::preset_by_name(preset).unwrap();
+        ParallelRuntime::new(
+            SimExecutor::new(spec, SimConfig::noiseless()),
+            scheduler_by_name(sched).unwrap(),
+            PerfConfig::default(),
+        )
+    }
+
+    #[test]
+    fn decode_schedule_has_expected_shape() {
+        let cfg = ModelConfig::llama2_7b();
+        let inv = decode_invocations(&cfg, &PhantomSystem::neural_speed(), 0);
+        assert_eq!(inv.len(), 32 * 8 + 1);
+        // weight bytes per token ≈ 3.7 GB
+        let gb = decode_bytes_per_token(&cfg) / 1e9;
+        assert!((3.3..4.0).contains(&gb), "gb={gb}");
+    }
+
+    #[test]
+    fn phantom_7b_decode_speed_is_paper_scale() {
+        // paper: ~16 tokens/s on both testbeds after the method converges
+        let cfg = ModelConfig::llama2_7b();
+        let mut r = rt("ultra_125h", "dynamic");
+        // warm the table with a few steps, then measure
+        let _ = run_phantom_generation(&mut r, &cfg, &PhantomSystem::neural_speed(), 8, 4);
+        let m = run_phantom_generation(&mut r, &cfg, &PhantomSystem::neural_speed(), 8, 8);
+        let tps = m.decode_tokens_per_sec();
+        assert!((10.0..25.0).contains(&tps), "tokens/s = {tps}");
+    }
+
+    #[test]
+    fn dynamic_beats_static_on_prefill() {
+        let cfg = ModelConfig::llama2_7b();
+        let sys = PhantomSystem::neural_speed();
+        let mut rd = rt("core_12900k", "dynamic");
+        let _ = run_phantom_generation(&mut rd, &cfg, &sys, 64, 0); // warm table
+        let md = run_phantom_generation(&mut rd, &cfg, &sys, 64, 0);
+        let mut rs = rt("core_12900k", "static");
+        let ms = run_phantom_generation(&mut rs, &cfg, &sys, 64, 0);
+        let speedup = ms.prefill_secs / md.prefill_secs;
+        assert!(speedup > 1.5, "prefill speedup {speedup}");
+    }
+
+    #[test]
+    fn llama_cpp_system_is_slower() {
+        let cfg = ModelConfig::llama2_7b();
+        // prompt must be long enough that the GEMMs are compute-bound
+        // (the paper uses 1024; 256 keeps the test fast)
+        let mut r1 = rt("core_12900k", "dynamic");
+        let _ = run_phantom_generation(&mut r1, &cfg, &PhantomSystem::neural_speed(), 256, 0);
+        let ns = run_phantom_generation(&mut r1, &cfg, &PhantomSystem::neural_speed(), 256, 0);
+        let mut r2 = rt("core_12900k", "static");
+        let lc = run_phantom_generation(&mut r2, &cfg, &PhantomSystem::llama_cpp(), 256, 0);
+        let ratio = lc.prefill_secs / ns.prefill_secs;
+        // paper headline: up to 3.7× vs llama.cpp
+        assert!((3.0..4.3).contains(&ratio), "ratio={ratio}");
+    }
+}

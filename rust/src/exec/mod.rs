@@ -1,0 +1,201 @@
+//! Execution abstraction: one [`Work`] + one [`DispatchPlan`] in, per-core
+//! times out — whether the cores are real threads ([`crate::pool`]) or
+//! simulated hybrid cores ([`crate::sim`]). The paper's closed loop
+//! (Figure 1: partition → execute → measure → update table) lives in
+//! [`ParallelRuntime`].
+
+pub mod shared;
+pub mod work;
+
+use crate::cpu::Isa;
+use crate::kernels::{KernelClass, WorkCost};
+use crate::perf::{PerfConfig, PerfTable};
+use crate::sched::{DispatchPlan, Scheduler};
+
+pub use shared::SharedSlice;
+pub use work::{FnWork, Work};
+
+/// Result of one parallel kernel execution.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// per-core busy time in seconds; `None` = did not participate
+    pub per_core_secs: Vec<Option<f64>>,
+    /// wall-clock (or virtual) duration of the whole kernel
+    pub wall_secs: f64,
+    /// units each core processed (for balance diagnostics)
+    pub units_done: Vec<usize>,
+}
+
+impl RunResult {
+    /// Load imbalance: max busy time / mean busy time (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let times: Vec<f64> = self.per_core_secs.iter().flatten().copied().collect();
+        if times.is_empty() {
+            return 1.0;
+        }
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Something that can run a `Work` under a `DispatchPlan`.
+pub trait Executor {
+    fn n_workers(&self) -> usize;
+    fn execute(&mut self, work: &dyn Work, plan: &DispatchPlan) -> RunResult;
+}
+
+/// The paper's engine loop: query table → plan → execute → update table.
+pub struct ParallelRuntime<E: Executor> {
+    pub exec: E,
+    pub table: PerfTable,
+    pub sched: Box<dyn Scheduler>,
+}
+
+impl<E: Executor> ParallelRuntime<E> {
+    pub fn new(exec: E, sched: Box<dyn Scheduler>, perf_cfg: PerfConfig) -> Self {
+        let n = exec.n_workers();
+        ParallelRuntime { exec, table: PerfTable::new(n, perf_cfg), sched }
+    }
+
+    /// Run one kernel through the full dynamic loop.
+    pub fn run(&mut self, work: &dyn Work) -> RunResult {
+        let cost = work.cost();
+        let ratios = self.table.ratios(cost.class, cost.isa).to_vec();
+        let plan = self.sched.plan(work.total_units(), work.grain(), &ratios);
+        let res = self.exec.execute(work, &plan);
+        self.table.update(cost.class, cost.isa, &res.per_core_secs);
+        res
+    }
+
+    /// Current relative ratios for a kernel (Fig. 4 observable).
+    pub fn relative_ratios(&self, class: KernelClass, isa: Isa) -> Option<Vec<f64>> {
+        self.table.relative_ratios(class, isa)
+    }
+}
+
+/// Convenience: describe a phantom workload by cost only (no real compute)
+/// — used by the simulator-driven figure benchmarks.
+#[derive(Clone, Debug)]
+pub struct PhantomWork {
+    pub cost: WorkCost,
+    pub grain: usize,
+}
+
+impl PhantomWork {
+    pub fn new(cost: WorkCost) -> Self {
+        PhantomWork { cost, grain: 1 }
+    }
+
+    pub fn with_grain(cost: WorkCost, grain: usize) -> Self {
+        PhantomWork { cost, grain }
+    }
+}
+
+impl Work for PhantomWork {
+    fn total_units(&self) -> usize {
+        self.cost.units
+    }
+
+    fn grain(&self) -> usize {
+        self.grain
+    }
+
+    fn cost(&self) -> WorkCost {
+        self.cost
+    }
+
+    fn run_range(&self, _worker: usize, _units: std::ops::Range<usize>) {
+        // phantom: cost-only workload
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::cost;
+
+    /// A deterministic fake executor: core i runs at rate `rates[i]`.
+    struct FakeExec {
+        rates: Vec<f64>,
+    }
+
+    impl Executor for FakeExec {
+        fn n_workers(&self) -> usize {
+            self.rates.len()
+        }
+
+        fn execute(&mut self, work: &dyn Work, plan: &DispatchPlan) -> RunResult {
+            let units: Vec<usize> = match plan {
+                DispatchPlan::Partitioned(rs) => rs.iter().map(|r| r.len()).collect(),
+                // crude chunked model: proportional to rate (perfect stealing)
+                _ => {
+                    let rsum: f64 = self.rates.iter().sum();
+                    self.rates
+                        .iter()
+                        .map(|r| (work.total_units() as f64 * r / rsum) as usize)
+                        .collect()
+                }
+            };
+            let times: Vec<Option<f64>> = units
+                .iter()
+                .zip(&self.rates)
+                .map(|(&u, &r)| if u > 0 { Some(u as f64 / r) } else { None })
+                .collect();
+            let wall = times.iter().flatten().cloned().fold(0.0, f64::max);
+            RunResult { per_core_secs: times, wall_secs: wall, units_done: units }
+        }
+    }
+
+    #[test]
+    fn runtime_converges_and_beats_static() {
+        let rates = vec![3.0, 3.0, 1.0, 1.0];
+        let work = PhantomWork::new(cost::gemm_i8_cost(1024, 64, 64));
+
+        let mut dynamic = ParallelRuntime::new(
+            FakeExec { rates: rates.clone() },
+            Box::new(crate::sched::DynamicScheduler),
+            PerfConfig::default(),
+        );
+        // warm up the table
+        let mut last = f64::INFINITY;
+        for _ in 0..30 {
+            last = dynamic.run(&work).wall_secs;
+        }
+
+        let mut static_rt = ParallelRuntime::new(
+            FakeExec { rates },
+            Box::new(crate::sched::StaticEven),
+            PerfConfig::default(),
+        );
+        let static_wall = static_rt.run(&work).wall_secs;
+
+        // ideal speedup = Σrates / (N·min) = 8/4 = 2
+        let speedup = static_wall / last;
+        assert!(speedup > 1.9, "speedup={speedup}");
+        // converged ratios ≈ 3:1
+        let rel = dynamic.relative_ratios(KernelClass::GemmI8, Isa::AvxVnni).unwrap();
+        assert!((rel[0] - 3.0).abs() < 0.1, "{rel:?}");
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let r = RunResult {
+            per_core_secs: vec![Some(1.0), Some(1.0), Some(2.0)],
+            wall_secs: 2.0,
+            units_done: vec![1, 1, 1],
+        };
+        assert!((r.imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phantom_work_reports_cost() {
+        let w = PhantomWork::new(cost::gemv_q4_cost(4096, 4096));
+        assert_eq!(w.total_units(), 4096);
+        assert_eq!(w.cost().class, KernelClass::GemvQ4);
+    }
+}

@@ -1,0 +1,90 @@
+//! [`SharedSlice`]: disjoint-range mutable sharing of an output buffer
+//! across worker threads.
+//!
+//! Kernels write disjoint slices of one output tensor from multiple
+//! workers. Rust's borrow rules cannot express "disjoint at runtime", so
+//! this wrapper provides an `unsafe` escape hatch with a crisp contract:
+//! **callers must guarantee ranges handed to `slice_mut` never overlap
+//! while any other such slice is alive.** All schedulers in this crate
+//! produce disjoint ranges by construction (tested in `sched::partition`),
+//! and chunk claiming uses a shared atomic counter, so the contract holds.
+
+use std::marker::PhantomData;
+use std::ops::Range;
+
+/// A raw, Sync view over a mutable slice.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access discipline (disjoint ranges) is the caller's contract;
+// the pointer itself is valid for 'a.
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        SharedSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Get a mutable sub-slice.
+    ///
+    /// # Safety
+    /// The range must be in bounds and must not overlap any other slice
+    /// obtained from this `SharedSlice` that is still alive.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, range: Range<usize>) -> &mut [T] {
+        debug_assert!(range.start <= range.end && range.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn disjoint_writes_from_threads() {
+        let mut data = vec![0usize; 1000];
+        {
+            let shared = SharedSlice::new(&mut data);
+            let counter = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..4 {
+                    scope.spawn(|| loop {
+                        let start = counter.fetch_add(100, Ordering::Relaxed);
+                        if start >= 1000 {
+                            break;
+                        }
+                        let s = unsafe { shared.slice_mut(start..start + 100) };
+                        for (i, v) in s.iter_mut().enumerate() {
+                            *v = start + i;
+                        }
+                    });
+                }
+            });
+        }
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn len_tracks_source() {
+        let mut data = vec![0u8; 17];
+        let s = SharedSlice::new(&mut data);
+        assert_eq!(s.len(), 17);
+        assert!(!s.is_empty());
+    }
+}

@@ -1,0 +1,90 @@
+//! The [`Work`] trait: a kernel invocation over a splittable parallel
+//! dimension, plus the closure-based adapter used to wrap native kernels.
+
+use std::ops::Range;
+
+use crate::kernels::WorkCost;
+
+/// One parallel kernel invocation. Ranges handed to `run_range` by any
+/// correct executor are disjoint and within `0..total_units()`; different
+/// workers may call `run_range` concurrently.
+pub trait Work: Sync {
+    /// Length of the parallel dimension.
+    fn total_units(&self) -> usize;
+
+    /// Preferred alignment of partition boundaries (e.g. a row-block).
+    fn grain(&self) -> usize {
+        1
+    }
+
+    /// Analytic cost (for the simulator and for ISA/table keying).
+    fn cost(&self) -> WorkCost;
+
+    /// Execute units `units` as worker `worker`.
+    fn run_range(&self, worker: usize, units: Range<usize>);
+}
+
+/// Closure-backed `Work` — wraps the range-based native kernels.
+pub struct FnWork<F: Fn(usize, Range<usize>) + Sync> {
+    cost: WorkCost,
+    grain: usize,
+    f: F,
+}
+
+impl<F: Fn(usize, Range<usize>) + Sync> FnWork<F> {
+    pub fn new(cost: WorkCost, grain: usize, f: F) -> Self {
+        FnWork { cost, grain, f }
+    }
+}
+
+impl<F: Fn(usize, Range<usize>) + Sync> Work for FnWork<F> {
+    fn total_units(&self) -> usize {
+        self.cost.units
+    }
+
+    fn grain(&self) -> usize {
+        self.grain
+    }
+
+    fn cost(&self) -> WorkCost {
+        self.cost
+    }
+
+    fn run_range(&self, worker: usize, units: Range<usize>) {
+        (self.f)(worker, units)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::SharedSlice;
+    use crate::kernels::cost;
+
+    #[test]
+    fn fn_work_executes_ranges() {
+        let mut out = vec![0u32; 100];
+        {
+            let shared = SharedSlice::new(&mut out);
+            let w = FnWork::new(cost::copy_cost(100 * 4096), 1, |_worker, range| {
+                // SAFETY: test passes disjoint ranges
+                let s = unsafe { shared.slice_mut(range.clone()) };
+                for (i, v) in s.iter_mut().enumerate() {
+                    *v = (range.start + i) as u32;
+                }
+            });
+            w.run_range(0, 0..50);
+            w.run_range(1, 50..100);
+        }
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+    }
+
+    #[test]
+    fn grain_and_cost_passthrough() {
+        let w = FnWork::new(cost::gemv_q4_cost(256, 512), 8, |_, _| {});
+        assert_eq!(w.grain(), 8);
+        assert_eq!(w.total_units(), 512);
+    }
+}

@@ -1,0 +1,193 @@
+//! Decode-phase multi-head attention over the KV cache.
+//!
+//! Parallel dimension: heads. Semantics mirror `ref.ref_attn_decode`:
+//! masked scaled-dot-product with softmax over positions `0..=pos`.
+
+use std::ops::Range;
+
+/// KV cache for one layer: `[h, t_max, dh]` row-major f32.
+#[derive(Clone, Debug)]
+pub struct KvLayer {
+    pub h: usize,
+    pub t_max: usize,
+    pub dh: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl KvLayer {
+    pub fn new(h: usize, t_max: usize, dh: usize) -> KvLayer {
+        KvLayer { h, t_max, dh, k: vec![0.0; h * t_max * dh], v: vec![0.0; h * t_max * dh] }
+    }
+
+    #[inline]
+    fn off(&self, head: usize, t: usize) -> usize {
+        (head * self.t_max + t) * self.dh
+    }
+
+    /// Write the K/V vectors of `head` at position `t`.
+    pub fn write(&mut self, head: usize, t: usize, kvec: &[f32], vvec: &[f32]) {
+        let o = self.off(head, t);
+        self.k[o..o + self.dh].copy_from_slice(kvec);
+        self.v[o..o + self.dh].copy_from_slice(vvec);
+    }
+
+    #[inline]
+    pub fn k_at(&self, head: usize, t: usize) -> &[f32] {
+        let o = self.off(head, t);
+        &self.k[o..o + self.dh]
+    }
+
+    #[inline]
+    pub fn v_at(&self, head: usize, t: usize) -> &[f32] {
+        let o = self.off(head, t);
+        &self.v[o..o + self.dh]
+    }
+}
+
+/// Attention for heads in `heads`: q is `[h, dh]`, out is `[h, dh]`,
+/// attending over cache positions `0..=pos`. `scratch` holds `pos+1` scores.
+pub fn attention_decode_range(
+    q: &[f32],
+    cache: &KvLayer,
+    pos: usize,
+    out: &mut [f32],
+    scratch: &mut Vec<f32>,
+    heads: Range<usize>,
+) {
+    let dh = cache.dh;
+    assert_eq!(q.len(), cache.h * dh);
+    assert_eq!(out.len(), cache.h * dh);
+    assert!(pos < cache.t_max);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let t_len = pos + 1;
+    scratch.resize(t_len, 0.0);
+    for head in heads {
+        let qh = &q[head * dh..(head + 1) * dh];
+        for t in 0..t_len {
+            let kv = cache.k_at(head, t);
+            let mut dot = 0.0f32;
+            for (a, b) in qh.iter().zip(kv) {
+                dot += a * b;
+            }
+            scratch[t] = dot * scale;
+        }
+        super::elementwise::softmax_inplace(&mut scratch[..t_len]);
+        let oh = &mut out[head * dh..(head + 1) * dh];
+        oh.fill(0.0);
+        for t in 0..t_len {
+            let p = scratch[t];
+            let vv = cache.v_at(head, t);
+            for (o, &v) in oh.iter_mut().zip(vv) {
+                *o += p * v;
+            }
+        }
+    }
+}
+
+/// Whole-kernel convenience wrapper.
+pub fn attention_decode(q: &[f32], cache: &KvLayer, pos: usize) -> Vec<f32> {
+    let mut out = vec![0.0; cache.h * cache.dh];
+    let mut scratch = Vec::new();
+    attention_decode_range(q, cache, pos, &mut out, &mut scratch, 0..cache.h);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn filled_cache(h: usize, t_max: usize, dh: usize, upto: usize, seed: u64) -> KvLayer {
+        let mut rng = Rng::new(seed);
+        let mut c = KvLayer::new(h, t_max, dh);
+        for head in 0..h {
+            for t in 0..=upto {
+                let mut k = vec![0.0f32; dh];
+                let mut v = vec![0.0f32; dh];
+                rng.fill_normal_f32(&mut k, 1.0);
+                rng.fill_normal_f32(&mut v, 1.0);
+                c.write(head, t, &k, &v);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn pos0_returns_v0() {
+        let c = filled_cache(2, 8, 4, 0, 1);
+        let mut rng = Rng::new(2);
+        let mut q = vec![0.0f32; 2 * 4];
+        rng.fill_normal_f32(&mut q, 1.0);
+        let out = attention_decode(&q, &c, 0);
+        for head in 0..2 {
+            for i in 0..4 {
+                assert!((out[head * 4 + i] - c.v_at(head, 0)[i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn output_is_convex_combination_of_v() {
+        let c = filled_cache(4, 16, 8, 15, 3);
+        let mut rng = Rng::new(4);
+        let mut q = vec![0.0f32; 4 * 8];
+        rng.fill_normal_f32(&mut q, 1.0);
+        let out = attention_decode(&q, &c, 15);
+        for head in 0..4 {
+            for i in 0..8 {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for t in 0..16 {
+                    lo = lo.min(c.v_at(head, t)[i]);
+                    hi = hi.max(c.v_at(head, t)[i]);
+                }
+                let o = out[head * 8 + i];
+                assert!(o >= lo - 1e-5 && o <= hi + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn future_positions_are_ignored() {
+        let mut c = filled_cache(1, 8, 4, 3, 5);
+        let mut rng = Rng::new(6);
+        let mut q = vec![0.0f32; 4];
+        rng.fill_normal_f32(&mut q, 1.0);
+        let out1 = attention_decode(&q, &c, 3);
+        // poison positions 4.. — must not change the result
+        c.write(0, 5, &[100.0; 4], &[100.0; 4]);
+        let out2 = attention_decode(&q, &c, 3);
+        assert_eq!(out1, out2);
+    }
+
+    #[test]
+    fn head_range_partition_matches_whole() {
+        let c = filled_cache(6, 12, 8, 11, 7);
+        let mut rng = Rng::new(8);
+        let mut q = vec![0.0f32; 6 * 8];
+        rng.fill_normal_f32(&mut q, 1.0);
+        let whole = attention_decode(&q, &c, 11);
+        let mut out = vec![0.0f32; 6 * 8];
+        let mut scratch = Vec::new();
+        attention_decode_range(&q, &c, 11, &mut out, &mut scratch, 0..2);
+        attention_decode_range(&q, &c, 11, &mut out, &mut scratch, 2..5);
+        attention_decode_range(&q, &c, 11, &mut out, &mut scratch, 5..6);
+        assert_eq!(out, whole);
+    }
+
+    #[test]
+    fn sharp_query_selects_matching_key() {
+        // make key at t=2 align with q strongly → output ≈ v at t=2
+        let mut c = KvLayer::new(1, 4, 4);
+        for t in 0..4 {
+            let k = if t == 2 { [50.0f32; 4] } else { [0.0; 4] };
+            let v = [t as f32; 4];
+            c.write(0, t, &k, &v);
+        }
+        let q = [1.0f32; 4];
+        let out = attention_decode(&q, &c, 3);
+        for &o in &out {
+            assert!((o - 2.0).abs() < 1e-3, "o={o}");
+        }
+    }
+}

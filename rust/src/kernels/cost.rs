@@ -1,0 +1,203 @@
+//! Analytic kernel cost descriptors — what the hybrid-CPU simulator charges
+//! a core for executing a slice of a kernel's parallel dimension.
+
+use crate::cpu::Isa;
+
+/// Kernel identity: the paper's CPU runtime keeps one performance-ratio
+/// row per (kernel class, ISA) pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum KernelClass {
+    /// int8 GEMM (prefill projections / FFN)
+    GemmI8,
+    /// fused Q4_0 dequant GEMV / matmul (decode projections / FFN)
+    GemvQ4,
+    /// multi-head attention over the KV cache
+    Attention,
+    /// RMSNorm
+    Norm,
+    /// RoPE
+    Rope,
+    /// SwiGLU / residual adds
+    Elementwise,
+    /// tensor copy (the paper names "tensor copying" as a scheduled kernel)
+    Copy,
+}
+
+impl KernelClass {
+    pub const ALL: [KernelClass; 7] = [
+        KernelClass::GemmI8,
+        KernelClass::GemvQ4,
+        KernelClass::Attention,
+        KernelClass::Norm,
+        KernelClass::Rope,
+        KernelClass::Elementwise,
+        KernelClass::Copy,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelClass::GemmI8 => "gemm_i8",
+            KernelClass::GemvQ4 => "gemv_q4",
+            KernelClass::Attention => "attention",
+            KernelClass::Norm => "norm",
+            KernelClass::Rope => "rope",
+            KernelClass::Elementwise => "elementwise",
+            KernelClass::Copy => "copy",
+        }
+    }
+
+    /// The primary ISA the kernel's inner loop uses (paper §2.2: the ISA
+    /// "primarily used for these computations is specified in the code").
+    pub fn primary_isa(&self) -> Isa {
+        match self {
+            KernelClass::GemmI8 => Isa::AvxVnni,
+            KernelClass::GemvQ4 => Isa::AvxVnni,
+            KernelClass::Attention => Isa::Avx2,
+            KernelClass::Norm => Isa::Avx2,
+            KernelClass::Rope => Isa::Avx2,
+            KernelClass::Elementwise => Isa::Avx2,
+            KernelClass::Copy => Isa::Stream,
+        }
+    }
+}
+
+/// Cost of one kernel invocation, per unit of its parallel dimension.
+///
+/// The simulator charges a core processing `u` units:
+///   `t = max(u · ops_per_unit / compute_rate, u · bytes_per_unit / bw)`
+/// (roofline combine; `bw` comes from the contention model).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkCost {
+    pub class: KernelClass,
+    pub isa: Isa,
+    /// length of the parallel dimension
+    pub units: usize,
+    /// MAC-like ops per unit (matches the ISA's ops/cycle accounting)
+    pub ops_per_unit: f64,
+    /// bytes of unique memory traffic per unit
+    pub bytes_per_unit: f64,
+}
+
+impl WorkCost {
+    pub fn new(class: KernelClass, units: usize, ops_per_unit: f64, bytes_per_unit: f64) -> Self {
+        WorkCost { class, isa: class.primary_isa(), units, ops_per_unit, bytes_per_unit }
+    }
+
+    pub fn total_ops(&self) -> f64 {
+        self.units as f64 * self.ops_per_unit
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.units as f64 * self.bytes_per_unit
+    }
+
+    /// Arithmetic intensity (ops per byte) — decides compute- vs
+    /// memory-bound on a roofline.
+    pub fn intensity(&self) -> f64 {
+        self.ops_per_unit / self.bytes_per_unit.max(1e-12)
+    }
+}
+
+// ---- canonical cost constructors for the paper's workloads ----
+
+/// INT8 GEMM `M×K×N` split along M: per row-unit `K·N` MACs; unique bytes
+/// per row ≈ K (activation row) + amortized weight traffic `K·N/M`.
+pub fn gemm_i8_cost(m: usize, k: usize, n: usize) -> WorkCost {
+    let ops = (k * n) as f64;
+    let bytes = k as f64 + (k * n) as f64 / m as f64;
+    WorkCost::new(KernelClass::GemmI8, m, ops, bytes)
+}
+
+/// Q4_0 GEMV `1×K×N` split along N (weight rows): per row `K` MACs and
+/// `K/2 + scales` weight bytes (the decode phase streams the weights).
+pub fn gemv_q4_cost(k: usize, n: usize) -> WorkCost {
+    let ops = k as f64;
+    let bytes = (k / 2) as f64 + (k / 32) as f64 * 2.0;
+    WorkCost::new(KernelClass::GemvQ4, n, ops, bytes)
+}
+
+/// Q4_0 matmul `S×K×N` (prefill chunk) split along N.
+pub fn qmatmul_cost(s: usize, k: usize, n: usize) -> WorkCost {
+    let ops = (s * k) as f64;
+    let bytes = (k / 2) as f64 + (k / 32) as f64 * 2.0 + (s * k) as f64 * 4.0 / n as f64;
+    WorkCost::new(KernelClass::GemvQ4, n, ops, bytes)
+}
+
+/// Decode attention over `h` heads, `t` cached positions, head dim `dh`:
+/// per head ≈ 2·t·dh MACs, reading 2·t·dh·4 bytes of KV cache.
+pub fn attention_decode_cost(h: usize, t: usize, dh: usize) -> WorkCost {
+    let ops = 2.0 * (t * dh) as f64;
+    let bytes = 2.0 * (t * dh * 4) as f64;
+    WorkCost::new(KernelClass::Attention, h, ops, bytes)
+}
+
+/// Elementwise over `n` scalars (grain: 1 unit = 1 kiB chunk of f32s).
+pub fn elementwise_cost(n: usize, ops_per_elem: f64, streams: f64) -> WorkCost {
+    let elems_per_unit = 256.0;
+    let units = n.div_ceil(256);
+    WorkCost::new(
+        KernelClass::Elementwise,
+        units,
+        ops_per_elem * elems_per_unit,
+        streams * 4.0 * elems_per_unit,
+    )
+}
+
+/// Pure copy of `bytes` (split in 4 kiB units).
+pub fn copy_cost(bytes: usize) -> WorkCost {
+    let units = bytes.div_ceil(4096);
+    WorkCost::new(KernelClass::Copy, units, 0.0, 4096.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primary_isa_assignments() {
+        assert_eq!(KernelClass::GemmI8.primary_isa(), Isa::AvxVnni);
+        assert_eq!(KernelClass::Copy.primary_isa(), Isa::Stream);
+        assert_eq!(KernelClass::Norm.primary_isa(), Isa::Avx2);
+    }
+
+    #[test]
+    fn gemm_cost_totals() {
+        let c = gemm_i8_cost(1024, 4096, 4096);
+        assert_eq!(c.units, 1024);
+        // total MACs = M·K·N
+        assert!((c.total_ops() - (1024f64 * 4096.0 * 4096.0)).abs() < 1.0);
+        // compute-bound: intensity far above any CPU's ops/byte balance
+        assert!(c.intensity() > 100.0);
+    }
+
+    #[test]
+    fn gemv_cost_is_memory_bound() {
+        let c = gemv_q4_cost(4096, 4096);
+        // 4096 rows × (2048 + 256) bytes = 9 MiB of weights
+        assert!((c.total_bytes() - 4096.0 * 2304.0).abs() < 1.0);
+        // ~1.8 ops/byte → memory-bound on every CPU we model
+        assert!(c.intensity() < 4.0);
+    }
+
+    #[test]
+    fn attention_cost_scales_with_t() {
+        let a = attention_decode_cost(32, 128, 128);
+        let b = attention_decode_cost(32, 256, 128);
+        assert!((b.total_ops() / a.total_ops() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn copy_cost_has_no_compute() {
+        let c = copy_cost(1 << 20);
+        assert_eq!(c.total_ops(), 0.0);
+        assert_eq!(c.units, 256);
+    }
+
+    #[test]
+    fn class_names_unique() {
+        let mut names: Vec<_> = KernelClass::ALL.iter().map(|c| c.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), KernelClass::ALL.len());
+    }
+}

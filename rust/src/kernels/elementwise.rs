@@ -1,0 +1,138 @@
+//! Elementwise kernels: RMSNorm, softmax, SwiGLU, residual add, copy.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` (same eps, same maths)
+//! so native and PJRT logits stay comparable.
+
+use std::ops::Range;
+
+/// y = x / sqrt(mean(x²) + eps) · w
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, y: &mut [f32]) {
+    assert_eq!(x.len(), w.len());
+    assert_eq!(x.len(), y.len());
+    let ms = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for ((yv, &xv), &wv) in y.iter_mut().zip(x).zip(w) {
+        *yv = xv * inv * wv;
+    }
+}
+
+/// In-place numerically-stable softmax.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let mx = x.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// out = silu(gate) · up  (SwiGLU)
+pub fn silu_mul(gate: &[f32], up: &[f32], out: &mut [f32]) {
+    assert_eq!(gate.len(), up.len());
+    assert_eq!(gate.len(), out.len());
+    for ((o, &g), &u) in out.iter_mut().zip(gate).zip(up) {
+        *o = g / (1.0 + (-g).exp()) * u;
+    }
+}
+
+/// x += r (residual add)
+pub fn add_inplace(x: &mut [f32], r: &[f32]) {
+    assert_eq!(x.len(), r.len());
+    for (a, &b) in x.iter_mut().zip(r) {
+        *a += b;
+    }
+}
+
+/// Range-based parallel copy: copies `elems[range]` — the paper's "tensor
+/// copying" kernel, scheduled like any other.
+pub fn copy_range(src: &[f32], dst: &mut [f32], range: Range<usize>) {
+    dst[range.clone()].copy_from_slice(&src[range]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal_f32(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn rmsnorm_unit_weight_normalizes() {
+        let x = rand(64, 1);
+        let w = vec![1.0f32; 64];
+        let mut y = vec![0.0f32; 64];
+        rmsnorm(&x, &w, 1e-5, &mut y);
+        let ms = y.iter().map(|&v| v * v).sum::<f32>() / 64.0;
+        assert!((ms - 1.0).abs() < 1e-3, "ms={ms}");
+    }
+
+    #[test]
+    fn rmsnorm_scales_with_weight() {
+        let x = rand(32, 2);
+        let mut w = vec![1.0f32; 32];
+        w[5] = 2.0;
+        let mut y1 = vec![0.0f32; 32];
+        let mut y2 = vec![0.0f32; 32];
+        rmsnorm(&x, &vec![1.0; 32], 1e-5, &mut y1);
+        rmsnorm(&x, &w, 1e-5, &mut y2);
+        assert!((y2[5] - 2.0 * y1[5]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_monotone() {
+        let mut x = rand(40, 3);
+        let orig = x.clone();
+        softmax_inplace(&mut x);
+        let sum: f32 = x.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        // larger logit → larger prob
+        for i in 0..40 {
+            for j in 0..40 {
+                if orig[i] > orig[j] {
+                    assert!(x[i] >= x[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut x = vec![1000.0f32, 1000.0, -1000.0];
+        softmax_inplace(&mut x);
+        assert!((x[0] - 0.5).abs() < 1e-5 && x[2] < 1e-6);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn silu_known_values() {
+        let gate = [0.0f32, 1.0, -1.0];
+        let up = [2.0f32, 2.0, 2.0];
+        let mut out = [0.0f32; 3];
+        silu_mul(&gate, &up, &mut out);
+        assert!((out[0] - 0.0).abs() < 1e-6);
+        assert!((out[1] - 2.0 / (1.0 + (-1.0f32).exp())).abs() < 1e-5);
+        assert!(out[2] < 0.0);
+    }
+
+    #[test]
+    fn add_and_copy() {
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        add_inplace(&mut x, &[10.0, 20.0, 30.0]);
+        assert_eq!(x, vec![11.0, 22.0, 33.0]);
+        let src = rand(100, 4);
+        let mut dst = vec![0.0f32; 100];
+        copy_range(&src, &mut dst, 10..60);
+        assert_eq!(&dst[10..60], &src[10..60]);
+        assert!(dst[..10].iter().all(|&v| v == 0.0));
+        assert!(dst[60..].iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,152 @@
+//! u8 × i8 → i32 GEMM — the AVX-VNNI (`vpdpbusd`) micro-kernel analog.
+//!
+//! `C[M, N] = A[M, K] (u8) · B[K, N] (i8)`, accumulated in i32. B is taken
+//! pre-transposed (`bt[N, K]`) so the inner loop is a contiguous dot
+//! product, which is both cache-friendly and what the VNNI kernel's
+//! register blocking amounts to. The parallel dimension is M (rows of A) —
+//! the dimension the paper's scheduler splits.
+
+use std::ops::Range;
+
+use crate::tensor::{MatI8, MatU8};
+
+/// Dot product of one u8 row with one i8 row (K elements), i32 accumulate.
+/// Unrolled by 4 to expose ILP; the autovectorizer maps this to pmaddubsw-
+/// style sequences on AVX2 targets.
+#[inline]
+fn dot_u8i8(a: &[u8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0i32;
+    let mut acc1 = 0i32;
+    let mut acc2 = 0i32;
+    let mut acc3 = 0i32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc0 += a[j] as i32 * b[j] as i32;
+        acc1 += a[j + 1] as i32 * b[j + 1] as i32;
+        acc2 += a[j + 2] as i32 * b[j + 2] as i32;
+        acc3 += a[j + 3] as i32 * b[j + 3] as i32;
+    }
+    for j in chunks * 4..a.len() {
+        acc0 += a[j] as i32 * b[j] as i32;
+    }
+    acc0 + acc1 + acc2 + acc3
+}
+
+/// Compute rows `rows` of C. `c` is the full M×N output buffer.
+/// Column-blocked by 4: each pass over the A row feeds four B rows, so
+/// A-row loads are amortized 4× (the register-blocking idea of the VNNI
+/// micro-kernel, expressed scalar).
+pub fn gemm_i8_range(a: &MatU8, bt: &MatI8, c: &mut [i32], n: usize, rows: Range<usize>) {
+    assert_eq!(a.cols, bt.cols, "K mismatch");
+    assert_eq!(bt.rows, n, "N mismatch");
+    assert_eq!(c.len(), a.rows * n, "C shape mismatch");
+    let k = a.cols;
+    for m in rows {
+        let arow = a.row(m);
+        let crow = &mut c[m * n..(m + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = bt.row(j);
+            let b1 = bt.row(j + 1);
+            let b2 = bt.row(j + 2);
+            let b3 = bt.row(j + 3);
+            let mut acc0 = 0i32;
+            let mut acc1 = 0i32;
+            let mut acc2 = 0i32;
+            let mut acc3 = 0i32;
+            for p in 0..k {
+                let av = arow[p] as i32;
+                acc0 += av * b0[p] as i32;
+                acc1 += av * b1[p] as i32;
+                acc2 += av * b2[p] as i32;
+                acc3 += av * b3[p] as i32;
+            }
+            crow[j] = acc0;
+            crow[j + 1] = acc1;
+            crow[j + 2] = acc2;
+            crow[j + 3] = acc3;
+            j += 4;
+        }
+        for (j, cv) in crow.iter_mut().enumerate().skip(j) {
+            *cv = dot_u8i8(arow, bt.row(j));
+        }
+    }
+}
+
+/// Whole-matrix convenience entry (single-threaded reference).
+pub fn gemm_i8(a: &MatU8, bt: &MatI8) -> Vec<i32> {
+    let mut c = vec![0i32; a.rows * bt.rows];
+    gemm_i8_range(a, bt, &mut c, bt.rows, 0..a.rows);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{rand_i8, rand_u8};
+
+    /// naive i64 oracle
+    fn oracle(a: &MatU8, bt: &MatI8) -> Vec<i32> {
+        let (m, k, n) = (a.rows, a.cols, bt.rows);
+        let mut c = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i64;
+                for p in 0..k {
+                    acc += a.data[i * k + p] as i64 * bt.data[j * k + p] as i64;
+                }
+                c[i * n + j] = acc as i32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_oracle() {
+        let a = rand_u8(13, 40, 1);
+        let bt = rand_i8(9, 40, 2);
+        assert_eq!(gemm_i8(&a, &bt), oracle(&a, &bt));
+    }
+
+    #[test]
+    fn range_partition_covers_whole() {
+        let a = rand_u8(16, 32, 3);
+        let bt = rand_i8(8, 32, 4);
+        let whole = gemm_i8(&a, &bt);
+        let mut c = vec![0i32; 16 * 8];
+        gemm_i8_range(&a, &bt, &mut c, 8, 0..5);
+        gemm_i8_range(&a, &bt, &mut c, 8, 5..11);
+        gemm_i8_range(&a, &bt, &mut c, 8, 11..16);
+        assert_eq!(c, whole);
+    }
+
+    #[test]
+    fn extreme_values_accumulate_exactly() {
+        // 255 · 127 · K stays well inside i32 for K ≤ 66000
+        let mut a = MatU8::zeros(1, 64);
+        a.data.fill(255);
+        let mut bt = MatI8::zeros(1, 64);
+        bt.data.fill(127);
+        assert_eq!(gemm_i8(&a, &bt)[0], 255 * 127 * 64);
+        bt.data.fill(-128);
+        assert_eq!(gemm_i8(&a, &bt)[0], 255 * -128 * 64);
+    }
+
+    #[test]
+    fn odd_k_tail_handled() {
+        let a = rand_u8(3, 37, 5);
+        let bt = rand_i8(4, 37, 6);
+        assert_eq!(gemm_i8(&a, &bt), oracle(&a, &bt));
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        let a = rand_u8(4, 16, 7);
+        let bt = rand_i8(4, 16, 8);
+        let mut c = vec![-1i32; 16];
+        gemm_i8_range(&a, &bt, &mut c, 4, 2..2);
+        assert!(c.iter().all(|&v| v == -1));
+    }
+}

@@ -1,0 +1,282 @@
+//! Fused Q4_0-dequant GEMV / matmul — the decode-phase hot path.
+//!
+//! Three variants, all splitting the weight-row dimension N:
+//! * [`gemv_q4_f32_range`] — f32 accumulation (llama.cpp's AVX2 path)
+//! * [`gemv_q8q4_range`]   — dynamic-quant int8 activation × Q4 weight,
+//!   per-block integer dot (Neural Speed's AVX-VNNI path; the paper's
+//!   "complete computation" for the GEMV benchmark)
+//! * [`qmatmul_f32_range`] — S-row matmul for prefill chunks (dequantizes
+//!   each weight row once, reuses it across the S activation rows)
+
+use std::ops::Range;
+
+use crate::quant::{BlockQ4_0, MatQ4, QuantizedRow, QK};
+
+/// Per-block sums of `x` — hoists the `(q − 8)` offset out of the inner
+/// loop: `Σ (q−8)·x = Σ q·x − 8·Σx`, with `Σx` shared by *all* weight rows.
+#[inline]
+fn block_sums_f32(x: &[f32]) -> Vec<f32> {
+    x.chunks_exact(QK).map(|c| c.iter().sum()).collect()
+}
+
+/// y[n] = Σ_k w[n,k] · x[k], f32 path, rows `rows` of `w`.
+pub fn gemv_q4_f32_range(w: &MatQ4, x: &[f32], y: &mut [f32], rows: Range<usize>) {
+    assert_eq!(x.len(), w.cols, "x length mismatch");
+    assert_eq!(y.len(), w.rows, "y length mismatch");
+    let xsums = block_sums_f32(x);
+    for n in rows {
+        y[n] = dot_row_f32(w.row(n), x, &xsums);
+    }
+}
+
+#[inline]
+fn dot_row_f32(blocks: &[BlockQ4_0], x: &[f32], xsums: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (bi, b) in blocks.iter().enumerate() {
+        let xs = &x[bi * QK..(bi + 1) * QK];
+        let (xlo, xhi) = xs.split_at(QK / 2);
+        // two nibble banks as independent loops (see dot_row_q8q4);
+        // the (q − 8) offset is folded into xsums
+        let mut lo = 0.0f32;
+        for (&byte, &xl) in b.qs.iter().zip(xlo) {
+            lo += (byte & 0x0F) as f32 * xl;
+        }
+        let mut hi = 0.0f32;
+        for (&byte, &xh) in b.qs.iter().zip(xhi) {
+            hi += (byte >> 4) as f32 * xh;
+        }
+        acc += b.scale() * (lo + hi - 8.0 * xsums[bi]);
+    }
+    acc
+}
+
+/// Per-block sums of the quantized activation (shared by all rows).
+#[inline]
+fn block_sums_i32(xq: &[i8]) -> Vec<i32> {
+    xq.chunks_exact(QK).map(|c| c.iter().map(|&v| v as i32).sum()).collect()
+}
+
+/// Integer path: y[n] = xscale · Σ_blocks d_b · Σ_j (q_j − 8) · xq_j.
+pub fn gemv_q8q4_range(w: &MatQ4, xq: &QuantizedRow, y: &mut [f32], rows: Range<usize>) {
+    assert_eq!(xq.q.len(), w.cols);
+    assert_eq!(y.len(), w.rows);
+    let xsums = block_sums_i32(&xq.q);
+    for n in rows {
+        y[n] = dot_row_q8q4(w.row(n), &xq.q, &xsums) * xq.scale;
+    }
+}
+
+#[inline]
+fn dot_row_q8q4(blocks: &[BlockQ4_0], xq: &[i8], xsums: &[i32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (bi, b) in blocks.iter().enumerate() {
+        let xs = &xq[bi * QK..(bi + 1) * QK];
+        let (xlo, xhi) = xs.split_at(QK / 2);
+        // two independent single-bank loops — each autovectorizes to
+        // widening int8 multiplies (vpmaddubsw/vpdpbusd class)
+        let mut dlo = 0i32;
+        for (&byte, &xl) in b.qs.iter().zip(xlo) {
+            dlo += (byte & 0x0F) as i32 * xl as i32;
+        }
+        let mut dhi = 0i32;
+        for (&byte, &xh) in b.qs.iter().zip(xhi) {
+            dhi += (byte >> 4) as i32 * xh as i32;
+        }
+        acc += b.scale() * (dlo + dhi - 8 * xsums[bi]) as f32;
+    }
+    acc
+}
+
+/// Prefill matmul: out[s, n] = Σ_k x[s, k] · w[n, k] for rows `rows` of w.
+/// `x` is S×K row-major, `out` is S×N row-major. Each weight row is
+/// dequantized once into `scratch` (len K) and reused for all S rows.
+pub fn qmatmul_f32_range(
+    w: &MatQ4,
+    x: &[f32],
+    s: usize,
+    out: &mut [f32],
+    scratch: &mut [f32],
+    rows: Range<usize>,
+) {
+    let k = w.cols;
+    let n_total = w.rows;
+    assert_eq!(x.len(), s * k);
+    assert_eq!(out.len(), s * n_total);
+    assert!(scratch.len() >= k);
+    for n in rows {
+        crate::quant::dequantize_row_q4_0(w.row(n), &mut scratch[..k]);
+        for si in 0..s {
+            let xrow = &x[si * k..(si + 1) * k];
+            let mut acc = 0.0f32;
+            for (a, b) in xrow.iter().zip(scratch[..k].iter()) {
+                acc += a * b;
+            }
+            out[si * n_total + n] = acc;
+        }
+    }
+}
+
+/// Range-relative variants: write only the rows in `rows` into an output
+/// slice of length `rows.len()` — the form the scheduled engine uses so
+/// each worker owns a disjoint output sub-slice.
+pub fn gemv_q4_f32_rows_into(w: &MatQ4, x: &[f32], rows: Range<usize>, out: &mut [f32]) {
+    assert_eq!(out.len(), rows.len());
+    let xsums = block_sums_f32(x);
+    for (o, n) in out.iter_mut().zip(rows) {
+        *o = dot_row_f32(w.row(n), x, &xsums);
+    }
+}
+
+pub fn gemv_q8q4_rows_into(w: &MatQ4, xq: &QuantizedRow, rows: Range<usize>, out: &mut [f32]) {
+    assert_eq!(out.len(), rows.len());
+    assert_eq!(xq.q.len(), w.cols);
+    let xsums = block_sums_i32(&xq.q);
+    for (o, n) in out.iter_mut().zip(rows) {
+        *o = dot_row_q8q4(w.row(n), &xq.q, &xsums) * xq.scale;
+    }
+}
+
+/// Prefill variant with *transposed* output: `out_t[(n - rows.start)·s + si]`
+/// so each worker's rows are contiguous in its own output window.
+pub fn qmatmul_f32_rows_into_t(
+    w: &MatQ4,
+    x: &[f32],
+    s: usize,
+    rows: Range<usize>,
+    out_t: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let k = w.cols;
+    assert_eq!(x.len(), s * k);
+    assert_eq!(out_t.len(), rows.len() * s);
+    assert!(scratch.len() >= k);
+    for (ri, n) in rows.enumerate() {
+        crate::quant::dequantize_row_q4_0(w.row(n), &mut scratch[..k]);
+        for si in 0..s {
+            let xrow = &x[si * k..(si + 1) * k];
+            let mut acc = 0.0f32;
+            for (a, b) in xrow.iter().zip(scratch[..k].iter()) {
+                acc += a * b;
+            }
+            out_t[ri * s + si] = acc;
+        }
+    }
+}
+
+/// Convenience single-threaded wrappers.
+pub fn gemv_q4_f32(w: &MatQ4, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0; w.rows];
+    gemv_q4_f32_range(w, x, &mut y, 0..w.rows);
+    y
+}
+
+pub fn gemv_q8q4(w: &MatQ4, xq: &QuantizedRow) -> Vec<f32> {
+    let mut y = vec![0.0; w.rows];
+    gemv_q8q4_range(w, xq, &mut y, 0..w.rows);
+    y
+}
+
+pub fn qmatmul_f32(w: &MatQ4, x: &[f32], s: usize) -> Vec<f32> {
+    let mut out = vec![0.0; s * w.rows];
+    let mut scratch = vec![0.0; w.cols];
+    qmatmul_f32_range(w, x, s, &mut out, &mut scratch, 0..w.rows);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::randn_mat;
+    use crate::quant::quantize_q8_dynamic;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, k: usize, seed: u64) -> (MatQ4, Vec<f32>, Vec<f32>) {
+        let wf = randn_mat(n, k, seed);
+        let w = MatQ4::quantize(&wf.data, n, k);
+        let deq = w.dequantize();
+        let mut rng = Rng::new(seed + 100);
+        let mut x = vec![0.0f32; k];
+        rng.fill_normal_f32(&mut x, 1.0);
+        (w, deq, x)
+    }
+
+    fn oracle_gemv(deq: &[f32], x: &[f32], n: usize, k: usize) -> Vec<f32> {
+        (0..n).map(|r| (0..k).map(|c| deq[r * k + c] * x[c]).sum()).collect()
+    }
+
+    #[test]
+    fn f32_path_matches_dequant_oracle() {
+        let (w, deq, x) = setup(64, 128, 1);
+        let y = gemv_q4_f32(&w, &x);
+        let want = oracle_gemv(&deq, &x, 64, 128);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int_path_tracks_f32_path() {
+        let (w, _, x) = setup(128, 256, 2);
+        let xq = quantize_q8_dynamic(&x);
+        let yi = gemv_q8q4(&w, &xq);
+        let yf = gemv_q4_f32(&w, &x);
+        let denom = yf.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-3);
+        for (a, b) in yi.iter().zip(&yf) {
+            assert!((a - b).abs() / denom < 0.02, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int_path_matches_python_semantics() {
+        // exact per-block integer dot — mirror of ref_gemv_q8q4
+        let (w, _, x) = setup(32, 64, 3);
+        let xq = quantize_q8_dynamic(&x);
+        let y = gemv_q8q4(&w, &xq);
+        for n in 0..32 {
+            let mut acc = 0.0f32;
+            for (bi, b) in w.row(n).iter().enumerate() {
+                let mut isum = 0i32;
+                for i in 0..QK {
+                    isum += (b.code(i) as i32 - 8) * xq.q[bi * QK + i] as i32;
+                }
+                acc += b.scale() * isum as f32;
+            }
+            let want = acc * xq.scale;
+            assert!((y[n] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn range_partition_covers_whole() {
+        let (w, _, x) = setup(96, 64, 4);
+        let whole = gemv_q4_f32(&w, &x);
+        let mut y = vec![0.0; 96];
+        gemv_q4_f32_range(&w, &x, &mut y, 0..31);
+        gemv_q4_f32_range(&w, &x, &mut y, 31..64);
+        gemv_q4_f32_range(&w, &x, &mut y, 64..96);
+        assert_eq!(y, whole);
+    }
+
+    #[test]
+    fn qmatmul_rows_match_gemv() {
+        let (w, _, _) = setup(64, 96, 5);
+        let mut rng = Rng::new(42);
+        let s = 3;
+        let mut x = vec![0.0f32; s * 96];
+        rng.fill_normal_f32(&mut x, 1.0);
+        let out = qmatmul_f32(&w, &x, s);
+        for si in 0..s {
+            let y = gemv_q4_f32(&w, &x[si * 96..(si + 1) * 96]);
+            for n in 0..64 {
+                assert!((out[si * 64 + n] - y[n]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_x_gives_zero_y() {
+        let (w, _, _) = setup(16, 32, 6);
+        let y = gemv_q4_f32(&w, &vec![0.0; 32]);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+}

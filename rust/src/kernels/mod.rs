@@ -1,0 +1,41 @@
+//! Native Rust compute kernels (the Neural Speed micro-kernel analogs).
+//!
+//! Every kernel exposes a *range-based* entry point over its parallel
+//! dimension — the unit the paper's scheduler splits across cores — plus a
+//! [`cost::WorkCost`] describing flops/bytes per unit for the simulator.
+//! Each kernel declares a primary [`Isa`](crate::cpu::Isa) (paper §2.1:
+//! "we've designated a primary ISA for each kernel").
+
+pub mod attention;
+pub mod cost;
+pub mod elementwise;
+pub mod gemm_i8;
+pub mod gemv_q4;
+pub mod rope;
+
+pub use cost::{KernelClass, WorkCost};
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::tensor::{MatF32, MatI8, MatU8};
+    use crate::util::rng::Rng;
+
+    pub fn randn_mat(rows: usize, cols: usize, seed: u64) -> MatF32 {
+        let mut rng = Rng::new(seed);
+        MatF32::randn(rows, cols, 1.0, &mut rng)
+    }
+
+    pub fn rand_u8(rows: usize, cols: usize, seed: u64) -> MatU8 {
+        let mut rng = Rng::new(seed);
+        let mut m = MatU8::zeros(rows, cols);
+        rng.fill_u8(&mut m.data, 0, 256);
+        m
+    }
+
+    pub fn rand_i8(rows: usize, cols: usize, seed: u64) -> MatI8 {
+        let mut rng = Rng::new(seed);
+        let mut m = MatI8::zeros(rows, cols);
+        rng.fill_i8(&mut m.data, -127, 128);
+        m
+    }
+}

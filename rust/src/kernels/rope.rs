@@ -1,0 +1,93 @@
+//! Rotary position embedding — interleaved-pair formulation matching
+//! `ref.ref_rope` (pairs `(x[2i], x[2i+1])`, angle `pos / theta^(2i/dh)`).
+
+/// Rotate one head vector `x` (len dh, even) in place for position `pos`.
+pub fn rope_inplace(x: &mut [f32], pos: i32, theta: f32) {
+    let dh = x.len();
+    debug_assert!(dh % 2 == 0);
+    let half = dh / 2;
+    for i in 0..half {
+        let freq = 1.0 / theta.powf(i as f32 * 2.0 / dh as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let x0 = x[2 * i];
+        let x1 = x[2 * i + 1];
+        x[2 * i] = x0 * cos - x1 * sin;
+        x[2 * i + 1] = x0 * sin + x1 * cos;
+    }
+}
+
+/// Apply RoPE to all `h` heads laid out contiguously `[h, dh]`.
+pub fn rope_heads(x: &mut [f32], h: usize, dh: usize, pos: i32, theta: f32) {
+    assert_eq!(x.len(), h * dh);
+    for head in 0..h {
+        rope_inplace(&mut x[head * dh..(head + 1) * dh], pos, theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pos_zero_is_identity() {
+        let mut rng = Rng::new(1);
+        let mut x = vec![0.0f32; 16];
+        rng.fill_normal_f32(&mut x, 1.0);
+        let orig = x.clone();
+        rope_inplace(&mut x, 0, 10000.0);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_pair_norms() {
+        let mut rng = Rng::new(2);
+        let mut x = vec![0.0f32; 32];
+        rng.fill_normal_f32(&mut x, 1.0);
+        let orig = x.clone();
+        rope_inplace(&mut x, 17, 10000.0);
+        for i in 0..16 {
+            let n0 = orig[2 * i].hypot(orig[2 * i + 1]);
+            let n1 = x[2 * i].hypot(x[2 * i + 1]);
+            assert!((n0 - n1).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn first_pair_rotates_by_pos_radians() {
+        // freq of pair 0 is 1.0 → angle = pos
+        let mut x = vec![1.0f32, 0.0, 0.0, 0.0];
+        rope_inplace(&mut x, 1, 10000.0);
+        assert!((x[0] - 1f32.cos()).abs() < 1e-6);
+        assert!((x[1] - 1f32.sin()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relative_property_dot_depends_on_distance() {
+        // RoPE's core property: <R(p)q, R(p+d)k> depends only on d (per pair)
+        let q = [0.3f32, -0.7];
+        let k = [0.9f32, 0.2];
+        let dot_at = |p: i32, d: i32| {
+            let mut qq = q;
+            let mut kk = k;
+            rope_inplace(&mut qq, p, 10000.0);
+            rope_inplace(&mut kk, p + d, 10000.0);
+            qq[0] * kk[0] + qq[1] * kk[1]
+        };
+        assert!((dot_at(0, 3) - dot_at(11, 3)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn heads_rotate_independently() {
+        let mut rng = Rng::new(3);
+        let mut x = vec![0.0f32; 2 * 8];
+        rng.fill_normal_f32(&mut x, 1.0);
+        let mut head0 = x[..8].to_vec();
+        rope_heads(&mut x, 2, 8, 5, 10000.0);
+        rope_inplace(&mut head0, 5, 10000.0);
+        assert_eq!(&x[..8], head0.as_slice());
+    }
+}

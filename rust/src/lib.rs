@@ -1,0 +1,29 @@
+//! `dynpar` — a dynamic parallel runtime for hybrid CPUs.
+//!
+//! Reproduction of *"A dynamic parallel method for performance optimization
+//! on hybrid CPUs"* (CS.DC 2024). The paper's contribution is implemented in
+//! [`perf`] (the CPU runtime: per-core, per-ISA performance-ratio table with
+//! EWMA filtering) and [`sched`] (the thread scheduler that splits each
+//! kernel's parallel dimension proportionally to the dynamic ratios), driven
+//! either by a real core-bound thread pool ([`pool`]) or by a discrete-event
+//! hybrid-CPU simulator ([`sim`]) through the common [`exec`] abstraction.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index.
+
+pub mod util;
+pub mod cpu;
+pub mod perf;
+pub mod sched;
+pub mod pool;
+pub mod exec;
+pub mod sim;
+pub mod quant;
+pub mod tensor;
+pub mod kernels;
+pub mod model;
+pub mod engine;
+pub mod runtime;
+pub mod server;
+pub mod metrics;
+pub mod bench_harness;
+pub mod trace;

@@ -1,0 +1,326 @@
+//! `dynpar` — CLI launcher for the dynamic-parallel runtime.
+//!
+//! Subcommands:
+//!   presets                         list simulated hybrid-CPU presets
+//!   mlc        [--preset X]         MLC-like bandwidth reference
+//!   bench gemm [--preset X|all] …   Figure 2-left (INT8 GEMM)
+//!   bench gemv …                    Figure 2-right (INT4 GEMV bandwidth)
+//!   bench e2e  …                    Figure 3 (llama2-7B end-to-end)
+//!   bench all                       all of the above
+//!   trace      [--alpha 0.3] …      Figure 4 ratio trace (CSV to stdout/file)
+//!   infer      [--model tiny] …     tiny-model generation, native / PJRT
+//!   serve      [--addr host:port] … TCP serving front-end
+//!   ablate     alpha|chunk|noise    design-choice sweeps
+
+use std::sync::Arc;
+
+use dynpar::bench_harness::{fig2, fig3, fig4, report, sim_runtime, FIG2_SCHEDULERS, PAPER_CPUS};
+use dynpar::cpu::{presets, Isa};
+use dynpar::engine::Engine;
+use dynpar::exec::PhantomWork;
+use dynpar::kernels::cost;
+use dynpar::model::{ModelConfig, ModelWeights};
+use dynpar::perf::PerfConfig;
+use dynpar::sched::{scheduler_by_name, SCHEDULER_NAMES};
+use dynpar::sim::{HybridSim, SimConfig, SimExecutor};
+use dynpar::util::argparse::Args;
+
+const USAGE: &str = "usage: dynpar <presets|mlc|bench|trace|infer|serve|ablate> [options]
+  dynpar bench <gemm|gemv|e2e|all> [--preset <name|all>] [--iters N] [--prompt N] [--decode N] [--noisy]
+  dynpar trace [--preset ultra_125h] [--alpha 0.3] [--init 5] [--prompt N] [--decode N] [--out file.csv]
+  dynpar infer [--model tiny|micro] [--backend native|pjrt|both] [--preset X] [--sched dynamic] [--new N]
+  dynpar serve [--addr 127.0.0.1:7878] [--model micro] [--preset X] [--max-batch 4]
+  dynpar ablate <alpha|chunk|noise> [--preset X]
+  dynpar mlc [--preset X]";
+
+fn cpus_arg(args: &Args) -> Vec<String> {
+    match args.opt("preset") {
+        None | Some("all") => PAPER_CPUS.iter().map(|s| s.to_string()).collect(),
+        Some(p) => vec![p.to_string()],
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("presets") => cmd_presets(),
+        Some("mlc") => cmd_mlc(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("infer") => cmd_infer(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("ablate") => cmd_ablate(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_presets() {
+    println!("available CPU presets:");
+    for name in ["core_12900k", "ultra_125h", "homogeneous_16"] {
+        let spec = presets::preset_by_name(name).unwrap();
+        let p = spec.count_kind(dynpar::cpu::CoreKind::Performance);
+        let e = spec.count_kind(dynpar::cpu::CoreKind::Efficiency);
+        let lpe = spec.count_kind(dynpar::cpu::CoreKind::LowPower);
+        let mlc = HybridSim::new(spec.clone(), SimConfig::noiseless()).mlc_bandwidth();
+        println!(
+            "  {name:<16} {p}P + {e}E + {lpe}LPE   bus {:>5.1} GB/s   mlc {mlc:>5.1} GB/s   VNNI P:E ratio {:.2}",
+            spec.bus_bw_gbps,
+            spec.ideal_ratios(Isa::AvxVnni)[0],
+        );
+    }
+    println!("schedulers: {}", SCHEDULER_NAMES.join(", "));
+}
+
+fn cmd_mlc(args: &Args) {
+    for cpu in cpus_arg(args) {
+        let spec = presets::preset_by_name(&cpu).expect("unknown preset");
+        let sim = HybridSim::new(spec.clone(), SimConfig::noiseless());
+        println!(
+            "{cpu}: mlc-like reference bandwidth = {:.1} GB/s (bus {:.1})",
+            sim.mlc_bandwidth(),
+            spec.bus_bw_gbps
+        );
+    }
+}
+
+fn cmd_bench(args: &Args) {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let cpus = cpus_arg(args);
+    let cpu_refs: Vec<&str> = cpus.iter().map(|s| s.as_str()).collect();
+    let iters = args.usize_or("iters", 20);
+    let warmup = args.usize_or("warmup", 15);
+    let noisy = args.flag("noisy");
+    let json = args.flag("json");
+
+    if which == "gemm" || which == "all" {
+        let res =
+            fig2::run_gemm(&cpu_refs, &FIG2_SCHEDULERS, 1024, 4096, 4096, warmup, iters, noisy);
+        let t = fig2::gemm_table(&res);
+        println!("\n== Figure 2-left: INT8 GEMM 1024x4096x4096 ==");
+        print!("{}", if json { t.to_json().dump() } else { t.render() });
+    }
+    if which == "gemv" || which == "all" {
+        let res = fig2::run_gemv(&cpu_refs, &FIG2_SCHEDULERS, 4096, 4096, warmup, iters, noisy);
+        let t = fig2::gemv_table(&res);
+        println!("\n== Figure 2-right: INT4 GEMV 1x4096x4096 (bandwidth) ==");
+        print!("{}", if json { t.to_json().dump() } else { t.render() });
+    }
+    if which == "e2e" || which == "all" {
+        let prompt = args.usize_or("prompt", 1024);
+        let decode = args.usize_or("decode", 32);
+        let res = fig3::run(&cpu_refs, prompt, decode, noisy);
+        let t = fig3::table(&res);
+        println!("\n== Figure 3: llama2-7B end-to-end (prompt {prompt}, decode {decode}) ==");
+        print!("{}", if json { t.to_json().dump() } else { t.render() });
+    }
+}
+
+fn cmd_trace(args: &Args) {
+    let p = fig4::Fig4Params {
+        cpu: args.opt_or("preset", "ultra_125h"),
+        alpha: args.f64_or("alpha", 0.3),
+        init_ratio: args.f64_or("init", 5.0),
+        core: args.usize_or("core", 0),
+        prompt_len: args.usize_or("prompt", 1024),
+        n_decode: args.usize_or("decode", 64),
+        prefill_chunk: args.usize_or("chunk", 64),
+        noisy: !args.flag("noiseless"),
+    };
+    let trace = fig4::run(&p);
+    let csv = trace.to_csv();
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, &csv).expect("write trace");
+            eprintln!(
+                "wrote {} samples to {path} (prefill mean {:.2}, decode mean {:.2})",
+                trace.samples.len(),
+                trace.phase_mean("prefill").unwrap_or(0.0),
+                trace.phase_mean("decode").unwrap_or(0.0)
+            );
+        }
+        None => print!("{csv}"),
+    }
+}
+
+fn cmd_infer(args: &Args) {
+    let model = args.opt_or("model", "tiny");
+    let cfg = ModelConfig::by_name(&model).expect("unknown model (tiny|micro)");
+    let backend = args.opt_or("backend", "native");
+    let preset = args.opt_or("preset", "ultra_125h");
+    let sched = args.opt_or("sched", "dynamic");
+    let n_new = args.usize_or("new", 16);
+    let prompt: Vec<u32> =
+        (1..=args.usize_or("prompt", 8) as u32).map(|t| t % cfg.vocab as u32).collect();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, args.u64_or("seed", 0)));
+
+    let native_tokens = if backend == "native" || backend == "both" {
+        let spec = presets::preset_by_name(&preset).expect("unknown preset");
+        let exec =
+            SimExecutor::new(spec, SimConfig { execute_real: true, ..SimConfig::noiseless() });
+        let mut engine = Engine::new(
+            cfg.clone(),
+            Arc::clone(&weights),
+            exec,
+            scheduler_by_name(&sched).expect("unknown scheduler"),
+            PerfConfig::default(),
+        );
+        let mut session = engine.new_session();
+        let (tokens, m) = engine.generate(&mut session, &prompt, n_new);
+        println!("[native/{preset}/{sched}] tokens: {tokens:?}");
+        println!(
+            "[native] prefill {:.3} ms ({} tok), decode {:.3} ms/tok, {:.1} tok/s (virtual time)",
+            m.prefill_secs * 1e3,
+            m.prompt_tokens,
+            m.decode_latency() * 1e3,
+            m.decode_tokens_per_sec()
+        );
+        Some(tokens)
+    } else {
+        None
+    };
+
+    if backend == "pjrt" || backend == "both" {
+        let manifest =
+            dynpar::runtime::Manifest::load(dynpar::runtime::artifacts::default_artifact_dir())
+                .expect("artifacts missing — run `make artifacts`");
+        let mut pjrt = dynpar::runtime::PjrtEngine::load(&manifest, &model, &weights)
+            .expect("loading PJRT artifacts");
+        let t0 = std::time::Instant::now();
+        let tokens = pjrt.generate(&prompt, n_new).expect("pjrt generate");
+        println!("[pjrt] tokens: {tokens:?}  ({:.2}s wall)", t0.elapsed().as_secs_f64());
+        if let Some(nt) = native_tokens {
+            assert_eq!(nt, tokens, "native and PJRT disagree!");
+            println!("[parity] native and PJRT backends produced identical tokens ✓");
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let model = args.opt_or("model", "micro");
+    let cfg = ModelConfig::by_name(&model).expect("unknown model");
+    let preset = args.opt_or("preset", "ultra_125h");
+    let weights = Arc::new(ModelWeights::random_init(&cfg, args.u64_or("seed", 0)));
+    let spec = presets::preset_by_name(&preset).expect("unknown preset");
+    let exec = SimExecutor::new(spec, SimConfig { execute_real: true, ..SimConfig::noiseless() });
+    let engine = Engine::new(
+        cfg,
+        weights,
+        exec,
+        scheduler_by_name(&args.opt_or("sched", "dynamic")).expect("unknown scheduler"),
+        PerfConfig::default(),
+    );
+    let addr = args.opt_or("addr", "127.0.0.1:7878");
+    let opts = dynpar::server::ServerOpts { max_batch: args.usize_or("max-batch", 4) };
+    let handle = dynpar::server::serve(&addr, engine, opts).expect("bind");
+    println!("dynpar serving model '{model}' on {} (Ctrl-C to stop)", handle.addr);
+    println!(r#"protocol: {{"id":1,"prompt":[1,2,3],"max_new_tokens":8}} per line"#);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_ablate(args: &Args) {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("alpha");
+    let preset = args.opt_or("preset", "ultra_125h");
+    let spec = presets::preset_by_name(&preset).expect("unknown preset");
+    match which {
+        "alpha" => {
+            // filter-gain sweep: convergence speed vs steady-state latency
+            println!("== ablation: EWMA filter gain α ({preset}, INT8 GEMM) ==");
+            let mut t =
+                report::Table::new(&["alpha", "first_iter", "converged_p50", "iters_to_1.05x"]);
+            let c = cost::gemm_i8_cost(1024, 4096, 4096);
+            for alpha in [0.0, 0.1, 0.3, 0.5, 0.7, 0.9] {
+                let mut rt = sim_runtime(
+                    spec.clone(),
+                    "dynamic",
+                    SimConfig::noiseless(),
+                    PerfConfig { alpha, init_ratio: 1.0 },
+                );
+                let mut lat = Vec::new();
+                for _ in 0..40 {
+                    lat.push(rt.run(&PhantomWork::new(c)).wall_secs);
+                }
+                let best = lat.iter().cloned().fold(f64::INFINITY, f64::min);
+                let conv = lat.iter().position(|&l| l < best * 1.05).unwrap_or(lat.len());
+                t.row(vec![
+                    format!("{alpha:.1}"),
+                    report::fmt_secs(lat[0]),
+                    report::fmt_secs(best),
+                    format!("{conv}"),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "chunk" => {
+            println!("== ablation: work-stealing chunk size ({preset}, INT8 GEMM) ==");
+            let mut t = report::Table::new(&["chunk", "latency", "vs_dynamic"]);
+            let c = cost::gemm_i8_cost(1024, 4096, 4096);
+            let mut rtd =
+                sim_runtime(spec.clone(), "dynamic", SimConfig::noiseless(), PerfConfig::default());
+            for _ in 0..20 {
+                rtd.run(&PhantomWork::new(c));
+            }
+            let dyn_p50 = rtd.run(&PhantomWork::new(c)).wall_secs;
+            for chunk in [1usize, 4, 16, 64, 256] {
+                let mut sim = HybridSim::new(spec.clone(), SimConfig::noiseless());
+                let plan = dynpar::sched::DispatchPlan::Chunked { chunk };
+                let wall = sim.execute_plan(None, &c, &plan).wall_secs;
+                t.row(vec![
+                    format!("{chunk}"),
+                    report::fmt_secs(wall),
+                    format!("{:.2}x", wall / dyn_p50),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "noise" => {
+            println!("== ablation: background-load robustness ({preset}) ==");
+            // a background task steals 50% of core 0 partway through; the
+            // dynamic method re-balances, static cannot
+            let c = cost::gemm_i8_cost(1024, 4096, 4096);
+            let mut t = report::Table::new(&["scheduler", "clean", "with_load", "degradation"]);
+            for sched in ["static", "dynamic"] {
+                let run_with = |background: Vec<dynpar::sim::BackgroundLoad>| {
+                    let noise = dynpar::sim::NoiseConfig {
+                        sigma: 0.0,
+                        background,
+                        ..dynpar::sim::NoiseConfig::disabled()
+                    };
+                    let mut rt = sim_runtime(
+                        spec.clone(),
+                        sched,
+                        SimConfig { noise, ..SimConfig::noiseless() },
+                        PerfConfig::default(),
+                    );
+                    let mut last = 0.0;
+                    for _ in 0..30 {
+                        last = rt.run(&PhantomWork::new(c)).wall_secs;
+                    }
+                    last
+                };
+                let clean = run_with(vec![]);
+                let loaded = run_with(vec![dynpar::sim::BackgroundLoad {
+                    core: 0,
+                    start: 0.0,
+                    end: 1e9,
+                    fraction: 0.5,
+                }]);
+                t.row(vec![
+                    sched.to_string(),
+                    report::fmt_secs(clean),
+                    report::fmt_secs(loaded),
+                    format!("{:.1}%", (loaded / clean - 1.0) * 100.0),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        other => {
+            eprintln!("unknown ablation '{other}' (alpha|chunk|noise)");
+            std::process::exit(2);
+        }
+    }
+}

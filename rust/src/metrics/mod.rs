@@ -1,0 +1,157 @@
+//! Inference metrics: phase latencies, token rates, bandwidth accounting
+//! and latency histograms for the serving front-end.
+
+use crate::util::stats::Summary;
+
+/// Timings of one generation request, split by the paper's two phases.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseMetrics {
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub prompt_tokens: usize,
+    pub decoded_tokens: usize,
+}
+
+impl PhaseMetrics {
+    /// decode throughput (the paper's "~16 tokens/s" observable)
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        if self.decode_secs > 0.0 {
+            self.decoded_tokens as f64 / self.decode_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// mean decode latency per token (seconds)
+    pub fn decode_latency(&self) -> f64 {
+        if self.decoded_tokens > 0 {
+            self.decode_secs / self.decoded_tokens as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// prefill throughput in prompt tokens/s
+    pub fn prefill_tokens_per_sec(&self) -> f64 {
+        if self.prefill_secs > 0.0 {
+            self.prompt_tokens as f64 / self.prefill_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn merge(&mut self, other: &PhaseMetrics) {
+        self.prefill_secs += other.prefill_secs;
+        self.decode_secs += other.decode_secs;
+        self.prompt_tokens += other.prompt_tokens;
+        self.decoded_tokens += other.decoded_tokens;
+    }
+}
+
+/// Achieved bandwidth (GB/s) given bytes moved in `secs`.
+pub fn bandwidth_gbps(bytes: f64, secs: f64) -> f64 {
+    if secs > 0.0 {
+        bytes / secs / 1e9
+    } else {
+        0.0
+    }
+}
+
+/// Utilization of a reference bandwidth (the paper's ">90% of MLC").
+pub fn bandwidth_utilization(achieved_gbps: f64, reference_gbps: f64) -> f64 {
+    if reference_gbps > 0.0 {
+        achieved_gbps / reference_gbps
+    } else {
+        0.0
+    }
+}
+
+/// Simple latency histogram with fixed log-spaced buckets (µs scale).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    samples: Vec<f64>,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { samples: Vec::new() }
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn summary(&self) -> Option<Summary> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.samples))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_per_sec() {
+        let m = PhaseMetrics {
+            prefill_secs: 2.0,
+            decode_secs: 4.0,
+            prompt_tokens: 1024,
+            decoded_tokens: 64,
+        };
+        assert!((m.decode_tokens_per_sec() - 16.0).abs() < 1e-12);
+        assert!((m.prefill_tokens_per_sec() - 512.0).abs() < 1e-12);
+        assert!((m.decode_latency() - 0.0625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_dont_divide_by_zero() {
+        let m = PhaseMetrics::default();
+        assert_eq!(m.decode_tokens_per_sec(), 0.0);
+        assert_eq!(m.decode_latency(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = PhaseMetrics {
+            prefill_secs: 1.0,
+            decode_secs: 1.0,
+            prompt_tokens: 10,
+            decoded_tokens: 5,
+        };
+        a.merge(&a.clone());
+        assert_eq!(a.prompt_tokens, 20);
+        assert_eq!(a.decode_secs, 2.0);
+    }
+
+    #[test]
+    fn bandwidth_math() {
+        assert!((bandwidth_gbps(68e9, 1.0) - 68.0).abs() < 1e-9);
+        assert!((bandwidth_utilization(61.2, 68.0) - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_summary() {
+        let mut h = LatencyHistogram::new();
+        assert!(h.summary().is_none());
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        let s = h.summary().unwrap();
+        assert_eq!(h.count(), 100);
+        assert!((s.p50 - 0.0505).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,170 @@
+//! Model architecture configs — must stay in lock-step with
+//! `python/compile/model.py` (the `tiny`/`micro` values are the artifact
+//! ABI; `llama2_7b` drives the simulator-scale experiments).
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub t_max: usize,
+    pub prefill_len: usize,
+    pub rope_theta: f32,
+    pub rms_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// matches python `TINY`
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            vocab: 512,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 8,
+            d_ff: 704,
+            t_max: 64,
+            prefill_len: 16,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        }
+    }
+
+    /// matches python `MICRO`
+    pub fn micro() -> ModelConfig {
+        ModelConfig {
+            name: "micro".into(),
+            vocab: 128,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 128,
+            t_max: 32,
+            prefill_len: 8,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        }
+    }
+
+    /// llama2-7B (the paper's evaluation model) — simulator-scale only.
+    pub fn llama2_7b() -> ModelConfig {
+        ModelConfig {
+            name: "llama2_7b".into(),
+            vocab: 32000,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            d_ff: 11008,
+            t_max: 2048,
+            prefill_len: 1024,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        match name {
+            "tiny" => Some(Self::tiny()),
+            "micro" => Some(Self::micro()),
+            "llama2_7b" | "7b" => Some(Self::llama2_7b()),
+            _ => None,
+        }
+    }
+
+    /// Parse the `model` block of an artifact manifest entry.
+    pub fn from_manifest_json(name: &str, v: &Json) -> Result<ModelConfig, String> {
+        let get = |k: &str| v.get(k).and_then(Json::as_usize).ok_or_else(|| format!("missing {k}"));
+        Ok(ModelConfig {
+            name: name.to_string(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            t_max: get("t_max")?,
+            prefill_len: get("prefill_len")?,
+            rope_theta: v.get("rope_theta").and_then(Json::as_f64).unwrap_or(10000.0) as f32,
+            rms_eps: v.get("rms_eps").and_then(Json::as_f64).unwrap_or(1e-5) as f32,
+        })
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.d_model % self.n_heads != 0 {
+            return Err("d_model must divide by n_heads".into());
+        }
+        if self.head_dim() % 2 != 0 {
+            return Err("head_dim must be even for RoPE".into());
+        }
+        for (nm, v) in [("d_model", self.d_model), ("d_ff", self.d_ff), ("vocab", self.vocab)] {
+            if v % 32 != 0 {
+                return Err(format!("{nm} must be a multiple of QK=32"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total Q4_0 weight bytes streamed per decoded token (the decode-
+    /// phase memory traffic that bounds tokens/s).
+    pub fn decode_weight_bytes(&self) -> usize {
+        let per_weight_num = |n: usize, k: usize| n * k / 32 * 18; // 18 B / 32 weights
+        let per_layer = 4 * per_weight_num(self.d_model, self.d_model)
+            + 2 * per_weight_num(self.d_ff, self.d_model)
+            + per_weight_num(self.d_model, self.d_ff);
+        self.n_layers * per_layer + per_weight_num(self.vocab, self.d_model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_configs_validate() {
+        for name in ["tiny", "micro", "llama2_7b"] {
+            ModelConfig::by_name(name).unwrap().validate().unwrap();
+        }
+        assert!(ModelConfig::by_name("gpt5").is_none());
+    }
+
+    #[test]
+    fn tiny_matches_python_abi() {
+        let c = ModelConfig::tiny();
+        assert_eq!((c.vocab, c.d_model, c.n_layers, c.n_heads, c.d_ff), (512, 256, 4, 8, 704));
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!((c.t_max, c.prefill_len), (64, 16));
+    }
+
+    #[test]
+    fn llama7b_decode_bytes_near_3_7_gb() {
+        // the paper's 4-bit llama2-7B streams ~3.7 GB of weights per token
+        let gb = ModelConfig::llama2_7b().decode_weight_bytes() as f64 / 1e9;
+        assert!((3.5..4.0).contains(&gb), "gb={gb}");
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let j = Json::parse(
+            r#"{"vocab":512,"d_model":256,"n_layers":4,"n_heads":8,"d_ff":704,
+                "t_max":64,"prefill_len":16,"rope_theta":10000.0,"rms_eps":1e-5}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_manifest_json("tiny", &j).unwrap();
+        assert_eq!(c, ModelConfig::tiny());
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut c = ModelConfig::tiny();
+        c.d_model = 100; // not multiple of 32
+        assert!(c.validate().is_err());
+    }
+}

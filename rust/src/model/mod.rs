@@ -1,0 +1,163 @@
+//! Llama-style model: configuration, quantized weights, KV cache and the
+//! *serial* reference forward pass (the scheduled/parallel forward lives in
+//! [`crate::engine`]; this module is the ground truth it is tested against).
+
+pub mod config;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use weights::{LayerWeights, ModelWeights};
+
+use crate::kernels::attention::KvLayer;
+use crate::kernels::{elementwise, gemv_q4, rope};
+
+/// Per-request generation state: one KV cache per layer plus the cursor.
+#[derive(Clone, Debug)]
+pub struct Session {
+    pub kv: Vec<KvLayer>,
+    pub pos: usize,
+}
+
+impl Session {
+    pub fn new(cfg: &ModelConfig) -> Session {
+        let kv = (0..cfg.n_layers)
+            .map(|_| KvLayer::new(cfg.n_heads, cfg.t_max, cfg.head_dim()))
+            .collect();
+        Session { kv, pos: 0 }
+    }
+
+    pub fn remaining_capacity(&self, cfg: &ModelConfig) -> usize {
+        cfg.t_max - self.pos
+    }
+}
+
+/// Serial single-threaded decode step — the correctness oracle for the
+/// scheduled engine and the PJRT artifact. Mirrors
+/// `python/compile/model.py::decode_step` op for op.
+pub fn decode_step_serial(
+    cfg: &ModelConfig,
+    w: &ModelWeights,
+    session: &mut Session,
+    token: u32,
+) -> Vec<f32> {
+    let d = cfg.d_model;
+    let (h, dh) = (cfg.n_heads, cfg.head_dim());
+    let pos = session.pos;
+    assert!(pos < cfg.t_max, "KV cache exhausted");
+    let mut x = w.embed.row(token as usize).to_vec();
+
+    for (li, layer) in w.layers.iter().enumerate() {
+        // attention block
+        let mut xa = vec![0.0f32; d];
+        elementwise::rmsnorm(&x, &layer.attn_norm, cfg.rms_eps, &mut xa);
+        let mut q = gemv_q4::gemv_q4_f32(&layer.wq, &xa);
+        let mut k = gemv_q4::gemv_q4_f32(&layer.wk, &xa);
+        let v = gemv_q4::gemv_q4_f32(&layer.wv, &xa);
+        rope::rope_heads(&mut q, h, dh, pos as i32, cfg.rope_theta);
+        rope::rope_heads(&mut k, h, dh, pos as i32, cfg.rope_theta);
+        let cache = &mut session.kv[li];
+        for head in 0..h {
+            cache.write(head, pos, &k[head * dh..(head + 1) * dh], &v[head * dh..(head + 1) * dh]);
+        }
+        let attn = crate::kernels::attention::attention_decode(&q, cache, pos);
+        let proj = gemv_q4::gemv_q4_f32(&layer.wo, &attn);
+        elementwise::add_inplace(&mut x, &proj);
+
+        // FFN block
+        let mut xf = vec![0.0f32; d];
+        elementwise::rmsnorm(&x, &layer.ffn_norm, cfg.rms_eps, &mut xf);
+        let gate = gemv_q4::gemv_q4_f32(&layer.w1, &xf);
+        let up = gemv_q4::gemv_q4_f32(&layer.w3, &xf);
+        let mut act = vec![0.0f32; cfg.d_ff];
+        elementwise::silu_mul(&gate, &up, &mut act);
+        let down = gemv_q4::gemv_q4_f32(&layer.w2, &act);
+        elementwise::add_inplace(&mut x, &down);
+    }
+
+    let mut xn = vec![0.0f32; d];
+    elementwise::rmsnorm(&x, &w.final_norm, cfg.rms_eps, &mut xn);
+    session.pos += 1;
+    gemv_q4::gemv_q4_f32(&w.lm_head, &xn)
+}
+
+/// Greedy argmax over logits.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_setup() -> (ModelConfig, ModelWeights) {
+        let cfg = ModelConfig::micro();
+        let w = ModelWeights::random_init(&cfg, 7);
+        (cfg, w)
+    }
+
+    #[test]
+    fn decode_produces_finite_logits() {
+        let (cfg, w) = tiny_setup();
+        let mut s = Session::new(&cfg);
+        let logits = decode_step_serial(&cfg, &w, &mut s, 3);
+        assert_eq!(logits.len(), cfg.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(s.pos, 1);
+    }
+
+    #[test]
+    fn different_tokens_different_logits() {
+        let (cfg, w) = tiny_setup();
+        let mut s1 = Session::new(&cfg);
+        let mut s2 = Session::new(&cfg);
+        let l1 = decode_step_serial(&cfg, &w, &mut s1, 1);
+        let l2 = decode_step_serial(&cfg, &w, &mut s2, 2);
+        assert_ne!(l1, l2);
+    }
+
+    #[test]
+    fn history_affects_output() {
+        let (cfg, w) = tiny_setup();
+        let mut s1 = Session::new(&cfg);
+        decode_step_serial(&cfg, &w, &mut s1, 5);
+        let a = decode_step_serial(&cfg, &w, &mut s1, 9);
+        let mut s2 = Session::new(&cfg);
+        decode_step_serial(&cfg, &w, &mut s2, 6);
+        let b = decode_step_serial(&cfg, &w, &mut s2, 9);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn determinism_across_runs() {
+        let (cfg, w) = tiny_setup();
+        let mut s1 = Session::new(&cfg);
+        let mut s2 = Session::new(&cfg);
+        for t in [1u32, 4, 2] {
+            let a = decode_step_serial(&cfg, &w, &mut s1, t);
+            let b = decode_step_serial(&cfg, &w, &mut s2, t);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "KV cache exhausted")]
+    fn cache_overflow_panics() {
+        let (cfg, w) = tiny_setup();
+        let mut s = Session::new(&cfg);
+        for t in 0..=cfg.t_max {
+            decode_step_serial(&cfg, &w, &mut s, (t % cfg.vocab) as u32);
+        }
+    }
+
+    #[test]
+    fn argmax_finds_peak() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 3.0]), 1); // first max wins
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

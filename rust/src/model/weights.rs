@@ -1,0 +1,206 @@
+//! Deterministic random-init quantized weights.
+//!
+//! The same quantized tensors are used by the native engine (packed Q4_0
+//! blocks) and, via [`crate::quant::MatQ4::unpack`], as PJRT artifact
+//! parameters — which is what makes native-vs-PJRT logits comparable.
+
+use super::config::ModelConfig;
+use crate::quant::MatQ4;
+use crate::tensor::MatF32;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub wq: MatQ4,
+    pub wk: MatQ4,
+    pub wv: MatQ4,
+    pub wo: MatQ4,
+    pub ffn_norm: Vec<f32>,
+    /// gate projection [d_ff, d_model]
+    pub w1: MatQ4,
+    /// up projection [d_ff, d_model]
+    pub w3: MatQ4,
+    /// down projection [d_model, d_ff]
+    pub w2: MatQ4,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub embed: MatF32,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: MatQ4,
+}
+
+fn rand_q4(rng: &mut Rng, rows: usize, cols: usize, sigma: f32) -> MatQ4 {
+    let m = MatF32::randn(rows, cols, sigma, rng);
+    MatQ4::quantize(&m.data, rows, cols)
+}
+
+impl ModelWeights {
+    /// Deterministic init: N(0, 1/√d) matmuls, unit norms — the same
+    /// distribution as `python/compile/weights.py` (values differ; the
+    /// ABI is the *quantized tensors*, which Rust sends to PJRT itself).
+    pub fn random_init(cfg: &ModelConfig, seed: u64) -> ModelWeights {
+        let mut rng = Rng::new(seed);
+        let d = cfg.d_model;
+        let sigma = 1.0 / (d as f32).sqrt();
+        let embed = MatF32::randn(cfg.vocab, d, sigma, &mut rng);
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                attn_norm: vec![1.0; d],
+                wq: rand_q4(&mut rng, d, d, sigma),
+                wk: rand_q4(&mut rng, d, d, sigma),
+                wv: rand_q4(&mut rng, d, d, sigma),
+                wo: rand_q4(&mut rng, d, d, sigma),
+                ffn_norm: vec![1.0; d],
+                w1: rand_q4(&mut rng, cfg.d_ff, d, sigma),
+                w3: rand_q4(&mut rng, cfg.d_ff, d, sigma),
+                w2: rand_q4(&mut rng, d, cfg.d_ff, sigma),
+            })
+            .collect();
+        ModelWeights {
+            embed,
+            layers,
+            final_norm: vec![1.0; d],
+            lm_head: rand_q4(&mut rng, cfg.vocab, d, sigma),
+        }
+    }
+
+    /// Total packed Q4_0 bytes (the decode-phase streaming footprint).
+    pub fn packed_bytes(&self) -> usize {
+        let mut total = self.lm_head.packed_bytes();
+        for l in &self.layers {
+            total += l.wq.packed_bytes()
+                + l.wk.packed_bytes()
+                + l.wv.packed_bytes()
+                + l.wo.packed_bytes()
+                + l.w1.packed_bytes()
+                + l.w3.packed_bytes()
+                + l.w2.packed_bytes();
+        }
+        total
+    }
+
+    /// Flat quantized tensors in the artifact parameter order
+    /// (mirrors `python/compile/model.py::param_order`): for each matmul a
+    /// `(codes, scales)` pair; norms and embed as f32.
+    pub fn to_flat_params(&self, cfg: &ModelConfig) -> Vec<FlatParam> {
+        let mut out = Vec::new();
+        out.push(FlatParam::F32 {
+            name: "embed".into(),
+            shape: vec![cfg.vocab, cfg.d_model],
+            data: self.embed.data.clone(),
+        });
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push(FlatParam::f32_vec(format!("l{i}.attn_norm"), vec![cfg.d_model], &l.attn_norm));
+            for (nm, m) in [("wq", &l.wq), ("wk", &l.wk), ("wv", &l.wv), ("wo", &l.wo)] {
+                push_q4(&mut out, format!("l{i}.{nm}"), m);
+            }
+            out.push(FlatParam::f32_vec(format!("l{i}.ffn_norm"), vec![cfg.d_model], &l.ffn_norm));
+            push_q4(&mut out, format!("l{i}.w1"), &l.w1);
+            push_q4(&mut out, format!("l{i}.w3"), &l.w3);
+            push_q4(&mut out, format!("l{i}.w2"), &l.w2);
+        }
+        out.push(FlatParam::f32_vec("final_norm".into(), vec![cfg.d_model], &self.final_norm));
+        push_q4(&mut out, "lm_head".into(), &self.lm_head);
+        out
+    }
+}
+
+fn push_q4(out: &mut Vec<FlatParam>, name: String, m: &MatQ4) {
+    let (codes, scales) = m.unpack();
+    out.push(FlatParam::I8 {
+        name: format!("{name}.qs"),
+        shape: vec![m.rows, m.cols],
+        data: codes,
+    });
+    out.push(FlatParam::F32 {
+        name: format!("{name}.sc"),
+        shape: vec![m.rows, m.cols / 32],
+        data: scales,
+    });
+}
+
+/// One flattened parameter in artifact ABI order.
+#[derive(Clone, Debug)]
+pub enum FlatParam {
+    F32 { name: String, shape: Vec<usize>, data: Vec<f32> },
+    I8 { name: String, shape: Vec<usize>, data: Vec<i8> },
+}
+
+impl FlatParam {
+    fn f32_vec(name: String, shape: Vec<usize>, data: &[f32]) -> FlatParam {
+        FlatParam::F32 { name, shape, data: data.to_vec() }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            FlatParam::F32 { name, .. } => name,
+            FlatParam::I8 { name, .. } => name,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            FlatParam::F32 { shape, .. } => shape,
+            FlatParam::I8 { shape, .. } => shape,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_deterministic() {
+        let cfg = ModelConfig::micro();
+        let a = ModelWeights::random_init(&cfg, 42);
+        let b = ModelWeights::random_init(&cfg, 42);
+        assert_eq!(a.embed.data, b.embed.data);
+        assert_eq!(a.layers[0].wq.blocks, b.layers[0].wq.blocks);
+        let c = ModelWeights::random_init(&cfg, 43);
+        assert_ne!(a.embed.data, c.embed.data);
+    }
+
+    #[test]
+    fn shapes_match_config() {
+        let cfg = ModelConfig::micro();
+        let w = ModelWeights::random_init(&cfg, 1);
+        assert_eq!(w.layers.len(), cfg.n_layers);
+        assert_eq!((w.embed.rows, w.embed.cols), (cfg.vocab, cfg.d_model));
+        let l = &w.layers[0];
+        assert_eq!((l.wq.rows, l.wq.cols), (cfg.d_model, cfg.d_model));
+        assert_eq!((l.w1.rows, l.w1.cols), (cfg.d_ff, cfg.d_model));
+        assert_eq!((l.w2.rows, l.w2.cols), (cfg.d_model, cfg.d_ff));
+        assert_eq!((w.lm_head.rows, w.lm_head.cols), (cfg.vocab, cfg.d_model));
+    }
+
+    #[test]
+    fn flat_param_order_matches_python_abi() {
+        // python order: embed, per layer [attn_norm, wq.qs/sc, wk, wv, wo,
+        // ffn_norm, w1, w3, w2], final_norm, lm_head
+        let cfg = ModelConfig::micro();
+        let w = ModelWeights::random_init(&cfg, 2);
+        let flat = w.to_flat_params(&cfg);
+        let names: Vec<&str> = flat.iter().map(|p| p.name()).collect();
+        assert_eq!(names[0], "embed");
+        assert_eq!(names[1], "l0.attn_norm");
+        assert_eq!(names[2], "l0.wq.qs");
+        assert_eq!(names[3], "l0.wq.sc");
+        assert_eq!(*names.last().unwrap(), "lm_head.sc");
+        // total count: 1 + L·(2 + 7·2) + 1 + 2
+        assert_eq!(flat.len(), 1 + cfg.n_layers * 16 + 3);
+    }
+
+    #[test]
+    fn packed_bytes_counts_all_matmuls() {
+        let cfg = ModelConfig::micro();
+        let w = ModelWeights::random_init(&cfg, 3);
+        let d = cfg.d_model;
+        let expect = (cfg.n_layers * (4 * d * d + 3 * cfg.d_ff * d) + cfg.vocab * d) / 32 * 18;
+        assert_eq!(w.packed_bytes(), expect);
+    }
+}

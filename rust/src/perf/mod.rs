@@ -1,0 +1,301 @@
+//! The paper's **CPU runtime** (§2.1): per-core relative performance
+//! ratios, keyed by (kernel class, ISA), updated after every kernel from
+//! the measured per-core execution times and smoothed with an EWMA filter.
+//!
+//! Update rule (paper eq. 2):
+//! ```text
+//!   pr_i' = pr_i / Σ_j (t_i · pr_j / t_j)
+//! ```
+//! Eq. 2 as written normalizes Σ pr' = 1; to keep table entries on a
+//! stable, interpretable scale across updates we rescale `pr'` so the
+//! participating cores' total mass is preserved (this does not change the
+//! *relative* ratios, which are all eq. 3 consumes). The filter is
+//! `pr = α·pr + (1−α)·pr'` with constant gain α (paper uses α = 0.3).
+
+use crate::cpu::Isa;
+use crate::kernels::KernelClass;
+
+/// dense row index for the (class, isa) key — the table sits on the
+/// per-kernel hot path, so lookups must not hash
+#[inline]
+fn slot(class: KernelClass, isa: Isa) -> usize {
+    let c = KernelClass::ALL.iter().position(|&k| k == class).unwrap();
+    let i = Isa::ALL.iter().position(|&k| k == isa).unwrap();
+    c * Isa::ALL.len() + i
+}
+
+const N_SLOTS: usize = 7 * 4; // KernelClass::ALL × Isa::ALL
+
+/// Configuration of the runtime's ratio table.
+#[derive(Clone, Copy, Debug)]
+pub struct PerfConfig {
+    /// EWMA filter gain α ∈ [0, 1): weight of the *old* value.
+    pub alpha: f64,
+    /// initial ratio for every core (paper §2.1 initializes to 1; the
+    /// Fig. 4 trace starts from a stale value of 5 — see `set_ratios`).
+    pub init_ratio: f64,
+}
+
+impl Default for PerfConfig {
+    fn default() -> Self {
+        PerfConfig { alpha: 0.3, init_ratio: 1.0 }
+    }
+}
+
+/// Per-(kernel, ISA) performance-ratio table.
+#[derive(Clone, Debug)]
+pub struct PerfTable {
+    n_cores: usize,
+    cfg: PerfConfig,
+    /// dense (class × isa) rows, lazily initialized
+    entries: Vec<Option<Vec<f64>>>,
+    updates: u64,
+}
+
+impl PerfTable {
+    pub fn new(n_cores: usize, cfg: PerfConfig) -> PerfTable {
+        assert!(n_cores > 0);
+        assert!((0.0..1.0).contains(&cfg.alpha), "alpha must be in [0,1)");
+        assert!(cfg.init_ratio > 0.0);
+        PerfTable { n_cores, cfg, entries: vec![None; N_SLOTS], updates: 0 }
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.n_cores
+    }
+
+    pub fn update_count(&self) -> u64 {
+        self.updates
+    }
+
+    /// Current ratios for a (kernel, ISA) pair, creating the row at the
+    /// configured initial value on first use.
+    pub fn ratios(&mut self, class: KernelClass, isa: Isa) -> &[f64] {
+        let n = self.n_cores;
+        let init = self.cfg.init_ratio;
+        self.entries[slot(class, isa)].get_or_insert_with(|| vec![init; n])
+    }
+
+    /// Read-only view (None if the row was never touched).
+    pub fn get(&self, class: KernelClass, isa: Isa) -> Option<&[f64]> {
+        self.entries[slot(class, isa)].as_deref()
+    }
+
+    /// Seed a row explicitly (e.g. a stale persisted table, as in the
+    /// paper's Fig. 4 where a P-core starts at ratio 5).
+    pub fn set_ratios(&mut self, class: KernelClass, isa: Isa, ratios: Vec<f64>) {
+        assert_eq!(ratios.len(), self.n_cores);
+        assert!(ratios.iter().all(|&r| r > 0.0));
+        self.entries[slot(class, isa)] = Some(ratios);
+    }
+
+    /// Apply eq. 2 + the EWMA filter from measured per-core times.
+    /// `times[i] = None` means core i did not participate (zero work);
+    /// its ratio is left unchanged.
+    pub fn update(&mut self, class: KernelClass, isa: Isa, times: &[Option<f64>]) {
+        assert_eq!(times.len(), self.n_cores);
+        let alpha = self.cfg.alpha;
+        let init = self.cfg.init_ratio;
+        let n = self.n_cores;
+        let row = self.entries[slot(class, isa)].get_or_insert_with(|| vec![init; n]);
+
+        // single pass over participants (measured, positive time) —
+        // allocation-free: this runs after *every* kernel on the hot path
+        let mut mass = 0.0f64;
+        let mut s = 0.0f64; // S = Σ_j pr_j / t_j
+        let mut n_parts = 0usize;
+        for (i, t) in times.iter().enumerate() {
+            if let Some(t) = t {
+                if *t > 0.0 {
+                    mass += row[i];
+                    s += row[i] / t;
+                    n_parts += 1;
+                }
+            }
+        }
+        if n_parts < 2 {
+            return; // a single participant carries no relative information
+        }
+        if !(s.is_finite() && s > 0.0 && mass > 0.0) {
+            return;
+        }
+        let beta = (1.0 - alpha) * mass / s;
+        for (i, t) in times.iter().enumerate() {
+            if let Some(t) = t {
+                if *t > 0.0 {
+                    // eq. 2 (sum-normalized), rescaled to preserve mass
+                    row[i] = alpha * row[i] + beta * row[i] / t;
+                }
+            }
+        }
+        self.updates += 1;
+    }
+
+    /// Ratios normalized so the slowest participating core is 1.0 —
+    /// the representation plotted in the paper's Fig. 4.
+    pub fn relative_ratios(&self, class: KernelClass, isa: Isa) -> Option<Vec<f64>> {
+        let row = self.get(class, isa)?;
+        let min = row.iter().cloned().fold(f64::INFINITY, f64::min);
+        Some(row.iter().map(|r| r / min).collect())
+    }
+
+    /// All initialized rows (for trace snapshots).
+    pub fn rows(&self) -> impl Iterator<Item = ((KernelClass, Isa), &Vec<f64>)> {
+        self.entries.iter().enumerate().filter_map(|(idx, row)| {
+            row.as_ref().map(|r| {
+                let class = KernelClass::ALL[idx / Isa::ALL.len()];
+                let isa = Isa::ALL[idx % Isa::ALL.len()];
+                ((class, isa), r)
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    const C: KernelClass = KernelClass::GemmI8;
+    const I: Isa = Isa::AvxVnni;
+
+    fn table(n: usize, alpha: f64) -> PerfTable {
+        PerfTable::new(n, PerfConfig { alpha, init_ratio: 1.0 })
+    }
+
+    #[test]
+    fn init_is_flat() {
+        let mut t = table(4, 0.3);
+        assert_eq!(t.ratios(C, I), &[1.0; 4]);
+    }
+
+    #[test]
+    fn equal_times_keep_ratios_flat() {
+        let mut t = table(4, 0.3);
+        for _ in 0..10 {
+            t.update(C, I, &[Some(1.0); 4]);
+        }
+        for &r in t.ratios(C, I) {
+            assert!((r - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn faster_core_gains_ratio() {
+        let mut t = table(2, 0.0); // no smoothing: converge in one step
+        // equal work, core 0 twice as fast
+        t.update(C, I, &[Some(1.0), Some(2.0)]);
+        let r = t.ratios(C, I);
+        assert!((r[0] / r[1] - 2.0).abs() < 1e-9, "{r:?}");
+        // mass preserved: 1 + 1 = 2
+        assert!((r[0] + r[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn converges_to_true_rates_under_proportional_split() {
+        // Simulate the closed loop: work split ∝ pr, times = share/rate.
+        let rates = [3.0, 1.0, 1.0, 1.0];
+        let mut t = table(4, 0.3);
+        for _ in 0..50 {
+            let pr: Vec<f64> = t.ratios(C, I).to_vec();
+            let sum: f64 = pr.iter().sum();
+            let times: Vec<Option<f64>> =
+                (0..4).map(|i| Some((pr[i] / sum) / rates[i])).collect();
+            t.update(C, I, &times);
+        }
+        let rel = t.relative_ratios(C, I).unwrap();
+        assert!((rel[0] - 3.0).abs() < 0.05, "rel={rel:?}");
+        assert!((rel[1] - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn fixed_point_when_times_equalize() {
+        // if all cores finish together, ratios must not move
+        let mut t = table(3, 0.3);
+        t.set_ratios(C, I, vec![3.0, 1.5, 1.0]);
+        t.update(C, I, &[Some(0.7); 3]);
+        let r = t.ratios(C, I);
+        assert!((r[0] - 3.0).abs() < 1e-9 && (r[2] - 1.0).abs() < 1e-9, "{r:?}");
+    }
+
+    #[test]
+    fn non_participants_unchanged() {
+        let mut t = table(3, 0.0);
+        t.set_ratios(C, I, vec![2.0, 1.0, 5.0]);
+        t.update(C, I, &[Some(1.0), Some(1.0), None]);
+        let r = t.ratios(C, I);
+        assert!((r[2] - 5.0).abs() < 1e-12);
+        // mass of participants preserved
+        assert!((r[0] + r[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_participant_is_ignored() {
+        let mut t = table(2, 0.0);
+        t.update(C, I, &[Some(1.0), None]);
+        assert_eq!(t.update_count(), 0);
+        assert_eq!(t.ratios(C, I), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn rows_are_independent_per_isa() {
+        let mut t = table(2, 0.0);
+        t.update(C, Isa::AvxVnni, &[Some(1.0), Some(2.0)]);
+        assert_eq!(t.ratios(C, Isa::Avx2), &[1.0, 1.0]);
+        assert_ne!(t.ratios(C, Isa::AvxVnni), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn alpha_damps_convergence() {
+        let mut fast = table(2, 0.0);
+        let mut slow = table(2, 0.9);
+        let times = [Some(1.0), Some(4.0)];
+        fast.update(C, I, &times);
+        slow.update(C, I, &times);
+        let rf = fast.relative_ratios(C, I).unwrap()[0];
+        let rs = slow.relative_ratios(C, I).unwrap()[0];
+        assert!(rf > rs, "fast={rf} slow={rs}");
+    }
+
+    #[test]
+    fn stale_high_init_decays_like_fig4() {
+        // Fig. 4: table seeded at 5, true ratio ≈ 3 → trace decays to ~3.
+        let mut t = table(2, 0.3);
+        t.set_ratios(C, I, vec![5.0, 1.0]);
+        let rates = [3.0, 1.0];
+        let mut trace = Vec::new();
+        for _ in 0..20 {
+            let pr: Vec<f64> = t.ratios(C, I).to_vec();
+            let sum: f64 = pr.iter().sum();
+            let times: Vec<Option<f64>> =
+                (0..2).map(|i| Some((pr[i] / sum) / rates[i])).collect();
+            t.update(C, I, &times);
+            trace.push(t.relative_ratios(C, I).unwrap()[0]);
+        }
+        assert!(trace[0] < 5.0 && trace[0] > 3.0, "first step {:?}", trace[0]);
+        assert!((trace.last().unwrap() - 3.0).abs() < 0.05, "end {:?}", trace.last());
+        // monotone-ish decay
+        assert!(trace.windows(2).all(|w| w[1] <= w[0] + 1e-9));
+    }
+
+    #[test]
+    fn prop_mass_preserved_and_positive() {
+        prop::check("perf_mass_preserved", |rng| {
+            let n = 2 + rng.below(6) as usize;
+            let mut t =
+                PerfTable::new(n, PerfConfig { alpha: rng.uniform(0.0, 0.9), init_ratio: 1.0 });
+            let before: f64 = t.ratios(C, I).iter().sum();
+            for _ in 0..5 {
+                let times: Vec<Option<f64>> =
+                    (0..n).map(|_| Some(rng.uniform(0.01, 10.0))).collect();
+                t.update(C, I, &times);
+            }
+            let row = t.get(C, I).unwrap();
+            if row.iter().any(|&r| !(r > 0.0 && r.is_finite())) {
+                return Err(format!("non-positive ratio {row:?}"));
+            }
+            let after: f64 = row.iter().sum();
+            prop::approx_eq(before, after, 1e-9)
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! Core pinning via `sched_setaffinity` — the paper's CPU runtime "binds
+//! each thread to a physical core" so per-thread timing is per-core timing.
+
+/// Pin the calling thread to logical CPU `cpu` (modulo the host's CPU
+/// count, so worker counts larger than the host degrade gracefully).
+/// Returns Ok(actual_cpu) or the errno on failure.
+pub fn pin_current_thread(cpu: usize) -> Result<usize, i32> {
+    let ncpu = crate::cpu::topology::n_logical_cpus();
+    let target = cpu % ncpu;
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        libc::CPU_SET(target, &mut set);
+        let rc = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+        if rc == 0 {
+            Ok(target)
+        } else {
+            Err(*libc::__errno_location())
+        }
+    }
+}
+
+/// The CPU the calling thread currently runs on (for diagnostics).
+pub fn current_cpu() -> usize {
+    let cpu = unsafe { libc::sched_getcpu() };
+    cpu.max(0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_to_core_zero_succeeds() {
+        // core 0 always exists
+        let got = pin_current_thread(0).expect("pin failed");
+        assert_eq!(got, 0);
+        assert_eq!(current_cpu(), 0);
+    }
+
+    #[test]
+    fn pin_wraps_modulo_host_cores() {
+        let n = crate::cpu::topology::n_logical_cpus();
+        let got = pin_current_thread(n + 1).expect("pin failed");
+        assert_eq!(got, (n + 1) % n);
+    }
+}

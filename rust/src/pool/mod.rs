@@ -1,0 +1,375 @@
+//! Core-bound worker thread pool — the real-hardware executor.
+//!
+//! One worker per core, pinned with `sched_setaffinity` (paper §2: "its
+//! thread pool binds each thread to a physical core and it tracks the
+//! execution time of each thread during executing kernels"). Jobs are
+//! published epoch-style: the leader installs a [`Work`] + plan, bumps the
+//! epoch, and waits on a condvar until every worker has checked in; each
+//! worker measures its own busy time with a monotonic clock.
+
+pub mod affinity;
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::exec::{Executor, RunResult, Work};
+use crate::sched::DispatchPlan;
+
+/// Fat-pointer smuggling for the scoped job. Soundness: `execute` blocks
+/// until all workers have finished with the pointer, so the referent
+/// outlives every dereference.
+#[derive(Clone, Copy)]
+struct WorkRef(*const (dyn Work + 'static));
+unsafe impl Send for WorkRef {}
+unsafe impl Sync for WorkRef {}
+
+#[derive(Clone)]
+struct Job {
+    work: WorkRef,
+    plan: DispatchPlan,
+    total: usize,
+    /// shared claim cursor for chunked/guided plans
+    cursor: Arc<AtomicUsize>,
+}
+
+struct PoolState {
+    epoch: u64,
+    shutdown: bool,
+    job: Option<Job>,
+    done: usize,
+    times: Vec<Option<f64>>,
+    units: Vec<usize>,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    go: Condvar,
+    finished: Condvar,
+}
+
+/// The host thread-pool executor.
+pub struct HostPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    n: usize,
+    /// logical CPU each worker was pinned to
+    pub pinned_cpus: Vec<usize>,
+}
+
+impl HostPool {
+    /// Spawn `n` workers pinned to cores `0..n` (mod host cores).
+    pub fn new(n: usize) -> HostPool {
+        assert!(n > 0);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                shutdown: false,
+                job: None,
+                done: 0,
+                times: vec![None; n],
+                units: vec![0; n],
+            }),
+            go: Condvar::new(),
+            finished: Condvar::new(),
+        });
+        let pin_results = Arc::new(Mutex::new(vec![0usize; n]));
+        let mut handles = Vec::with_capacity(n);
+        for worker in 0..n {
+            let shared = Arc::clone(&shared);
+            let pin_results = Arc::clone(&pin_results);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dynpar-w{worker}"))
+                    .spawn(move || {
+                        if let Ok(cpu) = affinity::pin_current_thread(worker) {
+                            pin_results.lock().unwrap()[worker] = cpu;
+                        }
+                        worker_loop(worker, &shared);
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        let pinned_cpus = pin_results.lock().unwrap().clone();
+        HostPool { shared, handles, n, pinned_cpus }
+    }
+}
+
+fn worker_loop(worker: usize, shared: &PoolShared) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            while !st.shutdown && st.epoch == seen_epoch {
+                st = shared.go.wait(st).unwrap();
+            }
+            if st.shutdown {
+                return;
+            }
+            seen_epoch = st.epoch;
+            st.job.clone().expect("epoch bumped without a job")
+        };
+
+        let t0 = Instant::now();
+        let mut units_done = 0usize;
+        // SAFETY: leader keeps the Work alive until all workers check in.
+        let work: &dyn Work = unsafe { &*job.work.0 };
+        match &job.plan {
+            DispatchPlan::Partitioned(ranges) => {
+                let r = ranges.get(worker).cloned().unwrap_or(0..0);
+                if !r.is_empty() {
+                    units_done = r.len();
+                    work.run_range(worker, r);
+                }
+            }
+            DispatchPlan::Chunked { chunk } => {
+                loop {
+                    let start = job.cursor.fetch_add(*chunk, Ordering::Relaxed);
+                    if start >= job.total {
+                        break;
+                    }
+                    let end = (start + chunk).min(job.total);
+                    units_done += end - start;
+                    work.run_range(worker, start..end);
+                }
+            }
+            DispatchPlan::Guided { min_chunk } => loop {
+                let claimed = claim_guided(&job.cursor, job.total, *min_chunk, job.plan_workers());
+                match claimed {
+                    None => break,
+                    Some(r) => {
+                        units_done += r.len();
+                        work.run_range(worker, r);
+                    }
+                }
+            },
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        let mut st = shared.state.lock().unwrap();
+        st.times[worker] = if units_done > 0 { Some(elapsed) } else { None };
+        st.units[worker] = units_done;
+        st.done += 1;
+        if st.done == st.times.len() {
+            shared.finished.notify_one();
+        }
+    }
+}
+
+impl Job {
+    fn plan_workers(&self) -> usize {
+        match &self.plan {
+            DispatchPlan::Partitioned(rs) => rs.len(),
+            _ => 0, // guided uses this only as a divisor hint; see claim_guided
+        }
+    }
+}
+
+/// Claim the next guided chunk: `max(min_chunk, remaining / (2·n))`.
+fn claim_guided(
+    cursor: &AtomicUsize,
+    total: usize,
+    min_chunk: usize,
+    n_workers_hint: usize,
+) -> Option<Range<usize>> {
+    let denom = 2 * n_workers_hint.max(4);
+    loop {
+        let cur = cursor.load(Ordering::Relaxed);
+        if cur >= total {
+            return None;
+        }
+        let remaining = total - cur;
+        let chunk = (remaining / denom).max(min_chunk).min(remaining);
+        match cursor.compare_exchange_weak(cur, cur + chunk, Ordering::Relaxed, Ordering::Relaxed)
+        {
+            Ok(_) => return Some(cur..cur + chunk),
+            Err(_) => continue,
+        }
+    }
+}
+
+impl Executor for HostPool {
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn execute(&mut self, work: &dyn Work, plan: &DispatchPlan) -> RunResult {
+        let total = work.total_units();
+        // SAFETY: we erase the lifetime; this function joins the epoch
+        // before returning, so workers never outlive the borrow.
+        let work_ref = WorkRef(unsafe {
+            std::mem::transmute::<*const (dyn Work + '_), *const (dyn Work + 'static)>(
+                work as *const dyn Work,
+            )
+        });
+        let t0 = Instant::now();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(Job {
+                work: work_ref,
+                plan: plan.clone(),
+                total,
+                cursor: Arc::new(AtomicUsize::new(0)),
+            });
+            st.done = 0;
+            st.times.iter_mut().for_each(|t| *t = None);
+            st.units.iter_mut().for_each(|u| *u = 0);
+            st.epoch += 1;
+            self.shared.go.notify_all();
+        }
+        let (times, units) = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.done < self.n {
+                st = self.shared.finished.wait(st).unwrap();
+            }
+            st.job = None;
+            (st.times.clone(), st.units.clone())
+        };
+        RunResult { per_core_secs: times, wall_secs: t0.elapsed().as_secs_f64(), units_done: units }
+    }
+}
+
+impl Drop for HostPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.go.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{FnWork, SharedSlice};
+    use crate::kernels::cost;
+    use crate::sched::{DynamicScheduler, Scheduler, StaticEven, WorkStealing};
+    use std::sync::atomic::AtomicU64;
+
+    fn counting_work(total: usize, counter: &AtomicU64) -> impl Work + '_ {
+        FnWork::new(cost::elementwise_cost(total, 1.0, 1.0), 1, move |_w, r| {
+            counter.fetch_add(r.len() as u64, Ordering::Relaxed);
+        })
+    }
+
+    #[test]
+    fn partitioned_executes_all_units() {
+        let mut pool = HostPool::new(4);
+        let counter = AtomicU64::new(0);
+        let total = 1000;
+        let work = FnWork::new(cost::copy_cost(total * 4096), 1, |_w, r| {
+            counter.fetch_add(r.len() as u64, Ordering::Relaxed);
+        });
+        let plan = StaticEven.plan(total, 1, &[1.0; 4]);
+        let res = pool.execute(&work, &plan);
+        assert_eq!(counter.load(Ordering::Relaxed), total as u64);
+        assert_eq!(res.units_done.iter().sum::<usize>(), total);
+        assert!(res.wall_secs > 0.0);
+    }
+
+    #[test]
+    fn chunked_executes_all_units_exactly_once() {
+        let mut pool = HostPool::new(3);
+        let total = 777;
+        let mut hits = vec![0u8; total];
+        {
+            let shared = SharedSlice::new(&mut hits);
+            let work = FnWork::new(cost::copy_cost(total * 4096), 1, |_w, r| {
+                let s = unsafe { shared.slice_mut(r) };
+                for v in s {
+                    *v += 1;
+                }
+            });
+            let plan = WorkStealing { chunk: 10 }.plan(total, 1, &[1.0; 3]);
+            pool.execute(&work, &plan);
+        }
+        assert!(hits.iter().all(|&h| h == 1), "some units ran 0 or 2+ times");
+    }
+
+    #[test]
+    fn guided_executes_all_units_exactly_once() {
+        let mut pool = HostPool::new(4);
+        let total = 1234;
+        let mut hits = vec![0u8; total];
+        {
+            let shared = SharedSlice::new(&mut hits);
+            let work = FnWork::new(cost::copy_cost(total * 4096), 1, |_w, r| {
+                let s = unsafe { shared.slice_mut(r) };
+                for v in s {
+                    *v += 1;
+                }
+            });
+            pool.execute(&work, &DispatchPlan::Guided { min_chunk: 4 });
+        }
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn dynamic_partition_respects_ratios() {
+        let mut pool = HostPool::new(2);
+        let counter = AtomicU64::new(0);
+        let work = counting_work(100, &counter);
+        let plan = DynamicScheduler.plan(100, 1, &[3.0, 1.0]);
+        let res = pool.execute(&work, &plan);
+        assert_eq!(res.units_done, vec![75, 25]);
+    }
+
+    #[test]
+    fn per_core_times_reported_for_participants() {
+        let mut pool = HostPool::new(3);
+        // only 2 units: worker 2 gets nothing under static split of 2
+        let counter = AtomicU64::new(0);
+        let work = counting_work(2, &counter);
+        let plan = StaticEven.plan(2, 1, &[1.0; 3]);
+        let res = pool.execute(&work, &plan);
+        let participants = res.per_core_secs.iter().filter(|t| t.is_some()).count();
+        assert_eq!(participants, 2);
+    }
+
+    #[test]
+    fn reusable_across_many_jobs() {
+        let mut pool = HostPool::new(4);
+        let counter = AtomicU64::new(0);
+        for _ in 0..50 {
+            let work = counting_work(64, &counter);
+            let plan = StaticEven.plan(64, 1, &[1.0; 4]);
+            pool.execute(&work, &plan);
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 50 * 64);
+    }
+
+    #[test]
+    fn real_kernel_through_pool_matches_serial() {
+        use crate::kernels::gemv_q4::{gemv_q4_f32, gemv_q4_f32_range};
+        use crate::quant::MatQ4;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let (n, k) = (128, 64);
+        let mut wdata = vec![0.0f32; n * k];
+        rng.fill_normal_f32(&mut wdata, 1.0);
+        let w = MatQ4::quantize(&wdata, n, k);
+        let mut x = vec![0.0f32; k];
+        rng.fill_normal_f32(&mut x, 1.0);
+        let serial = gemv_q4_f32(&w, &x);
+
+        let mut y = vec![0.0f32; n];
+        {
+            let shared = SharedSlice::new(&mut y);
+            let wref = &w;
+            let xref = &x;
+            let work = FnWork::new(cost::gemv_q4_cost(k, n), 1, move |_wk, r| {
+                let out = unsafe { shared.slice_mut(0..n) };
+                gemv_q4_f32_range(wref, xref, out, r);
+            });
+            let mut pool = HostPool::new(4);
+            let plan = DynamicScheduler.plan(n, 1, &[2.0, 1.0, 1.0, 1.0]);
+            pool.execute(&work, &plan);
+        }
+        assert_eq!(y, serial);
+    }
+}

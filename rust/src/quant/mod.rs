@@ -1,0 +1,12 @@
+//! Block quantization formats (llama.cpp-compatible Q4_0, Q8 dynamic).
+//!
+//! The semantics here are the *same ops in the same order* as the Python
+//! reference (`python/compile/quant.py`) so that the Rust native engine and
+//! the AOT PJRT artifacts consume identical quantized tensors — the
+//! native-vs-PJRT logits parity test depends on this.
+
+pub mod q4_0;
+pub mod q8;
+
+pub use q4_0::{dequantize_row_q4_0, quantize_row_q4_0, BlockQ4_0, MatQ4, QK};
+pub use q8::{quantize_q8_dynamic, QuantizedRow};

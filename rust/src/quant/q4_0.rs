@@ -1,0 +1,322 @@
+//! Q4_0: blocks of 32 weights, one f16 scale, 4-bit codes with offset 8.
+//!
+//! Reference semantics (must match `python/compile/quant.py` exactly):
+//! ```text
+//! max  = signed element with the largest |x| in the block (first on ties)
+//! d    = max / -8                       (f32; stored as f16)
+//! id   = 1/d if d != 0 else 0           (from the *unrounded* f32 d)
+//! q    = clamp(floor(x * id + 8.5), 0, 15)
+//! deq  = (q - 8) * f32(f16(d))
+//! ```
+//! Packing follows llama.cpp: byte `j` holds code `j` in the low nibble and
+//! code `j + 16` in the high nibble (18 bytes per 32 weights).
+
+use crate::util::f16;
+
+/// Values per block.
+pub const QK: usize = 32;
+
+/// One packed Q4_0 block: 18 bytes for 32 weights (4.5 bits/weight).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockQ4_0 {
+    /// f16 bit pattern of the scale
+    pub d: u16,
+    /// packed nibbles: qs[j] = code[j] | (code[j+16] << 4)
+    pub qs: [u8; QK / 2],
+}
+
+impl BlockQ4_0 {
+    pub const BYTES: usize = 2 + QK / 2;
+
+    /// Scale as f32.
+    #[inline]
+    pub fn scale(&self) -> f32 {
+        f16::f16_bits_to_f32(self.d)
+    }
+
+    /// Unpacked code (0..=15) at index `i`.
+    #[inline]
+    pub fn code(&self, i: usize) -> u8 {
+        debug_assert!(i < QK);
+        if i < QK / 2 {
+            self.qs[i] & 0x0F
+        } else {
+            self.qs[i - QK / 2] >> 4
+        }
+    }
+
+    /// Dequantized value at index `i`.
+    #[inline]
+    pub fn value(&self, i: usize) -> f32 {
+        (self.code(i) as i32 - 8) as f32 * self.scale()
+    }
+}
+
+/// Quantize one row (len divisible by QK) into packed blocks.
+pub fn quantize_row_q4_0(x: &[f32]) -> Vec<BlockQ4_0> {
+    assert!(x.len() % QK == 0, "row length {} not divisible by {QK}", x.len());
+    x.chunks_exact(QK)
+        .map(|chunk| {
+            // signed max-|.| element, first on ties (matches np.argmax scan)
+            let mut mx = 0.0f32;
+            let mut amax = -1.0f32;
+            for &v in chunk {
+                if v.abs() > amax {
+                    amax = v.abs();
+                    mx = v;
+                }
+            }
+            let d = mx / -8.0;
+            let id = if d != 0.0 { 1.0 / d } else { 0.0 };
+            let mut qs = [0u8; QK / 2];
+            let mut code = [0u8; QK];
+            for (i, &v) in chunk.iter().enumerate() {
+                let q = (v * id + 8.5).floor().clamp(0.0, 15.0) as u8;
+                code[i] = q;
+            }
+            for j in 0..QK / 2 {
+                qs[j] = code[j] | (code[j + QK / 2] << 4);
+            }
+            BlockQ4_0 { d: f16::f32_to_f16_bits(d), qs }
+        })
+        .collect()
+}
+
+/// Dequantize packed blocks back to f32.
+pub fn dequantize_row_q4_0(blocks: &[BlockQ4_0], out: &mut [f32]) {
+    assert_eq!(out.len(), blocks.len() * QK);
+    for (b, chunk) in blocks.iter().zip(out.chunks_exact_mut(QK)) {
+        let d = b.scale();
+        for j in 0..QK / 2 {
+            let byte = b.qs[j];
+            chunk[j] = ((byte & 0x0F) as i32 - 8) as f32 * d;
+            chunk[j + QK / 2] = ((byte >> 4) as i32 - 8) as f32 * d;
+        }
+    }
+}
+
+/// A Q4_0-quantized row-major matrix `[rows, cols]`.
+#[derive(Clone, Debug)]
+pub struct MatQ4 {
+    pub rows: usize,
+    pub cols: usize,
+    /// rows · (cols / QK) packed blocks, row-major
+    pub blocks: Vec<BlockQ4_0>,
+}
+
+impl MatQ4 {
+    pub fn blocks_per_row(&self) -> usize {
+        self.cols / QK
+    }
+
+    /// Quantize a dense row-major f32 matrix.
+    pub fn quantize(data: &[f32], rows: usize, cols: usize) -> MatQ4 {
+        assert_eq!(data.len(), rows * cols);
+        assert!(cols % QK == 0);
+        let mut blocks = Vec::with_capacity(rows * cols / QK);
+        for r in 0..rows {
+            blocks.extend(quantize_row_q4_0(&data[r * cols..(r + 1) * cols]));
+        }
+        MatQ4 { rows, cols, blocks }
+    }
+
+    /// Blocks of one row.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[BlockQ4_0] {
+        let bpr = self.blocks_per_row();
+        &self.blocks[r * bpr..(r + 1) * bpr]
+    }
+
+    /// Dequantize everything (tests / oracle paths).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            dequantize_row_q4_0(self.row(r), &mut out[r * self.cols..(r + 1) * self.cols]);
+        }
+        out
+    }
+
+    /// Unpack to `(codes 0..=15 as i8 [rows·cols], scales f32 [rows·cols/QK])`
+    /// — the representation the PJRT artifacts take as parameters.
+    pub fn unpack(&self) -> (Vec<i8>, Vec<f32>) {
+        let mut codes = Vec::with_capacity(self.rows * self.cols);
+        let mut scales = Vec::with_capacity(self.blocks.len());
+        for b in &self.blocks {
+            scales.push(b.scale());
+            // NOTE: unpack order must be code index order (0..32), not byte order
+        }
+        for r in 0..self.rows {
+            for b in self.row(r) {
+                for i in 0..QK {
+                    codes.push(b.code(i) as i8);
+                }
+            }
+        }
+        (codes, scales)
+    }
+
+    /// Total packed size in bytes (the number the decode phase streams).
+    pub fn packed_bytes(&self) -> usize {
+        self.blocks.len() * BlockQ4_0::BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_row(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal_f32(&mut v, scale);
+        v
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_step() {
+        let x = rand_row(256, 1, 1.0);
+        let blocks = quantize_row_q4_0(&x);
+        let mut out = vec![0.0; 256];
+        dequantize_row_q4_0(&blocks, &mut out);
+        for (chunk, ochunk) in x.chunks_exact(QK).zip(out.chunks_exact(QK)) {
+            let amax = chunk.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let step = amax / 8.0;
+            for (a, b) in chunk.iter().zip(ochunk) {
+                assert!((a - b).abs() <= step + 1e-6, "{a} vs {b} (step {step})");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_block_is_exact() {
+        let blocks = quantize_row_q4_0(&[0.0; QK]);
+        assert_eq!(blocks[0].scale(), 0.0);
+        let mut out = [1.0f32; QK];
+        dequantize_row_q4_0(&blocks, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn codes_are_in_nibble_range() {
+        let x = rand_row(QK * 8, 3, 10.0);
+        for b in quantize_row_q4_0(&x) {
+            for i in 0..QK {
+                assert!(b.code(i) <= 15);
+            }
+        }
+    }
+
+    #[test]
+    fn packing_layout_matches_llama_cpp() {
+        // construct values that quantize to known distinct codes
+        let mut x = [0.0f32; QK];
+        x[0] = -8.0; // the max-|.| element → code 0
+        x[16] = 7.0; // near the top → code 15
+        let b = &quantize_row_q4_0(&x)[0];
+        // byte 0 = code[0] | code[16] << 4
+        assert_eq!(b.qs[0] & 0x0F, b.code(0));
+        assert_eq!(b.qs[0] >> 4, b.code(16));
+        assert_eq!(b.code(0), 0);
+        assert_eq!(b.code(16), 15);
+    }
+
+    #[test]
+    fn max_element_reconstructs_exactly() {
+        let x = rand_row(QK * 4, 7, 2.0);
+        let blocks = quantize_row_q4_0(&x);
+        for (chunk, b) in x.chunks_exact(QK).zip(&blocks) {
+            let (mut mx, mut amax) = (0.0f32, -1.0f32);
+            for &v in chunk {
+                if v.abs() > amax {
+                    amax = v.abs();
+                    mx = v;
+                }
+            }
+            // max maps to code 0 → reconstructs to -8·d = max (up to f16)
+            let idx = chunk.iter().position(|&v| v == mx).unwrap();
+            let rel = (b.value(idx) - mx).abs() / mx.abs().max(1e-9);
+            assert!(rel < 2e-3, "mx={mx} got={}", b.value(idx));
+        }
+    }
+
+    #[test]
+    fn mat_unpack_matches_dequant() {
+        let data = rand_row(8 * 64, 9, 1.0);
+        let m = MatQ4::quantize(&data, 8, 64);
+        let (codes, scales) = m.unpack();
+        assert_eq!(codes.len(), 8 * 64);
+        assert_eq!(scales.len(), 8 * 2);
+        let deq = m.dequantize();
+        for r in 0..8 {
+            for c in 0..64 {
+                let code = codes[r * 64 + c] as f32 - 8.0;
+                let sc = scales[r * 2 + c / QK];
+                let want = code * sc;
+                assert!((deq[r * 64 + c] - want).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_bytes_is_4_5_bits_per_weight() {
+        let data = rand_row(4 * 128, 11, 1.0);
+        let m = MatQ4::quantize(&data, 4, 128);
+        assert_eq!(m.packed_bytes(), 4 * 128 / QK * 18);
+    }
+
+    #[test]
+    fn prop_roundtrip_bounded() {
+        prop::check("q4_roundtrip", |rng| {
+            let nblocks = 1 + rng.below(6) as usize;
+            let scale = 10f32.powf(rng.uniform(-2.0, 2.0) as f32);
+            let x = {
+                let mut v = vec![0.0f32; nblocks * QK];
+                rng.fill_normal_f32(&mut v, scale);
+                v
+            };
+            let blocks = quantize_row_q4_0(&x);
+            let mut out = vec![0.0; x.len()];
+            dequantize_row_q4_0(&blocks, &mut out);
+            let amax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let err = x.iter().zip(&out).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            if err <= amax / 8.0 * 1.01 + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("err {err} > bound {}", amax / 8.0))
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod golden_tests {
+    //! Cross-language golden values: these constants were produced by
+    //! `python/compile/quant.py` on the same deterministic input
+    //! (`x[i] = 2·sin(i+1)`), pinning the Rust↔Python quantization ABI
+    //! bit for bit (codes and f16 scale bit patterns).
+
+    use super::*;
+
+    #[test]
+    fn q4_codes_and_scales_match_python_exactly() {
+        let x: Vec<f32> = (1..=64).map(|i| (i as f32).sin() * 2.0).collect();
+        let blocks = quantize_row_q4_0(&x);
+        assert_eq!(blocks.len(), 2);
+        #[rustfmt::skip]
+        let want_codes: [u8; 64] = [
+            15, 15, 9, 2, 0, 6, 13, 15, 11, 4, 0, 4, 11, 15, 13, 6,
+            0, 2, 9, 15, 15, 8, 1, 1, 7, 14, 15, 10, 3, 0, 5, 12,
+            0, 4, 11, 15, 13, 6, 0, 2, 9, 15, 15, 8, 1, 1, 7, 14,
+            15, 10, 3, 0, 5, 12, 15, 12, 5, 0, 3, 10, 15, 14, 7, 1,
+        ];
+        for (i, &want) in want_codes.iter().enumerate() {
+            let b = &blocks[i / QK];
+            assert_eq!(b.code(i % QK), want, "code {i}");
+        }
+        // numpy f16 scale bit patterns
+        assert_eq!(blocks[0].d, 0x3400, "scale 0");
+        assert_eq!(blocks[1].d, 0xB400, "scale 1");
+    }
+}

@@ -1,0 +1,110 @@
+//! Per-row symmetric int8 dynamic activation quantization.
+//!
+//! Matches `compile/quant.py::quantize_q8_dynamic`: scale = absmax / 127
+//! (or 1.0 for an all-zero row), codes = round-half-to-even(x / scale)
+//! clamped to [−127, 127]. numpy's `np.round` is banker's rounding, so we
+//! use `round_ties_even` for cross-language parity.
+
+/// A dynamically-quantized activation row.
+#[derive(Clone, Debug)]
+pub struct QuantizedRow {
+    pub q: Vec<i8>,
+    pub scale: f32,
+}
+
+/// Quantize one activation row.
+pub fn quantize_q8_dynamic(x: &[f32]) -> QuantizedRow {
+    let amax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    let inv = 1.0 / scale;
+    let q = x
+        .iter()
+        .map(|&v| (v * inv).round_ties_even().clamp(-127.0, 127.0) as i8)
+        .collect();
+    QuantizedRow { q, scale }
+}
+
+impl QuantizedRow {
+    /// Dequantize (tests only).
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.q.iter().map(|&q| q as f32 * self.scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        let mut x = vec![0.0f32; 256];
+        rng.fill_normal_f32(&mut x, 3.0);
+        let qr = quantize_q8_dynamic(&x);
+        let deq = qr.dequantize();
+        let amax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for (a, b) in x.iter().zip(&deq) {
+            assert!((a - b).abs() <= amax / 127.0 * 0.51 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_row() {
+        let qr = quantize_q8_dynamic(&[0.0; 16]);
+        assert_eq!(qr.scale, 1.0);
+        assert!(qr.q.iter().all(|&q| q == 0));
+    }
+
+    #[test]
+    fn max_element_hits_127() {
+        let x = [1.0f32, -0.5, 0.25, 0.0];
+        let qr = quantize_q8_dynamic(&x);
+        assert_eq!(qr.q[0], 127);
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // scale = 1/127 · 127 = 1 → x = 0.5/127·127... construct directly:
+        // amax = 127 → scale = 1.0; 0.5 rounds to 0, 1.5 rounds to 2
+        let x = [127.0f32, 0.5, 1.5, -0.5];
+        let qr = quantize_q8_dynamic(&x);
+        assert_eq!(qr.scale, 1.0);
+        assert_eq!(qr.q[1], 0);
+        assert_eq!(qr.q[2], 2);
+        assert_eq!(qr.q[3], 0);
+    }
+
+    #[test]
+    fn prop_codes_bounded() {
+        prop::check("q8_codes_bounded", |rng| {
+            let n = 1 + rng.below(128) as usize;
+            let mut x = vec![0.0f32; n];
+            let scale = 10f32.powf(rng.uniform(-3.0, 3.0) as f32);
+            rng.fill_normal_f32(&mut x, scale);
+            let qr = quantize_q8_dynamic(&x);
+            if qr.q.iter().all(|&q| (-127..=127).contains(&(q as i32))) {
+                Ok(())
+            } else {
+                Err("code out of range".into())
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod golden_tests {
+    //! Cross-language golden values from `python/compile/quant.py` on
+    //! `x[i] = sin(i+1)` — pins round-ties-even + scale semantics.
+
+    use super::*;
+
+    #[test]
+    fn q8_codes_and_scale_match_python_exactly() {
+        let x: Vec<f32> = (1..=32).map(|i| (i as f32).sin()).collect();
+        let qr = quantize_q8_dynamic(&x);
+        assert_eq!(&qr.q[..8], &[107i8, 115, 18, -96, -122, -35, 83, 126]);
+        assert!((qr.scale - 0.007_873_938_4).abs() < 1e-9, "scale {}", qr.scale);
+    }
+}

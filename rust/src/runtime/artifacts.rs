@@ -1,0 +1,199 @@
+//! Artifact manifest: the parameter ABI between `aot.py` and the Rust
+//! literal marshalling.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+/// dtype names used in the manifest
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I8,
+    U8,
+    I32,
+}
+
+impl Dtype {
+    pub fn from_name(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "i8" => Some(Dtype::I8),
+            "u8" => Some(Dtype::U8),
+            "i32" => Some(Dtype::I32),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl ParamMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub params: Vec<ParamMeta>,
+    pub outputs: Vec<ParamMeta>,
+    pub model: Option<ModelConfig>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn parse_params(v: &Json) -> Result<Vec<ParamMeta>> {
+    let arr = v.as_array().ok_or_else(|| anyhow!("params is not an array"))?;
+    arr.iter()
+        .map(|p| {
+            let name = p
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("param missing name"))?
+                .to_string();
+            let shape = p
+                .get("shape")
+                .and_then(Json::as_array)
+                .ok_or_else(|| anyhow!("param {name} missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+                .collect::<Result<Vec<_>>>()?;
+            let dt = p
+                .get("dtype")
+                .and_then(Json::as_str)
+                .and_then(Dtype::from_name)
+                .ok_or_else(|| anyhow!("param {name} has bad dtype"))?;
+            Ok(ParamMeta { name, shape, dtype: dt })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        if v.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("unsupported manifest format");
+        }
+        let arts = v.get("artifacts").and_then(Json::as_object).ok_or_else(|| anyhow!("no artifacts"))?;
+        let mut artifacts = Vec::new();
+        for (name, a) in arts {
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let model = match a.get("model") {
+                Some(mj) => Some(
+                    ModelConfig::from_manifest_json(name.split('_').next().unwrap_or(name), mj)
+                        .map_err(|e| anyhow!("artifact {name}: {e}"))?,
+                ),
+                None => None,
+            };
+            artifacts.push(ArtifactMeta {
+                name: name.clone(),
+                file: dir.join(file),
+                params: parse_params(a.get("params").ok_or_else(|| anyhow!("no params"))?)?,
+                outputs: parse_params(a.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+                model,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+}
+
+/// Default artifact directory: `$DYNPAR_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("DYNPAR_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> Option<PathBuf> {
+        let d = default_artifact_dir();
+        if d.join("manifest.json").exists() {
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        for key in ["tiny_decode", "tiny_prefill", "micro_decode", "micro_prefill", "qgemv", "qgemm"]
+        {
+            let a = m.get(key).unwrap();
+            assert!(a.file.exists(), "{key} file missing");
+            assert!(!a.params.is_empty());
+        }
+    }
+
+    #[test]
+    fn model_abi_matches_rust_flat_params() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("micro_decode").unwrap();
+        let cfg = a.model.clone().unwrap();
+        assert_eq!(cfg.d_model, crate::model::ModelConfig::micro().d_model);
+        let w = crate::model::ModelWeights::random_init(&cfg, 1);
+        let flat = w.to_flat_params(&cfg);
+        // manifest params = token, pos, kv_k, kv_v, then the flat weights
+        assert_eq!(a.params.len(), 4 + flat.len());
+        for (pm, fp) in a.params[4..].iter().zip(&flat) {
+            assert_eq!(pm.name, fp.name(), "ABI name mismatch");
+            assert_eq!(pm.shape, fp.shape(), "ABI shape mismatch for {}", pm.name);
+        }
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let Some(dir) = artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("nonexistent").is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::from_name("f32"), Some(Dtype::F32));
+        assert_eq!(Dtype::from_name("i8"), Some(Dtype::I8));
+        assert_eq!(Dtype::from_name("f64"), None);
+    }
+}

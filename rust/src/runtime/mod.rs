@@ -1,0 +1,10 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO **text** — see /opt/xla-example/README.md for why not serialized
+//! protos), compile them on the PJRT CPU client, and execute them from the
+//! Rust request path. Python is never involved at runtime.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactMeta, Manifest, ParamMeta};
+pub use pjrt::{PjrtEngine, PjrtModel};

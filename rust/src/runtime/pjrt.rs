@@ -1,0 +1,316 @@
+//! PJRT CPU execution of the AOT artifacts (the `xla` crate bindings).
+//!
+//! `HloModuleProto::from_text_file → XlaComputation → client.compile →
+//! execute` — adapted from /opt/xla-example/load_hlo. All jax functions are
+//! lowered with `return_tuple=True`, so every execution returns one tuple
+//! literal which is unpacked here.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::{ArtifactMeta, Manifest};
+use crate::model::weights::FlatParam;
+use crate::model::{ModelConfig, ModelWeights};
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != n {
+        bail!("literal_f32: {} values for shape {shape:?}", data.len());
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)?)
+}
+
+/// Build an i8 literal.
+pub fn literal_i8(data: &[i8], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != n {
+        bail!("literal_i8: {} values for shape {shape:?}", data.len());
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, shape, bytes)?)
+}
+
+/// Build a u8 literal.
+pub fn literal_u8(data: &[u8], shape: &[usize]) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, shape, data)?)
+}
+
+/// Build an i32 literal (shape [] for scalars).
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)?)
+}
+
+/// One compiled artifact.
+pub struct PjrtModel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtModel {
+    /// Load + compile `meta` on `client`.
+    pub fn load(client: &xla::PjRtClient, meta: &ArtifactMeta) -> Result<PjrtModel> {
+        let path = meta
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compiling {}", meta.name))?;
+        Ok(PjrtModel { meta: meta.clone(), exe })
+    }
+
+    /// Execute with positional literals; unpacks the output tuple.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.params.len() {
+            bail!(
+                "artifact {} expects {} params, got {}",
+                self.meta.name,
+                self.meta.params.len(),
+                inputs.len()
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Convert a flat weight parameter to a PJRT literal.
+fn flat_param_literal(p: &FlatParam) -> Result<xla::Literal> {
+    match p {
+        FlatParam::F32 { shape, data, .. } => literal_f32(data, shape),
+        FlatParam::I8 { shape, data, .. } => literal_i8(data, shape),
+    }
+}
+
+/// A generation engine backed entirely by PJRT artifacts: the L2/L1 path.
+/// Holds the compiled decode/prefill executables, the weight literals (in
+/// ABI order) and the KV-cache state threaded between steps.
+pub struct PjrtEngine {
+    pub cfg: ModelConfig,
+    decode: PjrtModel,
+    prefill: PjrtModel,
+    weight_literals: Vec<xla::Literal>,
+    kv_k: xla::Literal,
+    kv_v: xla::Literal,
+    pub pos: usize,
+}
+
+impl PjrtEngine {
+    /// Load the `<model>_decode` / `<model>_prefill` artifacts and marshal
+    /// `weights` into literals once.
+    pub fn load(manifest: &Manifest, model: &str, weights: &ModelWeights) -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu()?;
+        let decode_meta = manifest.get(&format!("{model}_decode"))?;
+        let prefill_meta = manifest.get(&format!("{model}_prefill"))?;
+        let cfg = decode_meta
+            .model
+            .clone()
+            .ok_or_else(|| anyhow!("artifact has no model config"))?;
+        let decode = PjrtModel::load(&client, decode_meta)?;
+        let prefill = PjrtModel::load(&client, prefill_meta)?;
+
+        // marshal weights in ABI order, checking against the manifest
+        let flat = weights.to_flat_params(&cfg);
+        let expected = &decode_meta.params[4..];
+        if expected.len() != flat.len() {
+            bail!("weight count mismatch: manifest {} vs flat {}", expected.len(), flat.len());
+        }
+        let mut weight_literals = Vec::with_capacity(flat.len());
+        for (pm, fp) in expected.iter().zip(&flat) {
+            if pm.name != fp.name() || pm.shape != fp.shape() {
+                bail!("ABI mismatch at {}: manifest {:?} vs rust {:?}", pm.name, pm.shape, fp.shape());
+            }
+            weight_literals.push(flat_param_literal(fp)?);
+        }
+
+        let kv_shape = [cfg.n_layers, cfg.n_heads, cfg.t_max, cfg.head_dim()];
+        let zeros = vec![0.0f32; kv_shape.iter().product()];
+        let kv_k = literal_f32(&zeros, &kv_shape)?;
+        let kv_v = literal_f32(&zeros, &kv_shape)?;
+        Ok(PjrtEngine { cfg, decode, prefill, weight_literals, kv_k, kv_v, pos: 0 })
+    }
+
+    /// Clear the KV cache and cursor.
+    pub fn reset(&mut self) -> Result<()> {
+        let kv_shape = [self.cfg.n_layers, self.cfg.n_heads, self.cfg.t_max, self.cfg.head_dim()];
+        let zeros = vec![0.0f32; kv_shape.iter().product()];
+        self.kv_k = literal_f32(&zeros, &kv_shape)?;
+        self.kv_v = literal_f32(&zeros, &kv_shape)?;
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn run(&mut self, model_is_decode: bool, lead: Vec<xla::Literal>) -> Result<Vec<f32>> {
+        let model = if model_is_decode { &self.decode } else { &self.prefill };
+        let mut inputs = lead;
+        inputs.push(self.kv_k.clone());
+        inputs.push(self.kv_v.clone());
+        for w in &self.weight_literals {
+            inputs.push(w.clone());
+        }
+        let mut outs = model.execute(&inputs)?;
+        if outs.len() != 3 {
+            bail!("expected 3 outputs, got {}", outs.len());
+        }
+        self.kv_v = outs.pop().unwrap();
+        self.kv_k = outs.pop().unwrap();
+        let logits = outs.pop().unwrap().to_vec::<f32>()?;
+        Ok(logits)
+    }
+
+    /// One decode step at the current position.
+    pub fn decode_step(&mut self, token: u32) -> Result<Vec<f32>> {
+        if self.pos >= self.cfg.t_max {
+            bail!("KV cache exhausted");
+        }
+        let lead = vec![
+            literal_i32(&[token as i32], &[])?,
+            literal_i32(&[self.pos as i32], &[])?,
+        ];
+        let logits = self.run(true, lead)?;
+        self.pos += 1;
+        Ok(logits)
+    }
+
+    /// One fixed-size prefill chunk (exactly `cfg.prefill_len` tokens).
+    pub fn prefill_chunk(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+        let s = self.cfg.prefill_len;
+        if tokens.len() != s {
+            bail!("prefill chunk must be exactly {s} tokens (got {})", tokens.len());
+        }
+        if self.pos + s > self.cfg.t_max {
+            bail!("prompt exceeds KV capacity");
+        }
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let lead = vec![literal_i32(&toks, &[s])?, literal_i32(&[self.pos as i32], &[])?];
+        let logits = self.run(false, lead)?;
+        self.pos += s;
+        Ok(logits)
+    }
+
+    /// Prefill an arbitrary prompt: full chunks through the prefill
+    /// artifact, the tail through the decode artifact. Returns the last
+    /// logits.
+    pub fn prefill(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+        let s = self.cfg.prefill_len;
+        let mut logits = None;
+        let mut i = 0;
+        while i + s <= tokens.len() {
+            logits = Some(self.prefill_chunk(&tokens[i..i + s])?);
+            i += s;
+        }
+        for &t in &tokens[i..] {
+            logits = Some(self.decode_step(t)?);
+        }
+        logits.ok_or_else(|| anyhow!("empty prompt"))
+    }
+
+    /// Greedy generation; returns the produced tokens.
+    pub fn generate(&mut self, prompt: &[u32], n_new: usize) -> Result<Vec<u32>> {
+        let logits = self.prefill(prompt)?;
+        let mut next = crate::model::argmax(&logits);
+        let mut out = Vec::with_capacity(n_new);
+        for _ in 0..n_new {
+            if self.pos >= self.cfg.t_max {
+                break;
+            }
+            out.push(next);
+            let logits = self.decode_step(next)?;
+            next = crate::model::argmax(&logits);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::default_artifact_dir;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_artifact_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn qgemv_artifact_matches_native_kernel() {
+        let Some(m) = manifest() else { return };
+        let client = xla::PjRtClient::cpu().unwrap();
+        let model = PjrtModel::load(&client, m.get("qgemv").unwrap()).unwrap();
+
+        // build a quantized weight with the native quantizer
+        let (n, k) = (256, 256);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut wdata = vec![0.0f32; n * k];
+        rng.fill_normal_f32(&mut wdata, 1.0);
+        let w = crate::quant::MatQ4::quantize(&wdata, n, k);
+        let (codes, scales) = w.unpack();
+        let mut x = vec![0.0f32; k];
+        rng.fill_normal_f32(&mut x, 1.0);
+
+        let outs = model
+            .execute(&[
+                literal_i8(&codes, &[n, k]).unwrap(),
+                literal_f32(&scales, &[n, k / 32]).unwrap(),
+                literal_f32(&x, &[k]).unwrap(),
+            ])
+            .unwrap();
+        let y_pjrt = outs[0].to_vec::<f32>().unwrap();
+        let y_native = crate::kernels::gemv_q4::gemv_q4_f32(&w, &x);
+        assert_eq!(y_pjrt.len(), n);
+        for (a, b) in y_pjrt.iter().zip(&y_native) {
+            assert!((a - b).abs() < 1e-3, "pjrt {a} vs native {b}");
+        }
+    }
+
+    #[test]
+    fn qgemm_artifact_matches_native_kernel() {
+        let Some(m) = manifest() else { return };
+        let client = xla::PjRtClient::cpu().unwrap();
+        let model = PjrtModel::load(&client, m.get("qgemm").unwrap()).unwrap();
+        let (mm, kk, nn) = (64, 64, 64);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let mut a = crate::tensor::MatU8::zeros(mm, kk);
+        rng.fill_u8(&mut a.data, 0, 256);
+        let mut b_kn = vec![0i8; kk * nn];
+        rng.fill_i8(&mut b_kn, -127, 128);
+
+        let outs = model
+            .execute(&[
+                literal_u8(&a.data, &[mm, kk]).unwrap(),
+                literal_i8(&b_kn, &[kk, nn]).unwrap(),
+            ])
+            .unwrap();
+        let c_pjrt = outs[0].to_vec::<i32>().unwrap();
+
+        // native gemm takes B transposed [N, K]
+        let mut bt = crate::tensor::MatI8::zeros(nn, kk);
+        for r in 0..kk {
+            for c in 0..nn {
+                bt.data[c * kk + r] = b_kn[r * nn + c];
+            }
+        }
+        let c_native = crate::kernels::gemm_i8::gemm_i8(&a, &bt);
+        assert_eq!(c_pjrt, c_native);
+    }
+
+    #[test]
+    fn wrong_arity_is_rejected() {
+        let Some(m) = manifest() else { return };
+        let client = xla::PjRtClient::cpu().unwrap();
+        let model = PjrtModel::load(&client, m.get("qgemv").unwrap()).unwrap();
+        assert!(model.execute(&[]).is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! The paper's **thread scheduler** (§2.2) and the baselines it is
+//! evaluated against.
+//!
+//! A scheduler turns `(total units, grain, per-core ratios)` into a
+//! [`DispatchPlan`]: either a *partition* (one contiguous range per core —
+//! the paper's method and the OpenMP-static baseline) or a *chunk policy*
+//! (OpenMP dynamic/guided work-stealing baselines, where cores claim
+//! chunks at runtime).
+
+pub mod partition;
+
+use std::ops::Range;
+
+pub use partition::{largest_remainder_split, proportional_split};
+
+/// How a kernel's parallel dimension is dispatched to cores.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DispatchPlan {
+    /// `ranges[i]` is core i's contiguous slice (possibly empty).
+    Partitioned(Vec<Range<usize>>),
+    /// cores repeatedly claim `chunk` units from a shared counter.
+    Chunked { chunk: usize },
+    /// OpenMP guided: claim `max(remaining / (2·n_workers), min_chunk)`.
+    Guided { min_chunk: usize },
+}
+
+impl DispatchPlan {
+    /// Units assigned per worker, if statically known.
+    pub fn assigned_units(&self) -> Option<Vec<usize>> {
+        match self {
+            DispatchPlan::Partitioned(rs) => Some(rs.iter().map(|r| r.len()).collect()),
+            _ => None,
+        }
+    }
+}
+
+/// A task scheduler (paper §2.2).
+pub trait Scheduler: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Plan the dispatch of `total` units (aligned to `grain` where
+    /// possible) over `ratios.len()` cores with the given performance
+    /// ratios.
+    fn plan(&self, total: usize, grain: usize, ratios: &[f64]) -> DispatchPlan;
+}
+
+/// The paper's dynamic proportional scheduler (eq. 3):
+/// `s_i = pr_i / Σ pr · s`, rounded to grain multiples with the largest-
+/// remainder method so that Σ s_i = s exactly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DynamicScheduler;
+
+impl Scheduler for DynamicScheduler {
+    fn name(&self) -> &'static str {
+        "dynamic"
+    }
+
+    fn plan(&self, total: usize, grain: usize, ratios: &[f64]) -> DispatchPlan {
+        DispatchPlan::Partitioned(proportional_split(total, grain, ratios))
+    }
+}
+
+/// OpenMP `schedule(static)` analog: equal shares regardless of ratios.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StaticEven;
+
+impl Scheduler for StaticEven {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn plan(&self, total: usize, grain: usize, ratios: &[f64]) -> DispatchPlan {
+        let flat = vec![1.0; ratios.len()];
+        DispatchPlan::Partitioned(proportional_split(total, grain, &flat))
+    }
+}
+
+/// OpenMP `schedule(dynamic, chunk)` analog: fixed-size chunk stealing.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkStealing {
+    pub chunk: usize,
+}
+
+impl Default for WorkStealing {
+    fn default() -> Self {
+        WorkStealing { chunk: 16 }
+    }
+}
+
+impl Scheduler for WorkStealing {
+    fn name(&self) -> &'static str {
+        "workstealing"
+    }
+
+    fn plan(&self, _total: usize, grain: usize, _ratios: &[f64]) -> DispatchPlan {
+        DispatchPlan::Chunked { chunk: self.chunk.max(grain) }
+    }
+}
+
+/// OpenMP `schedule(guided)` analog.
+#[derive(Clone, Copy, Debug)]
+pub struct GuidedSched {
+    pub min_chunk: usize,
+}
+
+impl Default for GuidedSched {
+    fn default() -> Self {
+        GuidedSched { min_chunk: 8 }
+    }
+}
+
+impl Scheduler for GuidedSched {
+    fn name(&self) -> &'static str {
+        "guided"
+    }
+
+    fn plan(&self, _total: usize, grain: usize, _ratios: &[f64]) -> DispatchPlan {
+        DispatchPlan::Guided { min_chunk: self.min_chunk.max(grain) }
+    }
+}
+
+/// Look up a scheduler by CLI name.
+pub fn scheduler_by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+    match name {
+        "dynamic" => Some(Box::new(DynamicScheduler)),
+        "static" => Some(Box::new(StaticEven)),
+        "workstealing" | "ws" => Some(Box::new(WorkStealing::default())),
+        "guided" => Some(Box::new(GuidedSched::default())),
+        _ => None,
+    }
+}
+
+pub const SCHEDULER_NAMES: [&str; 4] = ["dynamic", "static", "workstealing", "guided"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_partition(ranges: &[Range<usize>], total: usize) {
+        // disjoint, consecutive, covering
+        let mut cursor = 0;
+        for r in ranges {
+            assert_eq!(r.start, cursor, "non-consecutive: {ranges:?}");
+            cursor = r.end;
+        }
+        assert_eq!(cursor, total, "doesn't cover: {ranges:?}");
+    }
+
+    #[test]
+    fn dynamic_splits_proportionally() {
+        let s = DynamicScheduler;
+        let plan = s.plan(100, 1, &[3.0, 1.0]);
+        match plan {
+            DispatchPlan::Partitioned(rs) => {
+                check_partition(&rs, 100);
+                assert_eq!(rs[0].len(), 75);
+                assert_eq!(rs[1].len(), 25);
+            }
+            _ => panic!("expected partition"),
+        }
+    }
+
+    #[test]
+    fn static_ignores_ratios() {
+        let s = StaticEven;
+        let plan = s.plan(64, 1, &[100.0, 1.0]);
+        if let DispatchPlan::Partitioned(rs) = plan {
+            assert_eq!(rs[0].len(), 32);
+            assert_eq!(rs[1].len(), 32);
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn workstealing_and_guided_respect_grain() {
+        let ws = WorkStealing { chunk: 3 };
+        assert_eq!(ws.plan(100, 8, &[1.0; 4]), DispatchPlan::Chunked { chunk: 8 });
+        let g = GuidedSched { min_chunk: 2 };
+        assert_eq!(g.plan(100, 16, &[1.0; 4]), DispatchPlan::Guided { min_chunk: 16 });
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in SCHEDULER_NAMES {
+            assert_eq!(scheduler_by_name(name).unwrap().name(), name);
+        }
+        assert!(scheduler_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn dynamic_grain_alignment() {
+        let s = DynamicScheduler;
+        if let DispatchPlan::Partitioned(rs) = s.plan(128, 32, &[2.0, 1.0, 1.0]) {
+            check_partition(&rs, 128);
+            for r in &rs {
+                assert_eq!(r.start % 32, 0, "{rs:?}");
+            }
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn assigned_units_only_for_partitions() {
+        assert!(DispatchPlan::Chunked { chunk: 4 }.assigned_units().is_none());
+        let p = DispatchPlan::Partitioned(vec![0..3, 3..10]);
+        assert_eq!(p.assigned_units().unwrap(), vec![3, 7]);
+    }
+}

@@ -1,0 +1,167 @@
+//! Proportional range partitioning with largest-remainder rounding.
+//!
+//! Implements eq. 3 of the paper: worker i receives
+//! `s_i = round(pr_i / Σ pr · s)` units, where rounding happens in units
+//! of `grain` and the largest-remainder method guarantees Σ s_i = s.
+
+use std::ops::Range;
+
+/// Split `total` units into consecutive ranges proportional to `weights`,
+/// aligned to `grain` (every boundary except the final `total` is a grain
+/// multiple). Zero-weight workers receive empty ranges.
+pub fn proportional_split(total: usize, grain: usize, weights: &[f64]) -> Vec<Range<usize>> {
+    assert!(!weights.is_empty(), "no workers");
+    let grain = grain.max(1);
+    // number of grain-units (the last one may be partial)
+    let units = total.div_ceil(grain);
+    let counts = largest_remainder_split(units, weights);
+    let mut out = Vec::with_capacity(weights.len());
+    let mut cursor_units = 0usize;
+    for &c in &counts {
+        let start = (cursor_units * grain).min(total);
+        let end = ((cursor_units + c) * grain).min(total);
+        out.push(start..end);
+        cursor_units += c;
+    }
+    out
+}
+
+/// Allocate `units` integer slots proportionally to `weights` (largest-
+/// remainder / Hamilton method). Guarantees the counts sum to `units`.
+pub fn largest_remainder_split(units: usize, weights: &[f64]) -> Vec<usize> {
+    let n = weights.len();
+    let wsum: f64 = weights.iter().map(|w| w.max(0.0)).sum();
+    if wsum <= 0.0 {
+        // degenerate: treat as flat
+        return largest_remainder_split(units, &vec![1.0; n]);
+    }
+    let mut counts = vec![0usize; n];
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(n);
+    let mut assigned = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        let exact = units as f64 * w.max(0.0) / wsum;
+        let floor = exact.floor() as usize;
+        counts[i] = floor;
+        assigned += floor;
+        fracs.push((exact - floor as f64, i));
+    }
+    // distribute the remainder to the largest fractional parts;
+    // ties break toward the lower index (deterministic)
+    let mut rem = units - assigned;
+    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut k = 0;
+    while rem > 0 {
+        counts[fracs[k % fracs.len()].1] += 1;
+        rem -= 1;
+        k += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn exact_proportions() {
+        assert_eq!(largest_remainder_split(100, &[3.0, 1.0]), vec![75, 25]);
+        assert_eq!(largest_remainder_split(10, &[1.0, 1.0]), vec![5, 5]);
+    }
+
+    #[test]
+    fn remainder_goes_to_largest_fraction() {
+        // 10 units over [1,1,1]: 3.33 each → 4,3,3 (first index wins the tie-ish)
+        let c = largest_remainder_split(10, &[1.0, 1.0, 1.0]);
+        assert_eq!(c.iter().sum::<usize>(), 10);
+        assert!(c.iter().all(|&x| x == 3 || x == 4));
+    }
+
+    #[test]
+    fn zero_weight_gets_zero() {
+        let c = largest_remainder_split(10, &[1.0, 0.0]);
+        assert_eq!(c, vec![10, 0]);
+    }
+
+    #[test]
+    fn all_zero_weights_fall_back_to_flat() {
+        let c = largest_remainder_split(9, &[0.0, 0.0, 0.0]);
+        assert_eq!(c.iter().sum::<usize>(), 9);
+    }
+
+    #[test]
+    fn split_covers_and_aligns() {
+        let rs = proportional_split(100, 8, &[2.0, 1.0, 1.0]);
+        assert_eq!(rs.len(), 3);
+        let mut cursor = 0;
+        for r in &rs {
+            assert_eq!(r.start, cursor);
+            assert!(r.start % 8 == 0 || r.start == 100);
+            cursor = r.end;
+        }
+        assert_eq!(cursor, 100);
+    }
+
+    #[test]
+    fn more_workers_than_units() {
+        let rs = proportional_split(3, 1, &[1.0; 8]);
+        let total: usize = rs.iter().map(|r| r.len()).sum();
+        assert_eq!(total, 3);
+        assert_eq!(rs.iter().filter(|r| !r.is_empty()).count(), 3);
+    }
+
+    #[test]
+    fn single_worker_takes_all() {
+        assert_eq!(proportional_split(42, 5, &[7.0]), vec![0..42]);
+    }
+
+    #[test]
+    fn prop_partition_invariants() {
+        prop::check("partition_invariants", |rng| {
+            let n = 1 + rng.below(16) as usize;
+            let total = rng.below(10_000) as usize;
+            let grain = 1 + rng.below(64) as usize;
+            let weights: Vec<f64> = (0..n).map(|_| rng.uniform(0.01, 10.0)).collect();
+            let rs = proportional_split(total, grain, &weights);
+            if rs.len() != n {
+                return Err("wrong worker count".into());
+            }
+            let mut cursor = 0;
+            for r in &rs {
+                if r.start != cursor || r.end < r.start {
+                    return Err(format!("bad ranges {rs:?}"));
+                }
+                if r.start % grain != 0 && r.start != total {
+                    return Err(format!("unaligned start {rs:?} grain={grain}"));
+                }
+                cursor = r.end;
+            }
+            if cursor != total {
+                return Err(format!("covers {cursor} of {total}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_monotone_in_weight() {
+        // a strictly heavier worker never gets fewer units (same unit pool)
+        prop::check("partition_monotone", |rng| {
+            let n = 2 + rng.below(8) as usize;
+            let units = 100 + rng.below(1000) as usize;
+            let weights: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 5.0)).collect();
+            let counts = largest_remainder_split(units, &weights);
+            for i in 0..n {
+                for j in 0..n {
+                    if weights[i] > weights[j] && counts[i] + 1 < counts[j] {
+                        return Err(format!(
+                            "w[{i}]={} > w[{j}]={} but c[{i}]={} < c[{j}]={}",
+                            weights[i], weights[j], counts[i], counts[j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,402 @@
+//! Threaded TCP serving front-end: request router + dynamic batcher over
+//! one shared [`Engine`].
+//!
+//! Client handlers parse JSON-lines requests into a shared queue; a single
+//! engine thread drains the queue in batches (up to `max_batch`), prefills
+//! each request, then interleaves decode steps round-robin across the
+//! batch, streaming tokens back as they are produced. The perf-ratio table
+//! lives in the engine and keeps adapting across requests — exactly the
+//! paper's "quickly adapt … whether during program startup or when there
+//! are sudden changes" property, surfaced as a service.
+
+pub mod protocol;
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::engine::Engine;
+use crate::exec::Executor;
+use crate::metrics::LatencyHistogram;
+use crate::model::argmax;
+use crate::util::json::Json;
+
+use protocol::{ClientMessage, Request};
+
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOpts {
+    pub max_batch: usize,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        ServerOpts { max_batch: 4 }
+    }
+}
+
+struct Pending {
+    req: Request,
+    tx: mpsc::Sender<String>,
+}
+
+#[derive(Default)]
+struct ServerMetrics {
+    requests: u64,
+    tokens: u64,
+    prefill: LatencyHistogram,
+    decode_per_token: LatencyHistogram,
+}
+
+impl ServerMetrics {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+        ];
+        if let Some(s) = self.prefill.summary() {
+            fields.push(("prefill_p50_secs", Json::num(s.p50)));
+        }
+        if let Some(s) = self.decode_per_token.summary() {
+            fields.push(("decode_p50_secs_per_token", Json::num(s.p50)));
+        }
+        Json::obj(fields)
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    metrics: Mutex<ServerMetrics>,
+}
+
+/// A running server; dropping the handle shuts it down.
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start serving `engine` on `addr` (e.g. "127.0.0.1:0" for an ephemeral
+/// port). The engine runs on its own thread; handlers are per-connection.
+pub fn serve<E: Executor + Send + 'static>(
+    addr: &str,
+    mut engine: Engine<E>,
+    opts: ServerOpts,
+) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let bound = listener.local_addr()?;
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(VecDeque::new()),
+        cv: Condvar::new(),
+        shutdown: AtomicBool::new(false),
+        metrics: Mutex::new(ServerMetrics::default()),
+    });
+
+    let mut threads = Vec::new();
+
+    // ---- engine/batcher thread ----
+    {
+        let shared = Arc::clone(&shared);
+        threads.push(std::thread::spawn(move || loop {
+            let batch: Vec<Pending> = {
+                let mut q = shared.queue.lock().unwrap();
+                while q.is_empty() && !shared.shutdown.load(Ordering::SeqCst) {
+                    let (qq, _) = shared.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                    q = qq;
+                }
+                if q.is_empty() && shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let take = opts.max_batch.min(q.len());
+                q.drain(..take).collect()
+            };
+            run_batch(&mut engine, &shared, batch);
+        }));
+    }
+
+    // ---- accept loop ----
+    {
+        let shared = Arc::clone(&shared);
+        threads.push(std::thread::spawn(move || loop {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let shared = Arc::clone(&shared);
+                    // handlers are detached; they exit when the client
+                    // disconnects or shutdown flips
+                    std::thread::spawn(move || {
+                        let _ = handle_client(stream, &shared);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(_) => return,
+            }
+        }));
+    }
+
+    Ok(ServerHandle { addr: bound, shared, threads })
+}
+
+/// Prefill every request, then interleave decode rounds across the batch.
+fn run_batch<E: Executor>(engine: &mut Engine<E>, shared: &Arc<Shared>, batch: Vec<Pending>) {
+    struct Active {
+        pending: Pending,
+        session: crate::model::Session,
+        next: u32,
+        produced: usize,
+        metrics: crate::metrics::PhaseMetrics,
+        dead: bool,
+    }
+
+    let vocab = engine.cfg.vocab as u32;
+    let mut active: Vec<Active> = Vec::new();
+    for pending in batch {
+        let mut session = engine.new_session();
+        let prompt: Vec<u32> = pending.req.prompt.iter().map(|&t| t % vocab).collect();
+        let capacity = engine.cfg.t_max;
+        if prompt.len() >= capacity {
+            let _ = pending.tx.send(protocol::error_line(pending.req.id, "prompt too long"));
+            continue;
+        }
+        let t0 = engine.kernel_secs;
+        let logits = engine.prefill(&mut session, &prompt);
+        let mut metrics = crate::metrics::PhaseMetrics {
+            prompt_tokens: prompt.len(),
+            ..Default::default()
+        };
+        metrics.prefill_secs = engine.kernel_secs - t0;
+        let next = argmax(&logits);
+        active.push(Active { pending, session, next, produced: 0, metrics, dead: false });
+    }
+
+    // round-robin decode
+    loop {
+        let mut progressed = false;
+        for a in active.iter_mut() {
+            if a.dead
+                || a.produced >= a.pending.req.max_new_tokens
+                || a.session.remaining_capacity(&engine.cfg) == 0
+            {
+                continue;
+            }
+            let token = a.next;
+            if a.pending.tx.send(protocol::token_line(a.pending.req.id, token)).is_err() {
+                a.dead = true; // client went away; stop decoding for it
+                continue;
+            }
+            let t0 = engine.kernel_secs;
+            let logits = engine.decode_step(&mut a.session, token);
+            a.metrics.decode_secs += engine.kernel_secs - t0;
+            a.next = argmax(&logits);
+            a.produced += 1;
+            a.metrics.decoded_tokens += 1;
+            progressed = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+
+    let mut m = shared.metrics.lock().unwrap();
+    for a in &active {
+        if !a.dead {
+            let _ = a.pending.tx.send(protocol::done_line(a.pending.req.id, &a.metrics));
+        }
+        m.requests += 1;
+        m.tokens += a.produced as u64;
+        m.prefill.record(a.metrics.prefill_secs);
+        if a.metrics.decoded_tokens > 0 {
+            m.decode_per_token.record(a.metrics.decode_latency());
+        }
+    }
+}
+
+fn handle_client(stream: TcpStream, shared: &Arc<Shared>) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        match protocol::parse_client_line(line.trim()) {
+            Ok(ClientMessage::Metrics) => {
+                let snap = shared.metrics.lock().unwrap().to_json();
+                writeln!(writer, "{}", Json::obj(vec![("metrics", snap)]).dump())?;
+            }
+            Ok(ClientMessage::Generate(req)) => {
+                let (tx, rx) = mpsc::channel();
+                {
+                    let mut q = shared.queue.lock().unwrap();
+                    q.push_back(Pending { req, tx });
+                    shared.cv.notify_all();
+                }
+                // stream responses for this request until done/error
+                for msg in rx {
+                    let is_final = msg.contains("\"done\"") || msg.contains("\"error\"");
+                    writeln!(writer, "{msg}")?;
+                    if is_final {
+                        break;
+                    }
+                }
+            }
+            Err(e) => {
+                writeln!(writer, "{}", protocol::error_line(0, &e))?;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::presets;
+    use crate::model::{ModelConfig, ModelWeights};
+    use crate::perf::PerfConfig;
+    use crate::sched::DynamicScheduler;
+    use crate::sim::{SimConfig, SimExecutor};
+
+    fn test_engine() -> Engine<SimExecutor> {
+        let cfg = ModelConfig::micro();
+        let weights = Arc::new(ModelWeights::random_init(&cfg, 3));
+        let exec = SimExecutor::new(
+            presets::ultra_125h(),
+            SimConfig { execute_real: true, ..SimConfig::noiseless() },
+        );
+        Engine::new(cfg, weights, exec, Box::new(DynamicScheduler), PerfConfig::default())
+    }
+
+    fn send_request(addr: std::net::SocketAddr, line: &str) -> Vec<Json> {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        writeln!(stream, "{line}").unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        let mut out = Vec::new();
+        for l in reader.lines() {
+            let l = match l {
+                Ok(l) => l,
+                Err(_) => break,
+            };
+            let v = Json::parse(&l).unwrap();
+            let fin = v.get("done").is_some() || v.get("error").is_some() || v.get("metrics").is_some();
+            out.push(v);
+            if fin {
+                break;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn serves_generation_request() {
+        let handle = serve("127.0.0.1:0", test_engine(), ServerOpts::default()).unwrap();
+        let msgs =
+            send_request(handle.addr, r#"{"id": 1, "prompt": [1,2,3], "max_new_tokens": 4}"#);
+        let tokens: Vec<&Json> = msgs.iter().filter(|m| m.get("token").is_some()).collect();
+        assert_eq!(tokens.len(), 4);
+        let done = msgs.last().unwrap();
+        assert_eq!(done.get("done"), Some(&Json::Bool(true)));
+        assert!(done.get("prefill_secs").unwrap().as_f64().unwrap() > 0.0);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn generation_is_deterministic_across_requests() {
+        let handle = serve("127.0.0.1:0", test_engine(), ServerOpts::default()).unwrap();
+        let get_tokens = |id: u64| {
+            let msgs = send_request(
+                handle.addr,
+                &format!(r#"{{"id": {id}, "prompt": [5,6], "max_new_tokens": 5}}"#),
+            );
+            msgs.iter()
+                .filter_map(|m| m.get("token").and_then(Json::as_i64))
+                .collect::<Vec<i64>>()
+        };
+        assert_eq!(get_tokens(1), get_tokens(2));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_are_batched() {
+        let handle = serve("127.0.0.1:0", test_engine(), ServerOpts { max_batch: 4 }).unwrap();
+        let addr = handle.addr;
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    send_request(
+                        addr,
+                        &format!(r#"{{"id": {i}, "prompt": [{i}, 2], "max_new_tokens": 3}}"#),
+                    )
+                })
+            })
+            .collect();
+        for h in handles {
+            let msgs = h.join().unwrap();
+            assert!(msgs.iter().any(|m| m.get("done").is_some()));
+            assert_eq!(msgs.iter().filter(|m| m.get("token").is_some()).count(), 3);
+        }
+        let metrics = send_request(addr, r#"{"cmd":"metrics"}"#);
+        let m = metrics[0].get("metrics").unwrap();
+        assert_eq!(m.get("requests").unwrap().as_i64(), Some(4));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_get_errors() {
+        let handle = serve("127.0.0.1:0", test_engine(), ServerOpts::default()).unwrap();
+        let msgs = send_request(handle.addr, r#"{"id": 1}"#);
+        assert!(msgs[0].get("error").is_some());
+        let msgs = send_request(handle.addr, r#"{"id": 2, "prompt": [1], "max_new_tokens": 1}"#);
+        assert!(msgs.iter().any(|m| m.get("done").is_some() || m.get("error").is_some()));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn too_long_prompt_rejected() {
+        let engine = test_engine();
+        let t_max = engine.cfg.t_max;
+        let handle = serve("127.0.0.1:0", engine, ServerOpts::default()).unwrap();
+        let prompt: Vec<String> = (0..t_max + 1).map(|i| i.to_string()).collect();
+        let msgs = send_request(
+            handle.addr,
+            &format!(r#"{{"id": 9, "prompt": [{}], "max_new_tokens": 1}}"#, prompt.join(",")),
+        );
+        assert!(msgs[0].get("error").is_some());
+        handle.shutdown();
+    }
+}

@@ -1,0 +1,123 @@
+//! JSON-lines wire protocol of the serving front-end.
+//!
+//! Client → server, one JSON object per line:
+//!   {"id": 7, "prompt": [1,2,3], "max_new_tokens": 8}
+//!   {"cmd": "metrics"}
+//! Server → client:
+//!   {"id": 7, "token": 42}                              (streamed)
+//!   {"id": 7, "done": true, "prefill_secs": …, "decode_secs": …,
+//!    "tokens_per_sec": …, "n_tokens": …}
+//!   {"id": 7, "error": "…"}
+//!   {"metrics": {…}}
+
+use crate::metrics::PhaseMetrics;
+use crate::util::json::Json;
+
+/// A parsed generation request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+/// Client line → request or control command.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientMessage {
+    Generate(Request),
+    Metrics,
+}
+
+pub fn parse_client_line(line: &str) -> Result<ClientMessage, String> {
+    let v = Json::parse(line).map_err(|e| e.to_string())?;
+    if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "metrics" => Ok(ClientMessage::Metrics),
+            other => Err(format!("unknown cmd '{other}'")),
+        };
+    }
+    let id = v.get("id").and_then(Json::as_i64).ok_or("missing id")? as u64;
+    let prompt = v
+        .get("prompt")
+        .and_then(Json::as_array)
+        .ok_or("missing prompt")?
+        .iter()
+        .map(|t| t.as_i64().map(|x| x as u32).ok_or("bad token"))
+        .collect::<Result<Vec<u32>, _>>()?;
+    if prompt.is_empty() {
+        return Err("empty prompt".into());
+    }
+    let max_new_tokens = v.get("max_new_tokens").and_then(Json::as_usize).unwrap_or(16);
+    Ok(ClientMessage::Generate(Request { id, prompt, max_new_tokens }))
+}
+
+pub fn token_line(id: u64, token: u32) -> String {
+    Json::obj(vec![("id", Json::num(id as f64)), ("token", Json::num(token as f64))]).dump()
+}
+
+pub fn done_line(id: u64, m: &PhaseMetrics) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("done", Json::Bool(true)),
+        ("prefill_secs", Json::num(m.prefill_secs)),
+        ("decode_secs", Json::num(m.decode_secs)),
+        ("tokens_per_sec", Json::num(m.decode_tokens_per_sec())),
+        ("n_tokens", Json::num(m.decoded_tokens as f64)),
+    ])
+    .dump()
+}
+
+pub fn error_line(id: u64, msg: &str) -> String {
+    Json::obj(vec![("id", Json::num(id as f64)), ("error", Json::str(msg))]).dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generate() {
+        let msg = parse_client_line(r#"{"id": 3, "prompt": [1, 2], "max_new_tokens": 4}"#).unwrap();
+        assert_eq!(
+            msg,
+            ClientMessage::Generate(Request { id: 3, prompt: vec![1, 2], max_new_tokens: 4 })
+        );
+    }
+
+    #[test]
+    fn default_max_tokens() {
+        let ClientMessage::Generate(r) = parse_client_line(r#"{"id":1,"prompt":[5]}"#).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(r.max_new_tokens, 16);
+    }
+
+    #[test]
+    fn parses_metrics_cmd() {
+        assert_eq!(parse_client_line(r#"{"cmd":"metrics"}"#).unwrap(), ClientMessage::Metrics);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse_client_line("not json").is_err());
+        assert!(parse_client_line(r#"{"id":1}"#).is_err());
+        assert!(parse_client_line(r#"{"id":1,"prompt":[]}"#).is_err());
+        assert!(parse_client_line(r#"{"cmd":"explode"}"#).is_err());
+    }
+
+    #[test]
+    fn response_lines_are_valid_json() {
+        let m = PhaseMetrics {
+            prefill_secs: 0.5,
+            decode_secs: 1.0,
+            prompt_tokens: 4,
+            decoded_tokens: 16,
+        };
+        for line in [token_line(1, 42), done_line(1, &m), error_line(2, "boom")] {
+            Json::parse(&line).unwrap();
+        }
+        let d = Json::parse(&done_line(9, &m)).unwrap();
+        assert_eq!(d.get("tokens_per_sec").unwrap().as_f64(), Some(16.0));
+    }
+}

@@ -1,0 +1,143 @@
+//! Weighted waterfill allocation of shared memory-bus bandwidth.
+//!
+//! Cores contending for the bus receive bandwidth proportional to their
+//! contention weight (a proxy for memory-level parallelism: P-cores keep
+//! more misses in flight), capped by (a) their per-core link limit and
+//! (b) their actual demand (a compute-bound core doesn't consume its
+//! share). Freed capacity is redistributed until exhausted — the standard
+//! waterfilling fixed point.
+
+/// One contender: (weight, cap_gbps) where cap already includes demand.
+#[derive(Clone, Copy, Debug)]
+pub struct Contender {
+    pub weight: f64,
+    pub cap: f64,
+}
+
+/// Allocate `bus` GB/s over the contenders. Returns per-contender GB/s.
+pub fn waterfill(contenders: &[Contender], bus: f64) -> Vec<f64> {
+    let n = contenders.len();
+    let mut alloc = vec![0.0f64; n];
+    if n == 0 || bus <= 0.0 {
+        return alloc;
+    }
+    let mut open: Vec<usize> = (0..n).filter(|&i| contenders[i].cap > 0.0).collect();
+    let mut remaining = bus;
+    // each pass fixes at least one contender at its cap, so ≤ n passes
+    loop {
+        let wsum: f64 = open.iter().map(|&i| contenders[i].weight).sum();
+        if open.is_empty() || wsum <= 0.0 || remaining <= 1e-12 {
+            break;
+        }
+        let mut capped = Vec::new();
+        let mut progressed = false;
+        for &i in &open {
+            let share = remaining * contenders[i].weight / wsum;
+            if share >= contenders[i].cap - 1e-12 {
+                alloc[i] = contenders[i].cap;
+                capped.push(i);
+                progressed = true;
+            }
+        }
+        if !progressed {
+            // nobody capped: final proportional split
+            for &i in &open {
+                alloc[i] = remaining * contenders[i].weight / wsum;
+            }
+            break;
+        }
+        remaining -= capped.iter().map(|&i| contenders[i].cap).sum::<f64>();
+        remaining = remaining.max(0.0);
+        open.retain(|i| !capped.contains(i));
+    }
+    alloc
+}
+
+/// Total bus throughput when every core streams flat-out (the MLC-like
+/// reference measurement).
+pub fn full_contention_throughput(contenders: &[Contender], bus: f64) -> f64 {
+    waterfill(contenders, bus).iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn c(weight: f64, cap: f64) -> Contender {
+        Contender { weight, cap }
+    }
+
+    #[test]
+    fn uncapped_split_is_proportional() {
+        let a = waterfill(&[c(2.0, 1e9), c(1.0, 1e9)], 30.0);
+        assert!((a[0] - 20.0).abs() < 1e-9);
+        assert!((a[1] - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn caps_redistribute() {
+        // core 0 capped at 5 → remaining 25 goes to core 1 (cap 100)
+        let a = waterfill(&[c(1.0, 5.0), c(1.0, 100.0)], 30.0);
+        assert!((a[0] - 5.0).abs() < 1e-9);
+        assert!((a[1] - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_never_exceeds_bus_or_caps() {
+        let cs = [c(1.3, 14.0), c(1.3, 14.0), c(0.8, 7.0), c(0.8, 7.0)];
+        let a = waterfill(&cs, 30.0);
+        let total: f64 = a.iter().sum();
+        assert!(total <= 30.0 + 1e-9);
+        for (x, cc) in a.iter().zip(&cs) {
+            assert!(*x <= cc.cap + 1e-9);
+        }
+    }
+
+    #[test]
+    fn bus_smaller_than_caps_fully_used() {
+        let cs = [c(1.0, 50.0), c(1.0, 50.0)];
+        let a = waterfill(&cs, 40.0);
+        assert!((a.iter().sum::<f64>() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn caps_smaller_than_bus_limit_throughput() {
+        let cs = [c(1.0, 5.0), c(1.0, 5.0)];
+        assert!((full_contention_throughput(&cs, 100.0) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_demand_core_gets_nothing() {
+        let a = waterfill(&[c(1.0, 0.0), c(1.0, 10.0)], 8.0);
+        assert_eq!(a[0], 0.0);
+        assert!((a[1] - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_waterfill_feasible_and_work_conserving() {
+        prop::check("waterfill_invariants", |rng| {
+            let n = 1 + rng.below(12) as usize;
+            let cs: Vec<Contender> =
+                (0..n).map(|_| c(rng.uniform(0.1, 2.0), rng.uniform(0.0, 20.0))).collect();
+            let bus = rng.uniform(1.0, 120.0);
+            let a = waterfill(&cs, bus);
+            let total: f64 = a.iter().sum();
+            if total > bus + 1e-6 {
+                return Err(format!("total {total} > bus {bus}"));
+            }
+            for (x, cc) in a.iter().zip(&cs) {
+                if *x > cc.cap + 1e-6 {
+                    return Err(format!("alloc {x} > cap {}", cc.cap));
+                }
+                if *x < -1e-12 {
+                    return Err("negative alloc".into());
+                }
+            }
+            // work conserving: either bus exhausted or every cap binding
+            let cap_sum: f64 = cs.iter().map(|cc| cc.cap).sum();
+            let expect = bus.min(cap_sum);
+            prop::approx_eq(total, expect, 1e-6)
+        });
+    }
+}

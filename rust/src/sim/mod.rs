@@ -1,0 +1,514 @@
+//! Discrete-event simulator of a hybrid CPU.
+//!
+//! This is the substitute substrate for the paper's silicon (see DESIGN.md):
+//! it reproduces the *observable* the scheduler feeds on — per-core
+//! execution times under heterogeneous compute rates and shared-bus
+//! memory contention — in deterministic virtual time.
+//!
+//! Model per kernel invocation:
+//! * compute rate of core i: `freq·ops_per_cycle[isa]·efficiency_i(t)`
+//! * memory: weighted waterfill of the shared bus over *currently active*
+//!   cores (weights = MLP proxies, caps = per-core link + actual demand),
+//!   re-solved at every completion event — see [`bw::waterfill`]
+//! * unit progress rate: `min(compute, memory)` roofline combine
+//! * work-stealing plans pay a claim overhead per chunk; every plan pays a
+//!   dispatch (fork/join) overhead per kernel
+//! * optional OU noise + background-load steals ([`noise`])
+
+pub mod bw;
+pub mod noise;
+pub mod xpu;
+
+use std::ops::Range;
+
+use crate::cpu::CpuSpec;
+use crate::exec::{Executor, RunResult, Work};
+use crate::kernels::WorkCost;
+use crate::sched::DispatchPlan;
+use crate::util::rng::Rng;
+
+pub use noise::{BackgroundLoad, NoiseConfig};
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// per-kernel fork/join + partition computation overhead (seconds)
+    pub dispatch_overhead_secs: f64,
+    /// per-chunk claim overhead for chunked/guided plans (seconds)
+    pub chunk_claim_overhead_secs: f64,
+    pub noise: NoiseConfig,
+    /// if true, `Work::run_range` is actually executed (serially, in
+    /// simulated-claim order) so results are real while time is virtual
+    pub execute_real: bool,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            dispatch_overhead_secs: 2.0e-6,
+            chunk_claim_overhead_secs: 1.5e-7,
+            noise: NoiseConfig::default(),
+            execute_real: false,
+            seed: 0xC0FE,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn noiseless() -> Self {
+        SimConfig { noise: NoiseConfig::disabled(), ..Default::default() }
+    }
+}
+
+/// Aggregate statistics over a simulation's lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    pub kernels: u64,
+    pub events: u64,
+    pub total_bytes: f64,
+    pub total_ops: f64,
+}
+
+pub struct HybridSim {
+    pub spec: CpuSpec,
+    pub cfg: SimConfig,
+    noise: noise::NoiseState,
+    rng: Rng,
+    /// virtual time (seconds since simulator creation)
+    pub now: f64,
+    pub stats: SimStats,
+}
+
+struct CoreRun {
+    /// units left in the current chunk (fractional during simulation)
+    remaining: f64,
+    /// absolute virtual time until which the core is paying claim overhead
+    stall_until: f64,
+    units_done: usize,
+    claims: Vec<Range<usize>>,
+    finished_at: Option<f64>,
+    /// partitioned range still to claim (single chunk), if any
+    fixed: Option<Range<usize>>,
+    current: Range<usize>,
+}
+
+impl HybridSim {
+    pub fn new(spec: CpuSpec, cfg: SimConfig) -> HybridSim {
+        spec.validate().expect("invalid CpuSpec");
+        let noise = noise::NoiseState::new(spec.n_cores(), cfg.noise.clone());
+        let rng = Rng::new(cfg.seed);
+        HybridSim { spec, cfg, noise, rng, now: 0.0, stats: SimStats::default() }
+    }
+
+    /// The MLC-like reference: total stream throughput with every core
+    /// pulling flat-out (GB/s).
+    pub fn mlc_bandwidth(&self) -> f64 {
+        let contenders: Vec<bw::Contender> = self
+            .spec
+            .cores
+            .iter()
+            .map(|c| bw::Contender { weight: c.mem_weight, cap: c.mem_bw_gbps })
+            .collect();
+        bw::full_contention_throughput(&contenders, self.spec.bus_bw_gbps)
+    }
+
+    /// Simulate one kernel under `plan`. `work` enables real execution.
+    pub fn execute_plan(
+        &mut self,
+        work: Option<&dyn Work>,
+        cost: &WorkCost,
+        plan: &DispatchPlan,
+    ) -> RunResult {
+        let n = self.spec.n_cores();
+        let total = cost.units;
+        let invocation_start = self.now;
+        self.now += self.cfg.dispatch_overhead_secs;
+        let kernel_start = self.now;
+
+        // ---- initialize per-core chunk sources ----
+        let mut cores: Vec<CoreRun> = (0..n)
+            .map(|_| CoreRun {
+                remaining: 0.0,
+                stall_until: 0.0,
+                units_done: 0,
+                claims: Vec::new(),
+                finished_at: None,
+                fixed: None,
+                current: 0..0,
+            })
+            .collect();
+        let mut cursor = 0usize; // shared claim cursor (chunked/guided)
+        match plan {
+            DispatchPlan::Partitioned(ranges) => {
+                assert!(ranges.len() <= n, "plan for more workers than cores");
+                for (i, r) in ranges.iter().enumerate() {
+                    if !r.is_empty() {
+                        cores[i].fixed = Some(r.clone());
+                    }
+                }
+            }
+            DispatchPlan::Chunked { .. } | DispatchPlan::Guided { .. } => {}
+        }
+        let claim = |cursor: &mut usize, plan: &DispatchPlan, n: usize| -> Option<Range<usize>> {
+            if *cursor >= total {
+                return None;
+            }
+            let size = match plan {
+                DispatchPlan::Chunked { chunk } => *chunk,
+                DispatchPlan::Guided { min_chunk } => {
+                    ((total - *cursor) / (2 * n)).max(*min_chunk)
+                }
+                DispatchPlan::Partitioned(_) => unreachable!(),
+            };
+            let start = *cursor;
+            let end = (start + size).min(total);
+            *cursor = end;
+            Some(start..end)
+        };
+
+        // initial claims
+        for i in 0..n {
+            match plan {
+                DispatchPlan::Partitioned(_) => {
+                    if let Some(r) = cores[i].fixed.take() {
+                        cores[i].remaining = r.len() as f64;
+                        cores[i].current = r.clone();
+                        cores[i].claims.push(r);
+                        cores[i].stall_until = kernel_start;
+                    } else {
+                        cores[i].finished_at = Some(kernel_start);
+                    }
+                }
+                _ => {
+                    if let Some(r) = claim(&mut cursor, plan, n) {
+                        cores[i].remaining = r.len() as f64;
+                        cores[i].current = r.clone();
+                        cores[i].claims.push(r);
+                        cores[i].stall_until = kernel_start + self.cfg.chunk_claim_overhead_secs;
+                    } else {
+                        cores[i].finished_at = Some(kernel_start);
+                    }
+                }
+            }
+        }
+
+        self.now = kernel_start;
+        let mut guard = 0u64;
+        loop {
+            guard += 1;
+            assert!(guard < 50_000_000, "simulator event-loop runaway");
+            let unfinished: Vec<usize> =
+                (0..n).filter(|&i| cores[i].finished_at.is_none()).collect();
+            if unfinished.is_empty() {
+                break;
+            }
+            // rates for running (non-stalled) cores
+            let running: Vec<usize> = unfinished
+                .iter()
+                .copied()
+                .filter(|&i| self.now >= cores[i].stall_until && cores[i].remaining > 0.0)
+                .collect();
+
+            let mut dt = f64::INFINITY;
+            // stalled cores bound dt by their wake-up
+            for &i in &unfinished {
+                if self.now < cores[i].stall_until {
+                    dt = dt.min(cores[i].stall_until - self.now);
+                }
+            }
+
+            let mut rates = vec![0.0f64; n];
+            if !running.is_empty() {
+                // compute rates (units/s) limited by the compute pipeline
+                let comp: Vec<f64> = running
+                    .iter()
+                    .map(|&i| {
+                        let eff = self.noise.efficiency(i, self.now);
+                        if cost.ops_per_unit <= 0.0 {
+                            f64::INFINITY
+                        } else {
+                            self.spec.cores[i].compute_rate(cost.isa) * eff / cost.ops_per_unit
+                        }
+                    })
+                    .collect();
+                if cost.bytes_per_unit > 0.0 {
+                    let contenders: Vec<bw::Contender> = running
+                        .iter()
+                        .zip(&comp)
+                        .map(|(&i, &cr)| {
+                            let demand_gbps = if cr.is_finite() {
+                                (cr * cost.bytes_per_unit / 1e9).min(self.spec.cores[i].mem_bw_gbps)
+                            } else {
+                                self.spec.cores[i].mem_bw_gbps
+                            };
+                            bw::Contender { weight: self.spec.cores[i].mem_weight, cap: demand_gbps }
+                        })
+                        .collect();
+                    let alloc = bw::waterfill(&contenders, self.spec.bus_bw_gbps);
+                    for ((&i, &cr), &bwa) in running.iter().zip(&comp).zip(&alloc) {
+                        let mem_rate = bwa * 1e9 / cost.bytes_per_unit;
+                        rates[i] = cr.min(mem_rate);
+                    }
+                } else {
+                    for (&i, &cr) in running.iter().zip(&comp) {
+                        rates[i] = cr;
+                    }
+                }
+                for &i in &running {
+                    if rates[i] > 0.0 {
+                        if rates[i].is_finite() {
+                            dt = dt.min(cores[i].remaining / rates[i]);
+                        } else {
+                            dt = 0.0;
+                        }
+                    }
+                }
+            }
+            assert!(dt.is_finite(), "no progress possible: all rates zero");
+            self.stats.events += 1;
+
+            // advance
+            self.now += dt;
+            for &i in &running {
+                if rates[i].is_finite() {
+                    cores[i].remaining -= rates[i] * dt;
+                } else {
+                    cores[i].remaining = 0.0;
+                }
+            }
+            // completions + next claims
+            for &i in &unfinished {
+                if self.now >= cores[i].stall_until && cores[i].remaining <= 1e-9 {
+                    cores[i].units_done += cores[i].current.len();
+                    let next = match plan {
+                        DispatchPlan::Partitioned(_) => None,
+                        _ => claim(&mut cursor, plan, n),
+                    };
+                    match next {
+                        Some(r) => {
+                            cores[i].remaining = r.len() as f64;
+                            cores[i].current = r.clone();
+                            cores[i].claims.push(r);
+                            cores[i].stall_until = self.now + self.cfg.chunk_claim_overhead_secs;
+                        }
+                        None => {
+                            cores[i].finished_at = Some(self.now);
+                        }
+                    }
+                }
+            }
+        }
+
+        let wall_end = self.now;
+        // advance the noise process by the kernel's duration
+        let wall = wall_end - invocation_start;
+        self.noise.step(wall.max(1e-9), &mut self.rng);
+
+        self.stats.kernels += 1;
+        self.stats.total_bytes += cost.total_bytes();
+        self.stats.total_ops += cost.total_ops();
+
+        // real execution (serial, in claim order) for correctness paths
+        if self.cfg.execute_real {
+            if let Some(w) = work {
+                for (i, core) in cores.iter().enumerate() {
+                    for r in &core.claims {
+                        w.run_range(i, r.clone());
+                    }
+                }
+            }
+        }
+
+        RunResult {
+            per_core_secs: cores
+                .iter()
+                .map(|c| {
+                    if c.units_done > 0 {
+                        Some(c.finished_at.unwrap() - kernel_start)
+                    } else {
+                        None
+                    }
+                })
+                .collect(),
+            wall_secs: wall,
+            units_done: cores.iter().map(|c| c.units_done).collect(),
+        }
+    }
+}
+
+/// [`Executor`] adapter over the simulator.
+pub struct SimExecutor {
+    pub sim: HybridSim,
+}
+
+impl SimExecutor {
+    pub fn new(spec: CpuSpec, cfg: SimConfig) -> SimExecutor {
+        SimExecutor { sim: HybridSim::new(spec, cfg) }
+    }
+}
+
+impl Executor for SimExecutor {
+    fn n_workers(&self) -> usize {
+        self.sim.spec.n_cores()
+    }
+
+    fn execute(&mut self, work: &dyn Work, plan: &DispatchPlan) -> RunResult {
+        let cost = work.cost();
+        self.sim.execute_plan(Some(work), &cost, plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::presets;
+    use crate::kernels::cost;
+    use crate::sched::{DispatchPlan, DynamicScheduler, Scheduler, StaticEven};
+
+    fn sim(spec: CpuSpec) -> HybridSim {
+        HybridSim::new(spec, SimConfig::noiseless())
+    }
+
+    #[test]
+    fn homogeneous_equal_split_finishes_together() {
+        let mut s = sim(presets::homogeneous(4));
+        let c = cost::gemm_i8_cost(1024, 512, 512);
+        let plan = StaticEven.plan(1024, 1, &[1.0; 4]);
+        let res = s.execute_plan(None, &c, &plan);
+        let times: Vec<f64> = res.per_core_secs.iter().flatten().copied().collect();
+        assert_eq!(times.len(), 4);
+        let (min, max) = times.iter().fold((f64::MAX, 0.0f64), |(a, b), &t| (a.min(t), b.max(t)));
+        assert!((max - min) / max < 1e-9, "times={times:?}");
+        assert!((res.imbalance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compute_time_matches_hand_calculation() {
+        // single P-core of the 12900K: rate = 4.9e9·64 ops/s
+        let spec = presets::core_12900k();
+        let mut s = sim(spec.clone());
+        let c = cost::gemm_i8_cost(64, 256, 256); // compute-bound
+        let plan = DispatchPlan::Partitioned(vec![0..64]); // only core 0
+        let res = s.execute_plan(None, &c, &plan);
+        let t = res.per_core_secs[0].unwrap();
+        let expect = c.total_ops() / spec.cores[0].compute_rate(crate::cpu::Isa::AvxVnni);
+        assert!((t - expect).abs() / expect < 1e-6, "t={t} expect={expect}");
+    }
+
+    #[test]
+    fn static_split_on_hybrid_bound_by_e_core() {
+        let spec = presets::core_12900k();
+        let mut s = sim(spec.clone());
+        let c = cost::gemm_i8_cost(1024, 4096, 4096);
+        let plan = StaticEven.plan(1024, 1, &vec![1.0; 16]);
+        let res = s.execute_plan(None, &c, &plan);
+        // wall is set by the E-cores (last 8), which are ~2.65× slower
+        let tp = res.per_core_secs[0].unwrap();
+        let te = res.per_core_secs[15].unwrap();
+        assert!((te / tp - 2.65).abs() < 0.05, "te/tp={}", te / tp);
+        assert!((res.wall_secs - te).abs() / te < 0.01);
+    }
+
+    #[test]
+    fn ideal_dynamic_split_beats_static_by_calibrated_factor() {
+        let spec = presets::core_12900k();
+        let ratios = spec.ideal_ratios(crate::cpu::Isa::AvxVnni);
+        let c = cost::gemm_i8_cost(1024, 4096, 4096);
+
+        let mut s1 = sim(spec.clone());
+        let static_res = s1.execute_plan(None, &c, &StaticEven.plan(1024, 1, &ratios));
+        let mut s2 = sim(spec.clone());
+        let dyn_res = s2.execute_plan(None, &c, &DynamicScheduler.plan(1024, 1, &ratios));
+
+        let speedup = static_res.wall_secs / dyn_res.wall_secs;
+        // calibration target: paper reports +85% on 12900K
+        assert!((1.70..1.95).contains(&speedup), "speedup={speedup}");
+        // dynamic split is balanced
+        assert!(dyn_res.imbalance() < 1.05, "imbalance={}", dyn_res.imbalance());
+    }
+
+    #[test]
+    fn memory_bound_kernel_is_limited_by_bus() {
+        let spec = presets::core_12900k();
+        let mlc = sim(spec.clone()).mlc_bandwidth();
+        assert!(mlc <= spec.bus_bw_gbps + 1e-9);
+        let mut s = sim(spec.clone());
+        let c = cost::gemv_q4_cost(4096, 4096);
+        let ratios = vec![1.0; 16];
+        let res = s.execute_plan(None, &c, &StaticEven.plan(4096, 1, &ratios));
+        let achieved_gbps = c.total_bytes() / res.wall_secs / 1e9;
+        assert!(achieved_gbps <= mlc + 1e-6, "achieved {achieved_gbps} > mlc {mlc}");
+        // must still achieve a decent fraction (static loses the tail)
+        assert!(achieved_gbps > 0.5 * mlc, "achieved {achieved_gbps} mlc {mlc}");
+    }
+
+    #[test]
+    fn chunked_plan_executes_all_units_and_pays_overhead() {
+        let spec = presets::homogeneous(4);
+        let c = cost::gemm_i8_cost(512, 128, 128);
+        let mut s1 = sim(spec.clone());
+        let res_part = s1.execute_plan(None, &c, &StaticEven.plan(512, 1, &[1.0; 4]));
+        let mut s2 = sim(spec.clone());
+        let res_ws = s2.execute_plan(None, &c, &DispatchPlan::Chunked { chunk: 8 });
+        assert_eq!(res_ws.units_done.iter().sum::<usize>(), 512);
+        // stealing pays claim overheads → slower than a perfect static split
+        // on a homogeneous machine
+        assert!(res_ws.wall_secs > res_part.wall_secs);
+    }
+
+    #[test]
+    fn work_stealing_adapts_on_hybrid_better_than_static() {
+        let spec = presets::core_12900k();
+        let c = cost::gemm_i8_cost(1024, 4096, 4096);
+        let mut s1 = sim(spec.clone());
+        let static_res = s1.execute_plan(None, &c, &StaticEven.plan(1024, 1, &vec![1.0; 16]));
+        let mut s2 = sim(spec.clone());
+        let ws_res = s2.execute_plan(None, &c, &DispatchPlan::Chunked { chunk: 8 });
+        // chunked stealing self-balances (at some overhead): must beat static
+        assert!(ws_res.wall_secs < static_res.wall_secs);
+    }
+
+    #[test]
+    fn execute_real_runs_the_work() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let spec = presets::homogeneous(2);
+        let cfg = SimConfig { execute_real: true, ..SimConfig::noiseless() };
+        let mut ex = SimExecutor::new(spec, cfg);
+        let counter = AtomicUsize::new(0);
+        let work = crate::exec::FnWork::new(cost::copy_cost(100 * 4096), 1, |_w, r| {
+            counter.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        let plan = StaticEven.plan(100, 1, &[1.0; 2]);
+        ex.execute(&work, &plan);
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn virtual_time_accumulates() {
+        let mut s = sim(presets::homogeneous(2));
+        let c = cost::gemm_i8_cost(64, 64, 64);
+        let plan = StaticEven.plan(64, 1, &[1.0; 2]);
+        s.execute_plan(None, &c, &plan);
+        let t1 = s.now;
+        s.execute_plan(None, &c, &plan);
+        assert!((s.now - 2.0 * t1).abs() / s.now < 0.5);
+        assert_eq!(s.stats.kernels, 2);
+    }
+
+    #[test]
+    fn background_load_slows_one_core() {
+        let spec = presets::homogeneous(2);
+        let noise = NoiseConfig {
+            sigma: 0.0,
+            background: vec![BackgroundLoad { core: 1, start: 0.0, end: 1e9, fraction: 0.5 }],
+            ..NoiseConfig::disabled()
+        };
+        let cfg = SimConfig { noise, ..SimConfig::noiseless() };
+        let mut s = HybridSim::new(spec, cfg);
+        let c = cost::gemm_i8_cost(128, 256, 256);
+        let res = s.execute_plan(None, &c, &StaticEven.plan(128, 1, &[1.0; 2]));
+        let t0 = res.per_core_secs[0].unwrap();
+        let t1 = res.per_core_secs[1].unwrap();
+        assert!((t1 / t0 - 2.0).abs() < 0.01, "t1/t0={}", t1 / t0);
+    }
+}

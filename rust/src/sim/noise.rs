@@ -1,0 +1,124 @@
+//! Core-efficiency noise: an Ornstein–Uhlenbeck process around 1.0 plus
+//! optional step "background load" intervals (paper §2.2: the method must
+//! adapt to "sudden changes in the system background").
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct NoiseConfig {
+    /// stationary std-dev of the OU efficiency process (0 disables)
+    pub sigma: f64,
+    /// relaxation time constant (seconds of virtual time)
+    pub tau: f64,
+    /// hard floor/ceiling on efficiency
+    pub min_eff: f64,
+    pub max_eff: f64,
+    /// background loads stealing a fraction of specific cores
+    pub background: Vec<BackgroundLoad>,
+}
+
+impl Default for NoiseConfig {
+    fn default() -> Self {
+        NoiseConfig { sigma: 0.02, tau: 0.02, min_eff: 0.4, max_eff: 1.2, background: Vec::new() }
+    }
+}
+
+impl NoiseConfig {
+    pub fn disabled() -> Self {
+        NoiseConfig { sigma: 0.0, tau: 0.02, min_eff: 0.0, max_eff: 2.0, background: Vec::new() }
+    }
+}
+
+/// A background process stealing `fraction` of core `core`'s cycles
+/// during `[start, end)` virtual seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct BackgroundLoad {
+    pub core: usize,
+    pub start: f64,
+    pub end: f64,
+    pub fraction: f64,
+}
+
+/// Per-core OU efficiency state.
+#[derive(Clone, Debug)]
+pub struct NoiseState {
+    cfg: NoiseConfig,
+    eff: Vec<f64>,
+}
+
+impl NoiseState {
+    pub fn new(n_cores: usize, cfg: NoiseConfig) -> NoiseState {
+        NoiseState { eff: vec![1.0; n_cores], cfg }
+    }
+
+    /// Advance the OU process by `dt` virtual seconds.
+    pub fn step(&mut self, dt: f64, rng: &mut Rng) {
+        if self.cfg.sigma == 0.0 {
+            return;
+        }
+        let a = (-dt / self.cfg.tau).exp();
+        let s = self.cfg.sigma * (1.0 - a * a).sqrt();
+        for e in self.eff.iter_mut() {
+            let z = rng.normal();
+            *e = (1.0 + (*e - 1.0) * a + s * z).clamp(self.cfg.min_eff, self.cfg.max_eff);
+        }
+    }
+
+    /// Effective multiplier of core `i` at virtual time `now`
+    /// (OU noise × background-load steals).
+    pub fn efficiency(&self, i: usize, now: f64) -> f64 {
+        let mut e = self.eff[i];
+        for b in &self.cfg.background {
+            if b.core == i && now >= b.start && now < b.end {
+                e *= (1.0 - b.fraction).max(0.05);
+            }
+        }
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_noise_is_identity() {
+        let mut n = NoiseState::new(4, NoiseConfig::disabled());
+        let mut rng = Rng::new(1);
+        n.step(1.0, &mut rng);
+        for i in 0..4 {
+            assert_eq!(n.efficiency(i, 0.0), 1.0);
+        }
+    }
+
+    #[test]
+    fn ou_stays_within_bounds_and_near_one() {
+        let cfg = NoiseConfig { sigma: 0.05, ..Default::default() };
+        let mut n = NoiseState::new(2, cfg.clone());
+        let mut rng = Rng::new(2);
+        let mut sum = 0.0;
+        let steps = 10_000;
+        for _ in 0..steps {
+            n.step(0.001, &mut rng);
+            let e = n.efficiency(0, 0.0);
+            assert!(e >= cfg.min_eff && e <= cfg.max_eff);
+            sum += e;
+        }
+        let mean = sum / steps as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn background_load_steals_fraction() {
+        let cfg = NoiseConfig {
+            sigma: 0.0,
+            background: vec![BackgroundLoad { core: 1, start: 1.0, end: 2.0, fraction: 0.5 }],
+            ..NoiseConfig::disabled()
+        };
+        let n = NoiseState::new(2, cfg);
+        assert_eq!(n.efficiency(1, 0.5), 1.0); // before
+        assert_eq!(n.efficiency(1, 1.5), 0.5); // during
+        assert_eq!(n.efficiency(1, 2.5), 1.0); // after
+        assert_eq!(n.efficiency(0, 1.5), 1.0); // other core unaffected
+    }
+}

@@ -1,0 +1,137 @@
+//! Minimal dense tensor types used by the native kernels and the model.
+//!
+//! Deliberately small: row-major 2-D f32 matrices plus typed i8/u8 buffers.
+//! (The heavy lifting lives in `kernels/` and `quant/`; this module only
+//! owns layout and bounds logic so kernels stay readable.)
+
+/// Row-major 2-D f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    pub fn zeros(rows: usize, cols: usize) -> MatF32 {
+        MatF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> MatF32 {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        MatF32 { rows, cols, data }
+    }
+
+    /// Deterministic N(0, sigma) init.
+    pub fn randn(rows: usize, cols: usize, sigma: f32, rng: &mut crate::util::rng::Rng) -> MatF32 {
+        let mut m = MatF32::zeros(rows, cols);
+        rng.fill_normal_f32(&mut m.data, sigma);
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Transposed copy (used when marshalling PJRT literals).
+    pub fn transposed(&self) -> MatF32 {
+        let mut out = MatF32::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+}
+
+/// Typed 2-D i8 buffer (quant codes / int8 GEMM operands).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+impl MatI8 {
+    pub fn zeros(rows: usize, cols: usize) -> MatI8 {
+        MatI8 { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// Typed 2-D u8 buffer (unsigned int8 GEMM activations).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatU8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u8>,
+}
+
+impl MatU8 {
+    pub fn zeros(rows: usize, cols: usize) -> MatU8 {
+        MatU8 { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn row_indexing() {
+        let m = MatF32::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.at(1, 2), 6.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let m = MatF32::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(m.transposed().transposed(), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn from_vec_checks_shape() {
+        MatF32::from_vec(vec![0.0; 5], 2, 3);
+    }
+
+    #[test]
+    fn set_get() {
+        let mut m = MatF32::zeros(3, 3);
+        m.set(2, 1, 9.0);
+        assert_eq!(m.at(2, 1), 9.0);
+        assert_eq!(m.row(2), &[0.0, 9.0, 0.0]);
+    }
+}

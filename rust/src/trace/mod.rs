@@ -1,0 +1,139 @@
+//! Performance-ratio trace recording — the observable plotted in the
+//! paper's Figure 4 (one P-core's AVX-VNNI ratio across prefill/decode).
+
+use crate::cpu::Isa;
+use crate::kernels::KernelClass;
+use crate::perf::PerfTable;
+use crate::util::json::Json;
+
+/// One trace sample: the relative ratio of a core after a kernel update.
+#[derive(Clone, Debug)]
+pub struct TraceSample {
+    /// running kernel-invocation index
+    pub kernel_idx: u64,
+    /// virtual (or wall) time of the sample
+    pub time_secs: f64,
+    /// phase label ("prefill" / "decode")
+    pub phase: String,
+    /// ratio of the traced core relative to the slowest core
+    pub ratio: f64,
+}
+
+/// Records the relative ratio of one (core, kernel, ISA) over time.
+#[derive(Clone, Debug)]
+pub struct RatioTrace {
+    pub core: usize,
+    pub class: KernelClass,
+    pub isa: Isa,
+    pub samples: Vec<TraceSample>,
+    next_idx: u64,
+}
+
+impl RatioTrace {
+    pub fn new(core: usize, class: KernelClass, isa: Isa) -> RatioTrace {
+        RatioTrace { core, class, isa, samples: Vec::new(), next_idx: 0 }
+    }
+
+    /// Sample the table after a kernel execution.
+    pub fn record(&mut self, table: &PerfTable, time_secs: f64, phase: &str) {
+        if let Some(rel) = table.relative_ratios(self.class, self.isa) {
+            self.samples.push(TraceSample {
+                kernel_idx: self.next_idx,
+                time_secs,
+                phase: phase.to_string(),
+                ratio: rel[self.core],
+            });
+        }
+        self.next_idx += 1;
+    }
+
+    /// CSV dump (kernel_idx,time_secs,phase,ratio).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("kernel_idx,time_secs,phase,ratio\n");
+        for s in &self.samples {
+            out.push_str(&format!("{},{:.9},{},{:.6}\n", s.kernel_idx, s.time_secs, s.phase, s.ratio));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("core", Json::num(self.core as f64)),
+            ("kernel", Json::str(self.class.name())),
+            ("isa", Json::str(self.isa.name())),
+            (
+                "samples",
+                Json::arr(self.samples.iter().map(|s| {
+                    Json::obj(vec![
+                        ("kernel_idx", Json::num(s.kernel_idx as f64)),
+                        ("time_secs", Json::num(s.time_secs)),
+                        ("phase", Json::str(s.phase.clone())),
+                        ("ratio", Json::num(s.ratio)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// mean ratio over samples in a phase (Fig. 4 summary statistic)
+    pub fn phase_mean(&self, phase: &str) -> Option<f64> {
+        let vals: Vec<f64> =
+            self.samples.iter().filter(|s| s.phase == phase).map(|s| s.ratio).collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::PerfConfig;
+
+    #[test]
+    fn records_relative_ratio() {
+        let mut table = PerfTable::new(2, PerfConfig { alpha: 0.0, init_ratio: 1.0 });
+        let mut trace = RatioTrace::new(0, KernelClass::GemmI8, Isa::AvxVnni);
+        table.update(KernelClass::GemmI8, Isa::AvxVnni, &[Some(1.0), Some(3.0)]);
+        trace.record(&table, 0.5, "prefill");
+        assert_eq!(trace.samples.len(), 1);
+        assert!((trace.samples[0].ratio - 3.0).abs() < 1e-9);
+        assert_eq!(trace.samples[0].phase, "prefill");
+    }
+
+    #[test]
+    fn csv_and_json_shapes() {
+        let mut table = PerfTable::new(2, PerfConfig::default());
+        table.update(KernelClass::GemvQ4, Isa::AvxVnni, &[Some(1.0), Some(2.0)]);
+        let mut trace = RatioTrace::new(0, KernelClass::GemvQ4, Isa::AvxVnni);
+        trace.record(&table, 0.1, "decode");
+        trace.record(&table, 0.2, "decode");
+        let csv = trace.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("kernel_idx,"));
+        let j = trace.to_json();
+        assert_eq!(j.get("samples").unwrap().as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn phase_mean_filters() {
+        let mut table = PerfTable::new(2, PerfConfig { alpha: 0.0, init_ratio: 1.0 });
+        let mut trace = RatioTrace::new(0, KernelClass::GemmI8, Isa::AvxVnni);
+        table.update(KernelClass::GemmI8, Isa::AvxVnni, &[Some(1.0), Some(2.0)]);
+        trace.record(&table, 0.0, "prefill");
+        table.update(KernelClass::GemmI8, Isa::AvxVnni, &[Some(1.0), Some(4.0)]);
+        trace.record(&table, 1.0, "decode");
+        assert!(trace.phase_mean("prefill").unwrap() < trace.phase_mean("decode").unwrap());
+        assert!(trace.phase_mean("warmup").is_none());
+    }
+
+    #[test]
+    fn unseen_table_row_records_nothing() {
+        let table = PerfTable::new(2, PerfConfig::default());
+        let mut trace = RatioTrace::new(0, KernelClass::Copy, Isa::Stream);
+        trace.record(&table, 0.0, "x");
+        assert!(trace.samples.is_empty());
+    }
+}

@@ -1,0 +1,140 @@
+//! Tiny CLI argument parser (clap is not available in this sandbox).
+//!
+//! Supports `command [subcommand] --key value --flag positional...` with
+//! typed getters and an automatic `--help` usage dump.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// program name (argv[0])
+    pub program: String,
+    /// first non-flag token, if any (the subcommand)
+    pub command: Option<String>,
+    /// remaining positional tokens (after the subcommand)
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()`.
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::parse(&argv)
+    }
+
+    /// Parse a full argv (argv[0] is the program).
+    pub fn parse(argv: &[String]) -> Args {
+        let program = argv.first().cloned().unwrap_or_default();
+        let mut command = None;
+        let mut positional = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    options.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(name.to_string());
+                }
+            } else if command.is_none() {
+                command = Some(tok.clone());
+            } else {
+                positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Args { program, command, positional, options, flags }
+    }
+
+    /// String option `--key value` / `--key=value`.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    /// Boolean flag `--key` (no value). A `--key value` form also counts
+    /// as present.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.options.contains_key(key)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.parse_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.parse_or(key, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.opt(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("warning: could not parse --{key} {v:?}; using default");
+                std::process::exit(2)
+            }),
+            None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(tokens: &[&str]) -> Args {
+        let argv: Vec<String> =
+            std::iter::once("prog".to_string()).chain(tokens.iter().map(|s| s.to_string())).collect();
+        Args::parse(&argv)
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = args(&["bench", "gemm", "extra"]);
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["gemm", "extra"]);
+    }
+
+    #[test]
+    fn options_both_forms() {
+        let a = args(&["run", "--preset", "ultra_125h", "--alpha=0.3"]);
+        assert_eq!(a.opt("preset"), Some("ultra_125h"));
+        assert_eq!(a.f64_or("alpha", 0.0), 0.3);
+    }
+
+    #[test]
+    fn flags() {
+        let a = args(&["run", "--json", "--verbose"]);
+        assert!(a.flag("json"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = args(&["x"]);
+        assert_eq!(a.usize_or("iters", 10), 10);
+        assert_eq!(a.f64_or("alpha", 0.3), 0.3);
+        assert_eq!(a.opt_or("preset", "core_12900k"), "core_12900k");
+    }
+
+    #[test]
+    fn flag_followed_by_flag_not_swallowed() {
+        let a = args(&["run", "--json", "--alpha", "0.5"]);
+        assert!(a.flag("json"));
+        assert_eq!(a.f64_or("alpha", 0.0), 0.5);
+    }
+}

@@ -1,0 +1,178 @@
+//! Micro-benchmark harness (criterion is not available in this sandbox).
+//!
+//! Used by the `cargo bench` targets (`harness = false`): warmup, then
+//! timed iterations, reporting mean / p50 / p95 like criterion's summary
+//! line. Virtual-time simulator benches use [`BenchReport::record`]
+//! directly with simulated latencies instead of wall-clock measurement.
+
+use std::hint::black_box as bb;
+use std::time::Instant;
+
+use super::stats::Summary;
+
+pub use std::hint::black_box;
+
+/// Configuration for a wall-clock measurement.
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { warmup_iters: 3, iters: 15 }
+    }
+}
+
+/// One benchmark's collected samples (seconds per iteration).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_secs: Vec<f64>,
+    /// optional work-rate annotations
+    pub bytes_per_iter: Option<u64>,
+    pub ops_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples_secs)
+    }
+
+    /// criterion-style single line.
+    pub fn line(&self) -> String {
+        let s = self.summary();
+        let mut out = format!(
+            "{:<44} time: [{} {} {}]",
+            self.name,
+            fmt_time(s.min),
+            fmt_time(s.p50),
+            fmt_time(s.max),
+        );
+        if let Some(b) = self.bytes_per_iter {
+            out.push_str(&format!("  bw: {:.2} GB/s", b as f64 / s.p50 / 1e9));
+        }
+        if let Some(o) = self.ops_per_iter {
+            out.push_str(&format!("  rate: {:.2} Gops/s", o as f64 / s.p50 / 1e9));
+        }
+        out
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.2} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// A named group of benches that prints as it goes (like criterion).
+pub struct BenchReport {
+    pub group: String,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchReport {
+    pub fn new(group: &str) -> Self {
+        println!("\n=== {group} ===");
+        Self { group: group.to_string(), results: Vec::new() }
+    }
+
+    /// Measure a closure with wall-clock time.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, opts: &BenchOpts, mut f: F) -> &BenchResult {
+        for _ in 0..opts.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(opts.iters);
+        for _ in 0..opts.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.push(BenchResult {
+            name: name.to_string(),
+            samples_secs: samples,
+            bytes_per_iter: None,
+            ops_per_iter: None,
+        })
+    }
+
+    /// Record externally-measured samples (e.g. simulator virtual time).
+    pub fn record(
+        &mut self,
+        name: &str,
+        samples_secs: Vec<f64>,
+        bytes_per_iter: Option<u64>,
+        ops_per_iter: Option<u64>,
+    ) -> &BenchResult {
+        self.push(BenchResult { name: name.to_string(), samples_secs, bytes_per_iter, ops_per_iter })
+    }
+
+    fn push(&mut self, r: BenchResult) -> &BenchResult {
+        println!("{}", r.line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Find a result by exact name.
+    pub fn get(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Print a `a vs b: ×N.NN` comparison row based on p50.
+    pub fn compare(&self, slow: &str, fast: &str) {
+        if let (Some(a), Some(b)) = (self.get(slow), self.get(fast)) {
+            let ratio = a.summary().p50 / b.summary().p50;
+            println!("  speedup {fast} vs {slow}: ×{ratio:.2}");
+        }
+    }
+}
+
+/// Prevent the optimizer from removing a computation.
+pub fn consume<T>(v: T) {
+    bb(v);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_requested_samples() {
+        let mut rep = BenchReport::new("test");
+        let mut acc = 0u64;
+        let r = rep.bench(
+            "noop",
+            &BenchOpts { warmup_iters: 1, iters: 5 },
+            || {
+                acc = acc.wrapping_add(1);
+                consume(acc);
+            },
+        );
+        assert_eq!(r.samples_secs.len(), 5);
+        assert!(r.samples_secs.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn record_and_compare() {
+        let mut rep = BenchReport::new("test2");
+        rep.record("slow", vec![2.0, 2.0, 2.0], Some(1_000_000_000), None);
+        rep.record("fast", vec![1.0, 1.0, 1.0], None, None);
+        assert_eq!(rep.get("slow").unwrap().summary().p50, 2.0);
+        rep.compare("slow", "fast"); // prints ×2.00
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with(" s"));
+    }
+}

@@ -1,0 +1,162 @@
+//! IEEE 754 binary16 conversions, matching numpy's round-to-nearest-even.
+//!
+//! Q4_0 scales are stored as f16; the Rust quantizer must produce *exactly*
+//! the same scale bits as the Python reference (`compile/quant.py`, which
+//! goes through `np.float16`) so that native kernels and PJRT artifacts see
+//! identical weights.
+
+/// Convert f32 → f16 bit pattern with round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | m | ((mant >> 13) as u16 & 0x03FF);
+    }
+
+    // unbiased exponent for f16
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1F {
+        // overflow → inf
+        return sign | 0x7C00;
+    }
+    if e16 <= 0 {
+        // subnormal or zero in f16
+        if e16 < -10 {
+            return sign; // underflow to signed zero
+        }
+        // implicit leading 1 becomes explicit, then shift into subnormal place
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e16) as u32; // 14..24
+        let half = 1u32 << (shift - 1);
+        let rounded = m + half - 1 + ((m >> shift) & 1); // round-half-to-even
+        return sign | (rounded >> shift) as u16;
+    }
+
+    // normal case: round 23-bit mantissa to 10 bits, half-to-even
+    let half = 0x0000_0FFF; // (1 << 13) - 1
+    let rounded = mant + half + ((mant >> 13) & 1);
+    let mut e = e16 as u32;
+    let mut m = rounded >> 13;
+    if m == 0x0400 {
+        // mantissa overflowed into the exponent
+        m = 0;
+        e += 1;
+        if e >= 0x1F {
+            return sign | 0x7C00;
+        }
+    }
+    sign | ((e as u16) << 10) | (m as u16 & 0x03FF)
+}
+
+/// Convert an f16 bit pattern → f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = 127 - 15 + 1;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x03FF) << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → f16 storage → f32 (the precision of a stored Q4_0 scale).
+#[inline]
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(f16_round(x), x, "i={i}");
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // f16 max
+        assert_eq!(f32_to_f16_bits(1e9), 0x7C00); // overflow → +inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(5.9604645e-8), 0x0001); // smallest subnormal
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly half-way between 1.0 and 1+2^-10 → ties to even (1.0)
+        let x = 1.0 + 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(x), 0x3C00);
+        // 1 + 3·2^-11 is half-way between 1+2^-10 and 1+2^-9 → ties to even (1+2^-9)
+        let y = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(y), 0x3C02);
+    }
+
+    #[test]
+    fn subnormal_roundtrip() {
+        let x = 2f32.powi(-20);
+        let r = f16_round(x);
+        assert!((r - x).abs() / x < 0.05, "x={x} r={r}");
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn monotone_on_samples() {
+        // conversion must be monotone (weak) over increasing inputs
+        let mut prev = f16_round(-1000.0);
+        let mut x = -1000.0f32;
+        while x < 1000.0 {
+            let r = f16_round(x);
+            assert!(r >= prev, "x={x}");
+            prev = r;
+            x += 0.37;
+        }
+    }
+
+    #[test]
+    fn matches_reference_grid() {
+        // spot-check against values produced by numpy (precomputed)
+        let cases: &[(f32, u16)] = &[
+            (0.1, 0x2E66),
+            (0.2, 0x3266),
+            (0.3, 0x34CD),
+            (3.14159, 0x4248),
+            (-0.007812599, 0xA000),
+            (1234.5678, 0x64D3),
+        ];
+        for &(x, bits) in cases {
+            assert_eq!(f32_to_f16_bits(x), bits, "x={x}");
+        }
+    }
+}

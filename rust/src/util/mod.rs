@@ -1,0 +1,12 @@
+//! Self-contained substrate utilities (no external crates available in the
+//! sandbox beyond `xla`/`libc`/`anyhow`): PRNG, f16, JSON, CLI parsing,
+//! statistics, a micro-bench harness and a property-test runner.
+
+pub mod argparse;
+pub mod bench;
+pub mod f16;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

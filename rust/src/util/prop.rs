@@ -1,0 +1,100 @@
+//! Minimal property-testing runner (proptest is not available here).
+//!
+//! A property is a closure from a seeded [`Rng`](super::rng::Rng) to
+//! `Result<(), String>`; the runner executes `iters` cases with derived
+//! seeds and reports the failing seed so a case can be replayed exactly.
+//! There is no shrinking — generators should draw *small* sizes directly.
+
+use super::rng::Rng;
+
+pub struct PropConfig {
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // DYNPAR_PROP_SEED / DYNPAR_PROP_ITERS allow replay & heavier runs.
+        let seed = std::env::var("DYNPAR_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xD1A2);
+        let iters = std::env::var("DYNPAR_PROP_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(64);
+        Self { iters, seed }
+    }
+}
+
+/// Run a property; panics with the failing case seed on violation.
+pub fn check<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_with(name, PropConfig::default(), &mut prop)
+}
+
+pub fn check_with<F>(name: &str, cfg: PropConfig, prop: &mut F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut meta = Rng::new(cfg.seed);
+    for case in 0..cfg.iters {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{} (replay: DYNPAR_PROP_SEED with case seed {case_seed:#x}):\n  {msg}",
+                cfg.iters
+            );
+        }
+    }
+}
+
+/// Helper: assert approximate equality inside a property.
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} !≈ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_with("always-true", PropConfig { iters: 10, seed: 1 }, &mut |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_seed() {
+        check_with("always-false", PropConfig { iters: 3, seed: 2 }, &mut |_rng| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn approx_eq_tolerates_scale() {
+        assert!(approx_eq(1000.0, 1000.5, 1e-3).is_ok());
+        assert!(approx_eq(1.0, 2.0, 1e-3).is_err());
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut seq1 = Vec::new();
+        check_with("collect1", PropConfig { iters: 5, seed: 7 }, &mut |rng| {
+            seq1.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seq2 = Vec::new();
+        check_with("collect2", PropConfig { iters: 5, seed: 7 }, &mut |rng| {
+            seq2.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seq1, seq2);
+    }
+}

@@ -1,0 +1,153 @@
+//! Integration: the scheduled inference engine on the tiny real model —
+//! correctness against the serial oracle, phase metrics, table learning,
+//! and generation workflows (the native half of the e2e driver).
+
+use std::sync::Arc;
+
+use dynpar::cpu::presets;
+use dynpar::engine::Engine;
+use dynpar::model::{decode_step_serial, ModelConfig, ModelWeights, Session};
+use dynpar::perf::PerfConfig;
+use dynpar::sched::scheduler_by_name;
+use dynpar::sim::{SimConfig, SimExecutor};
+
+fn engine(sched: &str) -> Engine<SimExecutor> {
+    let cfg = ModelConfig::tiny();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, 42));
+    let exec = SimExecutor::new(
+        presets::ultra_125h(),
+        SimConfig { execute_real: true, ..SimConfig::noiseless() },
+    );
+    Engine::new(cfg, weights, exec, scheduler_by_name(sched).unwrap(), PerfConfig::default())
+}
+
+#[test]
+fn tiny_model_scheduled_equals_serial_over_a_sequence() {
+    let mut e = engine("dynamic");
+    let cfg = e.cfg.clone();
+    let weights = Arc::clone(&e.weights);
+    let mut s_sched = e.new_session();
+    let mut s_serial = Session::new(&cfg);
+    for t in [1u32, 17, 300, 42, 511, 7] {
+        let a = e.decode_step(&mut s_sched, t);
+        let b = decode_step_serial(&cfg, &weights, &mut s_serial, t);
+        assert_eq!(a, b, "divergence at token {t}");
+    }
+}
+
+#[test]
+fn all_schedulers_produce_identical_logits() {
+    // partitioning must never change the numbers, only the timing
+    let mut reference: Option<Vec<f32>> = None;
+    for sched in ["dynamic", "static", "workstealing", "guided"] {
+        let mut e = engine(sched);
+        let mut s = e.new_session();
+        e.prefill(&mut s, &[5, 9, 2, 8]);
+        let logits = e.decode_step(&mut s, 3);
+        match &reference {
+            None => reference = Some(logits),
+            Some(r) => assert_eq!(&logits, r, "scheduler {sched} changed results"),
+        }
+    }
+}
+
+#[test]
+fn generate_end_to_end_with_metrics() {
+    let mut e = engine("dynamic");
+    let prompt: Vec<u32> = (1..=24).collect();
+    let mut s = e.new_session();
+    let (tokens, m) = e.generate(&mut s, &prompt, 16);
+    assert_eq!(tokens.len(), 16);
+    assert_eq!(m.prompt_tokens, 24);
+    assert_eq!(m.decoded_tokens, 16);
+    assert!(m.prefill_secs > 0.0 && m.decode_secs > 0.0);
+    // prefill processes 24 tokens in far less than 24 decode steps' time
+    assert!(m.prefill_secs < m.decode_secs, "prefill {m:?}");
+    assert!(s.pos == 24 + 16);
+}
+
+#[test]
+fn generation_stops_at_kv_capacity() {
+    let mut e = engine("dynamic");
+    let cap = e.cfg.t_max;
+    let mut s = e.new_session();
+    let (tokens, _) = e.generate(&mut s, &[1, 2, 3, 4], cap); // asks for too many
+    assert_eq!(tokens.len(), cap - 4);
+    assert_eq!(s.remaining_capacity(&e.cfg), 0);
+}
+
+#[test]
+fn sessions_are_independent() {
+    let mut e = engine("dynamic");
+    let mut s1 = e.new_session();
+    let mut s2 = e.new_session();
+    let a1 = e.decode_step(&mut s1, 5);
+    let _ = e.decode_step(&mut s2, 400); // different token, separate cache
+    let mut s3 = e.new_session();
+    let a3 = e.decode_step(&mut s3, 5);
+    assert_eq!(a1, a3, "session state leaked");
+}
+
+#[test]
+fn perf_table_transfers_across_requests() {
+    // the table learned on request 1 makes request 2's *first kernel*
+    // already balanced — the paper's persistent-runtime property. (The
+    // table converges within a couple of kernels, so the step-level
+    // timing difference is tiny; the kernel-level difference is not.)
+    use dynpar::exec::PhantomWork;
+    use dynpar::kernels::cost;
+    // compute-bound probe of the trained (GemvQ4, VNNI) row, large enough
+    // that dispatch overhead is negligible
+    let probe = PhantomWork::new(cost::qmatmul_cost(64, 4096, 4096));
+
+    let mut cold_engine = engine("dynamic");
+    let cold = cold_engine.rt.run(&probe).wall_secs; // flat table
+
+    let mut warm_engine = engine("dynamic");
+    let mut s1 = warm_engine.new_session();
+    warm_engine.generate(&mut s1, &[1, 2, 3, 4], 4); // request 1 trains the table
+    let warm = warm_engine.rt.run(&probe).wall_secs; // learned table persists
+    assert!(warm < cold * 0.9, "no cross-request learning: cold {cold} → warm {warm}");
+    // and the learned ratios are visibly hybrid
+    let rel = warm_engine
+        .rt
+        .relative_ratios(dynpar::kernels::KernelClass::GemvQ4, dynpar::cpu::Isa::AvxVnni)
+        .unwrap();
+    assert!(rel[0] > 1.2, "ratios not learned: {rel:?}");
+}
+
+#[test]
+fn int_gemv_mode_generates_plausible_tokens() {
+    let mut ef = engine("dynamic");
+    let mut ei = engine("dynamic");
+    ei.opts.int_gemv = true;
+    let prompt = [3u32, 1, 4, 1, 5];
+    let mut sf = ef.new_session();
+    let mut si = ei.new_session();
+    let (tf, _) = ef.generate(&mut sf, &prompt, 8);
+    let (ti, _) = ei.generate(&mut si, &prompt, 8);
+    // int path is quantized so tokens may differ eventually, but the
+    // first tokens (largest logit margins) should coincide
+    assert_eq!(tf[0], ti[0], "f32 {tf:?} vs int {ti:?}");
+}
+
+#[test]
+fn micro_model_full_pipeline_on_12900k() {
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, 9));
+    let exec = SimExecutor::new(
+        presets::core_12900k(),
+        SimConfig { execute_real: true, ..SimConfig::noiseless() },
+    );
+    let mut e = Engine::new(
+        cfg,
+        weights,
+        exec,
+        scheduler_by_name("dynamic").unwrap(),
+        PerfConfig::default(),
+    );
+    let mut s = e.new_session();
+    let (tokens, m) = e.generate(&mut s, &[1, 2, 3], 10);
+    assert_eq!(tokens.len(), 10);
+    assert!(m.decode_tokens_per_sec() > 0.0);
+}

@@ -1,0 +1,194 @@
+//! Cross-module property tests: randomized invariants over the scheduler,
+//! perf table, simulator and quantization working *together*.
+
+use dynpar::cpu::presets;
+use dynpar::exec::{ParallelRuntime, PhantomWork};
+use dynpar::kernels::{cost, KernelClass, WorkCost};
+use dynpar::perf::{PerfConfig, PerfTable};
+use dynpar::sched::{scheduler_by_name, DispatchPlan, Scheduler};
+use dynpar::sim::{HybridSim, SimConfig, SimExecutor};
+use dynpar::util::prop::{self, PropConfig};
+
+fn rand_cost(rng: &mut dynpar::util::rng::Rng) -> WorkCost {
+    match rng.below(3) {
+        0 => cost::gemm_i8_cost(
+            (1 + rng.below(64)) as usize * 16,
+            (1 + rng.below(32)) as usize * 64,
+            (1 + rng.below(32)) as usize * 64,
+        ),
+        1 => cost::gemv_q4_cost(
+            (1 + rng.below(64)) as usize * 64,
+            (1 + rng.below(64)) as usize * 64,
+        ),
+        _ => cost::attention_decode_cost(
+            (1 + rng.below(32)) as usize,
+            (1 + rng.below(512)) as usize,
+            64,
+        ),
+    }
+}
+
+#[test]
+fn prop_simulated_work_is_conserved() {
+    // whatever the plan, every unit is executed exactly once
+    prop::check_with(
+        "sim_work_conserved",
+        PropConfig { iters: 40, seed: 0xABCD },
+        &mut |rng| {
+            let spec = presets::preset_by_name(
+                ["core_12900k", "ultra_125h", "homogeneous_16"][rng.below(3) as usize],
+            )
+            .unwrap();
+            let n = spec.n_cores();
+            let c = rand_cost(rng);
+            let plan = match rng.below(3) {
+                0 => {
+                    let ratios: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 5.0)).collect();
+                    scheduler_by_name("dynamic").unwrap().plan(c.units, 1, &ratios)
+                }
+                1 => DispatchPlan::Chunked { chunk: 1 + rng.below(64) as usize },
+                _ => DispatchPlan::Guided { min_chunk: 1 + rng.below(16) as usize },
+            };
+            let mut sim = HybridSim::new(spec, SimConfig::noiseless());
+            let res = sim.execute_plan(None, &c, &plan);
+            let done: usize = res.units_done.iter().sum();
+            if done != c.units {
+                return Err(format!("{done} of {} units", c.units));
+            }
+            if !res.wall_secs.is_finite() || res.wall_secs <= 0.0 {
+                return Err(format!("bad wall {}", res.wall_secs));
+            }
+            // per-core times bounded by wall
+            for t in res.per_core_secs.iter().flatten() {
+                if *t > res.wall_secs + 1e-9 {
+                    return Err(format!("core time {t} > wall {}", res.wall_secs));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dynamic_never_loses_to_static_after_convergence() {
+    prop::check_with(
+        "dynamic_dominates",
+        PropConfig { iters: 15, seed: 0xBEEF },
+        &mut |rng| {
+            let preset = ["core_12900k", "ultra_125h"][rng.below(2) as usize];
+            let spec = presets::preset_by_name(preset).unwrap();
+            let c = rand_cost(rng);
+            let work = PhantomWork::new(c);
+            let mut dy = ParallelRuntime::new(
+                SimExecutor::new(spec.clone(), SimConfig::noiseless()),
+                scheduler_by_name("dynamic").unwrap(),
+                PerfConfig::default(),
+            );
+            let mut st = ParallelRuntime::new(
+                SimExecutor::new(spec, SimConfig::noiseless()),
+                scheduler_by_name("static").unwrap(),
+                PerfConfig::default(),
+            );
+            let mut t_dy = 0.0;
+            let mut t_st = 0.0;
+            for _ in 0..10 {
+                t_dy = dy.run(&work).wall_secs;
+                t_st = st.run(&work).wall_secs;
+            }
+            // allow 1% slack for rounding of tiny partitions
+            if t_dy <= t_st * 1.01 {
+                Ok(())
+            } else {
+                Err(format!("dynamic {t_dy} > static {t_st} for {c:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_perf_table_converges_for_any_rates() {
+    prop::check_with(
+        "table_converges",
+        PropConfig { iters: 30, seed: 0xF00D },
+        &mut |rng| {
+            let n = 2 + rng.below(14) as usize;
+            let rates: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 8.0)).collect();
+            let mut table = PerfTable::new(
+                n,
+                PerfConfig { alpha: rng.uniform(0.0, 0.6), init_ratio: 1.0 },
+            );
+            for _ in 0..60 {
+                let pr = table.ratios(KernelClass::GemvQ4, dynpar::cpu::Isa::AvxVnni).to_vec();
+                let sum: f64 = pr.iter().sum();
+                let times: Vec<Option<f64>> =
+                    (0..n).map(|i| Some((pr[i] / sum) / rates[i])).collect();
+                table.update(KernelClass::GemvQ4, dynpar::cpu::Isa::AvxVnni, &times);
+            }
+            let rel = table.relative_ratios(KernelClass::GemvQ4, dynpar::cpu::Isa::AvxVnni).unwrap();
+            let min_rate = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+            for (i, r) in rel.iter().enumerate() {
+                let expect = rates[i] / min_rate;
+                if (r - expect).abs() / expect > 0.02 {
+                    return Err(format!("core {i}: ratio {r} vs expected {expect}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quant_kernel_roundtrip_under_partition() {
+    // gemv result is identical regardless of how rows are partitioned
+    use dynpar::kernels::gemv_q4::{gemv_q4_f32, gemv_q4_f32_range};
+    use dynpar::quant::MatQ4;
+    prop::check_with(
+        "gemv_partition_invariant",
+        PropConfig { iters: 25, seed: 0x9A9A },
+        &mut |rng| {
+            let n = (1 + rng.below(8)) as usize * 32;
+            let k = (1 + rng.below(8)) as usize * 32;
+            let mut wdata = vec![0.0f32; n * k];
+            rng.fill_normal_f32(&mut wdata, 1.0);
+            let w = MatQ4::quantize(&wdata, n, k);
+            let mut x = vec![0.0f32; k];
+            rng.fill_normal_f32(&mut x, 1.0);
+            let whole = gemv_q4_f32(&w, &x);
+            // random 3-way partition
+            let a = rng.below(n as u64 + 1) as usize;
+            let b = a + rng.below((n - a) as u64 + 1) as usize;
+            let mut y = vec![0.0f32; n];
+            gemv_q4_f32_range(&w, &x, &mut y, 0..a);
+            gemv_q4_f32_range(&w, &x, &mut y, a..b);
+            gemv_q4_f32_range(&w, &x, &mut y, b..n);
+            if y == whole {
+                Ok(())
+            } else {
+                Err(format!("partition ({a},{b}) changed the result"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_virtual_time_is_monotone_and_additive() {
+    prop::check_with(
+        "sim_time_monotone",
+        PropConfig { iters: 20, seed: 0x7777 },
+        &mut |rng| {
+            let spec = presets::ultra_125h();
+            let mut sim = HybridSim::new(spec, SimConfig::noiseless());
+            let mut prev = 0.0;
+            for _ in 0..5 {
+                let c = rand_cost(rng);
+                let plan = DispatchPlan::Chunked { chunk: 8 };
+                sim.execute_plan(None, &c, &plan);
+                if sim.now < prev {
+                    return Err(format!("time went backwards {prev} → {}", sim.now));
+                }
+                prev = sim.now;
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,123 @@
+//! Integration: the L2/L1 PJRT path against the native engine — the
+//! cross-layer parity tests that prove the three-layer stack composes.
+//! All tests skip gracefully if `make artifacts` hasn't run.
+
+use std::sync::Arc;
+
+use dynpar::cpu::presets;
+use dynpar::engine::Engine;
+use dynpar::model::{ModelConfig, ModelWeights};
+use dynpar::perf::PerfConfig;
+use dynpar::runtime::{artifacts::default_artifact_dir, Manifest, PjrtEngine};
+use dynpar::sched::DynamicScheduler;
+use dynpar::sim::{SimConfig, SimExecutor};
+
+fn manifest() -> Option<Manifest> {
+    let dir = default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(dir).unwrap())
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn native_engine(cfg: &ModelConfig, weights: &Arc<ModelWeights>) -> Engine<SimExecutor> {
+    let exec = SimExecutor::new(
+        presets::ultra_125h(),
+        SimConfig { execute_real: true, ..SimConfig::noiseless() },
+    );
+    Engine::new(
+        cfg.clone(),
+        Arc::clone(weights),
+        exec,
+        Box::new(DynamicScheduler),
+        PerfConfig::default(),
+    )
+}
+
+#[test]
+fn micro_decode_logits_parity() {
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, 17));
+    let mut pjrt = PjrtEngine::load(&m, "micro", &weights).unwrap();
+    let mut native = native_engine(&cfg, &weights);
+    let mut session = native.new_session();
+    for (i, t) in [5u32, 9, 100, 2].iter().enumerate() {
+        let ln = native.decode_step(&mut session, *t);
+        let lp = pjrt.decode_step(*t).unwrap();
+        assert_eq!(ln.len(), lp.len());
+        let denom = ln.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-3);
+        for (a, b) in ln.iter().zip(&lp) {
+            assert!(
+                (a - b).abs() / denom < 2e-4,
+                "step {i}: native {a} vs pjrt {b} (denom {denom})"
+            );
+        }
+    }
+}
+
+#[test]
+fn micro_prefill_chunk_parity() {
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, 23));
+    let mut pjrt = PjrtEngine::load(&m, "micro", &weights).unwrap();
+    let mut native = native_engine(&cfg, &weights);
+    let prompt: Vec<u32> = (1..=cfg.prefill_len as u32).collect();
+    let mut session = native.new_session();
+    let ln = native.prefill(&mut session, &prompt);
+    let lp = pjrt.prefill_chunk(&prompt).unwrap();
+    let denom = ln.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-3);
+    for (a, b) in ln.iter().zip(&lp) {
+        assert!((a - b).abs() / denom < 2e-4, "native {a} vs pjrt {b}");
+    }
+}
+
+#[test]
+fn tiny_generation_token_parity() {
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::tiny();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, 0));
+    let mut pjrt = PjrtEngine::load(&m, "tiny", &weights).unwrap();
+    let mut native = native_engine(&cfg, &weights);
+    let prompt: Vec<u32> = (1..=20).collect(); // 16-chunk + 4 decode-tail
+    let mut session = native.new_session();
+    let (tn, _) = native.generate(&mut session, &prompt, 10);
+    let tp = pjrt.generate(&prompt, 10).unwrap();
+    assert_eq!(tn, tp, "generated tokens diverged");
+}
+
+#[test]
+fn pjrt_engine_reset_reproduces() {
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, 31));
+    let mut pjrt = PjrtEngine::load(&m, "micro", &weights).unwrap();
+    let a = pjrt.generate(&[1, 2, 3], 5).unwrap();
+    pjrt.reset().unwrap();
+    let b = pjrt.generate(&[1, 2, 3], 5).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn pjrt_engine_enforces_capacity() {
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, 37));
+    let mut pjrt = PjrtEngine::load(&m, "micro", &weights).unwrap();
+    for t in 0..cfg.t_max {
+        pjrt.decode_step((t % cfg.vocab) as u32).unwrap();
+    }
+    assert!(pjrt.decode_step(0).is_err(), "should refuse past t_max");
+}
+
+#[test]
+fn prefill_chunk_arity_is_validated() {
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, 41));
+    let mut pjrt = PjrtEngine::load(&m, "micro", &weights).unwrap();
+    assert!(pjrt.prefill_chunk(&[1, 2, 3]).is_err(), "wrong chunk size must fail");
+}

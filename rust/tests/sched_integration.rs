@@ -1,0 +1,183 @@
+//! Integration: the full dynamic-parallel loop (scheduler + perf table +
+//! simulator) under the scenarios the paper claims to handle — cold start,
+//! convergence, background-load changes, scheduler comparisons.
+
+use dynpar::cpu::{presets, Isa};
+use dynpar::exec::{ParallelRuntime, PhantomWork};
+use dynpar::kernels::{cost, KernelClass};
+use dynpar::perf::PerfConfig;
+use dynpar::sched::scheduler_by_name;
+use dynpar::sim::{BackgroundLoad, NoiseConfig, SimConfig, SimExecutor};
+
+fn runtime(preset: &str, sched: &str, sim_cfg: SimConfig) -> ParallelRuntime<SimExecutor> {
+    let spec = presets::preset_by_name(preset).unwrap();
+    ParallelRuntime::new(
+        SimExecutor::new(spec, sim_cfg),
+        scheduler_by_name(sched).unwrap(),
+        PerfConfig::default(),
+    )
+}
+
+#[test]
+fn cold_start_converges_within_a_few_kernels() {
+    let mut rt = runtime("core_12900k", "dynamic", SimConfig::noiseless());
+    let work = PhantomWork::new(cost::gemm_i8_cost(1024, 4096, 4096));
+    let first = rt.run(&work).wall_secs;
+    let mut last = first;
+    for _ in 0..6 {
+        last = rt.run(&work).wall_secs;
+    }
+    // paper: "quickly adapt … during program startup"
+    assert!(first / last > 1.6, "first {first} last {last}");
+    let final_imbalance = rt.run(&work).imbalance();
+    assert!(final_imbalance < 1.03, "imbalance {final_imbalance}");
+}
+
+#[test]
+fn adapts_to_sudden_background_load() {
+    // paper §2.2: "maximize CPU performance … when there are sudden
+    // changes in the system background"
+    let noise = NoiseConfig {
+        sigma: 0.0,
+        background: vec![BackgroundLoad { core: 0, start: 0.08, end: 1e9, fraction: 0.5 }],
+        ..NoiseConfig::disabled()
+    };
+    let mut rt = runtime("core_12900k", "dynamic", SimConfig { noise, ..SimConfig::noiseless() });
+    let work = PhantomWork::new(cost::gemm_i8_cost(1024, 4096, 4096));
+    // converge while clean
+    let mut clean = f64::INFINITY;
+    while rt.exec.sim.now < 0.08 {
+        clean = clean.min(rt.run(&work).wall_secs);
+    }
+    // hit the perturbation, then re-converge
+    let mut post = Vec::new();
+    for _ in 0..25 {
+        post.push(rt.run(&work).wall_secs);
+    }
+    let spike = post.iter().cloned().fold(0.0, f64::max);
+    let settled = post[post.len() - 3..].iter().sum::<f64>() / 3.0;
+    // losing half of one P-core costs ~4.5% of total throughput;
+    // after re-convergence we must be close to that ideal, not the spike
+    let ideal_loss = 1.0 + 0.5 * 2.65 / 29.2; // half a P-core of Σ ratios
+    assert!(spike > settled * 1.05, "no visible spike? {post:?}");
+    assert!(
+        settled < clean * ideal_loss * 1.03,
+        "did not re-balance: settled {settled} clean {clean}"
+    );
+    // the learned ratio of core 0 dropped to ~half of its P-core peers
+    let rel = rt.relative_ratios(KernelClass::GemmI8, Isa::AvxVnni).unwrap();
+    assert!(
+        (rel[0] / rel[1] - 0.5).abs() < 0.05,
+        "core0/core1 ratio {:?}",
+        rel[0] / rel[1]
+    );
+}
+
+#[test]
+fn dynamic_wins_on_both_paper_cpus_for_both_regimes() {
+    for preset in ["core_12900k", "ultra_125h"] {
+        for (label, c) in [
+            ("gemm", cost::gemm_i8_cost(1024, 4096, 4096)),
+            ("gemv", cost::gemv_q4_cost(4096, 4096)),
+        ] {
+            let work = PhantomWork::new(c);
+            let mut stat = runtime(preset, "static", SimConfig::noiseless());
+            let mut dynm = runtime(preset, "dynamic", SimConfig::noiseless());
+            let mut t_static = 0.0;
+            let mut t_dyn = 0.0;
+            for _ in 0..12 {
+                t_static = stat.run(&work).wall_secs;
+                t_dyn = dynm.run(&work).wall_secs;
+            }
+            assert!(
+                t_dyn < t_static,
+                "{preset}/{label}: dynamic {t_dyn} not faster than static {t_static}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dynamic_matches_static_on_homogeneous_cpu() {
+    // the control: no imbalance → no benefit, but also no regression
+    let work = PhantomWork::new(cost::gemm_i8_cost(1024, 4096, 4096));
+    let mut stat = runtime("homogeneous_16", "static", SimConfig::noiseless());
+    let mut dynm = runtime("homogeneous_16", "dynamic", SimConfig::noiseless());
+    let mut t_static = 0.0;
+    let mut t_dyn = 0.0;
+    for _ in 0..8 {
+        t_static = stat.run(&work).wall_secs;
+        t_dyn = dynm.run(&work).wall_secs;
+    }
+    assert!((t_dyn / t_static - 1.0).abs() < 0.01, "dyn {t_dyn} vs static {t_static}");
+}
+
+#[test]
+fn dynamic_beats_workstealing_on_small_kernels() {
+    // the paper's argument against parallel_for-style stealing: per-chunk
+    // claim overhead hurts short (decode GEMV) kernels
+    let work = PhantomWork::new(cost::gemv_q4_cost(4096, 4096));
+    let mut ws = runtime("ultra_125h", "workstealing", SimConfig::default());
+    let mut dy = runtime("ultra_125h", "dynamic", SimConfig::default());
+    let mut t_ws = 0.0;
+    let mut t_dy = 0.0;
+    for _ in 0..20 {
+        t_ws = ws.run(&work).wall_secs;
+        t_dy = dy.run(&work).wall_secs;
+    }
+    assert!(t_dy <= t_ws * 1.05, "dynamic {t_dy} vs workstealing {t_ws}");
+}
+
+#[test]
+fn per_isa_tables_learn_independently() {
+    let mut rt = runtime("ultra_125h", "dynamic", SimConfig::noiseless());
+    let gemm = PhantomWork::new(cost::gemm_i8_cost(512, 2048, 2048)); // VNNI
+    let attn = PhantomWork::new(cost::attention_decode_cost(32, 512, 128)); // AVX2
+    for _ in 0..10 {
+        rt.run(&gemm);
+        rt.run(&attn);
+    }
+    let vnni = rt.relative_ratios(KernelClass::GemmI8, Isa::AvxVnni).unwrap();
+    let avx2 = rt.relative_ratios(KernelClass::Attention, Isa::Avx2).unwrap();
+    // both learned hybrid ratios, but different ones (different ISA mix)
+    assert!(vnni[0] > 1.5 && avx2[0] > 1.5, "vnni {vnni:?} avx2 {avx2:?}");
+    assert!((vnni[0] - avx2[0]).abs() > 0.1, "vnni {} avx2 {}", vnni[0], avx2[0]);
+}
+
+#[test]
+fn noisy_simulation_stays_stable() {
+    // OU noise on: latencies jitter but never diverge, ratios stay sane
+    let mut rt = runtime("core_12900k", "dynamic", SimConfig::default());
+    let work = PhantomWork::new(cost::gemm_i8_cost(1024, 4096, 4096));
+    let mut walls = Vec::new();
+    for _ in 0..40 {
+        walls.push(rt.run(&work).wall_secs);
+    }
+    let best = walls.iter().cloned().fold(f64::INFINITY, f64::min);
+    let worst_late = walls[10..].iter().cloned().fold(0.0, f64::max);
+    assert!(worst_late < best * 1.25, "diverged: best {best}, late worst {worst_late}");
+    let rel = rt.relative_ratios(KernelClass::GemmI8, Isa::AvxVnni).unwrap();
+    assert!((2.0..3.5).contains(&rel[0]), "ratio {rel:?}");
+}
+
+#[test]
+fn host_pool_runs_the_full_loop_end_to_end() {
+    // real threads (1 host core): correctness of the loop, not timing
+    use dynpar::exec::{Executor, FnWork};
+    use dynpar::pool::HostPool;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let pool = HostPool::new(4);
+    let mut rt =
+        ParallelRuntime::new(pool, scheduler_by_name("dynamic").unwrap(), PerfConfig::default());
+    assert_eq!(rt.exec.n_workers(), 4);
+    let counter = AtomicUsize::new(0);
+    for _ in 0..10 {
+        let work = FnWork::new(cost::gemv_q4_cost(256, 1024), 1, |_w, r| {
+            counter.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        rt.run(&work);
+    }
+    assert_eq!(counter.load(Ordering::Relaxed), 10 * 1024);
+    assert!(rt.table.update_count() > 0);
+}

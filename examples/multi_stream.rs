@@ -1,0 +1,138 @@
+//! Multi-stream serving demo: the coordinator leases disjoint,
+//! topology-aware core subsets to two concurrent decode streams, beats the
+//! one-big-engine baseline on aggregate throughput, then detects a
+//! background load from measured per-core times and rebalances the leases
+//! around it.
+//!
+//! Run: `cargo run --release --example multi_stream`
+
+use dynpar::coordinator::{AllocPolicy, Coordinator, Lease};
+use dynpar::cpu::{presets, CoreKind, CpuSpec};
+use dynpar::engine::phantom::{decode_invocations, PhantomSystem};
+use dynpar::exec::{ParallelRuntime, PhantomWork};
+use dynpar::kernels::cost;
+use dynpar::model::ModelConfig;
+use dynpar::perf::PerfConfig;
+use dynpar::sched::DynamicScheduler;
+use dynpar::sim::{NoiseConfig, SimConfig, SimExecutor};
+
+fn lease_runtime(machine: &CpuSpec, lease: &Lease, degraded: &[usize]) -> ParallelRuntime<SimExecutor> {
+    let noise = NoiseConfig {
+        sigma: 0.0,
+        background: lease.background_for(degraded, 0.5),
+        ..NoiseConfig::disabled()
+    };
+    ParallelRuntime::new(
+        lease.sim_executor(machine, SimConfig { noise, ..SimConfig::noiseless() }),
+        Box::new(DynamicScheduler),
+        PerfConfig::default(),
+    )
+}
+
+fn lease_label(machine: &CpuSpec, lease: &Lease) -> String {
+    let p = lease.cores.iter().filter(|&&c| machine.cores[c].kind == CoreKind::Performance).count();
+    let e = lease.cores.iter().filter(|&&c| machine.cores[c].kind == CoreKind::Efficiency).count();
+    format!("stream {} → cores {:?} ({p}P+{e}E)", lease.stream, lease.cores)
+}
+
+fn main() {
+    let machine = presets::core_12900k();
+    let cfg = ModelConfig::micro();
+    let sys = PhantomSystem::neural_speed();
+    let steps = 32;
+
+    println!("machine: {} ({} cores)\n", machine.name, machine.n_cores());
+
+    // ---- part 1: two concurrent decode streams vs one big engine ----
+    let mut serial = ParallelRuntime::new(
+        SimExecutor::new(machine.clone(), SimConfig::noiseless()),
+        Box::new(DynamicScheduler),
+        PerfConfig::default(),
+    );
+    for _ in 0..2 {
+        for step in 0..steps {
+            for c in decode_invocations(&cfg, &sys, step) {
+                serial.run(&PhantomWork::new(c));
+            }
+        }
+    }
+    let t_serial = serial.exec.sim.now;
+    println!("one all-core engine, 2 streams serialized: {:.3} ms", t_serial * 1e3);
+
+    let mut coord = Coordinator::new(machine.clone(), AllocPolicy::Balanced);
+    coord.admit(0);
+    coord.admit(1);
+    let leases: Vec<Lease> = coord.leases().cloned().collect();
+    let mut walls = Vec::new();
+    for lease in &leases {
+        println!("  {}", lease_label(&machine, lease));
+        let mut rt = lease_runtime(&machine, lease, &[]);
+        for step in 0..steps {
+            for c in decode_invocations(&cfg, &sys, step) {
+                rt.run(&PhantomWork::new(c));
+            }
+        }
+        walls.push(rt.exec.sim.now);
+    }
+    let t_coord = walls.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "coordinated leases, 2 streams concurrent:  {:.3} ms  → aggregate speedup x{:.2}\n",
+        t_coord * 1e3,
+        t_serial / t_coord
+    );
+
+    // ---- part 2: background load hits stream 0's P-cores; rebalance ----
+    let probe = PhantomWork::new(cost::gemm_i8_cost(256, 1024, 1024));
+    let degraded: Vec<usize> = leases[0]
+        .cores
+        .iter()
+        .copied()
+        .filter(|&g| machine.cores[g].kind == CoreKind::Performance)
+        .collect();
+    println!("background process steals 50% of cores {degraded:?} (stream 0's P-cores)");
+
+    let mut last = Vec::new();
+    for lease in &leases {
+        let mut rt = lease_runtime(&machine, lease, &degraded);
+        let mut wall = 0.0;
+        for _ in 0..12 {
+            let res = rt.run(&probe);
+            coord.observe(lease, &res);
+            wall = res.wall_secs;
+        }
+        last.push(wall);
+    }
+    println!(
+        "before rebalance: stream 0 kernel {:.1} µs, stream 1 kernel {:.1} µs (x{:.2} skew)",
+        last[0] * 1e6,
+        last[1] * 1e6,
+        last[0] / last[1]
+    );
+
+    coord.rebalance();
+    let new_leases: Vec<Lease> = coord.leases().cloned().collect();
+    println!("rebalanced from measured per-core strength:");
+    let mut post = Vec::new();
+    for lease in &new_leases {
+        println!("  {}", lease_label(&machine, lease));
+        let mut rt = lease_runtime(&machine, lease, &degraded);
+        let mut wall = 0.0;
+        for _ in 0..12 {
+            let res = rt.run(&probe);
+            coord.observe(lease, &res);
+            wall = res.wall_secs;
+        }
+        post.push(wall);
+    }
+    println!(
+        "after rebalance:  stream 0 kernel {:.1} µs, stream 1 kernel {:.1} µs",
+        post[0] * 1e6,
+        post[1] * 1e6
+    );
+    let pre_max = last[0].max(last[1]);
+    let post_max = post[0].max(post[1]);
+    println!(
+        "slowest stream improved x{:.2}; the degraded cores are now shared evenly,\nso no tenant is stuck behind the background load.",
+        pre_max / post_max
+    );
+}

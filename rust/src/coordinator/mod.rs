@@ -1,1 +1,594 @@
-// paper's L3 coordination contribution
+//! Multi-stream **coordinator** — the serving-level half of the paper's
+//! coordination story (its §2 runtime balances one kernel across all cores;
+//! this module decides *which cores each concurrent stream gets* before that
+//! per-kernel proportional split runs).
+//!
+//! The [`Coordinator`] owns the machine's core set ([`CpuSpec`]) and hands
+//! each admitted stream a [`Lease`]: a disjoint, topology-aware subset of
+//! physical cores plus a proportional share of the shared memory bus. The
+//! lease materializes as an executor — [`Lease::sim_executor`] for the
+//! deterministic hybrid-CPU simulator, [`Lease::host_pool`] for real
+//! core-pinned threads — so one `Engine`/`ParallelRuntime` per stream runs
+//! the paper's dynamic loop *inside* its lease while the coordinator
+//! rebalances *between* leases.
+//!
+//! Rebalancing reuses the paper's own mechanism one level up: every
+//! [`Coordinator::observe`] folds a kernel's measured per-core rates into a
+//! per-core **strength** table with the same mass-preserving EWMA as
+//! `perf::PerfTable` (eq. 2), and [`Coordinator::rebalance`] re-partitions
+//! cores so each stream's total strength is as equal as the topology
+//! allows. A background process stealing half of one lease's P-cores is
+//! therefore detected from timing alone and answered by spreading the
+//! degraded cores across streams (see `rust/tests/coordinator_integration.rs`).
+//!
+//! Allocation invariants (property-tested in `rust/tests/prop_invariants.rs`):
+//! * leases are pairwise **disjoint**;
+//! * their union **covers** every core of the machine (work-conserving);
+//! * under [`AllocPolicy::Balanced`] with uniform strengths, each core
+//!   *kind* (P / E / LPE) is split across streams to within one core
+//!   (**topology-aware** — every stream gets its fair share of fast cores);
+//! * no lease is empty while another holds two or more cores.
+//!
+//! Strength values are mass-preserving *within* a lease per observation
+//! (only co-measured cores are comparable, exactly like the paper's ratio
+//! table); cross-lease drift washes out over successive rebalances as core
+//! membership mixes.
+
+use std::collections::BTreeMap;
+
+use crate::cpu::{CoreKind, CpuSpec, Isa};
+use crate::exec::RunResult;
+use crate::pool::HostPool;
+use crate::sched::largest_remainder_split;
+use crate::sim::bw::{waterfill, Contender};
+use crate::sim::{BackgroundLoad, SimConfig, SimExecutor};
+
+/// Caller-chosen identity of one serving stream.
+pub type StreamId = u64;
+
+/// The memory-bus bandwidth (GB/s) the given cores can claim for
+/// themselves: proportional to their waterfilled allocation when every core
+/// of the machine streams flat out. Leasing *all* cores returns the full
+/// bus, so a single-stream lease behaves exactly like the raw machine.
+pub fn bus_share(machine: &CpuSpec, cores: &[usize]) -> f64 {
+    let contenders: Vec<Contender> = machine
+        .cores
+        .iter()
+        .map(|c| Contender { weight: c.mem_weight, cap: c.mem_bw_gbps })
+        .collect();
+    let alloc = waterfill(&contenders, machine.bus_bw_gbps);
+    let total: f64 = alloc.iter().sum();
+    if total <= 0.0 {
+        return machine.bus_bw_gbps;
+    }
+    let share: f64 = cores.iter().map(|&i| alloc[i]).sum();
+    machine.bus_bw_gbps * share / total
+}
+
+/// A disjoint reservation of physical cores for one stream.
+///
+/// Leases are snapshots: any membership change or rebalance bumps the
+/// coordinator [`Coordinator::epoch`] and re-issues every lease, so holders
+/// compare `lease.epoch` against `coordinator.epoch()` and rebuild their
+/// executor when it lags.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lease {
+    pub stream: StreamId,
+    /// global core ids (indices into the machine spec), ascending
+    pub cores: Vec<usize>,
+    /// allocation epoch this lease was issued under
+    pub epoch: u64,
+}
+
+impl Lease {
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// True when the machine had fewer cores than streams and this stream
+    /// is waiting for capacity. Empty leases must not build executors.
+    pub fn is_empty(&self) -> bool {
+        self.cores.is_empty()
+    }
+
+    /// Global core id of lease-local worker `local`.
+    pub fn global_core(&self, local: usize) -> usize {
+        self.cores[local]
+    }
+
+    /// Lease-local worker index of global core `global`, if leased here.
+    pub fn local_index(&self, global: usize) -> Option<usize> {
+        self.cores.iter().position(|&c| c == global)
+    }
+
+    /// The executor-facing sub-machine: leased cores re-indexed `0..n`
+    /// with this lease's proportional share of the memory bus.
+    pub fn spec(&self, machine: &CpuSpec) -> CpuSpec {
+        machine.subset(&self.cores, bus_share(machine, &self.cores))
+    }
+
+    /// Simulator executor over exactly the leased cores.
+    pub fn sim_executor(&self, machine: &CpuSpec, cfg: SimConfig) -> SimExecutor {
+        SimExecutor::new(self.spec(machine), cfg)
+    }
+
+    /// Real-thread executor: one worker per leased core, pinned to the
+    /// lease's *global* core ids.
+    pub fn host_pool(&self) -> HostPool {
+        HostPool::with_cores(&self.cores)
+    }
+
+    /// Background-load entries for this lease's simulator: one per leased
+    /// core whose *global* id appears in `degraded_globals`, mapped to the
+    /// lease-local index and stealing `fraction` of that core's cycles for
+    /// the whole run. Cores of `degraded_globals` leased elsewhere are
+    /// ignored — the load follows the physical core, not the lease.
+    pub fn background_for(&self, degraded_globals: &[usize], fraction: f64) -> Vec<BackgroundLoad> {
+        self.cores
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| degraded_globals.contains(g))
+            .map(|(local, _)| BackgroundLoad { core: local, start: 0.0, end: 1e9, fraction })
+            .collect()
+    }
+}
+
+/// How the coordinator partitions cores across streams.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Split every core kind evenly across streams and balance measured
+    /// strength — fair multi-tenant serving (default).
+    #[default]
+    Balanced,
+    /// Give the strongest cores to the earliest-admitted streams in
+    /// contiguous blocks — latency-tiered serving.
+    Packed,
+}
+
+/// Owns the machine's cores and leases disjoint subsets to streams.
+pub struct Coordinator {
+    spec: CpuSpec,
+    policy: AllocPolicy,
+    /// EWMA gain α for strength updates (weight of the old value, like
+    /// `PerfConfig::alpha`; paper uses 0.3).
+    pub alpha: f64,
+    /// per-core measured strength, seeded from the spec's ideal VNNI
+    /// compute ratios (slowest core = 1.0)
+    strength: Vec<f64>,
+    /// admitted streams in admission order
+    streams: Vec<StreamId>,
+    leases: BTreeMap<StreamId, Lease>,
+    epoch: u64,
+}
+
+impl Coordinator {
+    pub fn new(spec: CpuSpec, policy: AllocPolicy) -> Coordinator {
+        spec.validate().expect("invalid CpuSpec");
+        let strength = spec.ideal_ratios(Isa::AvxVnni);
+        Coordinator { spec, policy, alpha: 0.3, strength, streams: Vec::new(), leases: BTreeMap::new(), epoch: 0 }
+    }
+
+    pub fn machine(&self) -> &CpuSpec {
+        &self.spec
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Bumped on every admit/finish/rebalance; stale leases carry an older
+    /// value and must be refreshed via [`Coordinator::lease`].
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Current measured per-core strengths (global core order).
+    pub fn strengths(&self) -> &[f64] {
+        &self.strength
+    }
+
+    /// Admit a new stream and return its lease. Re-partitions every
+    /// existing lease (epoch bump). Panics on a duplicate stream id.
+    pub fn admit(&mut self, stream: StreamId) -> Lease {
+        assert!(!self.streams.contains(&stream), "stream {stream} already admitted");
+        self.streams.push(stream);
+        self.assign();
+        self.leases[&stream].clone()
+    }
+
+    /// Release a stream's cores back to the pool (no-op for unknown ids);
+    /// remaining leases grow to cover the machine again.
+    pub fn finish(&mut self, stream: StreamId) {
+        let before = self.streams.len();
+        self.streams.retain(|&s| s != stream);
+        if self.streams.len() != before {
+            self.assign();
+        }
+    }
+
+    /// The current lease of `stream`, if admitted.
+    pub fn lease(&self, stream: StreamId) -> Option<&Lease> {
+        self.leases.get(&stream)
+    }
+
+    /// All current leases (stream-id order).
+    pub fn leases(&self) -> impl Iterator<Item = &Lease> {
+        self.leases.values()
+    }
+
+    /// Fold one kernel's measured per-core result back into the strength
+    /// table. `lease` must be the exact lease the measuring executor was
+    /// built from: the result's local→global core mapping is only valid
+    /// for it, so results measured under a stale lease (the coordinator
+    /// re-partitioned since — different epoch or cores) or an unknown
+    /// stream are silently dropped rather than mis-attributed to cores
+    /// the stream no longer owns. Mirrors the paper's eq. 2:
+    /// participating cores' rates are rescaled so their strength mass is
+    /// preserved, then EWMA-filtered with `alpha`. A single participant
+    /// carries no relative information and is skipped.
+    pub fn observe(&mut self, lease: &Lease, res: &RunResult) {
+        match self.leases.get(&lease.stream) {
+            Some(current) if current == lease => {}
+            _ => return, // stale or foreign lease
+        }
+        let mut mass = 0.0f64;
+        let mut rates: Vec<(usize, f64)> = Vec::new();
+        for (local, t) in res.per_core_secs.iter().enumerate() {
+            let Some(t) = t else { continue };
+            let units = res.units_done.get(local).copied().unwrap_or(0);
+            if *t > 0.0 && units > 0 && local < lease.cores.len() {
+                let g = lease.global_core(local);
+                mass += self.strength[g];
+                rates.push((g, units as f64 / t));
+            }
+        }
+        if rates.len() < 2 {
+            return;
+        }
+        let rate_sum: f64 = rates.iter().map(|(_, r)| r).sum();
+        if !(rate_sum.is_finite() && rate_sum > 0.0 && mass > 0.0) {
+            return;
+        }
+        let scale = mass / rate_sum;
+        for (g, r) in rates {
+            self.strength[g] = self.alpha * self.strength[g] + (1.0 - self.alpha) * r * scale;
+        }
+    }
+
+    /// Re-partition cores across the admitted streams using the current
+    /// strengths (epoch bump). Call after enough [`Coordinator::observe`]s
+    /// have shifted the table — e.g. when a background load is detected.
+    pub fn rebalance(&mut self) {
+        self.assign();
+    }
+
+    fn assign(&mut self) {
+        self.epoch += 1;
+        self.leases.clear();
+        let k = self.streams.len();
+        if k == 0 {
+            return;
+        }
+        let mut cores_per_stream: Vec<Vec<usize>> = vec![Vec::new(); k];
+        let mut strength_sum = vec![0.0f64; k];
+
+        match self.policy {
+            AllocPolicy::Packed => {
+                let mut order: Vec<usize> = (0..self.spec.n_cores()).collect();
+                order.sort_by(|&a, &b| {
+                    self.strength[b].partial_cmp(&self.strength[a]).unwrap().then(a.cmp(&b))
+                });
+                let sizes = largest_remainder_split(order.len(), &vec![1.0; k]);
+                let mut cursor = 0;
+                for (s, &sz) in sizes.iter().enumerate() {
+                    for &core in &order[cursor..cursor + sz] {
+                        cores_per_stream[s].push(core);
+                        strength_sum[s] += self.strength[core];
+                    }
+                    cursor += sz;
+                }
+            }
+            AllocPolicy::Balanced => {
+                for kind in [CoreKind::Performance, CoreKind::Efficiency, CoreKind::LowPower] {
+                    let mut pool: Vec<usize> = self
+                        .spec
+                        .cores
+                        .iter()
+                        .filter(|c| c.kind == kind)
+                        .map(|c| c.id)
+                        .collect();
+                    if pool.is_empty() {
+                        continue;
+                    }
+                    // strongest first; ties toward the lower core id
+                    pool.sort_by(|&a, &b| {
+                        self.strength[b].partial_cmp(&self.strength[a]).unwrap().then(a.cmp(&b))
+                    });
+                    // every stream gets its fair share of this kind (±1)
+                    let mut quota = largest_remainder_split(pool.len(), &vec![1.0; k]);
+                    for &core in &pool {
+                        // among streams with quota left, the weakest so far;
+                        // ties toward admission order
+                        let mut best: Option<usize> = None;
+                        for s in 0..k {
+                            if quota[s] == 0 {
+                                continue;
+                            }
+                            best = match best {
+                                None => Some(s),
+                                Some(b) if strength_sum[s] < strength_sum[b] - 1e-12 => Some(s),
+                                other => other,
+                            };
+                        }
+                        let s = best.expect("kind quotas sum to the kind's core count");
+                        quota[s] -= 1;
+                        cores_per_stream[s].push(core);
+                        strength_sum[s] += self.strength[core];
+                    }
+                }
+            }
+        }
+
+        // repair: no stream may be empty while another holds ≥ 2 cores
+        // (possible when a kind has fewer cores than there are streams)
+        loop {
+            let Some(empty) = (0..k).find(|&s| cores_per_stream[s].is_empty()) else { break };
+            let rich = (0..k)
+                .filter(|&s| cores_per_stream[s].len() >= 2)
+                .max_by(|&a, &b| {
+                    cores_per_stream[a]
+                        .len()
+                        .cmp(&cores_per_stream[b].len())
+                        .then(strength_sum[a].partial_cmp(&strength_sum[b]).unwrap().then(b.cmp(&a)))
+                });
+            let Some(rich) = rich else { break };
+            let pos = (0..cores_per_stream[rich].len())
+                .min_by(|&i, &j| {
+                    let (a, b) = (cores_per_stream[rich][i], cores_per_stream[rich][j]);
+                    self.strength[a].partial_cmp(&self.strength[b]).unwrap().then(a.cmp(&b))
+                })
+                .unwrap();
+            let core = cores_per_stream[rich].remove(pos);
+            strength_sum[rich] -= self.strength[core];
+            strength_sum[empty] += self.strength[core];
+            cores_per_stream[empty].push(core);
+        }
+
+        for (s, &stream) in self.streams.iter().enumerate() {
+            let mut cores = std::mem::take(&mut cores_per_stream[s]);
+            cores.sort_unstable();
+            self.leases.insert(stream, Lease { stream, cores, epoch: self.epoch });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::presets;
+
+    fn kinds(spec: &CpuSpec, lease: &Lease, kind: CoreKind) -> usize {
+        lease.cores.iter().filter(|&&c| spec.cores[c].kind == kind).count()
+    }
+
+    fn assert_disjoint_covering(c: &Coordinator) {
+        let mut seen = vec![false; c.machine().n_cores()];
+        for lease in c.leases() {
+            for &core in &lease.cores {
+                assert!(!seen[core], "core {core} leased twice");
+                seen[core] = true;
+            }
+        }
+        if c.n_streams() > 0 {
+            assert!(seen.iter().all(|&s| s), "not covering: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn single_stream_gets_the_whole_machine() {
+        let spec = presets::core_12900k();
+        let mut c = Coordinator::new(spec.clone(), AllocPolicy::Balanced);
+        let lease = c.admit(7);
+        assert_eq!(lease.cores, (0..16).collect::<Vec<_>>());
+        // full machine → full bus: lease spec behaves like the raw machine
+        let sub = lease.spec(&spec);
+        assert_eq!(sub.n_cores(), 16);
+        assert!((sub.bus_bw_gbps - spec.bus_bw_gbps).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_streams_split_both_kinds_evenly() {
+        let spec = presets::core_12900k();
+        let mut c = Coordinator::new(spec.clone(), AllocPolicy::Balanced);
+        let l0 = c.admit(0);
+        let l1 = c.lease(1).cloned();
+        assert!(l1.is_none());
+        let l1 = c.admit(1);
+        // l0 from admit(0) is stale (epoch moved); refresh
+        assert!(l0.epoch < c.epoch());
+        let l0 = c.lease(0).unwrap().clone();
+        assert_disjoint_covering(&c);
+        for l in [&l0, &l1] {
+            assert_eq!(l.n_cores(), 8);
+            assert_eq!(kinds(&spec, l, CoreKind::Performance), 4);
+            assert_eq!(kinds(&spec, l, CoreKind::Efficiency), 4);
+            // equal halves of an equal-weight machine → half the bus
+            let sub = l.spec(&spec);
+            assert!((sub.bus_bw_gbps - spec.bus_bw_gbps / 2.0).abs() < 1e-9, "{}", sub.bus_bw_gbps);
+        }
+    }
+
+    #[test]
+    fn three_streams_on_125h_are_topology_aware() {
+        let spec = presets::ultra_125h();
+        let mut c = Coordinator::new(spec.clone(), AllocPolicy::Balanced);
+        for s in 0..3 {
+            c.admit(s);
+        }
+        assert_disjoint_covering(&c);
+        for lease in c.leases() {
+            assert!(!lease.is_empty());
+            // 4 P / 3 streams → 1–2 each; 8 E → 2–3 each; 2 LPE → 0–1
+            let p = kinds(&spec, lease, CoreKind::Performance);
+            let e = kinds(&spec, lease, CoreKind::Efficiency);
+            assert!((1..=2).contains(&p), "P={p}");
+            assert!((2..=3).contains(&e), "E={e}");
+        }
+    }
+
+    #[test]
+    fn finish_returns_cores_to_the_survivors() {
+        let mut c = Coordinator::new(presets::core_12900k(), AllocPolicy::Balanced);
+        c.admit(0);
+        c.admit(1);
+        let epoch = c.epoch();
+        c.finish(0);
+        assert!(c.epoch() > epoch);
+        assert!(c.lease(0).is_none());
+        assert_eq!(c.lease(1).unwrap().n_cores(), 16);
+        // unknown stream: quiet no-op, no epoch churn
+        let epoch = c.epoch();
+        c.finish(99);
+        assert_eq!(c.epoch(), epoch);
+    }
+
+    #[test]
+    fn packed_policy_tiers_the_fast_cores() {
+        let spec = presets::core_12900k();
+        let mut c = Coordinator::new(spec.clone(), AllocPolicy::Packed);
+        c.admit(0);
+        c.admit(1);
+        assert_disjoint_covering(&c);
+        let l0 = c.lease(0).unwrap();
+        let l1 = c.lease(1).unwrap();
+        // stream 0 holds all 8 P-cores, stream 1 all 8 E-cores
+        assert_eq!(kinds(&spec, l0, CoreKind::Performance), 8);
+        assert_eq!(kinds(&spec, l1, CoreKind::Efficiency), 8);
+    }
+
+    #[test]
+    fn more_streams_than_a_kind_still_covers_without_empties() {
+        // 2P + 2E sub-machine, 3 streams: per-kind quotas alone would leave
+        // stream 2 empty; the repair pass must fill it
+        let machine = presets::core_12900k().subset(&[0, 1, 8, 9], 17.0);
+        let mut c = Coordinator::new(machine, AllocPolicy::Balanced);
+        for s in 0..3 {
+            c.admit(s);
+        }
+        assert_disjoint_covering(&c);
+        for lease in c.leases() {
+            assert!(!lease.is_empty(), "empty lease {:?}", lease);
+        }
+    }
+
+    #[test]
+    fn more_streams_than_cores_leaves_overflow_waiting() {
+        let machine = presets::core_12900k().subset(&[0, 8], 8.0);
+        let mut c = Coordinator::new(machine, AllocPolicy::Balanced);
+        for s in 0..3 {
+            c.admit(s);
+        }
+        assert_disjoint_covering(&c);
+        let empties = c.leases().filter(|l| l.is_empty()).count();
+        assert_eq!(empties, 1);
+        let total: usize = c.leases().map(|l| l.n_cores()).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn observe_learns_a_slow_core_and_rebalance_spreads_it() {
+        // homogeneous 4-core machine, 2 streams → 2 cores each
+        let machine = presets::homogeneous(4);
+        let mut c = Coordinator::new(machine, AllocPolicy::Balanced);
+        c.admit(0);
+        c.admit(1);
+        let l0 = c.lease(0).unwrap().clone();
+        // stream 0's first core runs at half rate: equal units, double time
+        for _ in 0..20 {
+            let res = RunResult {
+                per_core_secs: vec![Some(2.0), Some(1.0)],
+                wall_secs: 2.0,
+                units_done: vec![100, 100],
+            };
+            c.observe(&l0, &res);
+        }
+        let slow = l0.global_core(0);
+        let fast = l0.global_core(1);
+        assert!(
+            c.strengths()[slow] < 0.6 * c.strengths()[fast],
+            "strengths {:?}",
+            c.strengths()
+        );
+        c.rebalance();
+        assert_disjoint_covering(&c);
+        // the slow core's lease also holds the strongest remaining core —
+        // strength sums are balanced, not left lopsided
+        let sums: Vec<f64> = c
+            .leases()
+            .map(|l| l.cores.iter().map(|&g| c.strengths()[g]).sum::<f64>())
+            .collect();
+        let (a, b) = (sums[0], sums[1]);
+        assert!((a - b).abs() / a.max(b) < 0.35, "sums {sums:?}");
+    }
+
+    #[test]
+    fn observe_ignores_degenerate_and_stale_results() {
+        let mut c = Coordinator::new(presets::homogeneous(4), AllocPolicy::Balanced);
+        let l0 = c.admit(0);
+        let before = c.strengths().to_vec();
+        // single participant: no relative information
+        c.observe(
+            &l0,
+            &RunResult {
+                per_core_secs: vec![Some(1.0), None, None, None],
+                wall_secs: 1.0,
+                units_done: vec![10, 0, 0, 0],
+            },
+        );
+        // lease for a stream the coordinator never admitted: ignored
+        let foreign = Lease { stream: 9, cores: vec![0, 1], epoch: 0 };
+        let skewed = RunResult {
+            per_core_secs: vec![Some(1.0), Some(4.0)],
+            wall_secs: 4.0,
+            units_done: vec![100, 100],
+        };
+        c.observe(&foreign, &skewed);
+        assert_eq!(c.strengths(), &before[..]);
+        // stale lease: admitting stream 1 re-partitions, so a result
+        // measured under the old 4-core lease must not be mis-mapped onto
+        // the new 2-core lease's globals
+        c.admit(1);
+        let before = c.strengths().to_vec();
+        c.observe(&l0, &skewed);
+        assert_eq!(c.strengths(), &before[..]);
+        // the refreshed lease is accepted
+        let fresh = c.lease(0).unwrap().clone();
+        c.observe(&fresh, &skewed);
+        assert_ne!(c.strengths(), &before[..]);
+    }
+
+    #[test]
+    fn background_for_maps_globals_to_lease_locals() {
+        let lease = Lease { stream: 0, cores: vec![1, 4, 9, 12], epoch: 1 };
+        // global 4 → local 1, global 12 → local 3; global 5 leased elsewhere
+        let bg = lease.background_for(&[4, 12, 5], 0.5);
+        let cores: Vec<usize> = bg.iter().map(|b| b.core).collect();
+        assert_eq!(cores, vec![1, 3]);
+        assert!(bg.iter().all(|b| b.fraction == 0.5 && b.start == 0.0 && b.end == 1e9));
+        assert!(lease.background_for(&[], 0.5).is_empty());
+    }
+
+    #[test]
+    fn lease_local_global_maps_roundtrip() {
+        let mut c = Coordinator::new(presets::ultra_125h(), AllocPolicy::Balanced);
+        c.admit(0);
+        c.admit(1);
+        for lease in c.leases() {
+            for local in 0..lease.n_cores() {
+                let g = lease.global_core(local);
+                assert_eq!(lease.local_index(g), Some(local));
+            }
+            assert_eq!(lease.local_index(999), None);
+        }
+    }
+}

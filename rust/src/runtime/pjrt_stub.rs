@@ -1,0 +1,84 @@
+//! API-compatible stand-in for the PJRT engine, used when the
+//! `xla-bindings` feature is off (the default — the `xla` crate is not
+//! available in this sandbox).
+//!
+//! Every constructor fails with a clear message instead of executing, so
+//! code paths that *require* the artifacts (`dynpar infer --backend pjrt`,
+//! the parity integration tests) degrade into explicit errors / skips
+//! rather than compile failures. The real implementation lives in
+//! `pjrt.rs` behind the feature gate.
+
+use anyhow::{bail, Result};
+
+use super::artifacts::{ArtifactMeta, Manifest};
+use crate::model::{ModelConfig, ModelWeights};
+
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable: dynpar was built without the `xla-bindings` feature";
+
+/// One compiled artifact (stub: never constructible without XLA).
+pub struct PjrtModel {
+    pub meta: ArtifactMeta,
+}
+
+impl PjrtModel {
+    /// Execute with positional literals — unavailable in the stub.
+    pub fn execute_unavailable(&self) -> Result<()> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// A generation engine backed entirely by PJRT artifacts: the L2/L1 path.
+/// In the stub build, [`PjrtEngine::load`] always returns an error.
+pub struct PjrtEngine {
+    pub cfg: ModelConfig,
+    pub pos: usize,
+}
+
+impl PjrtEngine {
+    /// Load the `<model>_decode` / `<model>_prefill` artifacts — always an
+    /// error without the `xla-bindings` feature.
+    pub fn load(_manifest: &Manifest, _model: &str, _weights: &ModelWeights) -> Result<PjrtEngine> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Clear the KV cache and cursor.
+    pub fn reset(&mut self) -> Result<()> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// One decode step at the current position.
+    pub fn decode_step(&mut self, _token: u32) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// One fixed-size prefill chunk (exactly `cfg.prefill_len` tokens).
+    pub fn prefill_chunk(&mut self, _tokens: &[u32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Prefill an arbitrary prompt.
+    pub fn prefill(&mut self, _tokens: &[u32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Greedy generation; returns the produced tokens.
+    pub fn generate(&mut self, _prompt: &[u32], _n_new: usize) -> Result<Vec<u32>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn stub_load_fails_with_clear_message() {
+        let manifest = Manifest { dir: std::path::PathBuf::from("."), artifacts: Vec::new() };
+        let cfg = ModelConfig::micro();
+        let weights = ModelWeights::random_init(&cfg, 1);
+        let err = PjrtEngine::load(&manifest, "micro", &weights).unwrap_err();
+        assert!(err.to_string().contains("xla-bindings"), "{err}");
+    }
+}

@@ -1,13 +1,22 @@
 //! Threaded TCP serving front-end: request router + dynamic batcher over
-//! one shared [`Engine`].
+//! one or more [`Engine`]s.
 //!
-//! Client handlers parse JSON-lines requests into a shared queue; a single
-//! engine thread drains the queue in batches (up to `max_batch`), prefills
-//! each request, then interleaves decode steps round-robin across the
-//! batch, streaming tokens back as they are produced. The perf-ratio table
-//! lives in the engine and keeps adapting across requests — exactly the
-//! paper's "quickly adapt … whether during program startup or when there
-//! are sudden changes" property, surfaced as a service.
+//! Client handlers parse JSON-lines requests into a shared admission
+//! queue; each engine runs on its own thread, draining the queue in
+//! batches (up to `max_batch`), prefilling each request, then interleaving
+//! decode steps round-robin across its batch, streaming tokens back as
+//! they are produced. The perf-ratio table lives in each engine and keeps
+//! adapting across requests — exactly the paper's "quickly adapt …
+//! whether during program startup or when there are sudden changes"
+//! property, surfaced as a service.
+//!
+//! With [`serve`] a single engine owns every core (the seed behavior).
+//! With [`serve_multi`] the server runs one engine **per coordinator
+//! lease** ([`crate::coordinator`]): each engine's executor is restricted
+//! to its leased core subset, and admission is effectively round-robin —
+//! whichever lease's engine goes idle first claims the next waiting
+//! requests — so concurrent streams decode in parallel on disjoint cores
+//! instead of serializing through one all-core engine.
 
 pub mod protocol;
 
@@ -52,10 +61,11 @@ struct ServerMetrics {
 }
 
 impl ServerMetrics {
-    fn to_json(&self) -> Json {
+    fn to_json(&self, n_engines: usize) -> Json {
         let mut fields = vec![
             ("requests", Json::num(self.requests as f64)),
             ("tokens", Json::num(self.tokens as f64)),
+            ("engines", Json::num(n_engines as f64)),
         ];
         if let Some(s) = self.prefill.summary() {
             fields.push(("prefill_p50_secs", Json::num(s.p50)));
@@ -72,6 +82,8 @@ struct Shared {
     cv: Condvar,
     shutdown: AtomicBool,
     metrics: Mutex<ServerMetrics>,
+    /// engine threads draining the queue (1 = classic single-engine server)
+    n_engines: usize,
 }
 
 /// A running server; dropping the handle shuts it down.
@@ -95,9 +107,23 @@ impl ServerHandle {
 /// port). The engine runs on its own thread; handlers are per-connection.
 pub fn serve<E: Executor + Send + 'static>(
     addr: &str,
-    mut engine: Engine<E>,
+    engine: Engine<E>,
     opts: ServerOpts,
 ) -> std::io::Result<ServerHandle> {
+    serve_multi(addr, vec![engine], opts)
+}
+
+/// Start serving a fleet of engines — typically one per coordinator lease,
+/// each restricted to a disjoint core subset — on `addr`. Every engine
+/// gets its own batcher thread; all of them drain one shared admission
+/// queue, so the first idle engine claims the next waiting requests
+/// (round-robin admission under sustained load).
+pub fn serve_multi<E: Executor + Send + 'static>(
+    addr: &str,
+    engines: Vec<Engine<E>>,
+    opts: ServerOpts,
+) -> std::io::Result<ServerHandle> {
+    assert!(!engines.is_empty(), "need at least one engine");
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     let bound = listener.local_addr()?;
@@ -106,12 +132,13 @@ pub fn serve<E: Executor + Send + 'static>(
         cv: Condvar::new(),
         shutdown: AtomicBool::new(false),
         metrics: Mutex::new(ServerMetrics::default()),
+        n_engines: engines.len(),
     });
 
     let mut threads = Vec::new();
 
-    // ---- engine/batcher thread ----
-    {
+    // ---- engine/batcher threads (one per lease) ----
+    for mut engine in engines {
         let shared = Arc::clone(&shared);
         threads.push(std::thread::spawn(move || loop {
             let batch: Vec<Pending> = {
@@ -257,7 +284,7 @@ fn handle_client(stream: TcpStream, shared: &Arc<Shared>) -> std::io::Result<()>
         }
         match protocol::parse_client_line(line.trim()) {
             Ok(ClientMessage::Metrics) => {
-                let snap = shared.metrics.lock().unwrap().to_json();
+                let snap = shared.metrics.lock().unwrap().to_json(shared.n_engines);
                 writeln!(writer, "{}", Json::obj(vec![("metrics", snap)]).dump())?;
             }
             Ok(ClientMessage::Generate(req)) => {
@@ -374,6 +401,53 @@ mod tests {
         let m = metrics[0].get("metrics").unwrap();
         assert_eq!(m.get("requests").unwrap().as_i64(), Some(4));
         handle.shutdown();
+    }
+
+    #[test]
+    fn multi_engine_server_matches_single_engine_tokens() {
+        use crate::coordinator::{AllocPolicy, Coordinator};
+        // two lease-restricted engines over disjoint halves of the machine
+        let machine = presets::core_12900k();
+        let cfg = ModelConfig::micro();
+        let weights = Arc::new(ModelWeights::random_init(&cfg, 3));
+        let mut coord = Coordinator::new(machine.clone(), AllocPolicy::Balanced);
+        coord.admit(0);
+        coord.admit(1);
+        let engines: Vec<Engine<SimExecutor>> = coord
+            .leases()
+            .map(|l| {
+                let exec = l.sim_executor(
+                    &machine,
+                    SimConfig { execute_real: true, ..SimConfig::noiseless() },
+                );
+                Engine::new(
+                    cfg.clone(),
+                    Arc::clone(&weights),
+                    exec,
+                    Box::new(DynamicScheduler),
+                    PerfConfig::default(),
+                )
+            })
+            .collect();
+        assert_eq!(engines.len(), 2);
+        let multi = serve_multi("127.0.0.1:0", engines, ServerOpts { max_batch: 2 }).unwrap();
+        let single = serve("127.0.0.1:0", test_engine(), ServerOpts::default()).unwrap();
+        // same weights + same prompt → identical tokens no matter which
+        // lease's engine serves the request (partitioning never changes
+        // the numbers, only the timing)
+        let req = r#"{"id": 1, "prompt": [4, 2], "max_new_tokens": 5}"#;
+        let toks = |msgs: &[Json]| {
+            msgs.iter().filter_map(|m| m.get("token").and_then(Json::as_i64)).collect::<Vec<_>>()
+        };
+        let a = toks(&send_request(multi.addr, req));
+        let b = toks(&send_request(single.addr, req));
+        assert_eq!(a.len(), 5);
+        assert_eq!(a, b);
+        let metrics = send_request(multi.addr, r#"{"cmd":"metrics"}"#);
+        let m = metrics[0].get("metrics").unwrap();
+        assert_eq!(m.get("engines").unwrap().as_i64(), Some(2));
+        multi.shutdown();
+        single.shutdown();
     }
 
     #[test]

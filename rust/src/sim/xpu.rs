@@ -13,7 +13,7 @@ use super::bw::{waterfill, Contender};
 use super::{HybridSim, SimConfig};
 use crate::cpu::CpuSpec;
 use crate::kernels::WorkCost;
-use crate::sched::{DispatchPlan, DynamicScheduler, Scheduler};
+use crate::sched::{DynamicScheduler, Scheduler};
 
 /// An accelerator on the same SoC (NPU / iGPU class).
 #[derive(Clone, Debug)]

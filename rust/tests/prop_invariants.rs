@@ -1,7 +1,9 @@
 //! Cross-module property tests: randomized invariants over the scheduler,
-//! perf table, simulator and quantization working *together*.
+//! perf table, simulator, coordinator and quantization working *together*.
 
+use dynpar::coordinator::{AllocPolicy, Coordinator};
 use dynpar::cpu::presets;
+use dynpar::cpu::CoreKind;
 use dynpar::exec::{ParallelRuntime, PhantomWork};
 use dynpar::kernels::{cost, KernelClass, WorkCost};
 use dynpar::perf::{PerfConfig, PerfTable};
@@ -166,6 +168,203 @@ fn prop_quant_kernel_roundtrip_under_partition() {
             } else {
                 Err(format!("partition ({a},{b}) changed the result"))
             }
+        },
+    );
+}
+
+/// Every core belongs to exactly one lease (disjoint + covering), no lease
+/// is empty while streams fit on the machine, and under equal strengths
+/// the Balanced policy splits each core kind across streams to within one
+/// core — the coordinator's topology-aware fairness invariant.
+#[test]
+fn prop_coordinator_leases_disjoint_covering_topology_aware() {
+    prop::check_with(
+        "coordinator_lease_invariants",
+        PropConfig { iters: 40, seed: 0xC0DE },
+        &mut |rng| {
+            let spec = presets::preset_by_name(
+                ["core_12900k", "ultra_125h", "homogeneous_16"][rng.below(3) as usize],
+            )
+            .unwrap();
+            let n = spec.n_cores();
+            let k = 1 + rng.below(6) as usize;
+            let policy =
+                if rng.chance(0.5) { AllocPolicy::Balanced } else { AllocPolicy::Packed };
+            let mut coord = Coordinator::new(spec.clone(), policy);
+            for s in 0..k as u64 {
+                coord.admit(s);
+            }
+            // randomly retire some streams (cores must flow back)
+            let mut live = k;
+            for s in 0..k as u64 {
+                if live > 1 && rng.chance(0.3) {
+                    coord.finish(s);
+                    live -= 1;
+                }
+            }
+            let mut owner = vec![None; n];
+            for lease in coord.leases() {
+                for &c in &lease.cores {
+                    if c >= n {
+                        return Err(format!("core {c} out of range"));
+                    }
+                    if owner[c].is_some() {
+                        return Err(format!("core {c} leased twice"));
+                    }
+                    owner[c] = Some(lease.stream);
+                }
+            }
+            if owner.iter().any(|o| o.is_none()) {
+                return Err(format!("not covering: {owner:?}"));
+            }
+            if live <= n {
+                for lease in coord.leases() {
+                    if lease.is_empty() {
+                        return Err(format!("empty lease for stream {}", lease.stream));
+                    }
+                }
+            }
+            if policy == AllocPolicy::Balanced {
+                // equal strengths → per-kind counts within 1 across streams
+                for kind in [CoreKind::Performance, CoreKind::Efficiency, CoreKind::LowPower] {
+                    let counts: Vec<usize> = coord
+                        .leases()
+                        .map(|l| l.cores.iter().filter(|&&c| spec.cores[c].kind == kind).count())
+                        .collect();
+                    let (mn, mx) = (
+                        counts.iter().min().copied().unwrap_or(0),
+                        counts.iter().max().copied().unwrap_or(0),
+                    );
+                    if mx - mn > 1 {
+                        return Err(format!("{:?} split {counts:?} not balanced", kind.name()));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A scheduler planning inside a lease sees only the lease's cores: the
+/// proportional split over the sub-slice keeps every partition invariant
+/// (consecutive, covering, grain-aligned) — `largest_remainder_split`'s
+/// guarantees carry over to lease-local planning.
+#[test]
+fn prop_lease_local_plans_are_grain_aligned_partitions() {
+    prop::check_with(
+        "lease_local_plan_invariants",
+        PropConfig { iters: 40, seed: 0x1EA5E },
+        &mut |rng| {
+            let spec = presets::preset_by_name(
+                ["core_12900k", "ultra_125h"][rng.below(2) as usize],
+            )
+            .unwrap();
+            let k = 1 + rng.below(4) as usize;
+            let mut coord = Coordinator::new(spec, AllocPolicy::Balanced);
+            for s in 0..k as u64 {
+                coord.admit(s);
+            }
+            let stream = rng.below(k as u64);
+            let lease = coord.lease(stream).unwrap().clone();
+            let nw = lease.n_cores();
+            if nw == 0 {
+                return Err("empty lease".into());
+            }
+            let total = rng.below(8_192) as usize;
+            let grain = 1 + rng.below(64) as usize;
+            let ratios: Vec<f64> = (0..nw).map(|_| rng.uniform(0.05, 8.0)).collect();
+            let plan = scheduler_by_name("dynamic").unwrap().plan(total, grain, &ratios);
+            let DispatchPlan::Partitioned(rs) = plan else {
+                return Err("dynamic plan not partitioned".into());
+            };
+            if rs.len() != nw {
+                return Err(format!("plan for {} workers, lease has {nw}", rs.len()));
+            }
+            let mut cursor = 0;
+            for r in &rs {
+                if r.start != cursor || r.end < r.start {
+                    return Err(format!("bad ranges {rs:?}"));
+                }
+                if r.start % grain != 0 && r.start != total {
+                    return Err(format!("unaligned start {rs:?} grain={grain}"));
+                }
+                cursor = r.end;
+            }
+            if cursor != total {
+                return Err(format!("covers {cursor} of {total}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random observations never corrupt the coordinator: strengths stay
+/// positive and finite, and every rebalance re-establishes the disjoint +
+/// covering lease invariants.
+#[test]
+fn prop_coordinator_rebalance_stable_under_random_observations() {
+    use dynpar::exec::RunResult;
+    prop::check_with(
+        "coordinator_rebalance_stability",
+        PropConfig { iters: 25, seed: 0x0B5E },
+        &mut |rng| {
+            let spec = presets::preset_by_name(
+                ["core_12900k", "ultra_125h", "homogeneous_16"][rng.below(3) as usize],
+            )
+            .unwrap();
+            let n = spec.n_cores();
+            let k = 1 + rng.below(4) as usize;
+            let mut coord = Coordinator::new(spec, AllocPolicy::Balanced);
+            for s in 0..k as u64 {
+                coord.admit(s);
+            }
+            let mut stale = coord.lease(0).unwrap().clone();
+            for _ in 0..12 {
+                let stream = rng.below(k as u64);
+                // mostly the current lease; sometimes a stale snapshot from
+                // an earlier epoch (must be dropped, never mis-attributed)
+                let lease = if rng.chance(0.8) {
+                    coord.lease(stream).unwrap().clone()
+                } else {
+                    stale.clone()
+                };
+                let nw = lease.n_cores();
+                let per_core_secs: Vec<Option<f64>> = (0..nw)
+                    .map(|_| if rng.chance(0.8) { Some(rng.uniform(1e-6, 2.0)) } else { None })
+                    .collect();
+                let units_done: Vec<usize> =
+                    (0..nw).map(|_| rng.below(10_000) as usize).collect();
+                let res = RunResult {
+                    wall_secs: per_core_secs.iter().flatten().cloned().fold(0.0, f64::max),
+                    per_core_secs,
+                    units_done,
+                };
+                coord.observe(&lease, &res);
+                if rng.chance(0.2) {
+                    stale = coord.lease(stream).unwrap().clone();
+                }
+                if rng.chance(0.3) {
+                    coord.rebalance();
+                }
+                for &s in coord.strengths() {
+                    if !(s > 0.0 && s.is_finite()) {
+                        return Err(format!("bad strength {s}"));
+                    }
+                }
+                let mut seen = vec![false; n];
+                for lease in coord.leases() {
+                    for &c in &lease.cores {
+                        if seen[c] {
+                            return Err(format!("core {c} leased twice after rebalance"));
+                        }
+                        seen[c] = true;
+                    }
+                }
+                if seen.iter().any(|&s| !s) {
+                    return Err("rebalance lost a core".into());
+                }
+            }
+            Ok(())
         },
     );
 }

@@ -1,15 +1,18 @@
-//! Integration: the TCP serving front-end under realistic client traffic.
+//! Integration: the TCP serving front-end under realistic client traffic,
+//! both through the classic single all-core engine and through a fleet of
+//! coordinator-leased engines on disjoint core subsets.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
+use dynpar::coordinator::{AllocPolicy, Coordinator};
 use dynpar::cpu::presets;
 use dynpar::engine::Engine;
 use dynpar::model::{ModelConfig, ModelWeights};
 use dynpar::perf::PerfConfig;
 use dynpar::sched::DynamicScheduler;
-use dynpar::server::{serve, ServerHandle, ServerOpts};
+use dynpar::server::{serve, serve_multi, ServerHandle, ServerOpts};
 use dynpar::sim::{SimConfig, SimExecutor};
 use dynpar::util::json::Json;
 
@@ -41,6 +44,85 @@ fn roundtrip(addr: std::net::SocketAddr, line: &str) -> Vec<Json> {
         }
     }
     out
+}
+
+/// Start a multi-engine server: one engine per coordinator lease, each
+/// executor restricted to its lease's disjoint core subset of `machine`.
+fn start_lease_server(n_leases: usize, max_batch: usize) -> ServerHandle {
+    let machine = presets::core_12900k();
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, 5));
+    let mut coord = Coordinator::new(machine.clone(), AllocPolicy::Balanced);
+    for s in 0..n_leases as u64 {
+        coord.admit(s);
+    }
+    let engines: Vec<Engine<SimExecutor>> = coord
+        .leases()
+        .map(|lease| {
+            let exec = lease.sim_executor(
+                &machine,
+                SimConfig { execute_real: true, ..SimConfig::noiseless() },
+            );
+            Engine::new(
+                cfg.clone(),
+                Arc::clone(&weights),
+                exec,
+                Box::new(DynamicScheduler),
+                PerfConfig::default(),
+            )
+        })
+        .collect();
+    serve_multi("127.0.0.1:0", engines, ServerOpts { max_batch }).unwrap()
+}
+
+#[test]
+fn concurrent_connections_stream_through_separate_leases() {
+    // two leases, batch 1: simultaneous requests can only both progress if
+    // each lease's engine thread serves one of them
+    let handle = start_lease_server(2, 1);
+    let addr = handle.addr;
+    let joins: Vec<_> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                roundtrip(
+                    addr,
+                    &format!(r#"{{"id": {i}, "prompt": [{}, 3], "max_new_tokens": 4}}"#, i + 1),
+                )
+            })
+        })
+        .collect();
+    for (i, j) in joins.into_iter().enumerate() {
+        let msgs = j.join().unwrap();
+        let tokens = msgs.iter().filter(|m| m.get("token").is_some()).count();
+        assert_eq!(tokens, 4, "client {i}: {msgs:?}");
+        let done = msgs.last().unwrap();
+        assert_eq!(done.get("id").unwrap().as_i64(), Some(i as i64));
+    }
+    let metrics = roundtrip(addr, r#"{"cmd":"metrics"}"#);
+    let m = metrics[0].get("metrics").unwrap();
+    assert_eq!(m.get("requests").unwrap().as_i64(), Some(6));
+    assert_eq!(m.get("tokens").unwrap().as_i64(), Some(24));
+    assert_eq!(m.get("engines").unwrap().as_i64(), Some(2));
+    handle.shutdown();
+}
+
+#[test]
+fn lease_fleet_and_single_engine_agree_on_tokens() {
+    // same weights, same prompt → identical tokens whether the request is
+    // served by an 8-core lease engine or the 16-core single engine
+    let fleet = start_lease_server(2, 2);
+    let single = start_server(2);
+    let get = |addr| {
+        roundtrip(addr, r#"{"id": 1, "prompt": [6, 2, 9], "max_new_tokens": 6}"#)
+            .iter()
+            .filter_map(|m| m.get("token").and_then(Json::as_i64))
+            .collect::<Vec<_>>()
+    };
+    let a = get(fleet.addr);
+    assert_eq!(a.len(), 6);
+    assert_eq!(a, get(single.addr));
+    fleet.shutdown();
+    single.shutdown();
 }
 
 #[test]

@@ -1,0 +1,150 @@
+//! Minimal vendored stand-in for the `anyhow` crate.
+//!
+//! The sandbox image has no crates.io access, so this shim provides the
+//! subset of `anyhow`'s API that the dynpar tree uses: a string-backed
+//! [`Error`], the [`Result`] alias, the [`anyhow!`] / [`bail!`] macros and
+//! the [`Context`] extension trait. Semantics match `anyhow` closely enough
+//! that swapping the real crate back in (were a registry available) is a
+//! one-line Cargo.toml change.
+
+use std::fmt;
+
+/// A string-backed error value.
+///
+/// Like `anyhow::Error`, this type deliberately does **not** implement
+/// `std::error::Error` — that is what makes the blanket
+/// `impl<E: std::error::Error> From<E> for Error` coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context line (rendered as `context: cause`).
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result` or `Option` as it is propagated.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (or any displayable expression).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let name = "x";
+        let e = anyhow!("missing {name}");
+        assert_eq!(e.to_string(), "missing x");
+        let e = anyhow!("{} of {}", 1, 2);
+        assert_eq!(e.to_string(), "1 of 2");
+        let e = anyhow!(io_err());
+        assert_eq!(e.to_string(), "gone");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("boom {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn context_wraps_cause() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "f.txt")).unwrap_err();
+        assert_eq!(e.to_string(), "reading f.txt: gone");
+        let o: Option<u32> = None;
+        assert_eq!(o.context("empty").unwrap_err().to_string(), "empty");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::str::from_utf8(&[0xFF])?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+}

@@ -25,7 +25,8 @@ fn main() {
     );
     let engine =
         Engine::new(cfg, weights, exec, Box::new(DynamicScheduler), PerfConfig::default());
-    let handle = serve("127.0.0.1:0", engine, ServerOpts { max_batch: 4 }).unwrap();
+    let opts = ServerOpts { max_batch: 4, ..Default::default() };
+    let handle = serve("127.0.0.1:0", engine, opts).unwrap();
     println!("serving on {}\n", handle.addr);
 
     let addr = handle.addr;

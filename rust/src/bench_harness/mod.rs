@@ -14,7 +14,12 @@ use crate::sched::scheduler_by_name;
 use crate::sim::{SimConfig, SimExecutor};
 
 /// Build a simulator-backed runtime for (cpu, scheduler).
-pub fn sim_runtime(spec: CpuSpec, sched: &str, sim_cfg: SimConfig, perf: PerfConfig) -> ParallelRuntime<SimExecutor> {
+pub fn sim_runtime(
+    spec: CpuSpec,
+    sched: &str,
+    sim_cfg: SimConfig,
+    perf: PerfConfig,
+) -> ParallelRuntime<SimExecutor> {
     ParallelRuntime::new(
         SimExecutor::new(spec, sim_cfg),
         scheduler_by_name(sched).unwrap_or_else(|| panic!("unknown scheduler {sched}")),

@@ -165,7 +165,15 @@ impl Coordinator {
     pub fn new(spec: CpuSpec, policy: AllocPolicy) -> Coordinator {
         spec.validate().expect("invalid CpuSpec");
         let strength = spec.ideal_ratios(Isa::AvxVnni);
-        Coordinator { spec, policy, alpha: 0.3, strength, streams: Vec::new(), leases: BTreeMap::new(), epoch: 0 }
+        Coordinator {
+            spec,
+            policy,
+            alpha: 0.3,
+            strength,
+            streams: Vec::new(),
+            leases: BTreeMap::new(),
+            epoch: 0,
+        }
     }
 
     pub fn machine(&self) -> &CpuSpec {
@@ -226,10 +234,15 @@ impl Coordinator {
     /// participating cores' rates are rescaled so their strength mass is
     /// preserved, then EWMA-filtered with `alpha`. A single participant
     /// carries no relative information and is skipped.
-    pub fn observe(&mut self, lease: &Lease, res: &RunResult) {
+    ///
+    /// Returns `true` when the observation was folded into the strength
+    /// table, `false` when it was dropped (stale epoch, foreign stream or
+    /// degenerate measurement) — the serving layer uses this to count
+    /// epoch-stale measurements racing a rebuild.
+    pub fn observe(&mut self, lease: &Lease, res: &RunResult) -> bool {
         match self.leases.get(&lease.stream) {
             Some(current) if current == lease => {}
-            _ => return, // stale or foreign lease
+            _ => return false, // stale or foreign lease
         }
         let mut mass = 0.0f64;
         let mut rates: Vec<(usize, f64)> = Vec::new();
@@ -243,16 +256,17 @@ impl Coordinator {
             }
         }
         if rates.len() < 2 {
-            return;
+            return false;
         }
         let rate_sum: f64 = rates.iter().map(|(_, r)| r).sum();
         if !(rate_sum.is_finite() && rate_sum > 0.0 && mass > 0.0) {
-            return;
+            return false;
         }
         let scale = mass / rate_sum;
         for (g, r) in rates {
             self.strength[g] = self.alpha * self.strength[g] + (1.0 - self.alpha) * r * scale;
         }
+        true
     }
 
     /// Re-partition cores across the admitted streams using the current
@@ -336,10 +350,9 @@ impl Coordinator {
             let rich = (0..k)
                 .filter(|&s| cores_per_stream[s].len() >= 2)
                 .max_by(|&a, &b| {
-                    cores_per_stream[a]
-                        .len()
-                        .cmp(&cores_per_stream[b].len())
-                        .then(strength_sum[a].partial_cmp(&strength_sum[b]).unwrap().then(b.cmp(&a)))
+                    let by_strength =
+                        strength_sum[a].partial_cmp(&strength_sum[b]).unwrap().then(b.cmp(&a));
+                    cores_per_stream[a].len().cmp(&cores_per_stream[b].len()).then(by_strength)
                 });
             let Some(rich) = rich else { break };
             let pos = (0..cores_per_stream[rich].len())
@@ -537,7 +550,7 @@ mod tests {
         let l0 = c.admit(0);
         let before = c.strengths().to_vec();
         // single participant: no relative information
-        c.observe(
+        let accepted = c.observe(
             &l0,
             &RunResult {
                 per_core_secs: vec![Some(1.0), None, None, None],
@@ -545,6 +558,7 @@ mod tests {
                 units_done: vec![10, 0, 0, 0],
             },
         );
+        assert!(!accepted);
         // lease for a stream the coordinator never admitted: ignored
         let foreign = Lease { stream: 9, cores: vec![0, 1], epoch: 0 };
         let skewed = RunResult {
@@ -552,18 +566,18 @@ mod tests {
             wall_secs: 4.0,
             units_done: vec![100, 100],
         };
-        c.observe(&foreign, &skewed);
+        assert!(!c.observe(&foreign, &skewed));
         assert_eq!(c.strengths(), &before[..]);
         // stale lease: admitting stream 1 re-partitions, so a result
         // measured under the old 4-core lease must not be mis-mapped onto
         // the new 2-core lease's globals
         c.admit(1);
         let before = c.strengths().to_vec();
-        c.observe(&l0, &skewed);
+        assert!(!c.observe(&l0, &skewed));
         assert_eq!(c.strengths(), &before[..]);
         // the refreshed lease is accepted
         let fresh = c.lease(0).unwrap().clone();
-        c.observe(&fresh, &skewed);
+        assert!(c.observe(&fresh, &skewed));
         assert_ne!(c.strengths(), &before[..]);
     }
 

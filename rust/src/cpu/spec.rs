@@ -204,7 +204,8 @@ impl CpuSpec {
         let mut cores = Vec::new();
         for (i, cj) in cores_json.iter().enumerate() {
             let kind_name = cj.get("kind").and_then(Json::as_str).ok_or("core missing kind")?;
-            let kind = CoreKind::from_name(kind_name).ok_or_else(|| format!("bad kind {kind_name}"))?;
+            let kind =
+                CoreKind::from_name(kind_name).ok_or_else(|| format!("bad kind {kind_name}"))?;
             let mut ops = BTreeMap::new();
             if let Some(m) = cj.get("ops_per_cycle").and_then(Json::as_object) {
                 for (k, val) in m {

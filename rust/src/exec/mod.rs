@@ -54,12 +54,24 @@ pub struct ParallelRuntime<E: Executor> {
     pub exec: E,
     pub table: PerfTable,
     pub sched: Box<dyn Scheduler>,
+    /// when set, [`ParallelRuntime::run`] keeps a copy of each kernel's
+    /// measurement in `last_result` for serving-level observers
+    /// ([`crate::coordinator::Coordinator::observe`]). Off by default so
+    /// the per-kernel hot path pays no clone when nothing reads it.
+    pub capture_last: bool,
+    pub last_result: Option<RunResult>,
 }
 
 impl<E: Executor> ParallelRuntime<E> {
     pub fn new(exec: E, sched: Box<dyn Scheduler>, perf_cfg: PerfConfig) -> Self {
         let n = exec.n_workers();
-        ParallelRuntime { exec, table: PerfTable::new(n, perf_cfg), sched }
+        ParallelRuntime {
+            exec,
+            table: PerfTable::new(n, perf_cfg),
+            sched,
+            capture_last: false,
+            last_result: None,
+        }
     }
 
     /// Run one kernel through the full dynamic loop.
@@ -69,6 +81,9 @@ impl<E: Executor> ParallelRuntime<E> {
         let plan = self.sched.plan(work.total_units(), work.grain(), &ratios);
         let res = self.exec.execute(work, &plan);
         self.table.update(cost.class, cost.isa, &res.per_core_secs);
+        if self.capture_last {
+            self.last_result = Some(res.clone());
+        }
         res
     }
 

@@ -213,7 +213,12 @@ fn cmd_serve(args: &Args) {
         PerfConfig::default(),
     );
     let addr = args.opt_or("addr", "127.0.0.1:7878");
-    let opts = dynpar::server::ServerOpts { max_batch: args.usize_or("max-batch", 4) };
+    let opts = dynpar::server::ServerOpts {
+        max_batch: args.usize_or("max-batch", 4),
+        prefill_chunk: args.usize_or("prefill-chunk", 16),
+        queue_depth: args.usize_or("queue-depth", 256),
+        ..Default::default()
+    };
     let handle = dynpar::server::serve(&addr, engine, opts).expect("bind");
     println!("dynpar serving model '{model}' on {} (Ctrl-C to stop)", handle.addr);
     println!(r#"protocol: {{"id":1,"prompt":[1,2,3],"max_new_tokens":8}} per line"#);

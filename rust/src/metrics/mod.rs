@@ -1,6 +1,9 @@
 //! Inference metrics: phase latencies, token rates, bandwidth accounting
-//! and latency histograms for the serving front-end.
+//! and latency histograms for the serving front-end, plus the aggregate
+//! [`ServingMetrics`] the continuous-batching server exports (per-request
+//! phase latencies, time-to-first-token, per-round admission-queue depth).
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Timings of one generation request, split by the paper's two phases.
@@ -66,10 +69,19 @@ pub fn bandwidth_utilization(achieved_gbps: f64, reference_gbps: f64) -> f64 {
     }
 }
 
-/// Simple latency histogram with fixed log-spaced buckets (µs scale).
+/// How many samples a [`LatencyHistogram`] retains for its summary — a
+/// sliding window, so a server recording one sample per scheduler round
+/// for days never grows it without bound.
+pub const LATENCY_SAMPLE_CAP: usize = 4096;
+
+/// Bounded latency reservoir: a ring of the most recent
+/// [`LATENCY_SAMPLE_CAP`] samples plus a lifetime count.
 #[derive(Clone, Debug)]
 pub struct LatencyHistogram {
     samples: Vec<f64>,
+    /// ring cursor, meaningful once `samples` reached capacity
+    next: usize,
+    total: u64,
 }
 
 impl Default for LatencyHistogram {
@@ -80,15 +92,23 @@ impl Default for LatencyHistogram {
 
 impl LatencyHistogram {
     pub fn new() -> Self {
-        LatencyHistogram { samples: Vec::new() }
+        LatencyHistogram { samples: Vec::new(), next: 0, total: 0 }
     }
 
     pub fn record(&mut self, secs: f64) {
-        self.samples.push(secs);
+        self.total += 1;
+        if self.samples.len() < LATENCY_SAMPLE_CAP {
+            self.samples.push(secs);
+        } else {
+            self.samples[self.next] = secs;
+            self.next = (self.next + 1) % LATENCY_SAMPLE_CAP;
+        }
     }
 
+    /// Lifetime number of recorded samples (the summary only covers the
+    /// most recent [`LATENCY_SAMPLE_CAP`] of them).
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.total as usize
     }
 
     pub fn summary(&self) -> Option<Summary> {
@@ -97,6 +117,62 @@ impl LatencyHistogram {
         } else {
             Some(Summary::of(&self.samples))
         }
+    }
+}
+
+/// Aggregate serving-side metrics, exported on the wire by the server's
+/// `{"cmd":"metrics"}` command. Next to the classic request/token counters
+/// it tracks the two observables continuous batching is judged by:
+/// **time-to-first-token** (admission-queue entry → first streamed token)
+/// and the **admission-queue depth sampled once per scheduler round**.
+#[derive(Clone, Debug, Default)]
+pub struct ServingMetrics {
+    pub requests: u64,
+    pub tokens: u64,
+    /// requests refused by the bounded admission queue
+    pub rejected: u64,
+    /// engine-fleet rebuilds (dynamic lease membership epoch changes)
+    pub rebuilds: u64,
+    pub prefill: LatencyHistogram,
+    pub decode_per_token: LatencyHistogram,
+    pub ttft: LatencyHistogram,
+    pub queue_depth: LatencyHistogram,
+}
+
+impl ServingMetrics {
+    /// Fold one retired request's phase timings into the aggregates.
+    pub fn record_request(&mut self, m: &PhaseMetrics) {
+        self.requests += 1;
+        self.tokens += m.decoded_tokens as u64;
+        self.prefill.record(m.prefill_secs);
+        if m.decoded_tokens > 0 {
+            self.decode_per_token.record(m.decode_latency());
+        }
+    }
+
+    pub fn to_json(&self, n_engines: usize, epoch: u64) -> Json {
+        let mut fields = vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("engines", Json::num(n_engines as f64)),
+            ("epoch", Json::num(epoch as f64)),
+            ("rebuilds", Json::num(self.rebuilds as f64)),
+        ];
+        if let Some(s) = self.prefill.summary() {
+            fields.push(("prefill_p50_secs", Json::num(s.p50)));
+        }
+        if let Some(s) = self.decode_per_token.summary() {
+            fields.push(("decode_p50_secs_per_token", Json::num(s.p50)));
+        }
+        if let Some(s) = self.ttft.summary() {
+            fields.push(("ttft_p50_secs", Json::num(s.p50)));
+        }
+        if let Some(s) = self.queue_depth.summary() {
+            fields.push(("queue_depth_p50", Json::num(s.p50)));
+            fields.push(("queue_depth_max", Json::num(s.max)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -144,6 +220,37 @@ mod tests {
     }
 
     #[test]
+    fn serving_metrics_aggregate_and_export() {
+        let mut sm = ServingMetrics::default();
+        let m = PhaseMetrics {
+            prefill_secs: 0.2,
+            decode_secs: 1.0,
+            prompt_tokens: 8,
+            decoded_tokens: 10,
+        };
+        sm.record_request(&m);
+        sm.record_request(&m);
+        sm.ttft.record(0.25);
+        sm.queue_depth.record(3.0);
+        sm.rejected = 1;
+        sm.rebuilds = 2;
+        let j = sm.to_json(4, 7);
+        assert_eq!(j.get("requests").unwrap().as_i64(), Some(2));
+        assert_eq!(j.get("tokens").unwrap().as_i64(), Some(20));
+        assert_eq!(j.get("rejected").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("engines").unwrap().as_i64(), Some(4));
+        assert_eq!(j.get("epoch").unwrap().as_i64(), Some(7));
+        assert_eq!(j.get("rebuilds").unwrap().as_i64(), Some(2));
+        assert_eq!(j.get("ttft_p50_secs").unwrap().as_f64(), Some(0.25));
+        assert_eq!(j.get("queue_depth_p50").unwrap().as_f64(), Some(3.0));
+        let decode_p50 = j.get("decode_p50_secs_per_token").unwrap().as_f64().unwrap();
+        assert!((decode_p50 - 0.1).abs() < 1e-12);
+        // empty histograms stay out of the export
+        let empty = ServingMetrics::default().to_json(1, 0);
+        assert!(empty.get("ttft_p50_secs").is_none());
+    }
+
+    #[test]
     fn histogram_summary() {
         let mut h = LatencyHistogram::new();
         assert!(h.summary().is_none());
@@ -153,5 +260,19 @@ mod tests {
         let s = h.summary().unwrap();
         assert_eq!(h.count(), 100);
         assert!((s.p50 - 0.0505).abs() < 1e-3);
+    }
+
+    #[test]
+    fn histogram_memory_is_bounded() {
+        let mut h = LatencyHistogram::new();
+        for i in 0..3 * LATENCY_SAMPLE_CAP {
+            h.record(i as f64);
+        }
+        // lifetime count keeps growing; retained samples do not
+        assert_eq!(h.count(), 3 * LATENCY_SAMPLE_CAP);
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, LATENCY_SAMPLE_CAP);
+        // the window slid: only the most recent samples remain
+        assert!(s.min >= (2 * LATENCY_SAMPLE_CAP) as f64, "min {}", s.min);
     }
 }

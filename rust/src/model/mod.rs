@@ -16,6 +16,9 @@ use crate::kernels::{elementwise, gemv_q4, rope};
 pub struct Session {
     pub kv: Vec<KvLayer>,
     pub pos: usize,
+    /// KV-slot id when the session was leased from a [`SessionPool`]
+    /// (`usize::MAX` for standalone sessions).
+    pub slot: usize,
 }
 
 impl Session {
@@ -23,11 +26,88 @@ impl Session {
         let kv = (0..cfg.n_layers)
             .map(|_| KvLayer::new(cfg.n_heads, cfg.t_max, cfg.head_dim()))
             .collect();
-        Session { kv, pos: 0 }
+        Session { kv, pos: 0, slot: usize::MAX }
     }
 
     pub fn remaining_capacity(&self, cfg: &ModelConfig) -> usize {
         cfg.t_max - self.pos
+    }
+
+    /// Rewind for reuse by a fresh request. Only the cursor needs to move:
+    /// positions are always written (prefill/decode) before attention reads
+    /// them, so stale KV contents past the cursor are never observed.
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+}
+
+/// Fixed-capacity KV-slot allocator: sessions (with their per-layer KV
+/// buffers) are leased to requests and returned on retirement, so a
+/// continuously-batching engine reuses at most `capacity` slots instead of
+/// reallocating KV caches per request. Retired slots are always reused
+/// before a fresh slot is allocated.
+#[derive(Debug)]
+pub struct SessionPool {
+    cfg: ModelConfig,
+    free: Vec<Session>,
+    allocated: usize,
+    capacity: usize,
+}
+
+impl SessionPool {
+    pub fn new(cfg: &ModelConfig, capacity: usize) -> SessionPool {
+        assert!(capacity > 0, "empty session pool");
+        SessionPool { cfg: cfg.clone(), free: Vec::new(), allocated: 0, capacity }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Slots ever allocated (≤ capacity); stays at the peak concurrency the
+    /// pool has served, since free slots are reused before new allocation.
+    pub fn allocated(&self) -> usize {
+        self.allocated
+    }
+
+    /// Slots on the free list, ready for reuse without allocation.
+    pub fn idle(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Lease a slot: a retired one when available, else a freshly allocated
+    /// one while under capacity, else `None` (the batch is full).
+    pub fn acquire(&mut self) -> Option<Session> {
+        if let Some(s) = self.free.pop() {
+            return Some(s);
+        }
+        if self.allocated < self.capacity {
+            let mut s = Session::new(&self.cfg);
+            s.slot = self.allocated;
+            self.allocated += 1;
+            return Some(s);
+        }
+        None
+    }
+
+    /// Return a retired session's slot for reuse (buffers kept, cursor
+    /// reset). A session migrated in from another pool (slot tag
+    /// `usize::MAX`) is absorbed only while this pool is under capacity,
+    /// and is re-tagged with a fresh slot id so ids stay unique within
+    /// the pool and `allocated()` keeps meaning peak concurrency.
+    pub fn release(&mut self, mut session: Session) {
+        session.reset();
+        if session.slot >= self.capacity {
+            if self.allocated < self.capacity {
+                session.slot = self.allocated;
+                self.allocated += 1;
+                self.free.push(session);
+            }
+            return;
+        }
+        if self.free.len() < self.capacity {
+            self.free.push(session);
+        }
     }
 }
 
@@ -159,5 +239,75 @@ mod tests {
     fn argmax_finds_peak() {
         assert_eq!(argmax(&[0.1, 3.0, -2.0, 3.0]), 1); // first max wins
         assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn session_reset_replays_identically() {
+        let (cfg, w) = tiny_setup();
+        let mut fresh = Session::new(&cfg);
+        let a = decode_step_serial(&cfg, &w, &mut fresh, 3);
+        let mut reused = Session::new(&cfg);
+        // pollute with a different history, then reset and replay
+        decode_step_serial(&cfg, &w, &mut reused, 9);
+        decode_step_serial(&cfg, &w, &mut reused, 1);
+        reused.reset();
+        assert_eq!(reused.pos, 0);
+        let b = decode_step_serial(&cfg, &w, &mut reused, 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn session_pool_reuses_before_allocating() {
+        let cfg = ModelConfig::micro();
+        let mut pool = SessionPool::new(&cfg, 3);
+        let a = pool.acquire().unwrap();
+        let b = pool.acquire().unwrap();
+        assert_eq!((a.slot, b.slot), (0, 1));
+        assert_eq!(pool.allocated(), 2);
+        // release → the freed slot comes back before slot 2 is ever created
+        pool.release(a);
+        assert_eq!(pool.idle(), 1);
+        let c = pool.acquire().unwrap();
+        assert_eq!(c.slot, 0);
+        assert_eq!(pool.allocated(), 2);
+        // exhausting the pool caps at capacity
+        let d = pool.acquire().unwrap();
+        assert_eq!(d.slot, 2);
+        assert!(pool.acquire().is_none());
+        assert_eq!(pool.allocated(), 3);
+    }
+
+    #[test]
+    fn session_pool_absorbs_foreign_sessions_with_fresh_slots() {
+        let cfg = ModelConfig::micro();
+        let mut pool = SessionPool::new(&cfg, 2);
+        let native = pool.acquire().unwrap();
+        assert_eq!(native.slot, 0);
+        // a session migrated in from another pool gets a fresh unique slot
+        let foreign = Session::new(&cfg);
+        assert_eq!(foreign.slot, usize::MAX);
+        pool.release(foreign);
+        let absorbed = pool.acquire().unwrap();
+        assert_eq!(absorbed.slot, 1);
+        assert_eq!(pool.allocated(), 2);
+        // at capacity, further foreign sessions are dropped, not absorbed
+        pool.release(Session::new(&cfg));
+        assert_eq!(pool.idle(), 0);
+        assert_eq!(pool.allocated(), 2);
+        pool.release(native);
+        assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn session_pool_release_resets_cursor() {
+        let (cfg, w) = tiny_setup();
+        let mut pool = SessionPool::new(&cfg, 1);
+        let mut s = pool.acquire().unwrap();
+        decode_step_serial(&cfg, &w, &mut s, 5);
+        assert_eq!(s.pos, 1);
+        pool.release(s);
+        let s = pool.acquire().unwrap();
+        assert_eq!(s.pos, 0);
+        assert_eq!(s.slot, 0);
     }
 }

@@ -94,7 +94,8 @@ impl ModelWeights {
             data: self.embed.data.clone(),
         });
         for (i, l) in self.layers.iter().enumerate() {
-            out.push(FlatParam::f32_vec(format!("l{i}.attn_norm"), vec![cfg.d_model], &l.attn_norm));
+            let d = vec![cfg.d_model];
+            out.push(FlatParam::f32_vec(format!("l{i}.attn_norm"), d, &l.attn_norm));
             for (nm, m) in [("wq", &l.wq), ("wk", &l.wk), ("wv", &l.wv), ("wo", &l.wo)] {
                 push_q4(&mut out, format!("l{i}.{nm}"), m);
             }

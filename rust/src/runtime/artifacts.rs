@@ -94,7 +94,8 @@ impl Manifest {
         if v.get("format").and_then(Json::as_str) != Some("hlo-text") {
             bail!("unsupported manifest format");
         }
-        let arts = v.get("artifacts").and_then(Json::as_object).ok_or_else(|| anyhow!("no artifacts"))?;
+        let arts =
+            v.get("artifacts").and_then(Json::as_object).ok_or_else(|| anyhow!("no artifacts"))?;
         let mut artifacts = Vec::new();
         for (name, a) in arts {
             let file = a
@@ -129,7 +130,9 @@ impl Manifest {
 
 /// Default artifact directory: `$DYNPAR_ARTIFACTS` or `./artifacts`.
 pub fn default_artifact_dir() -> PathBuf {
-    std::env::var("DYNPAR_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    std::env::var("DYNPAR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
 #[cfg(test)]
@@ -152,8 +155,9 @@ mod tests {
             return;
         };
         let m = Manifest::load(&dir).unwrap();
-        for key in ["tiny_decode", "tiny_prefill", "micro_decode", "micro_prefill", "qgemv", "qgemm"]
-        {
+        let keys =
+            ["tiny_decode", "tiny_prefill", "micro_decode", "micro_prefill", "qgemv", "qgemm"];
+        for key in keys {
             let a = m.get(key).unwrap();
             assert!(a.file.exists(), "{key} file missing");
             assert!(!a.params.is_empty());

@@ -125,7 +125,8 @@ impl PjrtEngine {
         let mut weight_literals = Vec::with_capacity(flat.len());
         for (pm, fp) in expected.iter().zip(&flat) {
             if pm.name != fp.name() || pm.shape != fp.shape() {
-                bail!("ABI mismatch at {}: manifest {:?} vs rust {:?}", pm.name, pm.shape, fp.shape());
+                let (name, want, got) = (&pm.name, &pm.shape, fp.shape());
+                bail!("ABI mismatch at {name}: manifest {want:?} vs rust {got:?}");
             }
             weight_literals.push(flat_param_literal(fp)?);
         }

@@ -1,0 +1,471 @@
+//! Continuous batching inside one lease.
+//!
+//! A [`LeaseBatcher`] owns one [`Engine`] (typically built over a
+//! coordinator lease's core subset) and a set of in-flight requests, and
+//! advances them in **token rounds** instead of run-to-completion batches:
+//!
+//! * every round, each live request advances by one quantum — a bounded
+//!   *prefill chunk* while its prompt is being consumed, then one decoded
+//!   token per round;
+//! * new requests are admitted **between rounds** (up to
+//!   [`BatcherOpts::max_batch`]), so a stream arriving mid-run starts
+//!   prefilling after at most one round plus one prefill chunk of delay
+//!   rather than after the whole running batch has drained;
+//! * finished requests are retired **immediately** at the end of their
+//!   round and their KV slot returns to the [`SessionPool`] for reuse.
+//!
+//! Chunked prefill is bit-exact: every (position, row) dot product sees
+//! exactly the inputs it would in a whole-prompt prefill, so token streams
+//! are identical to solo execution under any admission interleaving
+//! (property-tested in `rust/tests/prop_invariants.rs`).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::coordinator::Lease;
+use crate::engine::Engine;
+use crate::exec::Executor;
+use crate::metrics::PhaseMetrics;
+use crate::model::{argmax, Session, SessionPool};
+
+use super::protocol::{Event, Request};
+
+/// Per-lease scheduling knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherOpts {
+    /// concurrent requests (= KV slots) per engine
+    pub max_batch: usize,
+    /// prompt tokens prefilled per round — bounds how long one admission
+    /// can starve the decode rounds of already-running requests
+    pub prefill_chunk: usize,
+}
+
+impl Default for BatcherOpts {
+    fn default() -> Self {
+        BatcherOpts { max_batch: 4, prefill_chunk: 16 }
+    }
+}
+
+/// A queued request: parsed body, the channel its events stream back on,
+/// and (for the TCP path) its wall-clock enqueue instant for TTFT.
+pub struct Pending {
+    pub req: Request,
+    pub tx: mpsc::Sender<Event>,
+    pub enqueued: Option<Instant>,
+}
+
+impl Pending {
+    pub fn new(req: Request, tx: mpsc::Sender<Event>) -> Pending {
+        Pending { req, tx, enqueued: None }
+    }
+}
+
+/// One in-flight request and its leased KV slot. Opaque outside the
+/// serving layer: it can migrate between batchers across fleet rebuilds
+/// (the session carries the KV state, so the stream stays bit-identical).
+pub struct ActiveRequest {
+    req: Request,
+    tx: mpsc::Sender<Event>,
+    enqueued: Option<Instant>,
+    session: Session,
+    /// prompt tokens consumed so far (prefill phase while < prompt.len())
+    prefilled: usize,
+    /// next token to emit/feed once prefill is complete
+    next: u32,
+    produced: usize,
+    metrics: PhaseMetrics,
+    dead: bool,
+    emitted_first: bool,
+}
+
+/// A retired request, reported to the caller for metrics.
+#[derive(Clone, Debug)]
+pub struct Retired {
+    pub id: u64,
+    /// engine kernel clock at retirement (virtual seconds)
+    pub at: f64,
+    pub metrics: PhaseMetrics,
+    /// true when the client went away before completion
+    pub dead: bool,
+}
+
+/// Outcome of one scheduler round.
+#[derive(Debug, Default)]
+pub struct StepReport {
+    /// requests that streamed their first token this round, with the
+    /// engine kernel clock at emission (virtual-time TTFT for the harness)
+    pub first_tokens: Vec<(u64, f64)>,
+    /// wall-clock enqueue→first-token latencies (TCP path)
+    pub ttft_wall: Vec<std::time::Duration>,
+    pub retired: Vec<Retired>,
+    pub decoded_tokens: usize,
+    /// kernel seconds this round added to the engine clock
+    pub kernel_secs: f64,
+}
+
+/// Persistent per-lease scheduler: the continuous-batching replacement for
+/// the old prefill-all-then-decode-all `run_batch`.
+pub struct LeaseBatcher<E: Executor> {
+    pub engine: Engine<E>,
+    /// the coordinator lease this engine was built from (`None` for the
+    /// static single-/multi-engine servers)
+    pub lease: Option<Lease>,
+    pool: SessionPool,
+    active: Vec<ActiveRequest>,
+    opts: BatcherOpts,
+}
+
+impl<E: Executor> LeaseBatcher<E> {
+    pub fn new(mut engine: Engine<E>, lease: Option<Lease>, opts: BatcherOpts) -> LeaseBatcher<E> {
+        // the serving layer reads per-round measurements (coordinator
+        // strength observations), so keep them on this engine
+        engine.rt.capture_last = true;
+        let pool = SessionPool::new(&engine.cfg, opts.max_batch.max(1));
+        LeaseBatcher { engine, lease, pool, active: Vec::new(), opts }
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    /// Room to admit another request. Migrated-in sessions can push the
+    /// batcher transiently over `max_batch`; it refuses admissions until
+    /// retirements bring it back under.
+    pub fn has_capacity(&self) -> bool {
+        self.active.len() < self.opts.max_batch
+    }
+
+    /// KV-slot ids of the live sessions (allocator-invariant checks).
+    /// Sessions adopted from another batcher report `usize::MAX` until
+    /// they retire into this pool.
+    pub fn active_slots(&self) -> Vec<usize> {
+        self.active.iter().map(|a| a.session.slot).collect()
+    }
+
+    pub fn pool(&self) -> &SessionPool {
+        &self.pool
+    }
+
+    /// Admit one request into the batch. Invalid requests are answered
+    /// with an error event and consumed (`Ok`); a full batch or exhausted
+    /// slot pool hands the request back (`Err`) for requeueing.
+    pub fn admit(&mut self, pending: Pending) -> Result<(), Pending> {
+        if !self.has_capacity() {
+            return Err(pending);
+        }
+        if pending.req.prompt.is_empty() {
+            let _ = pending
+                .tx
+                .send(Event::Error { id: pending.req.id, msg: "empty prompt".into() });
+            return Ok(());
+        }
+        if pending.req.prompt.len() >= self.engine.cfg.t_max {
+            let _ = pending
+                .tx
+                .send(Event::Error { id: pending.req.id, msg: "prompt too long".into() });
+            return Ok(());
+        }
+        let Some(session) = self.pool.acquire() else {
+            return Err(pending);
+        };
+        let vocab = self.engine.cfg.vocab as u32;
+        let mut req = pending.req;
+        for t in req.prompt.iter_mut() {
+            *t %= vocab;
+        }
+        let metrics = PhaseMetrics { prompt_tokens: req.prompt.len(), ..Default::default() };
+        self.active.push(ActiveRequest {
+            req,
+            tx: pending.tx,
+            enqueued: pending.enqueued,
+            session,
+            prefilled: 0,
+            next: 0,
+            produced: 0,
+            metrics,
+            dead: false,
+            emitted_first: false,
+        });
+        Ok(())
+    }
+
+    /// Take over an in-flight request from a previous epoch's batcher
+    /// (fleet rebuild): the session travels with the request. Its slot id
+    /// belonged to the old batcher's pool, so it is re-tagged as foreign
+    /// (`usize::MAX`); [`SessionPool::release`] assigns it a fresh slot of
+    /// this pool on retirement, keeping live slot ids unique per pool.
+    pub fn adopt(&mut self, mut active: ActiveRequest) {
+        active.session.slot = usize::MAX;
+        self.active.push(active);
+    }
+
+    /// Drain every in-flight request (fleet rebuild), leaving the batcher
+    /// empty.
+    pub fn take_actives(&mut self) -> Vec<ActiveRequest> {
+        std::mem::take(&mut self.active)
+    }
+
+    /// One scheduler round over the live batch; finished or abandoned
+    /// requests are retired at the end of the round and their slots
+    /// released for reuse.
+    pub fn step(&mut self) -> StepReport {
+        let mut report = StepReport::default();
+        let chunk = self.opts.prefill_chunk.max(1);
+        let round_start = self.engine.kernel_secs;
+
+        {
+            let LeaseBatcher { engine, active, .. } = self;
+            for a in active.iter_mut() {
+                if a.dead {
+                    continue;
+                }
+                let prompt_len = a.req.prompt.len();
+                if a.prefilled < prompt_len {
+                    // ---- prefill quantum: one bounded chunk ----
+                    let end = (a.prefilled + chunk).min(prompt_len);
+                    let t0 = engine.kernel_secs;
+                    let logits = engine.prefill(&mut a.session, &a.req.prompt[a.prefilled..end]);
+                    a.metrics.prefill_secs += engine.kernel_secs - t0;
+                    a.prefilled = end;
+                    if a.prefilled == prompt_len {
+                        a.next = argmax(&logits);
+                    }
+                } else if a.produced < a.req.max_new_tokens
+                    && a.session.remaining_capacity(&engine.cfg) > 0
+                {
+                    // ---- decode quantum: stream one token ----
+                    if a.tx.send(Event::Token { id: a.req.id, token: a.next }).is_err() {
+                        a.dead = true; // client went away
+                        continue;
+                    }
+                    if !a.emitted_first {
+                        a.emitted_first = true;
+                        report.first_tokens.push((a.req.id, engine.kernel_secs));
+                        if let Some(t0) = a.enqueued {
+                            report.ttft_wall.push(t0.elapsed());
+                        }
+                    }
+                    let t0 = engine.kernel_secs;
+                    let logits = engine.decode_step(&mut a.session, a.next);
+                    a.metrics.decode_secs += engine.kernel_secs - t0;
+                    a.next = argmax(&logits);
+                    a.produced += 1;
+                    a.metrics.decoded_tokens += 1;
+                    report.decoded_tokens += 1;
+                }
+            }
+        }
+
+        // ---- immediate retirement: Done event + KV-slot reuse ----
+        let mut i = 0;
+        while i < self.active.len() {
+            let finished = {
+                let a = &self.active[i];
+                a.dead
+                    || (a.prefilled == a.req.prompt.len()
+                        && (a.produced >= a.req.max_new_tokens
+                            || a.session.remaining_capacity(&self.engine.cfg) == 0))
+            };
+            if finished {
+                let a = self.active.remove(i);
+                if !a.dead {
+                    let _ = a.tx.send(Event::Done { id: a.req.id, metrics: a.metrics.clone() });
+                }
+                report.retired.push(Retired {
+                    id: a.req.id,
+                    at: self.engine.kernel_secs,
+                    metrics: a.metrics,
+                    dead: a.dead,
+                });
+                self.pool.release(a.session);
+            } else {
+                i += 1;
+            }
+        }
+
+        report.kernel_secs = self.engine.kernel_secs - round_start;
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::presets;
+    use crate::model::{ModelConfig, ModelWeights};
+    use crate::perf::PerfConfig;
+    use crate::sched::DynamicScheduler;
+    use crate::sim::{SimConfig, SimExecutor};
+    use std::sync::Arc;
+
+    fn test_engine(seed: u64) -> Engine<SimExecutor> {
+        let cfg = ModelConfig::micro();
+        let weights = Arc::new(ModelWeights::random_init(&cfg, seed));
+        let exec = SimExecutor::new(
+            presets::ultra_125h(),
+            SimConfig { execute_real: true, ..SimConfig::noiseless() },
+        );
+        Engine::new(cfg, weights, exec, Box::new(DynamicScheduler), PerfConfig::default())
+    }
+
+    fn pending(id: u64, prompt: &[u32], max_new: usize) -> (Pending, mpsc::Receiver<Event>) {
+        let (tx, rx) = mpsc::channel();
+        let req = Request { id, prompt: prompt.to_vec(), max_new_tokens: max_new };
+        (Pending::new(req, tx), rx)
+    }
+
+    fn drain_tokens(rx: &mpsc::Receiver<Event>) -> Vec<u32> {
+        rx.try_iter()
+            .filter_map(|e| match e {
+                Event::Token { token, .. } => Some(token),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn run_until_idle(b: &mut LeaseBatcher<SimExecutor>) {
+        let mut guard = 0;
+        while !b.is_idle() {
+            b.step();
+            guard += 1;
+            assert!(guard < 10_000, "batcher did not drain");
+        }
+    }
+
+    #[test]
+    fn single_request_matches_generate_oracle() {
+        let mut oracle = test_engine(3);
+        let mut session = oracle.new_session();
+        let (expect, _) = oracle.generate(&mut session, &[5, 6, 7], 6);
+
+        let mut b = LeaseBatcher::new(
+            test_engine(3),
+            None,
+            BatcherOpts { max_batch: 2, prefill_chunk: 2 },
+        );
+        let (p, rx) = pending(1, &[5, 6, 7], 6);
+        b.admit(p).map_err(|_| ()).unwrap();
+        run_until_idle(&mut b);
+        assert_eq!(drain_tokens(&rx), expect);
+        let done = rx.try_iter().count();
+        assert_eq!(done, 0, "events fully drained");
+    }
+
+    #[test]
+    fn mid_run_admission_keeps_streams_identical() {
+        // request B joins while A is mid-decode; both must match solo runs
+        let mut solo_a = test_engine(9);
+        let mut sa = solo_a.new_session();
+        let (expect_a, _) = solo_a.generate(&mut sa, &[1, 2, 3, 4, 5], 8);
+        let mut solo_b = test_engine(9);
+        let mut sb = solo_b.new_session();
+        let (expect_b, _) = solo_b.generate(&mut sb, &[9, 8], 5);
+
+        let mut b = LeaseBatcher::new(
+            test_engine(9),
+            None,
+            BatcherOpts { max_batch: 4, prefill_chunk: 2 },
+        );
+        let (pa, rxa) = pending(1, &[1, 2, 3, 4, 5], 8);
+        b.admit(pa).map_err(|_| ()).unwrap();
+        for _ in 0..4 {
+            b.step();
+        }
+        let (pb, rxb) = pending(2, &[9, 8], 5);
+        b.admit(pb).map_err(|_| ()).unwrap();
+        run_until_idle(&mut b);
+        assert_eq!(drain_tokens(&rxa), expect_a);
+        assert_eq!(drain_tokens(&rxb), expect_b);
+    }
+
+    #[test]
+    fn retirement_frees_slots_for_reuse() {
+        let mut b = LeaseBatcher::new(
+            test_engine(1),
+            None,
+            BatcherOpts { max_batch: 2, prefill_chunk: 8 },
+        );
+        let (p, _rx1) = pending(1, &[3], 2);
+        b.admit(p).map_err(|_| ()).unwrap();
+        run_until_idle(&mut b);
+        assert_eq!(b.pool().allocated(), 1);
+        assert_eq!(b.pool().idle(), 1);
+        // a second request reuses slot 0 instead of allocating slot 1
+        let (p, _rx2) = pending(2, &[4], 2);
+        b.admit(p).map_err(|_| ()).unwrap();
+        assert_eq!(b.active_slots(), vec![0]);
+        assert_eq!(b.pool().allocated(), 1);
+    }
+
+    #[test]
+    fn full_batch_hands_the_request_back() {
+        let mut b = LeaseBatcher::new(
+            test_engine(1),
+            None,
+            BatcherOpts { max_batch: 1, prefill_chunk: 8 },
+        );
+        let (p1, _rx1) = pending(1, &[3], 4);
+        b.admit(p1).map_err(|_| ()).unwrap();
+        assert!(!b.has_capacity());
+        let (p2, _rx2) = pending(2, &[4], 4);
+        let back = b.admit(p2);
+        assert!(back.is_err());
+        assert_eq!(back.err().unwrap().req.id, 2);
+    }
+
+    #[test]
+    fn too_long_prompt_errors_without_consuming_a_slot() {
+        let mut b = LeaseBatcher::new(test_engine(1), None, BatcherOpts::default());
+        let t_max = b.engine.cfg.t_max;
+        let prompt: Vec<u32> = (0..t_max as u32).collect();
+        let (p, rx) = pending(7, &prompt, 1);
+        assert!(b.admit(p).is_ok());
+        assert!(b.is_idle());
+        assert_eq!(b.pool().allocated(), 0);
+        match rx.try_recv().unwrap() {
+            Event::Error { id, .. } => assert_eq!(id, 7),
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_prompt_errors_instead_of_streaming_garbage() {
+        // only the wire parser used to reject empty prompts; the library
+        // path must too, or step() would stream an uncomputed token 0
+        let mut b = LeaseBatcher::new(test_engine(1), None, BatcherOpts::default());
+        let (p, rx) = pending(4, &[], 3);
+        assert!(b.admit(p).is_ok());
+        assert!(b.is_idle());
+        match rx.try_recv().unwrap() {
+            Event::Error { id, msg } => {
+                assert_eq!(id, 4);
+                assert_eq!(msg, "empty prompt");
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_client_retires_without_done() {
+        let mut b = LeaseBatcher::new(test_engine(2), None, BatcherOpts::default());
+        let (p, rx) = pending(1, &[2, 3], 6);
+        b.admit(p).map_err(|_| ()).unwrap();
+        b.step(); // prefill
+        drop(rx); // client goes away
+        let mut dead = false;
+        for _ in 0..4 {
+            let rep = b.step();
+            if rep.retired.iter().any(|r| r.dead) {
+                dead = true;
+                break;
+            }
+        }
+        assert!(dead, "abandoned request not retired as dead");
+        assert!(b.is_idle());
+        assert_eq!(b.pool().idle(), 1, "dead request's slot reclaimed");
+    }
+}

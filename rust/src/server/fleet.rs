@@ -1,0 +1,166 @@
+//! Fleet lifecycle: one [`LeaseBatcher`] per non-empty coordinator lease,
+//! rebuilt on every epoch change (stream admit/finish or rebalance), with
+//! in-flight requests migrating onto the new fleet.
+//!
+//! Sessions carry the KV state with the request, so a migrated stream
+//! resumes decoding on its new lease's cores with bit-identical tokens —
+//! partitioning only ever changes timing, never values. These helpers are
+//! shared by the threaded TCP server ([`super::serve_dynamic`]) and the
+//! deterministic harness ([`super::testing`]), so the lifecycle under test
+//! is the lifecycle in production.
+
+use crate::coordinator::{Coordinator, Lease};
+use crate::engine::Engine;
+use crate::exec::Executor;
+
+use super::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher};
+
+/// Builds an engine for a lease. The serving layer owns *when* engines are
+/// rebuilt (epoch changes); the factory owns *how* (executor choice,
+/// shared weights, scheduler, perf config).
+pub type EngineFactory<E> = Box<dyn Fn(&Lease) -> Engine<E> + Send>;
+
+/// One batcher per non-empty lease of the coordinator's current epoch.
+/// (Empty leases — more streams than cores — wait for capacity and get no
+/// engine.)
+pub fn build_batchers<E: Executor>(
+    coord: &Coordinator,
+    factory: &EngineFactory<E>,
+    opts: BatcherOpts,
+) -> Vec<LeaseBatcher<E>> {
+    coord
+        .leases()
+        .filter(|l| !l.is_empty())
+        .map(|l| LeaseBatcher::new(factory(l), Some(l.clone()), opts))
+        .collect()
+}
+
+/// Spread carried-over in-flight requests across a fresh fleet, always
+/// onto the least-loaded batcher. With an empty fleet (every stream gone)
+/// the carried requests are dropped — their clients are gone too, so every
+/// pending send would fail anyway.
+pub fn distribute<E: Executor>(carried: Vec<ActiveRequest>, batchers: &mut [LeaseBatcher<E>]) {
+    if batchers.is_empty() {
+        return;
+    }
+    for a in carried {
+        let target = batchers.iter_mut().min_by_key(|b| b.n_active()).unwrap();
+        target.adopt(a);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::AllocPolicy;
+    use crate::cpu::presets;
+    use crate::model::{ModelConfig, ModelWeights};
+    use crate::perf::PerfConfig;
+    use crate::sched::DynamicScheduler;
+    use crate::server::batcher::Pending;
+    use crate::server::protocol::Request;
+    use crate::sim::{SimConfig, SimExecutor};
+    use std::sync::Arc;
+
+    fn factory() -> EngineFactory<SimExecutor> {
+        let machine = presets::core_12900k();
+        let cfg = ModelConfig::micro();
+        let weights = Arc::new(ModelWeights::random_init(&cfg, 5));
+        Box::new(move |lease: &Lease| {
+            let exec = lease.sim_executor(
+                &machine,
+                SimConfig { execute_real: true, ..SimConfig::noiseless() },
+            );
+            Engine::new(
+                cfg.clone(),
+                Arc::clone(&weights),
+                exec,
+                Box::new(DynamicScheduler),
+                PerfConfig::default(),
+            )
+        })
+    }
+
+    #[test]
+    fn one_batcher_per_nonempty_lease() {
+        let f = factory();
+        let mut coord = Coordinator::new(presets::core_12900k(), AllocPolicy::Balanced);
+        coord.admit(0);
+        coord.admit(1);
+        let batchers = build_batchers(&coord, &f, BatcherOpts::default());
+        assert_eq!(batchers.len(), 2);
+        for b in &batchers {
+            let lease = b.lease.as_ref().unwrap();
+            assert_eq!(lease.epoch, coord.epoch());
+            assert_eq!(b.engine.rt.exec.sim.spec.n_cores(), lease.n_cores());
+        }
+    }
+
+    #[test]
+    fn migration_preserves_in_flight_streams() {
+        let f = factory();
+        let mut coord = Coordinator::new(presets::core_12900k(), AllocPolicy::Balanced);
+        coord.admit(0);
+        let mut fleet = build_batchers(&coord, &f, BatcherOpts::default());
+        assert_eq!(fleet.len(), 1);
+
+        // solo oracle for the full request
+        let solo_lease = coord.lease(0).unwrap().clone();
+        let mut oracle = f(&solo_lease);
+        let mut s = oracle.new_session();
+        let (expect, _) = oracle.generate(&mut s, &[4, 2, 7], 8);
+
+        // start the request, run part of it, then rebuild mid-flight
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = Request { id: 1, prompt: vec![4, 2, 7], max_new_tokens: 8 };
+        fleet[0].admit(Pending::new(req, tx)).map_err(|_| ()).unwrap();
+        for _ in 0..4 {
+            fleet[0].step();
+        }
+        let carried: Vec<ActiveRequest> =
+            fleet.iter_mut().flat_map(|b| b.take_actives()).collect();
+        assert_eq!(carried.len(), 1);
+        coord.admit(1); // epoch change: fleet is rebuilt on halved leases
+        let mut fleet = build_batchers(&coord, &f, BatcherOpts::default());
+        assert_eq!(fleet.len(), 2);
+        distribute(carried, &mut fleet);
+        assert_eq!(fleet.iter().map(|b| b.n_active()).sum::<usize>(), 1);
+
+        let mut guard = 0;
+        while fleet.iter().any(|b| !b.is_idle()) {
+            for b in fleet.iter_mut() {
+                if !b.is_idle() {
+                    b.step();
+                }
+            }
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        let tokens: Vec<u32> = rx
+            .try_iter()
+            .filter_map(|e| match e {
+                crate::server::protocol::Event::Token { token, .. } => Some(token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tokens, expect, "migrated stream diverged from solo run");
+    }
+
+    #[test]
+    fn empty_fleet_drops_carried_requests() {
+        let f = factory();
+        let mut coord = Coordinator::new(presets::core_12900k(), AllocPolicy::Balanced);
+        coord.admit(0);
+        let mut fleet = build_batchers(&coord, &f, BatcherOpts::default());
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let req = Request { id: 1, prompt: vec![1], max_new_tokens: 2 };
+        fleet[0].admit(Pending::new(req, tx)).map_err(|_| ()).unwrap();
+        fleet[0].step();
+        let carried: Vec<ActiveRequest> =
+            fleet.iter_mut().flat_map(|b| b.take_actives()).collect();
+        coord.finish(0);
+        let mut fleet = build_batchers(&coord, &f, BatcherOpts::default());
+        assert!(fleet.is_empty());
+        distribute(carried, &mut fleet); // no panic, requests dropped
+    }
+}

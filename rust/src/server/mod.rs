@@ -1,92 +1,136 @@
-//! Threaded TCP serving front-end: request router + dynamic batcher over
-//! one or more [`Engine`]s.
+//! Threaded TCP serving front-end with **continuous batching** and
+//! **dynamic lease membership**.
 //!
-//! Client handlers parse JSON-lines requests into a shared admission
-//! queue; each engine runs on its own thread, draining the queue in
-//! batches (up to `max_batch`), prefilling each request, then interleaving
-//! decode steps round-robin across its batch, streaming tokens back as
-//! they are produced. The perf-ratio table lives in each engine and keeps
-//! adapting across requests — exactly the paper's "quickly adapt …
-//! whether during program startup or when there are sudden changes"
-//! property, surfaced as a service.
+//! Architecture (one layer per module):
 //!
-//! With [`serve`] a single engine owns every core (the seed behavior).
-//! With [`serve_multi`] the server runs one engine **per coordinator
-//! lease** ([`crate::coordinator`]): each engine's executor is restricted
-//! to its leased core subset, and admission is effectively round-robin —
-//! whichever lease's engine goes idle first claims the next waiting
-//! requests — so concurrent streams decode in parallel on disjoint cores
-//! instead of serializing through one all-core engine.
+//! * [`protocol`] — JSON-lines wire format and the typed [`protocol::Event`]
+//!   stream the serving core produces.
+//! * [`queue`] — the bounded admission queue. Client handlers parse
+//!   requests into it; saturation answers with a protocol error or blocks
+//!   the submitter ([`ServerOpts::on_full`]), so memory stays bounded under
+//!   overload.
+//! * [`batcher`] — continuous batching inside one lease: a persistent
+//!   [`LeaseBatcher`] advances its live requests in token rounds (chunked
+//!   prefill, one decoded token per round), admits new requests *between*
+//!   rounds and retires finished ones immediately, reusing KV slots from a
+//!   [`crate::model::SessionPool`]. This replaces the old run-to-completion
+//!   `run_batch` loop — a request arriving mid-run now waits one round, not
+//!   one whole batch.
+//! * [`fleet`] — lease lifecycle: one batcher per non-empty coordinator
+//!   lease, rebuilt on every epoch change with in-flight sessions migrating
+//!   onto the new fleet (bit-identical streams; partitioning only changes
+//!   timing).
+//! * [`testing`] — a deterministic, virtual-time harness that drives the
+//!   same batcher/fleet code with scripted arrival traces: the standard way
+//!   to test serving features without sockets or wall-clock sleeps.
+//!
+//! Front-ends:
+//!
+//! * [`serve`] — one engine owning every core (the seed behavior).
+//! * [`serve_multi`] — a fixed fleet, one engine per pre-built lease; all
+//!   batchers drain the shared admission queue (first-idle-wins).
+//! * [`serve_dynamic`] — the lease set follows the live connections: a
+//!   connection's first generate request admits it to the
+//!   [`crate::coordinator::Coordinator`] (epoch bump → fleet rebuild), its
+//!   disconnect returns the cores to the pool. Per-core strength keeps
+//!   being learned from served traffic via [`Coordinator::observe`];
+//!   measurements racing a rebuild carry a stale lease epoch and are
+//!   dropped, never mis-attributed.
 
+pub mod batcher;
+pub mod fleet;
 pub mod protocol;
+pub mod queue;
+pub mod testing;
 
-use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
+use crate::coordinator::{AllocPolicy, Coordinator, Lease, StreamId};
+use crate::cpu::CpuSpec;
 use crate::engine::Engine;
 use crate::exec::Executor;
-use crate::metrics::LatencyHistogram;
-use crate::model::argmax;
+use crate::metrics::ServingMetrics;
 use crate::util::json::Json;
 
-use protocol::{ClientMessage, Request};
+pub use batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending};
+pub use queue::{AdmissionPolicy, AdmissionQueue};
+
+use protocol::ClientMessage;
 
 #[derive(Clone, Copy, Debug)]
 pub struct ServerOpts {
+    /// concurrent requests (= KV slots) per engine
     pub max_batch: usize,
+    /// prompt tokens prefilled per scheduler round (admission-latency bound)
+    pub prefill_chunk: usize,
+    /// admission-queue bound; a request finding it full hits `on_full`
+    pub queue_depth: usize,
+    pub on_full: AdmissionPolicy,
 }
 
 impl Default for ServerOpts {
     fn default() -> Self {
-        ServerOpts { max_batch: 4 }
+        ServerOpts {
+            max_batch: 4,
+            prefill_chunk: 16,
+            queue_depth: 256,
+            on_full: AdmissionPolicy::Reject,
+        }
     }
 }
 
-struct Pending {
-    req: Request,
-    tx: mpsc::Sender<String>,
-}
-
-#[derive(Default)]
-struct ServerMetrics {
-    requests: u64,
-    tokens: u64,
-    prefill: LatencyHistogram,
-    decode_per_token: LatencyHistogram,
-}
-
-impl ServerMetrics {
-    fn to_json(&self, n_engines: usize) -> Json {
-        let mut fields = vec![
-            ("requests", Json::num(self.requests as f64)),
-            ("tokens", Json::num(self.tokens as f64)),
-            ("engines", Json::num(n_engines as f64)),
-        ];
-        if let Some(s) = self.prefill.summary() {
-            fields.push(("prefill_p50_secs", Json::num(s.p50)));
-        }
-        if let Some(s) = self.decode_per_token.summary() {
-            fields.push(("decode_p50_secs_per_token", Json::num(s.p50)));
-        }
-        Json::obj(fields)
+impl ServerOpts {
+    fn batcher(&self) -> BatcherOpts {
+        BatcherOpts { max_batch: self.max_batch, prefill_chunk: self.prefill_chunk }
     }
+}
+
+/// Membership change of the live-connection set, routed to the supervisor.
+enum ConnEvent {
+    Connect(StreamId),
+    Disconnect(StreamId),
 }
 
 struct Shared {
-    queue: Mutex<VecDeque<Pending>>,
-    cv: Condvar,
+    queue: Mutex<AdmissionQueue<Pending>>,
+    /// engine workers wait here for queued work
+    work: Condvar,
+    /// blocked submitters (AdmissionPolicy::Block) wait here for space
+    space: Condvar,
     shutdown: AtomicBool,
-    metrics: Mutex<ServerMetrics>,
-    /// engine threads draining the queue (1 = classic single-engine server)
-    n_engines: usize,
+    metrics: Mutex<ServingMetrics>,
+    n_engines: AtomicUsize,
+    /// coordinator epoch of the current fleet (0 for static fleets)
+    epoch: AtomicU64,
+    /// bumped by the supervisor to retire worker threads on fleet rebuild
+    generation: AtomicU64,
+    on_full: AdmissionPolicy,
 }
 
-/// A running server; dropping the handle shuts it down.
+impl Shared {
+    fn new(opts: ServerOpts, n_engines: usize) -> Shared {
+        Shared {
+            queue: Mutex::new(AdmissionQueue::new(opts.queue_depth)),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            metrics: Mutex::new(ServingMetrics::default()),
+            n_engines: AtomicUsize::new(n_engines),
+            epoch: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
+            on_full: opts.on_full,
+        }
+    }
+}
+
+/// A running server; call [`ServerHandle::shutdown`] to stop it. Every
+/// thread the server ever spawned — batchers, supervisor, accept loop and
+/// all connection handlers — is joined before `shutdown` returns, so no
+/// handler can race the teardown.
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     shared: Arc<Shared>,
@@ -96,7 +140,8 @@ pub struct ServerHandle {
 impl ServerHandle {
     pub fn shutdown(mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.shared.cv.notify_all();
+        self.shared.work.notify_all();
+        self.shared.space.notify_all();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -104,7 +149,7 @@ impl ServerHandle {
 }
 
 /// Start serving `engine` on `addr` (e.g. "127.0.0.1:0" for an ephemeral
-/// port). The engine runs on its own thread; handlers are per-connection.
+/// port) — a single engine owning every core.
 pub fn serve<E: Executor + Send + 'static>(
     addr: &str,
     engine: Engine<E>,
@@ -113,11 +158,11 @@ pub fn serve<E: Executor + Send + 'static>(
     serve_multi(addr, vec![engine], opts)
 }
 
-/// Start serving a fleet of engines — typically one per coordinator lease,
-/// each restricted to a disjoint core subset — on `addr`. Every engine
-/// gets its own batcher thread; all of them drain one shared admission
-/// queue, so the first idle engine claims the next waiting requests
-/// (round-robin admission under sustained load).
+/// Start serving a fixed fleet of engines — typically one per coordinator
+/// lease, each restricted to a disjoint core subset. Every engine runs a
+/// continuously-batching scheduler thread; all of them drain one shared
+/// bounded admission queue, so the first batcher with a free slot claims
+/// the next waiting request.
 pub fn serve_multi<E: Executor + Send + 'static>(
     addr: &str,
     engines: Vec<Engine<E>>,
@@ -127,138 +172,288 @@ pub fn serve_multi<E: Executor + Send + 'static>(
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     let bound = listener.local_addr()?;
-    let shared = Arc::new(Shared {
-        queue: Mutex::new(VecDeque::new()),
-        cv: Condvar::new(),
-        shutdown: AtomicBool::new(false),
-        metrics: Mutex::new(ServerMetrics::default()),
-        n_engines: engines.len(),
-    });
+    let shared = Arc::new(Shared::new(opts, engines.len()));
 
     let mut threads = Vec::new();
-
-    // ---- engine/batcher threads (one per lease) ----
-    for mut engine in engines {
-        let shared = Arc::clone(&shared);
-        threads.push(std::thread::spawn(move || loop {
-            let batch: Vec<Pending> = {
-                let mut q = shared.queue.lock().unwrap();
-                while q.is_empty() && !shared.shutdown.load(Ordering::SeqCst) {
-                    let (qq, _) = shared.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
-                    q = qq;
-                }
-                if q.is_empty() && shared.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                let take = opts.max_batch.min(q.len());
-                q.drain(..take).collect()
-            };
-            run_batch(&mut engine, &shared, batch);
+    for engine in engines {
+        let shared2 = Arc::clone(&shared);
+        let b = LeaseBatcher::new(engine, None, opts.batcher());
+        threads.push(std::thread::spawn(move || {
+            let _ = run_batcher(b, shared2, 0, None);
         }));
     }
+    threads.push(spawn_accept_loop(listener, Arc::clone(&shared), None));
+    Ok(ServerHandle { addr: bound, shared, threads })
+}
 
-    // ---- accept loop ----
+/// Start serving with **dynamic lease membership**: the engine fleet is not
+/// fixed up front but follows the live connections. A connection's first
+/// generate request admits it to the coordinator as a stream (epoch bump),
+/// its disconnect finishes the stream; on every epoch change the fleet is
+/// rebuilt from the new leases via `factory` and in-flight sessions migrate
+/// onto the new engines (token streams stay bit-identical — only the core
+/// partitioning, and therefore timing, changes).
+pub fn serve_dynamic<E, F>(
+    addr: &str,
+    machine: CpuSpec,
+    policy: AllocPolicy,
+    factory: F,
+    opts: ServerOpts,
+) -> std::io::Result<ServerHandle>
+where
+    E: Executor + Send + 'static,
+    F: Fn(&Lease) -> Engine<E> + Send + 'static,
+{
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let bound = listener.local_addr()?;
+    let shared = Arc::new(Shared::new(opts, 0));
+    let coord = Arc::new(Mutex::new(Coordinator::new(machine, policy)));
+    let (ev_tx, ev_rx) = mpsc::channel::<ConnEvent>();
+
+    let mut threads = Vec::new();
     {
-        let shared = Arc::clone(&shared);
-        threads.push(std::thread::spawn(move || loop {
+        let shared2 = Arc::clone(&shared);
+        let coord2 = Arc::clone(&coord);
+        let factory: fleet::EngineFactory<E> = Box::new(factory);
+        let batcher_opts = opts.batcher();
+        threads.push(std::thread::spawn(move || {
+            supervise(shared2, coord2, factory, batcher_opts, ev_rx);
+        }));
+    }
+    threads.push(spawn_accept_loop(listener, Arc::clone(&shared), Some(ev_tx)));
+    Ok(ServerHandle { addr: bound, shared, threads })
+}
+
+/// The supervisor owns the coordinator and the worker fleet. Each
+/// membership event retires the running workers (generation bump),
+/// collects their in-flight requests, applies admit/finish to the
+/// coordinator, rebuilds one batcher per non-empty lease and migrates the
+/// carried requests onto the new fleet.
+fn supervise<E: Executor + Send + 'static>(
+    shared: Arc<Shared>,
+    coord: Arc<Mutex<Coordinator>>,
+    factory: fleet::EngineFactory<E>,
+    opts: BatcherOpts,
+    events: mpsc::Receiver<ConnEvent>,
+) {
+    let mut workers: Vec<std::thread::JoinHandle<Vec<ActiveRequest>>> = Vec::new();
+    loop {
+        let first = match events.recv_timeout(Duration::from_millis(50)) {
+            Ok(ev) => ev,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // the accept loop (and every handler) is gone; treat it as
+                // a shutdown so the workers drain and exit
+                shared.shutdown.store(true, Ordering::SeqCst);
+                break;
+            }
+        };
+        // coalesce a burst of membership changes into one rebuild
+        let mut changes = vec![first];
+        while let Ok(ev) = events.try_recv() {
+            changes.push(ev);
+        }
+
+        // retire the current fleet; workers hand back their live requests
+        shared.generation.fetch_add(1, Ordering::SeqCst);
+        shared.work.notify_all();
+        let mut carried: Vec<ActiveRequest> = Vec::new();
+        for w in workers.drain(..) {
+            carried.extend(w.join().unwrap_or_default());
+        }
+
+        // membership → coordinator (each change bumps the epoch)
+        let mut batchers = {
+            let mut c = coord.lock().unwrap();
+            for ev in changes {
+                match ev {
+                    ConnEvent::Connect(s) => {
+                        let _ = c.admit(s);
+                    }
+                    ConnEvent::Disconnect(s) => c.finish(s),
+                }
+            }
+            let batchers = fleet::build_batchers(&c, &factory, opts);
+            shared.epoch.store(c.epoch(), Ordering::SeqCst);
+            batchers
+        };
+        fleet::distribute(carried, &mut batchers);
+        shared.n_engines.store(batchers.len(), Ordering::SeqCst);
+        shared.metrics.lock().unwrap().rebuilds += 1;
+        let gen = shared.generation.load(Ordering::SeqCst);
+        for b in batchers {
+            let shared2 = Arc::clone(&shared);
+            let coord2 = Arc::clone(&coord);
+            workers.push(std::thread::spawn(move || run_batcher(b, shared2, gen, Some(coord2))));
+        }
+        shared.work.notify_all();
+    }
+    // shutdown: the workers drain the queue and exit on the flag
+    shared.work.notify_all();
+    for w in workers {
+        let _ = w.join();
+    }
+    // with zero workers left, anything still queued would strand its
+    // handler on a channel that never closes — drop it now
+    let mut q = shared.queue.lock().unwrap();
+    while q.pop().is_some() {}
+    shared.space.notify_all();
+}
+
+/// One engine's scheduler thread: admit from the shared queue between
+/// rounds, step the batcher, export metrics, feed measured per-core rates
+/// to the coordinator. Returns the in-flight requests when its generation
+/// is retired (fleet rebuild).
+fn run_batcher<E: Executor>(
+    mut b: LeaseBatcher<E>,
+    shared: Arc<Shared>,
+    my_gen: u64,
+    coord: Option<Arc<Mutex<Coordinator>>>,
+) -> Vec<ActiveRequest> {
+    loop {
+        {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.generation.load(Ordering::SeqCst) != my_gen {
+                    return b.take_actives();
+                }
+                if shared.shutdown.load(Ordering::SeqCst) && q.is_empty() && b.is_idle() {
+                    return Vec::new();
+                }
+                if !b.is_idle() || !q.is_empty() {
+                    break;
+                }
+                let (qq, _) = shared.work.wait_timeout(q, Duration::from_millis(20)).unwrap();
+                q = qq;
+            }
+            // per-round observables + admission between decode rounds
+            shared.metrics.lock().unwrap().queue_depth.record(q.len() as f64);
+            while b.has_capacity() {
+                let Some(p) = q.pop() else { break };
+                shared.space.notify_all();
+                if let Err(p) = b.admit(p) {
+                    q.push_front(p);
+                    break;
+                }
+            }
+        }
+
+        let report = b.step();
+
+        if !report.ttft_wall.is_empty() || !report.retired.is_empty() {
+            let mut m = shared.metrics.lock().unwrap();
+            for d in &report.ttft_wall {
+                m.ttft.record(d.as_secs_f64());
+            }
+            for r in &report.retired {
+                m.record_request(&r.metrics);
+            }
+        }
+
+        // fold this round's per-core measurement into the coordinator's
+        // strength table; a result taken under a stale lease epoch is
+        // dropped by `observe` rather than mis-attributed
+        if let Some(coord) = &coord {
+            if let (Some(lease), Some(res)) = (b.lease.as_ref(), b.engine.rt.last_result.as_ref())
+            {
+                let _ = coord.lock().unwrap().observe(lease, res);
+            }
+        }
+    }
+}
+
+/// Submit a request to the bounded queue, honoring the overflow policy.
+fn submit(shared: &Arc<Shared>, pending: Pending) -> Result<(), Pending> {
+    let mut pending = pending;
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return Err(pending);
+        }
+        match q.try_push(pending) {
+            Ok(()) => {
+                shared.work.notify_all();
+                return Ok(());
+            }
+            Err(p) => match shared.on_full {
+                AdmissionPolicy::Reject => return Err(p),
+                AdmissionPolicy::Block => {
+                    pending = p;
+                    let (qq, _) = shared.space.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                    q = qq;
+                }
+            },
+        }
+    }
+}
+
+/// Accept loop. Handler threads are tracked and reaped as they finish, and
+/// every live handler is joined before the loop thread exits — shutdown
+/// can no longer race a handler still holding its stream.
+fn spawn_accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    events: Option<mpsc::Sender<ConnEvent>>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut next_conn: StreamId = 0;
+        loop {
             if shared.shutdown.load(Ordering::SeqCst) {
-                return;
+                break;
             }
             match listener.accept() {
                 Ok((stream, _)) => {
-                    let shared = Arc::clone(&shared);
-                    // handlers are detached; they exit when the client
-                    // disconnects or shutdown flips
-                    std::thread::spawn(move || {
-                        let _ = handle_client(stream, &shared);
-                    });
+                    let shared2 = Arc::clone(&shared);
+                    let ev = events.clone();
+                    let conn = next_conn;
+                    next_conn += 1;
+                    handlers.push(std::thread::spawn(move || {
+                        let _ = handle_client(stream, &shared2, conn, ev.as_ref());
+                    }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_millis(10));
                 }
-                Err(_) => return,
+                Err(_) => break,
             }
-        }));
-    }
-
-    Ok(ServerHandle { addr: bound, shared, threads })
+            handlers.retain(|h| !h.is_finished());
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+    })
 }
 
-/// Prefill every request, then interleave decode rounds across the batch.
-fn run_batch<E: Executor>(engine: &mut Engine<E>, shared: &Arc<Shared>, batch: Vec<Pending>) {
-    struct Active {
-        pending: Pending,
-        session: crate::model::Session,
-        next: u32,
-        produced: usize,
-        metrics: crate::metrics::PhaseMetrics,
-        dead: bool,
-    }
-
-    let vocab = engine.cfg.vocab as u32;
-    let mut active: Vec<Active> = Vec::new();
-    for pending in batch {
-        let mut session = engine.new_session();
-        let prompt: Vec<u32> = pending.req.prompt.iter().map(|&t| t % vocab).collect();
-        let capacity = engine.cfg.t_max;
-        if prompt.len() >= capacity {
-            let _ = pending.tx.send(protocol::error_line(pending.req.id, "prompt too long"));
-            continue;
-        }
-        let t0 = engine.kernel_secs;
-        let logits = engine.prefill(&mut session, &prompt);
-        let mut metrics = crate::metrics::PhaseMetrics {
-            prompt_tokens: prompt.len(),
-            ..Default::default()
-        };
-        metrics.prefill_secs = engine.kernel_secs - t0;
-        let next = argmax(&logits);
-        active.push(Active { pending, session, next, produced: 0, metrics, dead: false });
-    }
-
-    // round-robin decode
-    loop {
-        let mut progressed = false;
-        for a in active.iter_mut() {
-            if a.dead
-                || a.produced >= a.pending.req.max_new_tokens
-                || a.session.remaining_capacity(&engine.cfg) == 0
-            {
-                continue;
-            }
-            let token = a.next;
-            if a.pending.tx.send(protocol::token_line(a.pending.req.id, token)).is_err() {
-                a.dead = true; // client went away; stop decoding for it
-                continue;
-            }
-            let t0 = engine.kernel_secs;
-            let logits = engine.decode_step(&mut a.session, token);
-            a.metrics.decode_secs += engine.kernel_secs - t0;
-            a.next = argmax(&logits);
-            a.produced += 1;
-            a.metrics.decoded_tokens += 1;
-            progressed = true;
-        }
-        if !progressed {
-            break;
+fn handle_client(
+    stream: TcpStream,
+    shared: &Arc<Shared>,
+    conn: StreamId,
+    events: Option<&mpsc::Sender<ConnEvent>>,
+) -> std::io::Result<()> {
+    let mut connected = false;
+    let res = client_loop(stream, shared, conn, events, &mut connected);
+    if connected {
+        if let Some(ev) = events {
+            let _ = ev.send(ConnEvent::Disconnect(conn));
         }
     }
-
-    let mut m = shared.metrics.lock().unwrap();
-    for a in &active {
-        if !a.dead {
-            let _ = a.pending.tx.send(protocol::done_line(a.pending.req.id, &a.metrics));
-        }
-        m.requests += 1;
-        m.tokens += a.produced as u64;
-        m.prefill.record(a.metrics.prefill_secs);
-        if a.metrics.decoded_tokens > 0 {
-            m.decode_per_token.record(a.metrics.decode_latency());
-        }
-    }
+    res
 }
 
-fn handle_client(stream: TcpStream, shared: &Arc<Shared>) -> std::io::Result<()> {
+fn client_loop(
+    stream: TcpStream,
+    shared: &Arc<Shared>,
+    conn: StreamId,
+    events: Option<&mpsc::Sender<ConnEvent>>,
+    connected: &mut bool,
+) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
@@ -284,22 +479,45 @@ fn handle_client(stream: TcpStream, shared: &Arc<Shared>) -> std::io::Result<()>
         }
         match protocol::parse_client_line(line.trim()) {
             Ok(ClientMessage::Metrics) => {
-                let snap = shared.metrics.lock().unwrap().to_json(shared.n_engines);
+                let snap = shared.metrics.lock().unwrap().to_json(
+                    shared.n_engines.load(Ordering::SeqCst),
+                    shared.epoch.load(Ordering::SeqCst),
+                );
                 writeln!(writer, "{}", Json::obj(vec![("metrics", snap)]).dump())?;
             }
             Ok(ClientMessage::Generate(req)) => {
-                let (tx, rx) = mpsc::channel();
-                {
-                    let mut q = shared.queue.lock().unwrap();
-                    q.push_back(Pending { req, tx });
-                    shared.cv.notify_all();
+                // a connection becomes a coordinator stream on its first
+                // request — metrics-only probes never grow the lease set
+                if let Some(ev) = events {
+                    if !*connected {
+                        *connected = true;
+                        let _ = ev.send(ConnEvent::Connect(conn));
+                    }
                 }
-                // stream responses for this request until done/error
-                for msg in rx {
-                    let is_final = msg.contains("\"done\"") || msg.contains("\"error\"");
-                    writeln!(writer, "{msg}")?;
-                    if is_final {
-                        break;
+                let id = req.id;
+                let (tx, rx) = mpsc::channel();
+                let pending = Pending { req, tx, enqueued: Some(Instant::now()) };
+                match submit(shared, pending) {
+                    Ok(()) => {
+                        // stream responses for this request until done/error
+                        for msg in rx {
+                            let fin = msg.is_final();
+                            writeln!(writer, "{}", msg.line())?;
+                            if fin {
+                                break;
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        // distinguish backpressure from a shutdown race —
+                        // only real queue saturation counts as a rejection
+                        let msg = if shared.shutdown.load(Ordering::SeqCst) {
+                            "server shutting down"
+                        } else {
+                            shared.metrics.lock().unwrap().rejected += 1;
+                            "admission queue full"
+                        };
+                        writeln!(writer, "{}", protocol::error_line(id, msg))?;
                     }
                 }
             }
@@ -340,7 +558,8 @@ mod tests {
                 Err(_) => break,
             };
             let v = Json::parse(&l).unwrap();
-            let fin = v.get("done").is_some() || v.get("error").is_some() || v.get("metrics").is_some();
+            let fin =
+                v.get("done").is_some() || v.get("error").is_some() || v.get("metrics").is_some();
             out.push(v);
             if fin {
                 break;
@@ -380,7 +599,8 @@ mod tests {
 
     #[test]
     fn concurrent_clients_are_batched() {
-        let handle = serve("127.0.0.1:0", test_engine(), ServerOpts { max_batch: 4 }).unwrap();
+        let opts = ServerOpts { max_batch: 4, ..Default::default() };
+        let handle = serve("127.0.0.1:0", test_engine(), opts).unwrap();
         let addr = handle.addr;
         let handles: Vec<_> = (0..4)
             .map(|i| {
@@ -400,6 +620,9 @@ mod tests {
         let metrics = send_request(addr, r#"{"cmd":"metrics"}"#);
         let m = metrics[0].get("metrics").unwrap();
         assert_eq!(m.get("requests").unwrap().as_i64(), Some(4));
+        // continuous batching exports its two new observables
+        assert!(m.get("ttft_p50_secs").unwrap().as_f64().unwrap() > 0.0);
+        assert!(m.get("queue_depth_p50").is_some());
         handle.shutdown();
     }
 
@@ -430,7 +653,8 @@ mod tests {
             })
             .collect();
         assert_eq!(engines.len(), 2);
-        let multi = serve_multi("127.0.0.1:0", engines, ServerOpts { max_batch: 2 }).unwrap();
+        let multi_opts = ServerOpts { max_batch: 2, ..Default::default() };
+        let multi = serve_multi("127.0.0.1:0", engines, multi_opts).unwrap();
         let single = serve("127.0.0.1:0", test_engine(), ServerOpts::default()).unwrap();
         // same weights + same prompt → identical tokens no matter which
         // lease's engine serves the request (partitioning never changes
@@ -471,6 +695,60 @@ mod tests {
             &format!(r#"{{"id": 9, "prompt": [{}], "max_new_tokens": 1}}"#, prompt.join(",")),
         );
         assert!(msgs[0].get("error").is_some());
+        handle.shutdown();
+    }
+
+    #[test]
+    fn saturated_queue_returns_protocol_error() {
+        // depth 0: every generate request finds the queue full — the
+        // deterministic worst case of saturation. The server answers with
+        // a protocol error instead of growing memory.
+        let opts = ServerOpts {
+            queue_depth: 0,
+            on_full: AdmissionPolicy::Reject,
+            ..Default::default()
+        };
+        let handle = serve("127.0.0.1:0", test_engine(), opts).unwrap();
+        let msgs = send_request(handle.addr, r#"{"id": 3, "prompt": [1], "max_new_tokens": 2}"#);
+        assert_eq!(
+            msgs[0].get("error").and_then(Json::as_str),
+            Some("admission queue full")
+        );
+        let metrics = send_request(handle.addr, r#"{"cmd":"metrics"}"#);
+        let m = metrics[0].get("metrics").unwrap();
+        assert_eq!(m.get("rejected").unwrap().as_i64(), Some(1));
+        assert_eq!(m.get("requests").unwrap().as_i64(), Some(0));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn block_policy_serves_everyone_through_a_tiny_queue() {
+        let opts = ServerOpts {
+            max_batch: 1,
+            queue_depth: 1,
+            on_full: AdmissionPolicy::Block,
+            ..Default::default()
+        };
+        let handle = serve("127.0.0.1:0", test_engine(), opts).unwrap();
+        let addr = handle.addr;
+        let joins: Vec<_> = (0..5)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    send_request(
+                        addr,
+                        &format!(r#"{{"id": {i}, "prompt": [{i}], "max_new_tokens": 2}}"#),
+                    )
+                })
+            })
+            .collect();
+        for j in joins {
+            let msgs = j.join().unwrap();
+            assert!(msgs.iter().any(|m| m.get("done").is_some()), "{msgs:?}");
+        }
+        let metrics = send_request(addr, r#"{"cmd":"metrics"}"#);
+        let m = metrics[0].get("metrics").unwrap();
+        assert_eq!(m.get("requests").unwrap().as_i64(), Some(5));
+        assert_eq!(m.get("rejected").unwrap().as_i64(), Some(0));
         handle.shutdown();
     }
 }

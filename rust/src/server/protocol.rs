@@ -51,6 +51,39 @@ pub fn parse_client_line(line: &str) -> Result<ClientMessage, String> {
     Ok(ClientMessage::Generate(Request { id, prompt, max_new_tokens }))
 }
 
+/// A typed server→client message. The serving core (batcher/fleet)
+/// produces these; the TCP front-end serializes them with [`Event::line`],
+/// while the deterministic harness ([`crate::server::testing`]) consumes
+/// them directly — same stream, no socket or JSON round-trip required.
+#[derive(Clone, Debug)]
+pub enum Event {
+    Token { id: u64, token: u32 },
+    Done { id: u64, metrics: PhaseMetrics },
+    Error { id: u64, msg: String },
+}
+
+impl Event {
+    pub fn id(&self) -> u64 {
+        match self {
+            Event::Token { id, .. } | Event::Done { id, .. } | Event::Error { id, .. } => *id,
+        }
+    }
+
+    /// True for the message that terminates a request's stream.
+    pub fn is_final(&self) -> bool {
+        !matches!(self, Event::Token { .. })
+    }
+
+    /// The JSON-lines wire form.
+    pub fn line(&self) -> String {
+        match self {
+            Event::Token { id, token } => token_line(*id, *token),
+            Event::Done { id, metrics } => done_line(*id, metrics),
+            Event::Error { id, msg } => error_line(*id, msg),
+        }
+    }
+}
+
 pub fn token_line(id: u64, token: u32) -> String {
     Json::obj(vec![("id", Json::num(id as f64)), ("token", Json::num(token as f64))]).dump()
 }
@@ -119,5 +152,18 @@ mod tests {
         }
         let d = Json::parse(&done_line(9, &m)).unwrap();
         assert_eq!(d.get("tokens_per_sec").unwrap().as_f64(), Some(16.0));
+    }
+
+    #[test]
+    fn typed_events_match_line_helpers() {
+        let m = PhaseMetrics { decoded_tokens: 3, decode_secs: 1.5, ..Default::default() };
+        let tok = Event::Token { id: 4, token: 9 };
+        let done = Event::Done { id: 4, metrics: m.clone() };
+        let err = Event::Error { id: 4, msg: "boom".into() };
+        assert_eq!(tok.line(), token_line(4, 9));
+        assert_eq!(done.line(), done_line(4, &m));
+        assert_eq!(err.line(), error_line(4, "boom"));
+        assert!(!tok.is_final() && done.is_final() && err.is_final());
+        assert_eq!(tok.id(), 4);
     }
 }

@@ -1,0 +1,110 @@
+//! Bounded admission queue for the serving front-end.
+//!
+//! The queue never grows past its configured depth: [`AdmissionQueue::try_push`]
+//! hands a request back to the caller when the queue is saturated, and the
+//! server's [`super::ServerOpts::on_full`] policy decides whether the caller
+//! answers with a protocol error ([`AdmissionPolicy::Reject`]) or blocks the
+//! submitting connection until space frees up ([`AdmissionPolicy::Block`]).
+//! Either way memory stays bounded under overload — the regression the
+//! unbounded `VecDeque` of the run-to-completion server could not give.
+
+use std::collections::VecDeque;
+
+/// What the server does with a request that finds the queue full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// answer immediately with a protocol error (`"admission queue full"`)
+    Reject,
+    /// hold the submitting connection handler until space frees up
+    Block,
+}
+
+/// FIFO queue with a hard depth bound.
+#[derive(Debug)]
+pub struct AdmissionQueue<T> {
+    items: VecDeque<T>,
+    depth: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(depth: usize) -> AdmissionQueue<T> {
+        AdmissionQueue { items: VecDeque::new(), depth }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.depth
+    }
+
+    /// Enqueue at the tail; hands the item back instead of growing past
+    /// the depth bound.
+    pub fn try_push(&mut self, item: T) -> Result<(), T> {
+        if self.is_full() {
+            Err(item)
+        } else {
+            self.items.push_back(item);
+            Ok(())
+        }
+    }
+
+    /// Requeue at the head — used when a popped request could not be
+    /// admitted after all (batch refilled first). Deliberately ignores the
+    /// depth bound: the item was already accounted for when first pushed.
+    pub fn push_front(&mut self, item: T) {
+        self.items.push_front(item);
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.items.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturation_bounces_instead_of_growing() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert!(q.is_full());
+        // the rejected item comes back to the caller, memory stays bounded
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn fifo_order_with_front_requeue() {
+        let mut q = AdmissionQueue::new(4);
+        for i in 0..3 {
+            q.try_push(i).unwrap();
+        }
+        let head = q.pop().unwrap();
+        assert_eq!(head, 0);
+        q.push_front(head);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn zero_depth_rejects_everything() {
+        let mut q: AdmissionQueue<u8> = AdmissionQueue::new(0);
+        assert!(q.is_full() && q.is_empty());
+        assert_eq!(q.try_push(7), Err(7));
+    }
+}

@@ -1,0 +1,550 @@
+//! Deterministic serving harness: scripted clients over virtual time.
+//!
+//! Drives the *same* [`LeaseBatcher`]/[`fleet`] code the TCP server runs,
+//! but single-threaded against simulator leases and a scripted trace —
+//! requests are injected at exact virtual-time instants, streams connect
+//! and disconnect on schedule, and the report carries per-request token
+//! streams, TTFT and aggregate throughput. No sockets, no wall-clock
+//! sleeps, bit-for-bit reproducible: this is the standard way to test
+//! serving features (see `rust/tests/serving_harness.rs`).
+//!
+//! Virtual time: each lease's clock is its engine's accumulated kernel
+//! seconds plus an idle offset (jumped forward when the lease sits waiting
+//! for arrivals). Leases run concurrently — the driver always advances the
+//! lease with the smallest clock, so cross-lease interleaving is exactly
+//! what concurrent hardware would produce.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+use crate::coordinator::{AllocPolicy, Coordinator, Lease, StreamId};
+use crate::cpu::CpuSpec;
+use crate::exec::{Executor, RunResult};
+use crate::util::rng::Rng;
+
+use super::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending, StepReport};
+use super::fleet::{self, EngineFactory};
+use super::protocol::{Event, Request};
+use super::queue::AdmissionQueue;
+
+/// When queued requests may enter a batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitMode {
+    /// continuous batching: admit whenever a slot is free (every round)
+    Continuous,
+    /// run-to-completion baseline (the pre-continuous-batching `serve_multi`
+    /// behavior): admit only once the running batch has fully drained
+    RunToCompletion,
+}
+
+/// One scripted client action at a virtual-time instant (seconds).
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    /// a stream's connection opens (fleet mode: `Coordinator::admit`)
+    Connect { at: f64, stream: StreamId },
+    /// a request arrives (single mode: `stream` is ignored)
+    Arrive { at: f64, stream: StreamId, req: Request },
+    /// a stream's connection closes (fleet mode: `Coordinator::finish`)
+    Disconnect { at: f64, stream: StreamId },
+}
+
+impl TraceEvent {
+    pub fn at(&self) -> f64 {
+        match self {
+            TraceEvent::Connect { at, .. }
+            | TraceEvent::Arrive { at, .. }
+            | TraceEvent::Disconnect { at, .. } => *at,
+        }
+    }
+
+    /// Convenience constructor for arrival events.
+    pub fn arrive(at: f64, stream: StreamId, req: Request) -> TraceEvent {
+        TraceEvent::Arrive { at, stream, req }
+    }
+}
+
+/// Exponential inter-arrival instants (a Poisson process) from the repo's
+/// deterministic RNG — seeded, replayable arrival scripts.
+pub fn poisson_arrivals(seed: u64, n: usize, mean_gap: f64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += -(1.0 - rng.f64()).ln() * mean_gap;
+        out.push(t);
+    }
+    out
+}
+
+/// Everything the harness observed about one request.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrived_at: f64,
+    pub admitted_at: Option<f64>,
+    pub first_token_at: Option<f64>,
+    pub finished_at: Option<f64>,
+    pub tokens: Vec<u32>,
+    pub error: Option<String>,
+}
+
+impl RequestRecord {
+    fn new(id: u64, arrived_at: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            arrived_at,
+            admitted_at: None,
+            first_token_at: None,
+            finished_at: None,
+            tokens: Vec::new(),
+            error: None,
+        }
+    }
+
+    /// Time-to-first-token: arrival → first streamed token.
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.arrived_at)
+    }
+}
+
+/// Aggregate outcome of a harness run.
+#[derive(Debug, Default)]
+pub struct HarnessReport {
+    pub requests: BTreeMap<u64, RequestRecord>,
+    /// last retirement minus first arrival (virtual seconds)
+    pub makespan: f64,
+    pub total_decoded: usize,
+    /// admission-queue depth sampled before every scheduler round
+    pub queue_depth_samples: Vec<usize>,
+    /// ids bounced by the bounded admission queue
+    pub rejected: Vec<u64>,
+    // ---- fleet mode ----
+    /// coordinator epoch after each rebuild
+    pub epochs_seen: Vec<u64>,
+    /// lease set after each rebuild (disjoint/covering checks)
+    pub lease_sets: Vec<Vec<Lease>>,
+    pub rebuilds: usize,
+    /// live measurements folded into the coordinator's strength table
+    pub observations_accepted: usize,
+    /// pre-rebuild measurements replayed after the epoch change — dropped
+    pub stale_observations_dropped: usize,
+    /// ...and how many of those were wrongly accepted (must stay 0)
+    pub stale_observations_accepted: usize,
+}
+
+impl HarnessReport {
+    pub fn mean_ttft(&self) -> f64 {
+        let ttfts: Vec<f64> = self.requests.values().filter_map(|r| r.ttft()).collect();
+        if ttfts.is_empty() {
+            0.0
+        } else {
+            ttfts.iter().sum::<f64>() / ttfts.len() as f64
+        }
+    }
+
+    /// Aggregate decode throughput over the makespan (tokens/s).
+    pub fn throughput(&self) -> f64 {
+        if self.makespan > 0.0 {
+            self.total_decoded as f64 / self.makespan
+        } else {
+            0.0
+        }
+    }
+
+    pub fn tokens_of(&self, id: u64) -> &[u32] {
+        self.requests.get(&id).map(|r| r.tokens.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn all_finished(&self) -> bool {
+        self.requests.values().all(|r| r.finished_at.is_some() || r.error.is_some())
+    }
+}
+
+fn enqueue(
+    queue: &mut AdmissionQueue<Pending>,
+    rxs: &mut BTreeMap<u64, mpsc::Receiver<Event>>,
+    report: &mut HarnessReport,
+    at: f64,
+    req: Request,
+) {
+    let id = req.id;
+    let (tx, rx) = mpsc::channel();
+    rxs.insert(id, rx);
+    report.requests.insert(id, RequestRecord::new(id, at));
+    if queue.try_push(Pending::new(req, tx)).is_err() {
+        report.rejected.push(id);
+        if let Some(rec) = report.requests.get_mut(&id) {
+            rec.error = Some("admission queue full".into());
+        }
+    }
+}
+
+fn absorb(report: &mut HarnessReport, step: &StepReport, idle_offset: f64) {
+    for (id, t) in &step.first_tokens {
+        if let Some(rec) = report.requests.get_mut(id) {
+            rec.first_token_at = Some(idle_offset + *t);
+        }
+    }
+    for r in &step.retired {
+        if let Some(rec) = report.requests.get_mut(&r.id) {
+            rec.finished_at = Some(idle_offset + r.at);
+        }
+        report.total_decoded += r.metrics.decoded_tokens;
+    }
+}
+
+fn finalize(report: &mut HarnessReport, rxs: &BTreeMap<u64, mpsc::Receiver<Event>>) {
+    for (id, rx) in rxs {
+        let Some(rec) = report.requests.get_mut(id) else { continue };
+        for ev in rx.try_iter() {
+            match ev {
+                Event::Token { token, .. } => rec.tokens.push(token),
+                Event::Error { msg, .. } => rec.error = Some(msg),
+                Event::Done { .. } => {}
+            }
+        }
+    }
+    let first = report.requests.values().map(|r| r.arrived_at).fold(f64::INFINITY, f64::min);
+    let last = report
+        .requests
+        .values()
+        .filter_map(|r| r.finished_at)
+        .fold(f64::NEG_INFINITY, f64::max);
+    report.makespan = if last > first { last - first } else { 0.0 };
+}
+
+/// Drive one batcher with a scripted arrival trace in virtual time.
+/// `mode` selects continuous batching or the run-to-completion baseline —
+/// same engine, same requests, directly comparable TTFT/throughput.
+pub fn run_single<E: Executor>(
+    mut batcher: LeaseBatcher<E>,
+    mode: AdmitMode,
+    queue_depth: usize,
+    mut script: Vec<TraceEvent>,
+) -> HarnessReport {
+    script.sort_by(|a, b| a.at().partial_cmp(&b.at()).unwrap());
+    let mut report = HarnessReport::default();
+    let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(queue_depth);
+    let mut rxs: BTreeMap<u64, mpsc::Receiver<Event>> = BTreeMap::new();
+    let mut idle_offset = 0.0f64;
+    let mut cursor = 0usize;
+    let mut guard = 0u64;
+    loop {
+        guard += 1;
+        assert!(guard < 5_000_000, "harness runaway");
+        let now = idle_offset + batcher.engine.kernel_secs;
+        // deliver every arrival due by now
+        while cursor < script.len() && script[cursor].at() <= now + 1e-12 {
+            let ev = script[cursor].clone();
+            cursor += 1;
+            if let TraceEvent::Arrive { at, req, .. } = ev {
+                enqueue(&mut queue, &mut rxs, &mut report, at, req);
+            }
+        }
+        if batcher.is_idle() && queue.is_empty() {
+            if cursor >= script.len() {
+                break;
+            }
+            // idle: jump the virtual clock to the next arrival
+            idle_offset = script[cursor].at() - batcher.engine.kernel_secs;
+            continue;
+        }
+        report.queue_depth_samples.push(queue.len());
+        let may_admit = match mode {
+            AdmitMode::Continuous => true,
+            AdmitMode::RunToCompletion => batcher.is_idle(),
+        };
+        if may_admit {
+            while batcher.has_capacity() {
+                let Some(p) = queue.pop() else { break };
+                let id = p.req.id;
+                match batcher.admit(p) {
+                    Ok(()) => {
+                        if let Some(rec) = report.requests.get_mut(&id) {
+                            rec.admitted_at = Some(now);
+                        }
+                    }
+                    Err(p) => {
+                        queue.push_front(p);
+                        break;
+                    }
+                }
+            }
+        }
+        let step = batcher.step();
+        absorb(&mut report, &step, idle_offset);
+    }
+    finalize(&mut report, &rxs);
+    report
+}
+
+/// Drive a dynamic fleet end-to-end: `Connect`/`Disconnect` trace events
+/// admit/finish coordinator streams (epoch bump → fleet rebuild, in-flight
+/// sessions migrating), `Arrive` events feed the shared admission queue.
+/// After every rebuild, each batcher's pre-rebuild measurement is replayed
+/// against the coordinator — exactly the in-flight-observation race a live
+/// server has — and counted as dropped/accepted in the report.
+pub fn run_fleet<E: Executor>(
+    machine: CpuSpec,
+    policy: AllocPolicy,
+    factory: &EngineFactory<E>,
+    opts: BatcherOpts,
+    queue_depth: usize,
+    mut trace: Vec<TraceEvent>,
+) -> HarnessReport {
+    trace.sort_by(|a, b| a.at().partial_cmp(&b.at()).unwrap());
+    let mut report = HarnessReport::default();
+    let mut coord = Coordinator::new(machine, policy);
+    let mut batchers: Vec<LeaseBatcher<E>> = Vec::new();
+    let mut offsets: Vec<f64> = Vec::new();
+    let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(queue_depth);
+    let mut rxs: BTreeMap<u64, mpsc::Receiver<Event>> = BTreeMap::new();
+    let mut cursor = 0usize;
+    let mut guard = 0u64;
+    loop {
+        guard += 1;
+        assert!(guard < 5_000_000, "harness runaway");
+        let next_at = if cursor < trace.len() { Some(trace[cursor].at()) } else { None };
+        // working lease with the smallest virtual clock
+        let mut pick: Option<(usize, f64)> = None;
+        for i in 0..batchers.len() {
+            let clock = offsets[i] + batchers[i].engine.kernel_secs;
+            let works =
+                !batchers[i].is_idle() || (!queue.is_empty() && batchers[i].has_capacity());
+            if works && pick.map_or(true, |(_, c)| clock < c) {
+                pick = Some((i, clock));
+            }
+        }
+        let do_event = match (pick, next_at) {
+            (None, None) => break,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            (Some((_, clock)), Some(t)) => clock > t,
+        };
+        if do_event {
+            let t = next_at.unwrap();
+            // idle leases' clocks catch up to the event instant
+            for i in 0..batchers.len() {
+                let clock = offsets[i] + batchers[i].engine.kernel_secs;
+                if clock < t {
+                    offsets[i] = t - batchers[i].engine.kernel_secs;
+                }
+            }
+            // coalesce everything scheduled for this instant
+            let mut connects: Vec<StreamId> = Vec::new();
+            let mut disconnects: Vec<StreamId> = Vec::new();
+            while cursor < trace.len() && trace[cursor].at() <= t + 1e-12 {
+                let ev = trace[cursor].clone();
+                cursor += 1;
+                match ev {
+                    TraceEvent::Arrive { at, req, .. } => {
+                        enqueue(&mut queue, &mut rxs, &mut report, at, req)
+                    }
+                    TraceEvent::Connect { stream, .. } => connects.push(stream),
+                    TraceEvent::Disconnect { stream, .. } => disconnects.push(stream),
+                }
+            }
+            if !connects.is_empty() || !disconnects.is_empty() {
+                rebuild(
+                    &mut coord,
+                    factory,
+                    opts,
+                    &mut batchers,
+                    &mut offsets,
+                    connects,
+                    disconnects,
+                    t,
+                    &mut report,
+                );
+            }
+            continue;
+        }
+
+        let (i, clock) = pick.unwrap();
+        report.queue_depth_samples.push(queue.len());
+        while batchers[i].has_capacity() {
+            let Some(p) = queue.pop() else { break };
+            let id = p.req.id;
+            match batchers[i].admit(p) {
+                Ok(()) => {
+                    if let Some(rec) = report.requests.get_mut(&id) {
+                        rec.admitted_at = Some(clock);
+                    }
+                }
+                Err(p) => {
+                    queue.push_front(p);
+                    break;
+                }
+            }
+        }
+        let step = batchers[i].step();
+        absorb(&mut report, &step, offsets[i]);
+        // live measurement → strength table (current lease, current epoch)
+        if let (Some(lease), Some(res)) =
+            (batchers[i].lease.as_ref(), batchers[i].engine.rt.last_result.as_ref())
+        {
+            if coord.observe(lease, res) {
+                report.observations_accepted += 1;
+            }
+        }
+    }
+    finalize(&mut report, &rxs);
+    report
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rebuild<E: Executor>(
+    coord: &mut Coordinator,
+    factory: &EngineFactory<E>,
+    opts: BatcherOpts,
+    batchers: &mut Vec<LeaseBatcher<E>>,
+    offsets: &mut Vec<f64>,
+    connects: Vec<StreamId>,
+    disconnects: Vec<StreamId>,
+    now: f64,
+    report: &mut HarnessReport,
+) {
+    // measurements still in flight from the epoch being torn down
+    let stale: Vec<(Lease, RunResult)> = batchers
+        .iter()
+        .filter_map(|b| match (b.lease.clone(), b.engine.rt.last_result.clone()) {
+            (Some(l), Some(r)) => Some((l, r)),
+            _ => None,
+        })
+        .collect();
+    let mut carried: Vec<ActiveRequest> = Vec::new();
+    for b in batchers.iter_mut() {
+        carried.append(&mut b.take_actives());
+    }
+    for s in connects {
+        let _ = coord.admit(s);
+    }
+    for s in disconnects {
+        coord.finish(s);
+    }
+    let mut fresh = fleet::build_batchers(coord, factory, opts);
+    fleet::distribute(carried, &mut fresh);
+    *offsets = fresh.iter().map(|b| now - b.engine.kernel_secs).collect();
+    *batchers = fresh;
+    report.rebuilds += 1;
+    report.epochs_seen.push(coord.epoch());
+    report.lease_sets.push(coord.leases().cloned().collect());
+    // the replayed pre-epoch measurements must all be dropped
+    for (lease, res) in &stale {
+        if coord.observe(lease, res) {
+            report.stale_observations_accepted += 1;
+        } else {
+            report.stale_observations_dropped += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::presets;
+    use crate::engine::Engine;
+    use crate::model::{ModelConfig, ModelWeights};
+    use crate::perf::PerfConfig;
+    use crate::sched::DynamicScheduler;
+    use crate::sim::{SimConfig, SimExecutor};
+    use std::sync::Arc;
+
+    fn engine(seed: u64) -> Engine<SimExecutor> {
+        let cfg = ModelConfig::micro();
+        let weights = Arc::new(ModelWeights::random_init(&cfg, seed));
+        let exec = SimExecutor::new(
+            presets::core_12900k(),
+            SimConfig { execute_real: true, ..SimConfig::noiseless() },
+        );
+        Engine::new(cfg, weights, exec, Box::new(DynamicScheduler), PerfConfig::default())
+    }
+
+    fn req(id: u64, prompt: &[u32], max_new: usize) -> Request {
+        Request { id, prompt: prompt.to_vec(), max_new_tokens: max_new }
+    }
+
+    #[test]
+    fn scripted_arrivals_are_served_in_virtual_time() {
+        let b = LeaseBatcher::new(engine(3), None, BatcherOpts::default());
+        let script = vec![
+            TraceEvent::arrive(0.0, 0, req(1, &[1, 2], 3)),
+            TraceEvent::arrive(0.5, 0, req(2, &[3, 4], 3)),
+        ];
+        let rep = run_single(b, AdmitMode::Continuous, 16, script);
+        assert!(rep.all_finished());
+        assert_eq!(rep.tokens_of(1).len(), 3);
+        assert_eq!(rep.tokens_of(2).len(), 3);
+        // request 2 arrived half a virtual second in: the engine was long
+        // idle (micro decode is µs-scale), so its TTFT stays µs-scale
+        let r2 = &rep.requests[&2];
+        assert!(r2.arrived_at == 0.5);
+        assert!(r2.first_token_at.unwrap() > 0.5);
+        assert!(r2.ttft().unwrap() < 0.01, "ttft {:?}", r2.ttft());
+        assert_eq!(rep.total_decoded, 6);
+        assert!(rep.makespan > 0.5);
+    }
+
+    #[test]
+    fn run_is_deterministic() {
+        let script = || {
+            vec![
+                TraceEvent::arrive(0.0, 0, req(1, &[5, 6, 7], 4)),
+                TraceEvent::arrive(1e-4, 0, req(2, &[8], 4)),
+            ]
+        };
+        let a = run_single(
+            LeaseBatcher::new(engine(7), None, BatcherOpts::default()),
+            AdmitMode::Continuous,
+            16,
+            script(),
+        );
+        let b = run_single(
+            LeaseBatcher::new(engine(7), None, BatcherOpts::default()),
+            AdmitMode::Continuous,
+            16,
+            script(),
+        );
+        assert_eq!(a.tokens_of(1), b.tokens_of(1));
+        assert_eq!(a.tokens_of(2), b.tokens_of(2));
+        assert_eq!(a.requests[&1].finished_at, b.requests[&1].finished_at);
+        assert_eq!(a.mean_ttft(), b.mean_ttft());
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_saturated() {
+        let b = LeaseBatcher::new(
+            engine(3),
+            None,
+            BatcherOpts { max_batch: 1, prefill_chunk: 16 },
+        );
+        // six simultaneous arrivals into a depth-2 queue: two fit, the
+        // other four bounce with a protocol error instead of growing memory
+        let script: Vec<TraceEvent> =
+            (0..6).map(|i| TraceEvent::arrive(0.0, 0, req(i, &[1], 2))).collect();
+        let rep = run_single(b, AdmitMode::Continuous, 2, script);
+        assert_eq!(rep.rejected.len(), 4);
+        for id in &rep.rejected {
+            assert_eq!(rep.requests[id].error.as_deref(), Some("admission queue full"));
+        }
+        // the two that queued were fully served; memory never grew past depth
+        let served: Vec<u64> = rep
+            .requests
+            .values()
+            .filter(|r| r.finished_at.is_some())
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(served, vec![0, 1]);
+        assert!(rep.queue_depth_samples.iter().all(|&d| d <= 2));
+    }
+
+    #[test]
+    fn poisson_arrivals_are_deterministic_and_increasing() {
+        let a = poisson_arrivals(42, 16, 1e-3);
+        let b = poisson_arrivals(42, 16, 1e-3);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[1] > w[0]));
+        let mean_gap = a.last().unwrap() / 16.0;
+        assert!(mean_gap > 1e-4 && mean_gap < 1e-2, "mean gap {mean_gap}");
+    }
+}

@@ -241,7 +241,8 @@ impl HybridSim {
                             } else {
                                 self.spec.cores[i].mem_bw_gbps
                             };
-                            bw::Contender { weight: self.spec.cores[i].mem_weight, cap: demand_gbps }
+                            let weight = self.spec.cores[i].mem_weight;
+                            bw::Contender { weight, cap: demand_gbps }
                         })
                         .collect();
                     let alloc = bw::waterfill(&contenders, self.spec.bus_bw_gbps);

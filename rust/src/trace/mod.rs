@@ -51,7 +51,8 @@ impl RatioTrace {
     pub fn to_csv(&self) -> String {
         let mut out = String::from("kernel_idx,time_secs,phase,ratio\n");
         for s in &self.samples {
-            out.push_str(&format!("{},{:.9},{},{:.6}\n", s.kernel_idx, s.time_secs, s.phase, s.ratio));
+            let line = format!("{},{:.9},{},{:.6}\n", s.kernel_idx, s.time_secs, s.phase, s.ratio);
+            out.push_str(&line);
         }
         out
     }

@@ -96,8 +96,9 @@ mod tests {
     use super::*;
 
     fn args(tokens: &[&str]) -> Args {
-        let argv: Vec<String> =
-            std::iter::once("prog".to_string()).chain(tokens.iter().map(|s| s.to_string())).collect();
+        let argv: Vec<String> = std::iter::once("prog".to_string())
+            .chain(tokens.iter().map(|s| s.to_string()))
+            .collect();
         Args::parse(&argv)
     }
 

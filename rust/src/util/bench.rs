@@ -111,7 +111,12 @@ impl BenchReport {
         bytes_per_iter: Option<u64>,
         ops_per_iter: Option<u64>,
     ) -> &BenchResult {
-        self.push(BenchResult { name: name.to_string(), samples_secs, bytes_per_iter, ops_per_iter })
+        self.push(BenchResult {
+            name: name.to_string(),
+            samples_secs,
+            bytes_per_iter,
+            ops_per_iter,
+        })
     }
 
     fn push(&mut self, r: BenchResult) -> &BenchResult {

@@ -15,8 +15,12 @@ pub struct PropConfig {
 impl Default for PropConfig {
     fn default() -> Self {
         // DYNPAR_PROP_SEED / DYNPAR_PROP_ITERS allow replay & heavier runs.
-        let seed = std::env::var("DYNPAR_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xD1A2);
-        let iters = std::env::var("DYNPAR_PROP_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(64);
+        let seed = std::env::var("DYNPAR_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xD1A2);
+        let iters =
+            std::env::var("DYNPAR_PROP_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(64);
         Self { iters, seed }
     }
 }

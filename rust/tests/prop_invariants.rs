@@ -126,7 +126,8 @@ fn prop_perf_table_converges_for_any_rates() {
                     (0..n).map(|i| Some((pr[i] / sum) / rates[i])).collect();
                 table.update(KernelClass::GemvQ4, dynpar::cpu::Isa::AvxVnni, &times);
             }
-            let rel = table.relative_ratios(KernelClass::GemvQ4, dynpar::cpu::Isa::AvxVnni).unwrap();
+            let rel =
+                table.relative_ratios(KernelClass::GemvQ4, dynpar::cpu::Isa::AvxVnni).unwrap();
             let min_rate = rates.iter().cloned().fold(f64::INFINITY, f64::min);
             for (i, r) in rel.iter().enumerate() {
                 let expect = rates[i] / min_rate;
@@ -362,6 +363,163 @@ fn prop_coordinator_rebalance_stable_under_random_observations() {
                 }
                 if seen.iter().any(|&s| !s) {
                     return Err("rebalance lost a core".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Continuous batching never changes the numbers: under any admission
+/// interleaving (random arrival times, prefill chunk sizes and batch
+/// sizes), every request's token stream is bit-identical to a solo
+/// `Engine::generate` run on the same weights.
+#[test]
+fn prop_continuous_batching_streams_match_solo() {
+    use dynpar::engine::Engine;
+    use dynpar::model::{ModelConfig, ModelWeights};
+    use dynpar::server::protocol::Request;
+    use dynpar::server::testing::{run_single, AdmitMode, TraceEvent};
+    use dynpar::server::{BatcherOpts, LeaseBatcher};
+    use std::sync::Arc;
+
+    prop::check_with(
+        "continuous_batching_solo_identical",
+        PropConfig { iters: 8, seed: 0xBA7C4 },
+        &mut |rng| {
+            let cfg = ModelConfig::micro();
+            let weights = Arc::new(ModelWeights::random_init(&cfg, rng.next_u64()));
+            let spec = presets::preset_by_name(
+                ["core_12900k", "ultra_125h"][rng.below(2) as usize],
+            )
+            .unwrap();
+            let make_engine = || {
+                let exec = SimExecutor::new(
+                    spec.clone(),
+                    SimConfig { execute_real: true, ..SimConfig::noiseless() },
+                );
+                Engine::new(
+                    cfg.clone(),
+                    Arc::clone(&weights),
+                    exec,
+                    scheduler_by_name("dynamic").unwrap(),
+                    PerfConfig::default(),
+                )
+            };
+            let opts = BatcherOpts {
+                max_batch: 1 + rng.below(4) as usize,
+                prefill_chunk: 1 + rng.below(6) as usize,
+            };
+            let n_req = 2 + rng.below(4) as usize;
+            let mut reqs = Vec::new();
+            for id in 0..n_req {
+                let plen = 1 + rng.below(10) as usize;
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.below(128) as u32).collect();
+                let max_new = 1 + rng.below(8) as usize;
+                let at = rng.uniform(0.0, 2e-3);
+                reqs.push((at, Request { id: id as u64, prompt, max_new_tokens: max_new }));
+            }
+            let script: Vec<TraceEvent> =
+                reqs.iter().map(|(at, r)| TraceEvent::arrive(*at, 0, r.clone())).collect();
+            let rep = run_single(
+                LeaseBatcher::new(make_engine(), None, opts),
+                AdmitMode::Continuous,
+                64,
+                script,
+            );
+            if !rep.all_finished() {
+                return Err("not every request finished".into());
+            }
+            for (_, r) in &reqs {
+                let mut e = make_engine();
+                let mut s = e.new_session();
+                let (expect, _) = e.generate(&mut s, &r.prompt, r.max_new_tokens);
+                if rep.tokens_of(r.id) != &expect[..] {
+                    return Err(format!(
+                        "request {} diverged under interleaving (batch {}, chunk {})",
+                        r.id, opts.max_batch, opts.prefill_chunk
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// KV-slot allocator invariants under random continuous-batching load:
+/// live sessions never share a slot, slot ids stay inside the pool bound,
+/// and retired slots are reused before any fresh slot is allocated (total
+/// allocations never exceed the peak concurrency actually reached).
+#[test]
+fn prop_kv_slots_unique_and_reused() {
+    use dynpar::engine::Engine;
+    use dynpar::model::{ModelConfig, ModelWeights};
+    use dynpar::server::protocol::Request;
+    use dynpar::server::{BatcherOpts, LeaseBatcher, Pending};
+    use std::sync::Arc;
+
+    prop::check_with(
+        "kv_slot_invariants",
+        PropConfig { iters: 10, seed: 0x51075 },
+        &mut |rng| {
+            let cfg = ModelConfig::micro();
+            let weights = Arc::new(ModelWeights::random_init(&cfg, rng.next_u64()));
+            let exec = SimExecutor::new(
+                presets::homogeneous(4),
+                SimConfig { execute_real: true, ..SimConfig::noiseless() },
+            );
+            let engine = Engine::new(
+                cfg,
+                weights,
+                exec,
+                scheduler_by_name("dynamic").unwrap(),
+                PerfConfig::default(),
+            );
+            let max_batch = 1 + rng.below(4) as usize;
+            let opts =
+                BatcherOpts { max_batch, prefill_chunk: 1 + rng.below(4) as usize };
+            let mut b = LeaseBatcher::new(engine, None, opts);
+            let mut rxs = Vec::new(); // keep receivers alive: no dead clients
+            let mut next_id = 0u64;
+            let mut peak = 0usize;
+            for _ in 0..30 {
+                if rng.chance(0.6) {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    let plen = 1 + rng.below(6) as usize;
+                    let prompt: Vec<u32> = (0..plen).map(|_| rng.below(128) as u32).collect();
+                    let req =
+                        Request { id: next_id, prompt, max_new_tokens: 1 + rng.below(5) as usize };
+                    next_id += 1;
+                    if b.admit(Pending::new(req, tx)).is_ok() {
+                        rxs.push(rx);
+                    }
+                }
+                peak = peak.max(b.n_active());
+                let slots = b.active_slots();
+                let mut sorted = slots.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                if sorted.len() != slots.len() {
+                    return Err(format!("KV slot double-assigned: {slots:?}"));
+                }
+                if slots.iter().any(|&s| s >= max_batch) {
+                    return Err(format!("slot id out of pool bound: {slots:?}"));
+                }
+                if b.pool().allocated() > peak {
+                    return Err(format!(
+                        "allocated {} slots but peak concurrency was {peak} — retired slots \
+                         were not reused first",
+                        b.pool().allocated()
+                    ));
+                }
+                b.step();
+            }
+            let mut guard = 0;
+            while !b.is_idle() {
+                b.step();
+                guard += 1;
+                if guard > 10_000 {
+                    return Err("batcher failed to drain".into());
                 }
             }
             Ok(())

@@ -6,13 +6,13 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
-use dynpar::coordinator::{AllocPolicy, Coordinator};
+use dynpar::coordinator::{AllocPolicy, Coordinator, Lease};
 use dynpar::cpu::presets;
 use dynpar::engine::Engine;
 use dynpar::model::{ModelConfig, ModelWeights};
 use dynpar::perf::PerfConfig;
 use dynpar::sched::DynamicScheduler;
-use dynpar::server::{serve, serve_multi, ServerHandle, ServerOpts};
+use dynpar::server::{serve, serve_dynamic, serve_multi, ServerHandle, ServerOpts};
 use dynpar::sim::{SimConfig, SimExecutor};
 use dynpar::util::json::Json;
 
@@ -25,7 +25,7 @@ fn start_server(max_batch: usize) -> ServerHandle {
     );
     let engine =
         Engine::new(cfg, weights, exec, Box::new(DynamicScheduler), PerfConfig::default());
-    serve("127.0.0.1:0", engine, ServerOpts { max_batch }).unwrap()
+    serve("127.0.0.1:0", engine, ServerOpts { max_batch, ..Default::default() }).unwrap()
 }
 
 fn roundtrip(addr: std::net::SocketAddr, line: &str) -> Vec<Json> {
@@ -72,7 +72,33 @@ fn start_lease_server(n_leases: usize, max_batch: usize) -> ServerHandle {
             )
         })
         .collect();
-    serve_multi("127.0.0.1:0", engines, ServerOpts { max_batch }).unwrap()
+    serve_multi("127.0.0.1:0", engines, ServerOpts { max_batch, ..Default::default() }).unwrap()
+}
+
+/// Start a dynamic-membership server: the lease set follows the live
+/// connections (first generate request admits, disconnect finishes).
+fn start_dynamic_server() -> ServerHandle {
+    let machine = presets::core_12900k();
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, 5));
+    let factory = {
+        let machine = machine.clone();
+        move |lease: &Lease| {
+            let exec = lease.sim_executor(
+                &machine,
+                SimConfig { execute_real: true, ..SimConfig::noiseless() },
+            );
+            Engine::new(
+                cfg.clone(),
+                Arc::clone(&weights),
+                exec,
+                Box::new(DynamicScheduler),
+                PerfConfig::default(),
+            )
+        }
+    };
+    serve_dynamic("127.0.0.1:0", machine, AllocPolicy::Balanced, factory, ServerOpts::default())
+        .unwrap()
 }
 
 #[test]
@@ -215,6 +241,72 @@ fn malformed_lines_do_not_kill_the_connection() {
         }
     }
     assert!(saw_done);
+    handle.shutdown();
+}
+
+#[test]
+fn dynamic_server_serves_and_matches_static_tokens() {
+    // a request through the dynamic-membership server produces the same
+    // tokens as the classic single-engine server (same weights seed 5)
+    let dynamic = start_dynamic_server();
+    let single = start_server(2);
+    let get = |addr| {
+        roundtrip(addr, r#"{"id": 1, "prompt": [6, 2, 9], "max_new_tokens": 6}"#)
+            .iter()
+            .filter_map(|m| m.get("token").and_then(Json::as_i64))
+            .collect::<Vec<_>>()
+    };
+    let d = get(dynamic.addr);
+    assert_eq!(d.len(), 6);
+    assert_eq!(d, get(single.addr));
+    dynamic.shutdown();
+    single.shutdown();
+}
+
+#[test]
+fn dynamic_server_grows_and_shrinks_with_connections() {
+    let handle = start_dynamic_server();
+    let addr = handle.addr;
+    // two concurrent clients: each connection becomes a coordinator stream
+    // with its own lease-restricted engine
+    let joins: Vec<_> = (0..2)
+        .map(|i| {
+            std::thread::spawn(move || {
+                roundtrip(
+                    addr,
+                    &format!(r#"{{"id": {i}, "prompt": [{}, 4], "max_new_tokens": 5}}"#, i + 1),
+                )
+            })
+        })
+        .collect();
+    for (i, j) in joins.into_iter().enumerate() {
+        let msgs = j.join().unwrap();
+        assert_eq!(
+            msgs.iter().filter(|m| m.get("token").is_some()).count(),
+            5,
+            "client {i}: {msgs:?}"
+        );
+        assert!(msgs.iter().any(|m| m.get("done").is_some()));
+    }
+    // after both clients disconnect the supervisor finishes their streams:
+    // 2 admits + 2 finishes = epoch 4, and the fleet shrinks to zero
+    // engines. Poll the metrics (a metrics-only probe never becomes a
+    // stream) until the rebuild has happened.
+    let mut settled = false;
+    for _ in 0..300 {
+        let metrics = roundtrip(addr, r#"{"cmd":"metrics"}"#);
+        let m = metrics[0].get("metrics").unwrap();
+        if m.get("epoch").unwrap().as_i64() == Some(4)
+            && m.get("engines").unwrap().as_i64() == Some(0)
+        {
+            assert_eq!(m.get("requests").unwrap().as_i64(), Some(2));
+            assert!(m.get("rebuilds").unwrap().as_i64().unwrap() >= 2);
+            settled = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(settled, "fleet did not shrink after the streams departed");
     handle.shutdown();
 }
 

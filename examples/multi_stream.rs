@@ -1,15 +1,18 @@
 //! Multi-stream serving demo: the coordinator leases disjoint,
 //! topology-aware core subsets to two concurrent decode streams, beats the
 //! one-big-engine baseline on aggregate throughput, detects a background
-//! load from measured per-core times and rebalances the leases around it —
-//! then shows continuous batching cutting time-to-first-token against the
-//! run-to-completion baseline under scripted Poisson arrivals.
+//! load from measured per-core times and rebalances the leases around it,
+//! shows continuous batching cutting time-to-first-token against the
+//! run-to-completion baseline under scripted Poisson arrivals — and
+//! finishes with a heterogeneous lease: one stream owning "2 P-cores + the
+//! NPU" (`XpuAffinity::Floating`) out-running the best cores-only split.
 //!
 //! Run: `cargo run --release --example multi_stream`
 
 use std::sync::Arc;
 
-use dynpar::coordinator::{AllocPolicy, Coordinator, Lease};
+use dynpar::bench_harness::pr3::sustained_rate;
+use dynpar::coordinator::{bus_share, AllocPolicy, Coordinator, Lease, XpuAffinity};
 use dynpar::cpu::{presets, CoreKind, CpuSpec};
 use dynpar::engine::phantom::{decode_invocations, PhantomSystem};
 use dynpar::engine::Engine;
@@ -21,6 +24,7 @@ use dynpar::sched::DynamicScheduler;
 use dynpar::server::protocol::Request;
 use dynpar::server::testing::{poisson_arrivals, run_single, AdmitMode, TraceEvent};
 use dynpar::server::{BatcherOpts, LeaseBatcher};
+use dynpar::sim::xpu::AcceleratorSpec;
 use dynpar::sim::{NoiseConfig, SimConfig, SimExecutor};
 
 fn lease_runtime(
@@ -41,9 +45,11 @@ fn lease_runtime(
 }
 
 fn lease_label(machine: &CpuSpec, lease: &Lease) -> String {
-    let p = lease.cores.iter().filter(|&&c| machine.cores[c].kind == CoreKind::Performance).count();
-    let e = lease.cores.iter().filter(|&&c| machine.cores[c].kind == CoreKind::Efficiency).count();
-    format!("stream {} → cores {:?} ({p}P+{e}E)", lease.stream, lease.cores)
+    let cores = lease.cores();
+    let p = cores.iter().filter(|&&c| machine.cores[c].kind == CoreKind::Performance).count();
+    let e = cores.iter().filter(|&&c| machine.cores[c].kind == CoreKind::Efficiency).count();
+    let npu = if lease.accels().is_empty() { "" } else { " + NPU" };
+    format!("stream {} → cores {cores:?} ({p}P+{e}E{npu})", lease.stream)
 }
 
 fn main() {
@@ -95,9 +101,8 @@ fn main() {
     // ---- part 2: background load hits stream 0's P-cores; rebalance ----
     let probe = PhantomWork::new(cost::gemm_i8_cost(256, 1024, 1024));
     let degraded: Vec<usize> = leases[0]
-        .cores
-        .iter()
-        .copied()
+        .cores()
+        .into_iter()
         .filter(|&g| machine.cores[g].kind == CoreKind::Performance)
         .collect();
     println!("background process steals 50% of cores {degraded:?} (stream 0's P-cores)");
@@ -201,5 +206,49 @@ fn main() {
         cont.mean_ttft() * 1e6,
         cont.throughput(),
         (1.0 - cont.mean_ttft() / rtc.mean_ttft()) * 100.0
+    );
+
+    // ---- part 4: heterogeneous leases — "2 P-cores + the NPU" ----
+    // 4 P-cores of the 125H plus its NPU, two streams: under Floating
+    // affinity one lease owns two cores and the device; the device-level
+    // ratio table (same eq. 2 EWMA, one row per kernel class) learns how
+    // to split each prefill GEMM between them.
+    println!("\nheterogeneous leases: cores + NPU under one coordinator (ultra_125h):");
+    let ultra = presets::ultra_125h();
+    let p_cores = [0usize, 1, 2, 3];
+    let mini = ultra.subset(&p_cores, bus_share(&ultra, &p_cores));
+    let accels = vec![AcceleratorSpec::npu()];
+    let mut hcoord = Coordinator::with_accelerators(
+        mini.clone(),
+        accels.clone(),
+        AllocPolicy::Balanced,
+        XpuAffinity::Floating,
+    );
+    hcoord.admit(0);
+    hcoord.admit(1);
+    let hleases: Vec<Lease> = hcoord.leases().cloned().collect();
+    let probe4 = PhantomWork::new(cost::gemm_i8_cost(512, 2048, 2048));
+    let mut hetero_rates = Vec::new();
+    for lease in &hleases {
+        let p = lease.n_cores();
+        let npu = if lease.accels().is_empty() { "" } else { " + NPU" };
+        let exec = lease.xpu_executor(&mini, &accels, SimConfig::noiseless());
+        let (rate, _) = sustained_rate(exec, &probe4, 15);
+        hetero_rates.push(rate);
+        println!("  stream {} → {p} P-cores{npu}: prefill GEMM {rate:8.0} units/s", lease.stream);
+    }
+    let mut cores_rates = Vec::new();
+    for lease in &hleases {
+        let spec = mini.subset(&lease.cores(), bus_share(&mini, &lease.cores()));
+        let exec = SimExecutor::new(spec, SimConfig::noiseless());
+        cores_rates.push(sustained_rate(exec, &probe4, 15).0);
+    }
+    let hetero: f64 = hetero_rates.iter().sum();
+    let cores: f64 = cores_rates.iter().sum();
+    println!(
+        "  aggregate: {hetero:.0} units/s with the NPU leased vs {cores:.0} for the best \
+         cores-only split → x{:.2};\n  the accelerator is just another unit the coordinator \
+         hands out, observes and rebalances.",
+        hetero / cores
     );
 }

@@ -5,7 +5,7 @@
 //! Run: `cargo run --release --example xpu_offload`
 
 use dynpar::cpu::{presets, Isa};
-use dynpar::kernels::cost;
+use dynpar::kernels::{cost, KernelClass};
 use dynpar::sim::xpu::{AcceleratorSpec, XpuSim};
 use dynpar::sim::SimConfig;
 
@@ -23,18 +23,19 @@ fn main() {
     let cpu_only = x.cpu_only(&c, &cpu_ratios);
     println!("CPU-only (dynamic over cores): {:.2} ms", cpu_only * 1e3);
 
-    println!("\niter  wall      cpu/npu/igpu units      device ratios");
+    println!("\niter  wall      cpu/npu/igpu units      device ratios (gemm_i8 row)");
     for i in 0..12 {
         let res = x.execute(&c, &cpu_ratios);
+        let dr = x.device_ratios(KernelClass::GemmI8).to_vec();
         println!(
             "{i:>4}  {:>6.2} ms  {:>4}/{:>4}/{:>4}          [{:.2}, {:.2}, {:.2}]",
             res.wall_secs * 1e3,
             res.device_units[0],
             res.device_units[1],
             res.device_units[2],
-            x.device_ratios[0],
-            x.device_ratios[1],
-            x.device_ratios[2],
+            dr[0],
+            dr[1],
+            dr[2],
         );
     }
     let final_wall = x.execute(&c, &cpu_ratios).wall_secs;

@@ -1,0 +1,195 @@
+//! PR-3 perf trajectory: what folding accelerators into the coordinator
+//! buys. Two scenarios on the same hardware (the 125H's four P-cores plus
+//! its NPU) and the same scripted trace:
+//!
+//! * **serving** — the deterministic harness drives the micro model on two
+//!   streams, once with the NPU unleased (`XpuAffinity::None`) and once
+//!   floating; aggregate tok/s and mean TTFT come out. At micro-model
+//!   kernel sizes the device's 20 µs launch overhead makes offload a wash —
+//!   the class-keyed device table learns to keep decode on the cores,
+//!   which is itself the result (the paper's reason to target prefill).
+//! * **prefill GEMM** — the 7B-scale compute-bound kernel the paper's §4
+//!   points at: per-stream sustained rates with and without the device.
+//!
+//! `dynpar bench pr3 [--out BENCH_pr3.json]` renders the JSON trajectory.
+
+use std::sync::Arc;
+
+use crate::coordinator::{bus_share, AllocPolicy, Coordinator, Lease, XpuAffinity};
+use crate::cpu::{presets, CpuSpec};
+use crate::engine::Engine;
+use crate::exec::{Executor, ParallelRuntime, PhantomWork};
+use crate::kernels::cost;
+use crate::model::{ModelConfig, ModelWeights};
+use crate::perf::PerfConfig;
+use crate::sched::DynamicScheduler;
+use crate::server::fleet::{DriftMonitor, EngineFactory};
+use crate::server::protocol::Request;
+use crate::server::testing::{run_fleet, TraceEvent};
+use crate::server::BatcherOpts;
+use crate::sim::xpu::{AcceleratorSpec, XpuExecutor};
+use crate::sim::{SimConfig, SimExecutor};
+use crate::util::json::Json;
+
+const WEIGHTS_SEED: u64 = 11;
+
+fn machine() -> (CpuSpec, Vec<AcceleratorSpec>) {
+    let ultra = presets::ultra_125h();
+    let p_cores = [0usize, 1, 2, 3];
+    (ultra.subset(&p_cores, bus_share(&ultra, &p_cores)), vec![AcceleratorSpec::npu()])
+}
+
+fn factory(machine: CpuSpec, accels: Vec<AcceleratorSpec>) -> EngineFactory<XpuExecutor> {
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, WEIGHTS_SEED));
+    Box::new(move |lease: &Lease| {
+        let exec = lease.xpu_executor(
+            &machine,
+            &accels,
+            SimConfig { execute_real: true, ..SimConfig::noiseless() },
+        );
+        Engine::new(
+            cfg.clone(),
+            Arc::clone(&weights),
+            exec,
+            Box::new(DynamicScheduler),
+            PerfConfig::default(),
+        )
+    })
+}
+
+/// Frozen arrival script: 16 requests over two streams.
+fn trace() -> Vec<TraceEvent> {
+    let mut t = vec![
+        TraceEvent::Connect { at: 0.0, stream: 0 },
+        TraceEvent::Connect { at: 0.0, stream: 1 },
+    ];
+    for i in 0..16u64 {
+        let req = Request {
+            id: i,
+            prompt: vec![1 + i as u32 * 5, 9, 4, 7, 2],
+            max_new_tokens: 16,
+        };
+        t.push(TraceEvent::arrive(1.0e-6 + i as f64 * 2.0e-4, i % 2, req));
+    }
+    t
+}
+
+/// (aggregate tok/s, mean TTFT µs) for one affinity choice.
+fn serve_scenario(affinity: XpuAffinity) -> (f64, f64) {
+    let (spec, accels) = machine();
+    let coord = Coordinator::with_accelerators(
+        spec.clone(),
+        accels.clone(),
+        AllocPolicy::Balanced,
+        affinity,
+    );
+    let rep = run_fleet(
+        coord,
+        &factory(spec, accels),
+        BatcherOpts { max_batch: 4, prefill_chunk: 4 },
+        64,
+        DriftMonitor::disabled(),
+        trace(),
+    );
+    assert!(rep.all_finished(), "bench trace did not drain");
+    (rep.throughput(), rep.mean_ttft() * 1e6)
+}
+
+/// Run `iters` of `probe` through a fresh dynamic `ParallelRuntime` over
+/// `exec` and return the sustained rate (units/s of the last, converged
+/// kernel) plus the executor for post-run inspection (e.g. the learned
+/// device-ratio rows). Shared by this bench, `examples/multi_stream.rs`
+/// part 4 and `coordinator_integration.rs` so the convergence protocol
+/// cannot drift apart between them.
+pub fn sustained_rate<E: Executor>(exec: E, probe: &PhantomWork, iters: usize) -> (f64, E) {
+    let mut rt = ParallelRuntime::new(exec, Box::new(DynamicScheduler), PerfConfig::default());
+    let mut wall = f64::INFINITY;
+    for _ in 0..iters {
+        wall = rt.run(probe).wall_secs;
+    }
+    (probe.cost.units as f64 / wall, rt.exec)
+}
+
+/// Per-stream sustained prefill-GEMM rates (units/s), summed over the two
+/// leases: cores-only split vs cores + floating NPU.
+fn prefill_scenario() -> (f64, f64) {
+    let (spec, accels) = machine();
+    let mut coord = Coordinator::with_accelerators(
+        spec.clone(),
+        accels.clone(),
+        AllocPolicy::Balanced,
+        XpuAffinity::Floating,
+    );
+    coord.admit(0);
+    coord.admit(1);
+    let probe = PhantomWork::new(cost::gemm_i8_cost(512, 2048, 2048));
+    let mut hetero = 0.0;
+    let mut cores = 0.0;
+    for lease in coord.leases() {
+        let exec = lease.xpu_executor(&spec, &accels, SimConfig::noiseless());
+        hetero += sustained_rate(exec, &probe, 15).0;
+
+        let sub = spec.subset(&lease.cores(), bus_share(&spec, &lease.cores()));
+        cores += sustained_rate(SimExecutor::new(sub, SimConfig::noiseless()), &probe, 15).0;
+    }
+    (cores, hetero)
+}
+
+/// Full PR-3 trajectory as JSON.
+pub fn run() -> Json {
+    let (cores_tok_s, cores_ttft) = serve_scenario(XpuAffinity::None);
+    let (npu_tok_s, npu_ttft) = serve_scenario(XpuAffinity::Floating);
+    let (gemm_cores, gemm_npu) = prefill_scenario();
+    let scenario = |tok_s: f64, ttft: f64| {
+        Json::obj(vec![
+            ("tok_s", Json::num(tok_s)),
+            ("mean_ttft_us", Json::num(ttft)),
+        ])
+    };
+    Json::obj(vec![
+        ("bench", Json::str("pr3")),
+        ("machine", Json::str("ultra_125h[4P] + npu")),
+        ("model", Json::str("micro")),
+        (
+            "serving",
+            Json::obj(vec![
+                ("cores_only", scenario(cores_tok_s, cores_ttft)),
+                ("cores_plus_npu", scenario(npu_tok_s, npu_ttft)),
+            ]),
+        ),
+        (
+            "prefill_gemm_7b_scale",
+            Json::obj(vec![
+                ("cores_only_units_s", Json::num(gemm_cores)),
+                ("cores_plus_npu_units_s", Json::num(gemm_npu)),
+                ("speedup", Json::num(gemm_npu / gemm_cores)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pr3_trajectory_is_well_formed_and_sane() {
+        let j = run();
+        let serving = j.get("serving").unwrap();
+        for s in ["cores_only", "cores_plus_npu"] {
+            let row = serving.get(s).unwrap();
+            assert!(row.get("tok_s").unwrap().as_f64().unwrap() > 0.0, "{s}");
+            assert!(row.get("mean_ttft_us").unwrap().as_f64().unwrap() > 0.0, "{s}");
+        }
+        let gemm = j.get("prefill_gemm_7b_scale").unwrap();
+        // the compute-bound prefill phase is where the device pays off
+        assert!(gemm.get("speedup").unwrap().as_f64().unwrap() > 1.5);
+        // micro-model serving must not regress under offload: the
+        // class-keyed table learns within a few kernels to keep µs-scale
+        // decode on the cores (only a short seeding transient remains)
+        let a = serving.get("cores_only").unwrap().get("tok_s").unwrap().as_f64().unwrap();
+        let b = serving.get("cores_plus_npu").unwrap().get("tok_s").unwrap().as_f64().unwrap();
+        assert!(b > 0.9 * a, "offload regressed serving: {b} vs {a} tok/s");
+    }
+}

@@ -1,37 +1,51 @@
 //! Multi-stream **coordinator** — the serving-level half of the paper's
 //! coordination story (its §2 runtime balances one kernel across all cores;
-//! this module decides *which cores each concurrent stream gets* before that
-//! per-kernel proportional split runs).
+//! this module decides *which compute units each concurrent stream gets*
+//! before that per-kernel proportional split runs).
 //!
-//! The [`Coordinator`] owns the machine's core set ([`CpuSpec`]) and hands
-//! each admitted stream a [`Lease`]: a disjoint, topology-aware subset of
-//! physical cores plus a proportional share of the shared memory bus. The
-//! lease materializes as an executor — [`Lease::sim_executor`] for the
-//! deterministic hybrid-CPU simulator, [`Lease::host_pool`] for real
-//! core-pinned threads — so one `Engine`/`ParallelRuntime` per stream runs
-//! the paper's dynamic loop *inside* its lease while the coordinator
-//! rebalances *between* leases.
+//! The [`Coordinator`] owns the machine's **compute units** — its CPU cores
+//! ([`CpuSpec`]) *and* its accelerators ([`AcceleratorSpec`]: NPU / iGPU
+//! class devices on the same bus) — and hands each admitted stream a
+//! [`Lease`]: a disjoint subset of units ([`ComputeUnit`]) plus a
+//! proportional share of the shared memory bus. A lease can therefore be
+//! heterogeneous — "2 P-cores + the NPU" — and materializes as an executor:
+//! [`Lease::sim_executor`] for a cores-only lease on the deterministic
+//! hybrid-CPU simulator, [`Lease::xpu_executor`] for a lease that owns
+//! accelerators (cross-device dispatch through [`crate::sim::xpu`]), or
+//! [`Lease::host_pool`] for real core-pinned threads. One
+//! `Engine`/`ParallelRuntime` per stream runs the paper's dynamic loop
+//! *inside* its lease while the coordinator rebalances *between* leases.
 //!
 //! Rebalancing reuses the paper's own mechanism one level up: every
-//! [`Coordinator::observe`] folds a kernel's measured per-core rates into a
-//! per-core **strength** table with the same mass-preserving EWMA as
-//! `perf::PerfTable` (eq. 2), and [`Coordinator::rebalance`] re-partitions
-//! cores so each stream's total strength is as equal as the topology
-//! allows. A background process stealing half of one lease's P-cores is
-//! therefore detected from timing alone and answered by spreading the
-//! degraded cores across streams (see `rust/tests/coordinator_integration.rs`).
+//! [`Coordinator::observe`] folds a kernel's measured per-unit rates —
+//! cores and accelerator devices alike — into one per-unit **strength**
+//! table with the same mass-preserving EWMA as `perf::PerfTable` (eq. 2),
+//! and [`Coordinator::rebalance`] re-partitions units so each stream's
+//! total strength is as equal as the topology allows. A background process
+//! stealing half of one lease's P-cores is therefore detected from timing
+//! alone and answered by spreading the degraded cores across streams (see
+//! `rust/tests/coordinator_integration.rs`). [`Coordinator::strength_skew`]
+//! condenses that drift into one observable — the serving layer's
+//! `DriftMonitor` triggers a live rebalance when it crosses a threshold.
+//!
+//! Accelerator placement is a policy dimension of its own
+//! ([`XpuAffinity`]): devices can be excluded from leasing (`None`), follow
+//! the strength balance on every epoch (`Floating`, the default), or stick
+//! with the stream that first received them (`Pinned`).
 //!
 //! Allocation invariants (property-tested in `rust/tests/prop_invariants.rs`):
 //! * leases are pairwise **disjoint**;
 //! * their union **covers** every core of the machine (work-conserving);
+//! * each accelerator is owned by **at most one** lease, and never by a
+//!   lease that holds no cores (an accelerator cannot run the model alone);
 //! * under [`AllocPolicy::Balanced`] with uniform strengths, each core
 //!   *kind* (P / E / LPE) is split across streams to within one core
 //!   (**topology-aware** — every stream gets its fair share of fast cores);
 //! * no lease is empty while another holds two or more cores.
 //!
 //! Strength values are mass-preserving *within* a lease per observation
-//! (only co-measured cores are comparable, exactly like the paper's ratio
-//! table); cross-lease drift washes out over successive rebalances as core
+//! (only co-measured units are comparable, exactly like the paper's ratio
+//! table); cross-lease drift washes out over successive rebalances as unit
 //! membership mixes.
 
 use std::collections::BTreeMap;
@@ -41,99 +55,269 @@ use crate::exec::RunResult;
 use crate::pool::HostPool;
 use crate::sched::largest_remainder_split;
 use crate::sim::bw::{waterfill, Contender};
+use crate::sim::xpu::{AcceleratorSpec, XpuExecutor, XpuSim};
 use crate::sim::{BackgroundLoad, SimConfig, SimExecutor};
 
 /// Caller-chosen identity of one serving stream.
 pub type StreamId = u64;
+
+/// One leasable compute resource of the machine.
+///
+/// The derived ordering — all cores (ascending id) before all accelerators
+/// (ascending index) — is the canonical unit order inside a [`Lease`]:
+/// lease-local worker `i` of an executor maps to `lease.units[i]`, for
+/// cores *and* for the appended accelerator entries of an
+/// [`XpuExecutor`]'s result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ComputeUnit {
+    /// global core id (index into the machine [`CpuSpec`])
+    Core(usize),
+    /// accelerator index (into the coordinator's [`AcceleratorSpec`] list)
+    Xpu(usize),
+}
+
+impl ComputeUnit {
+    pub fn is_core(&self) -> bool {
+        matches!(self, ComputeUnit::Core(_))
+    }
+}
+
+/// How accelerators participate in leasing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum XpuAffinity {
+    /// accelerators are never leased — cores-only serving
+    None,
+    /// an accelerator stays with the stream that first received it for as
+    /// long as that stream lives (stable placement: no device-state
+    /// migration across rebalances)
+    Pinned,
+    /// accelerators are re-placed on every epoch onto the stream with the
+    /// least total strength — they follow the balance like cores do
+    #[default]
+    Floating,
+}
 
 /// The memory-bus bandwidth (GB/s) the given cores can claim for
 /// themselves: proportional to their waterfilled allocation when every core
 /// of the machine streams flat out. Leasing *all* cores returns the full
 /// bus, so a single-stream lease behaves exactly like the raw machine.
 pub fn bus_share(machine: &CpuSpec, cores: &[usize]) -> f64 {
-    let contenders: Vec<Contender> = machine
+    let units: Vec<ComputeUnit> = cores.iter().map(|&c| ComputeUnit::Core(c)).collect();
+    bus_share_units(machine, &[], &units)
+}
+
+/// Heterogeneous generalization of [`bus_share`]: cores *and* accelerators
+/// contend for the machine bus (accelerator DMA engines carry their own
+/// contention weight), and a lease's share is the waterfilled allocation of
+/// exactly the units it owns.
+pub fn bus_share_units(
+    machine: &CpuSpec,
+    accels: &[AcceleratorSpec],
+    units: &[ComputeUnit],
+) -> f64 {
+    let mut contenders: Vec<Contender> = machine
         .cores
         .iter()
         .map(|c| Contender { weight: c.mem_weight, cap: c.mem_bw_gbps })
         .collect();
+    for a in accels {
+        contenders.push(Contender { weight: a.mem_weight, cap: a.mem_bw_gbps });
+    }
     let alloc = waterfill(&contenders, machine.bus_bw_gbps);
     let total: f64 = alloc.iter().sum();
     if total <= 0.0 {
         return machine.bus_bw_gbps;
     }
-    let share: f64 = cores.iter().map(|&i| alloc[i]).sum();
+    let n_cores = machine.n_cores();
+    let share: f64 = units
+        .iter()
+        .map(|u| match u {
+            ComputeUnit::Core(g) => alloc[*g],
+            ComputeUnit::Xpu(a) => alloc[n_cores + *a],
+        })
+        .sum();
     machine.bus_bw_gbps * share / total
 }
 
-/// A disjoint reservation of physical cores for one stream.
+/// A disjoint reservation of compute units for one stream.
 ///
 /// Leases are snapshots: any membership change or rebalance bumps the
 /// coordinator [`Coordinator::epoch`] and re-issues every lease, so holders
 /// compare `lease.epoch` against `coordinator.epoch()` and rebuild their
-/// executor when it lags.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// executor when it lags. Next to the unit set, a lease carries the
+/// per-unit learned strengths at issue time (executor seeds) and its
+/// proportional share of the memory bus.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Lease {
     pub stream: StreamId,
-    /// global core ids (indices into the machine spec), ascending
-    pub cores: Vec<usize>,
+    /// owned units in canonical order: cores ascending, then accelerators
+    /// ascending — lease-local index `i` is executor worker `i`
+    pub units: Vec<ComputeUnit>,
+    /// learned strength of each unit when the lease was issued (parallel
+    /// to `units`) — seeds the device-level split of [`Lease::xpu_executor`]
+    pub strengths: Vec<f64>,
+    /// this lease's proportional share of the machine bus (GB/s)
+    pub bus_share_gbps: f64,
     /// allocation epoch this lease was issued under
     pub epoch: u64,
 }
 
 impl Lease {
+    /// A cores-only lease with flat strengths — for tests and for
+    /// replaying foreign/stale observations; executors built from it fall
+    /// back to recomputing the bus share from the machine.
+    pub fn cores_only(stream: StreamId, cores: Vec<usize>, epoch: u64) -> Lease {
+        let units: Vec<ComputeUnit> = cores.into_iter().map(ComputeUnit::Core).collect();
+        let strengths = vec![1.0; units.len()];
+        Lease { stream, units, strengths, bus_share_gbps: 0.0, epoch }
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.units.len()
+    }
+
     pub fn n_cores(&self) -> usize {
-        self.cores.len()
+        self.units.iter().filter(|u| u.is_core()).count()
+    }
+
+    /// Global core ids (ascending) — the executor-facing CPU subset.
+    pub fn cores(&self) -> Vec<usize> {
+        self.units
+            .iter()
+            .filter_map(|u| match u {
+                ComputeUnit::Core(g) => Some(*g),
+                ComputeUnit::Xpu(_) => None,
+            })
+            .collect()
+    }
+
+    /// Owned accelerator indices (ascending).
+    pub fn accels(&self) -> Vec<usize> {
+        self.units
+            .iter()
+            .filter_map(|u| match u {
+                ComputeUnit::Xpu(a) => Some(*a),
+                ComputeUnit::Core(_) => None,
+            })
+            .collect()
     }
 
     /// True when the machine had fewer cores than streams and this stream
-    /// is waiting for capacity. Empty leases must not build executors.
+    /// is waiting for capacity. A lease without cores must not build
+    /// executors (an accelerator alone cannot run the model — the
+    /// coordinator never issues an accelerator to a core-less lease).
     pub fn is_empty(&self) -> bool {
-        self.cores.is_empty()
+        self.n_cores() == 0
     }
 
-    /// Global core id of lease-local worker `local`.
+    /// Total learned strength of the owned units.
+    pub fn strength_sum(&self) -> f64 {
+        self.strengths.iter().sum()
+    }
+
+    /// Global core id of lease-local worker `local`. Panics if `local`
+    /// addresses an accelerator entry — device workers have no core id.
     pub fn global_core(&self, local: usize) -> usize {
-        self.cores[local]
+        match self.units[local] {
+            ComputeUnit::Core(g) => g,
+            ComputeUnit::Xpu(a) => panic!("local worker {local} is accelerator {a}, not a core"),
+        }
     }
 
     /// Lease-local worker index of global core `global`, if leased here.
     pub fn local_index(&self, global: usize) -> Option<usize> {
-        self.cores.iter().position(|&c| c == global)
+        self.units.iter().position(|&u| u == ComputeUnit::Core(global))
     }
 
     /// The executor-facing sub-machine: leased cores re-indexed `0..n`
     /// with this lease's proportional share of the memory bus.
     pub fn spec(&self, machine: &CpuSpec) -> CpuSpec {
-        machine.subset(&self.cores, bus_share(machine, &self.cores))
+        let cores = self.cores();
+        let bus = if self.bus_share_gbps > 0.0 {
+            self.bus_share_gbps
+        } else {
+            bus_share(machine, &cores)
+        };
+        machine.subset(&cores, bus)
     }
 
-    /// Simulator executor over exactly the leased cores.
+    /// Simulator executor over exactly the leased cores — the cores-only
+    /// fast path. A lease that owns accelerators should materialize
+    /// [`Lease::xpu_executor`] instead (debug builds assert this).
     pub fn sim_executor(&self, machine: &CpuSpec, cfg: SimConfig) -> SimExecutor {
+        debug_assert!(
+            self.accels().is_empty(),
+            "lease owns accelerators {:?}; materialize xpu_executor() or they idle",
+            self.accels()
+        );
         SimExecutor::new(self.spec(machine), cfg)
+    }
+
+    /// Heterogeneous executor: the leased cores plus every owned
+    /// accelerator, dispatched cross-device by [`crate::sim::xpu::XpuSim`]
+    /// with device-level ratio learning seeded from this lease's strengths
+    /// (CPU seed = summed core strength). Device seeds are floored at 5%
+    /// of the CPU seed: a device whose learned strength collapsed still
+    /// gets a non-zero first split on every fresh executor, so each epoch
+    /// re-auditions it per kernel class instead of inheriting a frozen
+    /// write-off. With no owned accelerator this is exactly the cores-only
+    /// simulator path.
+    pub fn xpu_executor(
+        &self,
+        machine: &CpuSpec,
+        accels: &[AcceleratorSpec],
+        cfg: SimConfig,
+    ) -> XpuExecutor {
+        let owned: Vec<AcceleratorSpec> =
+            self.accels().iter().map(|&a| accels[a].clone()).collect();
+        let cpu_strength: f64 = self
+            .units
+            .iter()
+            .zip(&self.strengths)
+            .filter(|(u, _)| u.is_core())
+            .map(|(_, s)| s)
+            .sum();
+        let cpu_seed = cpu_strength.max(1e-9);
+        let mut seeds = vec![cpu_seed];
+        for (u, s) in self.units.iter().zip(&self.strengths) {
+            if !u.is_core() {
+                seeds.push(s.max(cpu_seed * 0.05));
+            }
+        }
+        let sim = XpuSim::new(self.spec(machine), cfg, owned).with_device_seeds(seeds);
+        XpuExecutor::new(sim)
     }
 
     /// Real-thread executor: one worker per leased core, pinned to the
     /// lease's *global* core ids.
     pub fn host_pool(&self) -> HostPool {
-        HostPool::with_cores(&self.cores)
+        HostPool::with_cores(&self.cores())
     }
 
     /// Background-load entries for this lease's simulator: one per leased
     /// core whose *global* id appears in `degraded_globals`, mapped to the
     /// lease-local index and stealing `fraction` of that core's cycles for
-    /// the whole run. Cores of `degraded_globals` leased elsewhere are
-    /// ignored — the load follows the physical core, not the lease.
+    /// the whole run. Degraded globals not leased here are skipped — the
+    /// load follows the physical core, not the lease — and every produced
+    /// entry is guarded to address a core worker (never an accelerator).
     pub fn background_for(&self, degraded_globals: &[usize], fraction: f64) -> Vec<BackgroundLoad> {
-        self.cores
+        let n_cores = self.n_cores();
+        degraded_globals
             .iter()
-            .enumerate()
-            .filter(|(_, g)| degraded_globals.contains(g))
-            .map(|(local, _)| BackgroundLoad { core: local, start: 0.0, end: 1e9, fraction })
+            .filter_map(|&g| self.local_index(g))
+            .map(|local| {
+                debug_assert!(
+                    local < n_cores,
+                    "degraded global mapped to non-core worker {local}"
+                );
+                BackgroundLoad { core: local, start: 0.0, end: 1e9, fraction }
+            })
             .collect()
     }
 }
 
-/// How the coordinator partitions cores across streams.
+/// How the coordinator partitions cores across streams. Accelerator
+/// placement is the orthogonal [`XpuAffinity`] dimension.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum AllocPolicy {
     /// Split every core kind evenly across streams and balance measured
@@ -145,39 +329,76 @@ pub enum AllocPolicy {
     Packed,
 }
 
-/// Owns the machine's cores and leases disjoint subsets to streams.
+/// Owns the machine's compute units and leases disjoint subsets to streams.
 pub struct Coordinator {
     spec: CpuSpec,
     policy: AllocPolicy,
+    affinity: XpuAffinity,
+    accels: Vec<AcceleratorSpec>,
     /// EWMA gain α for strength updates (weight of the old value, like
     /// `PerfConfig::alpha`; paper uses 0.3).
     pub alpha: f64,
-    /// per-core measured strength, seeded from the spec's ideal VNNI
-    /// compute ratios (slowest core = 1.0)
+    /// per-unit measured strength: cores (global order) then accelerators,
+    /// seeded from the spec's ideal VNNI compute ratios (slowest core = 1.0)
     strength: Vec<f64>,
+    /// `Pinned` affinity: accelerator → owning stream while it lives
+    pinned: Vec<Option<StreamId>>,
     /// admitted streams in admission order
     streams: Vec<StreamId>,
     leases: BTreeMap<StreamId, Lease>,
     epoch: u64,
+    observations: u64,
 }
 
 impl Coordinator {
+    /// Cores-only coordinator (no accelerators leased).
     pub fn new(spec: CpuSpec, policy: AllocPolicy) -> Coordinator {
+        Coordinator::with_accelerators(spec, Vec::new(), policy, XpuAffinity::None)
+    }
+
+    /// Heterogeneous coordinator: cores plus accelerators, with the given
+    /// placement affinity. Accelerator strengths are seeded from their
+    /// spec'd int8 throughput on the same scale as the core ratios
+    /// (slowest core = 1.0).
+    pub fn with_accelerators(
+        spec: CpuSpec,
+        accels: Vec<AcceleratorSpec>,
+        policy: AllocPolicy,
+        affinity: XpuAffinity,
+    ) -> Coordinator {
         spec.validate().expect("invalid CpuSpec");
-        let strength = spec.ideal_ratios(Isa::AvxVnni);
+        let mut strength = spec.ideal_ratios(Isa::AvxVnni);
+        let slowest = spec
+            .cores
+            .iter()
+            .map(|c| c.compute_rate(Isa::AvxVnni))
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-30);
+        for a in &accels {
+            strength.push((a.ops_per_sec / slowest).max(1e-9));
+        }
+        let pinned = vec![None; accels.len()];
         Coordinator {
             spec,
             policy,
+            affinity,
+            accels,
             alpha: 0.3,
             strength,
+            pinned,
             streams: Vec::new(),
             leases: BTreeMap::new(),
             epoch: 0,
+            observations: 0,
         }
     }
 
     pub fn machine(&self) -> &CpuSpec {
         &self.spec
+    }
+
+    pub fn accelerators(&self) -> &[AcceleratorSpec] {
+        &self.accels
     }
 
     pub fn n_streams(&self) -> usize {
@@ -190,9 +411,23 @@ impl Coordinator {
         self.epoch
     }
 
-    /// Current measured per-core strengths (global core order).
+    /// Current measured per-unit strengths: cores in global order, then
+    /// one entry per accelerator.
     pub fn strengths(&self) -> &[f64] {
         &self.strength
+    }
+
+    /// Lifetime count of accepted observations — the serving layer's
+    /// drift monitor uses this as its cooldown clock.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    fn strength_index(&self, unit: ComputeUnit) -> usize {
+        match unit {
+            ComputeUnit::Core(g) => g,
+            ComputeUnit::Xpu(a) => self.spec.n_cores() + a,
+        }
     }
 
     /// Admit a new stream and return its lease. Re-partitions every
@@ -204,8 +439,9 @@ impl Coordinator {
         self.leases[&stream].clone()
     }
 
-    /// Release a stream's cores back to the pool (no-op for unknown ids);
-    /// remaining leases grow to cover the machine again.
+    /// Release a stream's units back to the pool (no-op for unknown ids);
+    /// remaining leases grow to cover the machine again. Accelerators
+    /// pinned to the departing stream become assignable again.
     pub fn finish(&mut self, stream: StreamId) {
         let before = self.streams.len();
         self.streams.retain(|&s| s != stream);
@@ -224,16 +460,18 @@ impl Coordinator {
         self.leases.values()
     }
 
-    /// Fold one kernel's measured per-core result back into the strength
+    /// Fold one kernel's measured per-unit result back into the strength
     /// table. `lease` must be the exact lease the measuring executor was
-    /// built from: the result's local→global core mapping is only valid
-    /// for it, so results measured under a stale lease (the coordinator
-    /// re-partitioned since — different epoch or cores) or an unknown
-    /// stream are silently dropped rather than mis-attributed to cores
-    /// the stream no longer owns. Mirrors the paper's eq. 2:
-    /// participating cores' rates are rescaled so their strength mass is
-    /// preserved, then EWMA-filtered with `alpha`. A single participant
-    /// carries no relative information and is skipped.
+    /// built from: the result's local→unit mapping is only valid for it,
+    /// so results measured under a stale lease (the coordinator
+    /// re-partitioned since — different epoch or units) or an unknown
+    /// stream are silently dropped rather than mis-attributed to units
+    /// the stream no longer owns. Entries past the lease's core count map
+    /// onto its accelerators (the [`XpuExecutor`] result layout), so
+    /// device timings feed the same table as core timings. Mirrors the
+    /// paper's eq. 2: participating units' rates are rescaled so their
+    /// strength mass is preserved, then EWMA-filtered with `alpha`. A
+    /// single participant carries no relative information and is skipped.
     ///
     /// Returns `true` when the observation was folded into the strength
     /// table, `false` when it was dropped (stale epoch, foreign stream or
@@ -249,10 +487,10 @@ impl Coordinator {
         for (local, t) in res.per_core_secs.iter().enumerate() {
             let Some(t) = t else { continue };
             let units = res.units_done.get(local).copied().unwrap_or(0);
-            if *t > 0.0 && units > 0 && local < lease.cores.len() {
-                let g = lease.global_core(local);
-                mass += self.strength[g];
-                rates.push((g, units as f64 / t));
+            if *t > 0.0 && units > 0 && local < lease.units.len() {
+                let idx = self.strength_index(lease.units[local]);
+                mass += self.strength[idx];
+                rates.push((idx, units as f64 / t));
             }
         }
         if rates.len() < 2 {
@@ -263,15 +501,61 @@ impl Coordinator {
             return false;
         }
         let scale = mass / rate_sum;
-        for (g, r) in rates {
-            self.strength[g] = self.alpha * self.strength[g] + (1.0 - self.alpha) * r * scale;
+        for (idx, r) in rates {
+            self.strength[idx] = self.alpha * self.strength[idx] + (1.0 - self.alpha) * r * scale;
         }
+        self.observations += 1;
         true
     }
 
-    /// Re-partition cores across the admitted streams using the current
+    /// Cross-lease strength drift, condensed to one ratio: for every core
+    /// kind held by two or more leases, compare the leases' *mean* learned
+    /// strength of that kind and take the worst max/min ratio over kinds.
+    /// A freshly balanced (or healthy converged) partition sits near 1.0;
+    /// a background load degrading part of one lease pushes the ratio up
+    /// because mass-preserving per-lease updates re-scale that lease's
+    /// kinds against everyone else's. Accelerators are machine singletons
+    /// (never co-held), so they cannot contribute a cross-lease ratio.
+    ///
+    /// The signal needs co-held kinds: under [`AllocPolicy::Packed`] a
+    /// partition can tier each kind entirely into one lease (8P / 8E),
+    /// leaving no cross-lease comparison — the skew then stays 1.0 and
+    /// the drift monitor is blind. Use `Balanced` (the default) when live
+    /// drift rebalancing matters.
+    pub fn strength_skew(&self) -> f64 {
+        let mut skew = 1.0f64;
+        for kind in [CoreKind::Performance, CoreKind::Efficiency, CoreKind::LowPower] {
+            let mut means: Vec<f64> = Vec::new();
+            for lease in self.leases.values() {
+                let vals: Vec<f64> = lease
+                    .units
+                    .iter()
+                    .filter_map(|u| match u {
+                        ComputeUnit::Core(g) if self.spec.cores[*g].kind == kind => {
+                            Some(self.strength[*g])
+                        }
+                        _ => None,
+                    })
+                    .collect();
+                if !vals.is_empty() {
+                    means.push(vals.iter().sum::<f64>() / vals.len() as f64);
+                }
+            }
+            if means.len() >= 2 {
+                let mx = means.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let mn = means.iter().cloned().fold(f64::INFINITY, f64::min);
+                if mn > 0.0 {
+                    skew = skew.max(mx / mn);
+                }
+            }
+        }
+        skew
+    }
+
+    /// Re-partition units across the admitted streams using the current
     /// strengths (epoch bump). Call after enough [`Coordinator::observe`]s
-    /// have shifted the table — e.g. when a background load is detected.
+    /// have shifted the table — e.g. when [`Coordinator::strength_skew`]
+    /// crosses the serving layer's drift threshold.
     pub fn rebalance(&mut self) {
         self.assign();
     }
@@ -279,16 +563,56 @@ impl Coordinator {
     fn assign(&mut self) {
         self.epoch += 1;
         self.leases.clear();
+        // release pins held by departed streams
+        for p in self.pinned.iter_mut() {
+            if let Some(owner) = p {
+                if !self.streams.contains(owner) {
+                    *p = None;
+                }
+            }
+        }
         let k = self.streams.len();
         if k == 0 {
             return;
         }
+        let n_cores = self.spec.n_cores();
         let mut cores_per_stream: Vec<Vec<usize>> = vec![Vec::new(); k];
+        let mut accels_per_stream: Vec<Vec<usize>> = vec![Vec::new(); k];
         let mut strength_sum = vec![0.0f64; k];
+
+        // ---- accelerators first: their strength steers the core picks ----
+        if self.affinity != XpuAffinity::None {
+            // strongest device first; ties toward the lower index
+            let mut order: Vec<usize> = (0..self.accels.len()).collect();
+            order.sort_by(|&a, &b| {
+                let (sa, sb) = (self.strength[n_cores + a], self.strength[n_cores + b]);
+                sb.partial_cmp(&sa).unwrap().then(a.cmp(&b))
+            });
+            for a in order {
+                let pinned_slot = match self.affinity {
+                    XpuAffinity::Pinned => self.pinned[a]
+                        .and_then(|owner| self.streams.iter().position(|&s| s == owner)),
+                    _ => None,
+                };
+                let s = pinned_slot.unwrap_or_else(|| {
+                    // weakest strength sum so far; ties toward admission order
+                    (0..k)
+                        .min_by(|&x, &y| {
+                            strength_sum[x].partial_cmp(&strength_sum[y]).unwrap().then(x.cmp(&y))
+                        })
+                        .unwrap()
+                });
+                if self.affinity == XpuAffinity::Pinned {
+                    self.pinned[a] = Some(self.streams[s]);
+                }
+                accels_per_stream[s].push(a);
+                strength_sum[s] += self.strength[n_cores + a];
+            }
+        }
 
         match self.policy {
             AllocPolicy::Packed => {
-                let mut order: Vec<usize> = (0..self.spec.n_cores()).collect();
+                let mut order: Vec<usize> = (0..n_cores).collect();
                 order.sort_by(|&a, &b| {
                     self.strength[b].partial_cmp(&self.strength[a]).unwrap().then(a.cmp(&b))
                 });
@@ -343,7 +667,7 @@ impl Coordinator {
             }
         }
 
-        // repair: no stream may be empty while another holds ≥ 2 cores
+        // repair: no stream may be core-less while another holds ≥ 2 cores
         // (possible when a kind has fewer cores than there are streams)
         loop {
             let Some(empty) = (0..k).find(|&s| cores_per_stream[s].is_empty()) else { break };
@@ -367,10 +691,56 @@ impl Coordinator {
             cores_per_stream[empty].push(core);
         }
 
+        // an accelerator must not strand on a core-less lease (it cannot
+        // run the model alone): move it to the weakest lease that has cores
+        for s in 0..k {
+            if !cores_per_stream[s].is_empty() || accels_per_stream[s].is_empty() {
+                continue;
+            }
+            let accels = std::mem::take(&mut accels_per_stream[s]);
+            for a in accels {
+                strength_sum[s] -= self.strength[n_cores + a];
+                let target = (0..k)
+                    .filter(|&t| !cores_per_stream[t].is_empty())
+                    .min_by(|&x, &y| {
+                        strength_sum[x].partial_cmp(&strength_sum[y]).unwrap().then(x.cmp(&y))
+                    });
+                let Some(t) = target else { break };
+                if self.affinity == XpuAffinity::Pinned {
+                    self.pinned[a] = Some(self.streams[t]);
+                }
+                accels_per_stream[t].push(a);
+                strength_sum[t] += self.strength[n_cores + a];
+            }
+        }
+
+        // accelerators kept off the lease pool by policy are guaranteed
+        // idle: they must not contend for bus in anyone's share (a
+        // single-stream cores-only lease still gets the whole bus)
+        let contending: &[AcceleratorSpec] = match self.affinity {
+            XpuAffinity::None => &[],
+            _ => &self.accels,
+        };
         for (s, &stream) in self.streams.iter().enumerate() {
-            let mut cores = std::mem::take(&mut cores_per_stream[s]);
-            cores.sort_unstable();
-            self.leases.insert(stream, Lease { stream, cores, epoch: self.epoch });
+            let mut units: Vec<ComputeUnit> = std::mem::take(&mut cores_per_stream[s])
+                .into_iter()
+                .map(ComputeUnit::Core)
+                .collect();
+            let mut accels = std::mem::take(&mut accels_per_stream[s]);
+            accels.sort_unstable();
+            units.extend(accels.into_iter().map(ComputeUnit::Xpu));
+            units.sort();
+            let strengths: Vec<f64> =
+                units.iter().map(|&u| self.strength[self.strength_index(u)]).collect();
+            let bus = if units.iter().any(ComputeUnit::is_core) {
+                bus_share_units(&self.spec, contending, &units)
+            } else {
+                0.0
+            };
+            self.leases.insert(
+                stream,
+                Lease { stream, units, strengths, bus_share_gbps: bus, epoch: self.epoch },
+            );
         }
     }
 }
@@ -381,20 +751,25 @@ mod tests {
     use crate::cpu::presets;
 
     fn kinds(spec: &CpuSpec, lease: &Lease, kind: CoreKind) -> usize {
-        lease.cores.iter().filter(|&&c| spec.cores[c].kind == kind).count()
+        lease.cores().iter().filter(|&&c| spec.cores[c].kind == kind).count()
     }
 
     fn assert_disjoint_covering(c: &Coordinator) {
         let mut seen = vec![false; c.machine().n_cores()];
+        let mut accel_owner = vec![0usize; c.accelerators().len()];
         for lease in c.leases() {
-            for &core in &lease.cores {
+            for &core in &lease.cores() {
                 assert!(!seen[core], "core {core} leased twice");
                 seen[core] = true;
+            }
+            for &a in &lease.accels() {
+                accel_owner[a] += 1;
             }
         }
         if c.n_streams() > 0 {
             assert!(seen.iter().all(|&s| s), "not covering: {seen:?}");
         }
+        assert!(accel_owner.iter().all(|&n| n <= 1), "accelerator leased twice");
     }
 
     #[test]
@@ -402,7 +777,7 @@ mod tests {
         let spec = presets::core_12900k();
         let mut c = Coordinator::new(spec.clone(), AllocPolicy::Balanced);
         let lease = c.admit(7);
-        assert_eq!(lease.cores, (0..16).collect::<Vec<_>>());
+        assert_eq!(lease.cores(), (0..16).collect::<Vec<_>>());
         // full machine → full bus: lease spec behaves like the raw machine
         let sub = lease.spec(&spec);
         assert_eq!(sub.n_cores(), 16);
@@ -525,6 +900,7 @@ mod tests {
             };
             c.observe(&l0, &res);
         }
+        assert_eq!(c.observations(), 20);
         let slow = l0.global_core(0);
         let fast = l0.global_core(1);
         assert!(
@@ -538,7 +914,7 @@ mod tests {
         // strength sums are balanced, not left lopsided
         let sums: Vec<f64> = c
             .leases()
-            .map(|l| l.cores.iter().map(|&g| c.strengths()[g]).sum::<f64>())
+            .map(|l| l.cores().iter().map(|&g| c.strengths()[g]).sum::<f64>())
             .collect();
         let (a, b) = (sums[0], sums[1]);
         assert!((a - b).abs() / a.max(b) < 0.35, "sums {sums:?}");
@@ -560,7 +936,7 @@ mod tests {
         );
         assert!(!accepted);
         // lease for a stream the coordinator never admitted: ignored
-        let foreign = Lease { stream: 9, cores: vec![0, 1], epoch: 0 };
+        let foreign = Lease::cores_only(9, vec![0, 1], 0);
         let skewed = RunResult {
             per_core_secs: vec![Some(1.0), Some(4.0)],
             wall_secs: 4.0,
@@ -568,6 +944,7 @@ mod tests {
         };
         assert!(!c.observe(&foreign, &skewed));
         assert_eq!(c.strengths(), &before[..]);
+        assert_eq!(c.observations(), 0);
         // stale lease: admitting stream 1 re-partitions, so a result
         // measured under the old 4-core lease must not be mis-mapped onto
         // the new 2-core lease's globals
@@ -579,17 +956,42 @@ mod tests {
         let fresh = c.lease(0).unwrap().clone();
         assert!(c.observe(&fresh, &skewed));
         assert_ne!(c.strengths(), &before[..]);
+        assert_eq!(c.observations(), 1);
     }
 
     #[test]
     fn background_for_maps_globals_to_lease_locals() {
-        let lease = Lease { stream: 0, cores: vec![1, 4, 9, 12], epoch: 1 };
+        let lease = Lease::cores_only(0, vec![1, 4, 9, 12], 1);
         // global 4 → local 1, global 12 → local 3; global 5 leased elsewhere
         let bg = lease.background_for(&[4, 12, 5], 0.5);
         let cores: Vec<usize> = bg.iter().map(|b| b.core).collect();
         assert_eq!(cores, vec![1, 3]);
         assert!(bg.iter().all(|b| b.fraction == 0.5 && b.start == 0.0 && b.end == 1e9));
         assert!(lease.background_for(&[], 0.5).is_empty());
+    }
+
+    #[test]
+    fn background_for_skips_globals_on_a_hetero_lease() {
+        // a lease owning an accelerator maps background loads exactly like
+        // a cores-only lease: only its own cores, always to core workers
+        let mut c = Coordinator::with_accelerators(
+            presets::core_12900k(),
+            vec![AcceleratorSpec::npu()],
+            AllocPolicy::Balanced,
+            XpuAffinity::Floating,
+        );
+        c.admit(0);
+        c.admit(1);
+        let with_npu = c.leases().find(|l| !l.accels().is_empty()).unwrap().clone();
+        let other = c.leases().find(|l| l.accels().is_empty()).unwrap().clone();
+        let foreign: Vec<usize> = other.cores();
+        // degraded cores leased to the *other* stream: all skipped
+        assert!(with_npu.background_for(&foreign, 0.5).is_empty());
+        // its own first two cores map to locals 0 and 1
+        let own: Vec<usize> = with_npu.cores().into_iter().take(2).collect();
+        let bg = with_npu.background_for(&own, 0.25);
+        assert_eq!(bg.iter().map(|b| b.core).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(bg.iter().all(|b| b.core < with_npu.n_cores()));
     }
 
     #[test]
@@ -604,5 +1006,180 @@ mod tests {
             }
             assert_eq!(lease.local_index(999), None);
         }
+    }
+
+    // ---- heterogeneous (accelerator) leasing ----
+
+    #[test]
+    fn floating_accelerator_lands_on_one_lease_and_steers_cores() {
+        let spec = presets::ultra_125h();
+        let mut c = Coordinator::with_accelerators(
+            spec.clone(),
+            vec![AcceleratorSpec::npu()],
+            AllocPolicy::Balanced,
+            XpuAffinity::Floating,
+        );
+        c.admit(0);
+        c.admit(1);
+        assert_disjoint_covering(&c);
+        let owners: Vec<StreamId> =
+            c.leases().filter(|l| !l.accels().is_empty()).map(|l| l.stream).collect();
+        assert_eq!(owners.len(), 1, "exactly one lease owns the NPU");
+        // per-kind core quotas still hold on both leases
+        for l in c.leases() {
+            assert_eq!(kinds(&spec, l, CoreKind::Performance), 2);
+            assert_eq!(kinds(&spec, l, CoreKind::Efficiency), 4);
+        }
+        // the lease snapshot carries the device strength and a bus share
+        let with_npu = c.leases().find(|l| !l.accels().is_empty()).unwrap();
+        assert_eq!(with_npu.units.len(), with_npu.strengths.len());
+        assert!(with_npu.strength_sum() > 10.0, "NPU strength missing");
+        assert!(with_npu.bus_share_gbps > 0.0);
+    }
+
+    #[test]
+    fn two_accelerators_float_to_different_leases() {
+        let mut c = Coordinator::with_accelerators(
+            presets::ultra_125h(),
+            vec![AcceleratorSpec::npu(), AcceleratorSpec::igpu()],
+            AllocPolicy::Balanced,
+            XpuAffinity::Floating,
+        );
+        c.admit(0);
+        c.admit(1);
+        assert_disjoint_covering(&c);
+        for lease in c.leases() {
+            assert_eq!(lease.accels().len(), 1, "{:?}", lease.units);
+        }
+    }
+
+    #[test]
+    fn pinned_accelerator_stays_until_its_stream_departs() {
+        let mut c = Coordinator::with_accelerators(
+            presets::core_12900k(),
+            vec![AcceleratorSpec::npu()],
+            AllocPolicy::Balanced,
+            XpuAffinity::Pinned,
+        );
+        c.admit(0);
+        let owner = c.leases().find(|l| !l.accels().is_empty()).unwrap().stream;
+        c.admit(1);
+        c.admit(2);
+        c.rebalance();
+        let still = c.leases().find(|l| !l.accels().is_empty()).unwrap().stream;
+        assert_eq!(owner, still, "pinned accelerator moved across rebalances");
+        c.finish(owner);
+        let next = c.leases().find(|l| !l.accels().is_empty()).unwrap().stream;
+        assert_ne!(next, owner, "released pin was not re-assigned");
+    }
+
+    #[test]
+    fn affinity_none_leases_no_accelerators_and_reserves_no_bus() {
+        let spec = presets::core_12900k();
+        let mut c = Coordinator::with_accelerators(
+            spec.clone(),
+            vec![AcceleratorSpec::npu()],
+            AllocPolicy::Balanced,
+            XpuAffinity::None,
+        );
+        c.admit(0);
+        assert!(c.leases().all(|l| l.accels().is_empty()));
+        // the policy-idled device must not steal bus share: a single
+        // cores-only stream still behaves exactly like the raw machine
+        let lease = c.lease(0).unwrap();
+        assert!(
+            (lease.bus_share_gbps - spec.bus_bw_gbps).abs() < 1e-9,
+            "idle NPU stole bus: {} vs {}",
+            lease.bus_share_gbps,
+            spec.bus_bw_gbps
+        );
+    }
+
+    #[test]
+    fn accelerator_never_strands_on_a_coreless_lease() {
+        // 2 cores, 3 streams: one stream waits core-less — the NPU must
+        // not be wasted on it
+        let machine = presets::core_12900k().subset(&[0, 8], 8.0);
+        let mut c = Coordinator::with_accelerators(
+            machine,
+            vec![AcceleratorSpec::npu()],
+            AllocPolicy::Balanced,
+            XpuAffinity::Floating,
+        );
+        for s in 0..3 {
+            c.admit(s);
+        }
+        assert_disjoint_covering(&c);
+        for lease in c.leases() {
+            if !lease.accels().is_empty() {
+                assert!(!lease.is_empty(), "accelerator stranded on {:?}", lease);
+            }
+        }
+    }
+
+    #[test]
+    fn observe_folds_device_timings_into_the_strength_table() {
+        let spec = presets::homogeneous(4);
+        let mut c = Coordinator::with_accelerators(
+            spec.clone(),
+            vec![AcceleratorSpec::npu()],
+            AllocPolicy::Balanced,
+            XpuAffinity::Floating,
+        );
+        let lease = c.admit(0); // whole machine + NPU
+        assert_eq!(lease.accels(), vec![0]);
+        let npu_idx = spec.n_cores();
+        let seed = c.strengths()[npu_idx];
+        // equal units everywhere, device twice as fast as any core: its
+        // strength must grow relative to the cores'
+        let res = RunResult {
+            per_core_secs: vec![Some(1.0), Some(1.0), Some(1.0), Some(1.0), Some(0.5)],
+            wall_secs: 1.0,
+            units_done: vec![100, 100, 100, 100, 100],
+        };
+        for _ in 0..10 {
+            let cur = c.lease(0).unwrap().clone();
+            assert!(c.observe(&cur, &res));
+        }
+        let s = c.strengths();
+        assert!(
+            (s[npu_idx] / s[0] - 2.0).abs() < 0.05,
+            "device:core ratio {} (seed {seed})",
+            s[npu_idx] / s[0]
+        );
+    }
+
+    #[test]
+    fn strength_skew_flags_asymmetric_degradation_only() {
+        let machine = presets::core_12900k();
+        let mut c = Coordinator::new(machine, AllocPolicy::Balanced);
+        c.admit(0);
+        c.admit(1);
+        assert!((c.strength_skew() - 1.0).abs() < 1e-9, "healthy skew {}", c.strength_skew());
+        // stream 0's P-cores run at half rate; its E-cores at full rate —
+        // mass-preserving updates shift strength inside lease 0 only
+        let l0 = c.lease(0).unwrap().clone();
+        let times: Vec<Option<f64>> = (0..l0.n_cores())
+            .map(|i| {
+                let g = l0.global_core(i);
+                let kind = c.machine().cores[g].kind;
+                let rate = if kind == CoreKind::Performance { 2.649 / 2.0 } else { 1.0 };
+                Some(100.0 / rate)
+            })
+            .collect();
+        let res = RunResult {
+            wall_secs: 1.0,
+            units_done: vec![100; l0.n_cores()],
+            per_core_secs: times,
+        };
+        for _ in 0..12 {
+            assert!(c.observe(&l0, &res));
+        }
+        let skew = c.strength_skew();
+        assert!(skew > 1.25, "drift not visible: skew {skew}");
+        // rebalance mixes the degraded cores evenly → skew collapses
+        c.rebalance();
+        let post = c.strength_skew();
+        assert!(post < 1.05, "rebalance did not equalize: skew {post}");
     }
 }

@@ -47,6 +47,12 @@ impl RunResult {
 pub trait Executor {
     fn n_workers(&self) -> usize;
     fn execute(&mut self, work: &dyn Work, plan: &DispatchPlan) -> RunResult;
+
+    /// Start a synthetic background load stealing `fraction` of the given
+    /// workers' cycles from now on. Simulated executors model it
+    /// (deterministic drift scenarios — see `server::testing`); real-thread
+    /// executors cannot synthesize load and ignore it (the default).
+    fn inject_background(&mut self, _workers: &[usize], _fraction: f64) {}
 }
 
 /// The paper's engine loop: query table → plan → execute → update table.
@@ -80,7 +86,10 @@ impl<E: Executor> ParallelRuntime<E> {
         let ratios = self.table.ratios(cost.class, cost.isa).to_vec();
         let plan = self.sched.plan(work.total_units(), work.grain(), &ratios);
         let res = self.exec.execute(work, &plan);
-        self.table.update(cost.class, cost.isa, &res.per_core_secs);
+        // heterogeneous executors append per-device entries after the
+        // per-core ones; the core table only consumes its own workers
+        let n = self.table.n_cores().min(res.per_core_secs.len());
+        self.table.update(cost.class, cost.isa, &res.per_core_secs[..n]);
         if self.capture_last {
             self.last_result = Some(res.clone());
         }

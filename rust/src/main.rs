@@ -27,6 +27,7 @@ use dynpar::util::argparse::Args;
 
 const USAGE: &str = "usage: dynpar <presets|mlc|bench|trace|infer|serve|ablate> [options]
   dynpar bench <gemm|gemv|e2e|all> [--preset <name|all>] [--iters N] [--prompt N] [--decode N] [--noisy]
+  dynpar bench pr3 [--out BENCH_pr3.json]     hetero-lease (cores+NPU) serving trajectory
   dynpar trace [--preset ultra_125h] [--alpha 0.3] [--init 5] [--prompt N] [--decode N] [--out file.csv]
   dynpar infer [--model tiny|micro] [--backend native|pjrt|both] [--preset X] [--sched dynamic] [--new N]
   dynpar serve [--addr 127.0.0.1:7878] [--model micro] [--preset X] [--max-batch 4]
@@ -107,6 +108,17 @@ fn cmd_bench(args: &Args) {
         let t = fig2::gemv_table(&res);
         println!("\n== Figure 2-right: INT4 GEMV 1x4096x4096 (bandwidth) ==");
         print!("{}", if json { t.to_json().dump() } else { t.render() });
+    }
+    if which == "pr3" {
+        let j = dynpar::bench_harness::pr3::run();
+        match args.opt("out") {
+            Some(path) => {
+                std::fs::write(path, format!("{}\n", j.dump())).expect("write pr3 trajectory");
+                eprintln!("wrote PR-3 trajectory to {path}");
+            }
+            None => println!("{}", j.dump()),
+        }
+        return;
     }
     if which == "e2e" || which == "all" {
         let prompt = args.usize_or("prompt", 1024);

@@ -133,6 +133,9 @@ pub struct ServingMetrics {
     pub rejected: u64,
     /// engine-fleet rebuilds (dynamic lease membership epoch changes)
     pub rebuilds: u64,
+    /// rebuilds triggered by the drift monitor (learned-strength skew →
+    /// live `rebalance()`), a subset of `rebuilds`
+    pub drift_rebalances: u64,
     pub prefill: LatencyHistogram,
     pub decode_per_token: LatencyHistogram,
     pub ttft: LatencyHistogram,
@@ -158,6 +161,7 @@ impl ServingMetrics {
             ("engines", Json::num(n_engines as f64)),
             ("epoch", Json::num(epoch as f64)),
             ("rebuilds", Json::num(self.rebuilds as f64)),
+            ("drift_rebalances", Json::num(self.drift_rebalances as f64)),
         ];
         if let Some(s) = self.prefill.summary() {
             fields.push(("prefill_p50_secs", Json::num(s.p50)));
@@ -234,6 +238,7 @@ mod tests {
         sm.queue_depth.record(3.0);
         sm.rejected = 1;
         sm.rebuilds = 2;
+        sm.drift_rebalances = 1;
         let j = sm.to_json(4, 7);
         assert_eq!(j.get("requests").unwrap().as_i64(), Some(2));
         assert_eq!(j.get("tokens").unwrap().as_i64(), Some(20));
@@ -241,6 +246,7 @@ mod tests {
         assert_eq!(j.get("engines").unwrap().as_i64(), Some(4));
         assert_eq!(j.get("epoch").unwrap().as_i64(), Some(7));
         assert_eq!(j.get("rebuilds").unwrap().as_i64(), Some(2));
+        assert_eq!(j.get("drift_rebalances").unwrap().as_i64(), Some(1));
         assert_eq!(j.get("ttft_p50_secs").unwrap().as_f64(), Some(0.25));
         assert_eq!(j.get("queue_depth_p50").unwrap().as_f64(), Some(3.0));
         let decode_p50 = j.get("decode_p50_secs_per_token").unwrap().as_f64().unwrap();

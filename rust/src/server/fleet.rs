@@ -4,16 +4,63 @@
 //!
 //! Sessions carry the KV state with the request, so a migrated stream
 //! resumes decoding on its new lease's cores with bit-identical tokens —
-//! partitioning only ever changes timing, never values. These helpers are
-//! shared by the threaded TCP server ([`super::serve_dynamic`]) and the
-//! deterministic harness ([`super::testing`]), so the lifecycle under test
-//! is the lifecycle in production.
+//! partitioning only ever changes timing, never values. These helpers —
+//! including the [`DriftMonitor`] that closes the observe→rebalance loop —
+//! are shared by the threaded TCP server ([`super::serve_dynamic`]) and
+//! the deterministic harness ([`super::testing`]), so the lifecycle under
+//! test is the lifecycle in production.
 
 use crate::coordinator::{Coordinator, Lease};
 use crate::engine::Engine;
 use crate::exec::Executor;
 
 use super::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher};
+
+/// Decides when learned strength drift warrants a live `rebalance()` +
+/// fleet rebuild. The signal is [`Coordinator::strength_skew`] — how far
+/// same-kind units have drifted apart *across* leases — gated by a
+/// cooldown of accepted observations since the last epoch change, so a
+/// fresh partition gets to learn before it can be torn down again.
+#[derive(Clone, Debug)]
+pub struct DriftMonitor {
+    /// skew ratio that triggers a rebalance (`f64::INFINITY` disables)
+    pub threshold: f64,
+    /// accepted observations required since the last epoch change
+    pub cooldown: u64,
+    last_epoch: u64,
+    obs_at_epoch: u64,
+}
+
+impl DriftMonitor {
+    pub fn new(threshold: f64, cooldown: u64) -> DriftMonitor {
+        assert!(threshold >= 1.0, "skew is a max/min ratio; threshold < 1 always fires");
+        DriftMonitor { threshold, cooldown, last_epoch: 0, obs_at_epoch: 0 }
+    }
+
+    /// A monitor that never fires (cores-only static behavior).
+    pub fn disabled() -> DriftMonitor {
+        DriftMonitor::new(f64::INFINITY, 0)
+    }
+
+    /// When the coordinator's learned strengths have skewed past the
+    /// threshold — with at least `cooldown` observations folded in since
+    /// the last epoch change — returns the measured skew; `None`
+    /// otherwise. Call from the serving loop; on `Some` the caller runs
+    /// `rebalance()` and rebuilds the fleet (the epoch bump restarts the
+    /// cooldown automatically), recording the returned skew if it keeps
+    /// trigger observability (the skew is measured exactly once here).
+    pub fn check_drift(&mut self, coord: &Coordinator) -> Option<f64> {
+        if coord.epoch() != self.last_epoch {
+            self.last_epoch = coord.epoch();
+            self.obs_at_epoch = coord.observations();
+        }
+        if coord.n_streams() < 2 || coord.observations() - self.obs_at_epoch < self.cooldown {
+            return None;
+        }
+        let skew = coord.strength_skew();
+        (skew > self.threshold).then_some(skew)
+    }
+}
 
 /// Builds an engine for a lease. The serving layer owns *when* engines are
 /// rebuilt (epoch changes); the factory owns *how* (executor choice,
@@ -144,6 +191,44 @@ mod tests {
             })
             .collect();
         assert_eq!(tokens, expect, "migrated stream diverged from solo run");
+    }
+
+    #[test]
+    fn drift_monitor_gates_on_cooldown_and_skew() {
+        use crate::cpu::CoreKind;
+        use crate::exec::RunResult;
+        let machine = presets::core_12900k();
+        let mut coord = Coordinator::new(machine, AllocPolicy::Balanced);
+        coord.admit(0);
+        coord.admit(1);
+        let mut mon = DriftMonitor::new(1.25, 3);
+        assert!(mon.check_drift(&coord).is_none(), "healthy partition fired");
+
+        // stream 0's P-cores at half rate: skew grows with each observation
+        let l0 = coord.lease(0).unwrap().clone();
+        let res = RunResult {
+            per_core_secs: (0..l0.n_cores())
+                .map(|i| {
+                    let kind = coord.machine().cores[l0.global_core(i)].kind;
+                    let rate = if kind == CoreKind::Performance { 2.649 / 2.0 } else { 1.0 };
+                    Some(100.0 / rate)
+                })
+                .collect(),
+            wall_secs: 1.0,
+            units_done: vec![100; l0.n_cores()],
+        };
+        for _ in 0..2 {
+            assert!(coord.observe(&l0, &res));
+            assert!(mon.check_drift(&coord).is_none(), "fired inside the cooldown");
+        }
+        assert!(coord.observe(&l0, &res));
+        let skew = mon.check_drift(&coord).expect("drift past threshold not detected");
+        assert!(skew > 1.25, "reported skew {skew}");
+
+        // the rebalance epoch bump restarts the cooldown: no refire until
+        // the fresh partition has folded in its own observations
+        coord.rebalance();
+        assert!(mon.check_drift(&coord).is_none(), "refired right after rebalance");
     }
 
     #[test]

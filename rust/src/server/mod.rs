@@ -32,10 +32,17 @@
 //! * [`serve_dynamic`] — the lease set follows the live connections: a
 //!   connection's first generate request admits it to the
 //!   [`crate::coordinator::Coordinator`] (epoch bump → fleet rebuild), its
-//!   disconnect returns the cores to the pool. Per-core strength keeps
+//!   disconnect returns the units to the pool. Per-unit strength keeps
 //!   being learned from served traffic via [`Coordinator::observe`];
 //!   measurements racing a rebuild carry a stale lease epoch and are
-//!   dropped, never mis-attributed.
+//!   dropped, never mis-attributed. The supervisor also watches
+//!   [`Coordinator::strength_skew`] through a [`fleet::DriftMonitor`]
+//!   ([`ServerOpts::drift_threshold`]): when background load skews the
+//!   learned strengths past the threshold, it calls `rebalance()` and
+//!   rebuilds the fleet live — in-flight sessions migrate bit-identically,
+//!   exactly as on a membership change. The caller supplies the
+//!   coordinator, so heterogeneous machines (cores + accelerators, see
+//!   [`crate::coordinator::XpuAffinity`]) serve through the same loop.
 
 pub mod batcher;
 pub mod fleet;
@@ -49,8 +56,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{AllocPolicy, Coordinator, Lease, StreamId};
-use crate::cpu::CpuSpec;
+use crate::coordinator::{Coordinator, Lease, StreamId};
 use crate::engine::Engine;
 use crate::exec::Executor;
 use crate::metrics::ServingMetrics;
@@ -70,6 +76,13 @@ pub struct ServerOpts {
     /// admission-queue bound; a request finding it full hits `on_full`
     pub queue_depth: usize,
     pub on_full: AdmissionPolicy,
+    /// learned-strength skew that triggers a live `rebalance()` + fleet
+    /// rebuild in [`serve_dynamic`] (`f64::INFINITY` disables the monitor)
+    pub drift_threshold: f64,
+    /// accepted observations required after any epoch change before the
+    /// drift monitor may fire again (keeps a fresh partition from being
+    /// torn down on its own convergence transient)
+    pub drift_cooldown: u64,
 }
 
 impl Default for ServerOpts {
@@ -79,6 +92,8 @@ impl Default for ServerOpts {
             prefill_chunk: 16,
             queue_depth: 256,
             on_full: AdmissionPolicy::Reject,
+            drift_threshold: 1.25,
+            drift_cooldown: 32,
         }
     }
 }
@@ -86,6 +101,13 @@ impl Default for ServerOpts {
 impl ServerOpts {
     fn batcher(&self) -> BatcherOpts {
         BatcherOpts { max_batch: self.max_batch, prefill_chunk: self.prefill_chunk }
+    }
+
+    fn drift_monitor(&self) -> fleet::DriftMonitor {
+        // no clamping: a threshold below 1.0 is a misconfiguration that
+        // would rebuild the fleet on every cooldown — fail loudly instead
+        // (DriftMonitor::new asserts)
+        fleet::DriftMonitor::new(self.drift_threshold, self.drift_cooldown)
     }
 }
 
@@ -191,12 +213,15 @@ pub fn serve_multi<E: Executor + Send + 'static>(
 /// generate request admits it to the coordinator as a stream (epoch bump),
 /// its disconnect finishes the stream; on every epoch change the fleet is
 /// rebuilt from the new leases via `factory` and in-flight sessions migrate
-/// onto the new engines (token streams stay bit-identical — only the core
-/// partitioning, and therefore timing, changes).
+/// onto the new engines (token streams stay bit-identical — only the unit
+/// partitioning, and therefore timing, changes). The caller builds the
+/// [`Coordinator`], so a heterogeneous machine (cores + accelerators) and
+/// its placement affinity are its choice; between membership events the
+/// supervisor watches learned-strength drift and rebalances live (see
+/// [`ServerOpts::drift_threshold`]).
 pub fn serve_dynamic<E, F>(
     addr: &str,
-    machine: CpuSpec,
-    policy: AllocPolicy,
+    coord: Coordinator,
     factory: F,
     opts: ServerOpts,
 ) -> std::io::Result<ServerHandle>
@@ -208,7 +233,7 @@ where
     listener.set_nonblocking(true)?;
     let bound = listener.local_addr()?;
     let shared = Arc::new(Shared::new(opts, 0));
-    let coord = Arc::new(Mutex::new(Coordinator::new(machine, policy)));
+    let coord = Arc::new(Mutex::new(coord));
     let (ev_tx, ev_rx) = mpsc::channel::<ConnEvent>();
 
     let mut threads = Vec::new();
@@ -217,8 +242,9 @@ where
         let coord2 = Arc::clone(&coord);
         let factory: fleet::EngineFactory<E> = Box::new(factory);
         let batcher_opts = opts.batcher();
+        let monitor = opts.drift_monitor();
         threads.push(std::thread::spawn(move || {
-            supervise(shared2, coord2, factory, batcher_opts, ev_rx);
+            supervise(shared2, coord2, factory, batcher_opts, monitor, ev_rx);
         }));
     }
     threads.push(spawn_accept_loop(listener, Arc::clone(&shared), Some(ev_tx)));
@@ -229,23 +255,38 @@ where
 /// membership event retires the running workers (generation bump),
 /// collects their in-flight requests, applies admit/finish to the
 /// coordinator, rebuilds one batcher per non-empty lease and migrates the
-/// carried requests onto the new fleet.
+/// carried requests onto the new fleet. Idle ticks consult the
+/// [`fleet::DriftMonitor`]: past-threshold strength skew triggers the same
+/// retire→`rebalance()`→rebuild→migrate sequence with no membership
+/// change — `rebalance()` firing from the live server, not from a test.
 fn supervise<E: Executor + Send + 'static>(
     shared: Arc<Shared>,
     coord: Arc<Mutex<Coordinator>>,
     factory: fleet::EngineFactory<E>,
     opts: BatcherOpts,
+    mut monitor: fleet::DriftMonitor,
     events: mpsc::Receiver<ConnEvent>,
 ) {
     let mut workers: Vec<std::thread::JoinHandle<Vec<ActiveRequest>>> = Vec::new();
     loop {
-        let first = match events.recv_timeout(Duration::from_millis(50)) {
-            Ok(ev) => ev,
+        // an empty change set means a drift-triggered rebalance rebuild
+        let changes = match events.recv_timeout(Duration::from_millis(50)) {
+            Ok(first) => {
+                // coalesce a burst of membership changes into one rebuild
+                let mut changes = vec![first];
+                while let Ok(ev) = events.try_recv() {
+                    changes.push(ev);
+                }
+                changes
+            }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     break;
                 }
-                continue;
+                if monitor.check_drift(&coord.lock().unwrap()).is_none() {
+                    continue;
+                }
+                Vec::new()
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 // the accept loop (and every handler) is gone; treat it as
@@ -254,11 +295,7 @@ fn supervise<E: Executor + Send + 'static>(
                 break;
             }
         };
-        // coalesce a burst of membership changes into one rebuild
-        let mut changes = vec![first];
-        while let Ok(ev) = events.try_recv() {
-            changes.push(ev);
-        }
+        let drift = changes.is_empty();
 
         // retire the current fleet; workers hand back their live requests
         shared.generation.fetch_add(1, Ordering::SeqCst);
@@ -268,15 +305,20 @@ fn supervise<E: Executor + Send + 'static>(
             carried.extend(w.join().unwrap_or_default());
         }
 
-        // membership → coordinator (each change bumps the epoch)
+        // membership (or learned drift) → coordinator: either path bumps
+        // the epoch and re-issues every lease
         let mut batchers = {
             let mut c = coord.lock().unwrap();
-            for ev in changes {
-                match ev {
-                    ConnEvent::Connect(s) => {
-                        let _ = c.admit(s);
+            if drift {
+                c.rebalance();
+            } else {
+                for ev in changes {
+                    match ev {
+                        ConnEvent::Connect(s) => {
+                            let _ = c.admit(s);
+                        }
+                        ConnEvent::Disconnect(s) => c.finish(s),
                     }
-                    ConnEvent::Disconnect(s) => c.finish(s),
                 }
             }
             let batchers = fleet::build_batchers(&c, &factory, opts);
@@ -285,7 +327,13 @@ fn supervise<E: Executor + Send + 'static>(
         };
         fleet::distribute(carried, &mut batchers);
         shared.n_engines.store(batchers.len(), Ordering::SeqCst);
-        shared.metrics.lock().unwrap().rebuilds += 1;
+        {
+            let mut m = shared.metrics.lock().unwrap();
+            m.rebuilds += 1;
+            if drift {
+                m.drift_rebalances += 1;
+            }
+        }
         let gen = shared.generation.load(Ordering::SeqCst);
         for b in batchers {
             let shared2 = Arc::clone(&shared);

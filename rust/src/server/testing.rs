@@ -3,10 +3,12 @@
 //! Drives the *same* [`LeaseBatcher`]/[`fleet`] code the TCP server runs,
 //! but single-threaded against simulator leases and a scripted trace —
 //! requests are injected at exact virtual-time instants, streams connect
-//! and disconnect on schedule, and the report carries per-request token
-//! streams, TTFT and aggregate throughput. No sockets, no wall-clock
-//! sleeps, bit-for-bit reproducible: this is the standard way to test
-//! serving features (see `rust/tests/serving_harness.rs`).
+//! and disconnect on schedule, background loads degrade physical cores
+//! mid-trace ([`TraceEvent::Degrade`]) with the production
+//! [`DriftMonitor`] deciding live rebalances, and the report carries
+//! per-request token streams, TTFT and aggregate throughput. No sockets,
+//! no wall-clock sleeps, bit-for-bit reproducible: this is the standard
+//! way to test serving features (see `rust/tests/serving_harness.rs`).
 //!
 //! Virtual time: each lease's clock is its engine's accumulated kernel
 //! seconds plus an idle offset (jumped forward when the lease sits waiting
@@ -17,13 +19,12 @@
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 
-use crate::coordinator::{AllocPolicy, Coordinator, Lease, StreamId};
-use crate::cpu::CpuSpec;
+use crate::coordinator::{Coordinator, Lease, StreamId};
 use crate::exec::{Executor, RunResult};
 use crate::util::rng::Rng;
 
 use super::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending, StepReport};
-use super::fleet::{self, EngineFactory};
+use super::fleet::{self, DriftMonitor, EngineFactory};
 use super::protocol::{Event, Request};
 use super::queue::AdmissionQueue;
 
@@ -46,6 +47,12 @@ pub enum TraceEvent {
     Arrive { at: f64, stream: StreamId, req: Request },
     /// a stream's connection closes (fleet mode: `Coordinator::finish`)
     Disconnect { at: f64, stream: StreamId },
+    /// a background process shows up and steals `fraction` of the given
+    /// cores' cycles from `at` on. The load follows the *physical* core:
+    /// in fleet mode `cores` are machine-global ids, re-applied to
+    /// whichever lease holds each core after every rebuild; in single mode
+    /// they are the engine's worker indices.
+    Degrade { at: f64, cores: Vec<usize>, fraction: f64 },
 }
 
 impl TraceEvent {
@@ -53,7 +60,8 @@ impl TraceEvent {
         match self {
             TraceEvent::Connect { at, .. }
             | TraceEvent::Arrive { at, .. }
-            | TraceEvent::Disconnect { at, .. } => *at,
+            | TraceEvent::Disconnect { at, .. }
+            | TraceEvent::Degrade { at, .. } => *at,
         }
     }
 
@@ -124,6 +132,10 @@ pub struct HarnessReport {
     /// lease set after each rebuild (disjoint/covering checks)
     pub lease_sets: Vec<Vec<Lease>>,
     pub rebuilds: usize,
+    /// rebuilds triggered by the drift monitor (subset of `rebuilds`),
+    /// with the strength skew observed at each trigger
+    pub drift_rebalances: usize,
+    pub skew_at_trigger: Vec<f64>,
     /// live measurements folded into the coordinator's strength table
     pub observations_accepted: usize,
     /// pre-rebuild measurements replayed after the epoch change — dropped
@@ -237,8 +249,14 @@ pub fn run_single<E: Executor>(
         while cursor < script.len() && script[cursor].at() <= now + 1e-12 {
             let ev = script[cursor].clone();
             cursor += 1;
-            if let TraceEvent::Arrive { at, req, .. } = ev {
-                enqueue(&mut queue, &mut rxs, &mut report, at, req);
+            match ev {
+                TraceEvent::Arrive { at, req, .. } => {
+                    enqueue(&mut queue, &mut rxs, &mut report, at, req);
+                }
+                TraceEvent::Degrade { cores, fraction, .. } => {
+                    batcher.engine.rt.exec.inject_background(&cores, fraction);
+                }
+                TraceEvent::Connect { .. } | TraceEvent::Disconnect { .. } => {}
             }
         }
         if batcher.is_idle() && queue.is_empty() {
@@ -280,25 +298,34 @@ pub fn run_single<E: Executor>(
 
 /// Drive a dynamic fleet end-to-end: `Connect`/`Disconnect` trace events
 /// admit/finish coordinator streams (epoch bump → fleet rebuild, in-flight
-/// sessions migrating), `Arrive` events feed the shared admission queue.
-/// After every rebuild, each batcher's pre-rebuild measurement is replayed
-/// against the coordinator — exactly the in-flight-observation race a live
-/// server has — and counted as dropped/accepted in the report.
+/// sessions migrating), `Arrive` events feed the shared admission queue,
+/// `Degrade` events start background loads on physical cores (re-applied
+/// to whichever lease holds each core after every rebuild). The caller
+/// builds the [`Coordinator`] — cores-only or heterogeneous — and passes
+/// the [`DriftMonitor`] the production supervisor would run with
+/// ([`DriftMonitor::disabled`] for membership-only scenarios): after each
+/// accepted observation the monitor is consulted exactly like
+/// `serve_dynamic`'s idle tick, and a past-threshold skew triggers the
+/// live `rebalance()` + rebuild + migration sequence. After every rebuild,
+/// each batcher's pre-rebuild measurement is replayed against the
+/// coordinator — exactly the in-flight-observation race a live server
+/// has — and counted as dropped/accepted in the report.
 pub fn run_fleet<E: Executor>(
-    machine: CpuSpec,
-    policy: AllocPolicy,
+    mut coord: Coordinator,
     factory: &EngineFactory<E>,
     opts: BatcherOpts,
     queue_depth: usize,
+    mut monitor: DriftMonitor,
     mut trace: Vec<TraceEvent>,
 ) -> HarnessReport {
     trace.sort_by(|a, b| a.at().partial_cmp(&b.at()).unwrap());
     let mut report = HarnessReport::default();
-    let mut coord = Coordinator::new(machine, policy);
     let mut batchers: Vec<LeaseBatcher<E>> = Vec::new();
     let mut offsets: Vec<f64> = Vec::new();
     let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(queue_depth);
     let mut rxs: BTreeMap<u64, mpsc::Receiver<Event>> = BTreeMap::new();
+    // background loads by physical core — they outlive any one fleet
+    let mut degraded: Vec<(Vec<usize>, f64)> = Vec::new();
     let mut cursor = 0usize;
     let mut guard = 0u64;
     loop {
@@ -342,6 +369,10 @@ pub fn run_fleet<E: Executor>(
                     }
                     TraceEvent::Connect { stream, .. } => connects.push(stream),
                     TraceEvent::Disconnect { stream, .. } => disconnects.push(stream),
+                    TraceEvent::Degrade { cores, fraction, .. } => {
+                        apply_degradation(&mut batchers, &cores, fraction);
+                        degraded.push((cores, fraction));
+                    }
                 }
             }
             if !connects.is_empty() || !disconnects.is_empty() {
@@ -351,8 +382,8 @@ pub fn run_fleet<E: Executor>(
                     opts,
                     &mut batchers,
                     &mut offsets,
-                    connects,
-                    disconnects,
+                    FleetChange::Membership { connects, disconnects },
+                    &degraded,
                     t,
                     &mut report,
                 );
@@ -387,9 +418,54 @@ pub fn run_fleet<E: Executor>(
                 report.observations_accepted += 1;
             }
         }
+        // the drift check a live supervisor runs between events: learned
+        // skew past the threshold → rebalance() + rebuild, mid-trace
+        if let Some(skew) = monitor.check_drift(&coord) {
+            // rebuild at the fleet's *latest* clock: a lease running ahead
+            // of the triggering one must not have its timeline rewound
+            let now = (0..batchers.len())
+                .map(|j| offsets[j] + batchers[j].engine.kernel_secs)
+                .fold(f64::NEG_INFINITY, f64::max);
+            rebuild(
+                &mut coord,
+                factory,
+                opts,
+                &mut batchers,
+                &mut offsets,
+                FleetChange::Rebalance,
+                &degraded,
+                now,
+                &mut report,
+            );
+            report.drift_rebalances += 1;
+            report.skew_at_trigger.push(skew);
+        }
     }
     finalize(&mut report, &rxs);
     report
+}
+
+/// What a rebuild applies to the coordinator.
+enum FleetChange {
+    Membership { connects: Vec<StreamId>, disconnects: Vec<StreamId> },
+    Rebalance,
+}
+
+/// Re-start the scripted background loads on a (possibly fresh) fleet:
+/// each degraded physical core is mapped through its current lease to the
+/// lease-local worker and injected into that engine's executor.
+fn apply_degradation<E: Executor>(
+    batchers: &mut [LeaseBatcher<E>],
+    cores: &[usize],
+    fraction: f64,
+) {
+    for b in batchers.iter_mut() {
+        let Some(lease) = b.lease.as_ref() else { continue };
+        let locals: Vec<usize> = cores.iter().filter_map(|&g| lease.local_index(g)).collect();
+        if !locals.is_empty() {
+            b.engine.rt.exec.inject_background(&locals, fraction);
+        }
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -399,8 +475,8 @@ fn rebuild<E: Executor>(
     opts: BatcherOpts,
     batchers: &mut Vec<LeaseBatcher<E>>,
     offsets: &mut Vec<f64>,
-    connects: Vec<StreamId>,
-    disconnects: Vec<StreamId>,
+    change: FleetChange,
+    degraded: &[(Vec<usize>, f64)],
     now: f64,
     report: &mut HarnessReport,
 ) {
@@ -416,14 +492,23 @@ fn rebuild<E: Executor>(
     for b in batchers.iter_mut() {
         carried.append(&mut b.take_actives());
     }
-    for s in connects {
-        let _ = coord.admit(s);
-    }
-    for s in disconnects {
-        coord.finish(s);
+    match change {
+        FleetChange::Membership { connects, disconnects } => {
+            for s in connects {
+                let _ = coord.admit(s);
+            }
+            for s in disconnects {
+                coord.finish(s);
+            }
+        }
+        FleetChange::Rebalance => coord.rebalance(),
     }
     let mut fresh = fleet::build_batchers(coord, factory, opts);
     fleet::distribute(carried, &mut fresh);
+    // the background load follows the physical core onto the new fleet
+    for (cores, fraction) in degraded {
+        apply_degradation(&mut fresh, cores, *fraction);
+    }
     *offsets = fresh.iter().map(|b| now - b.engine.kernel_secs).collect();
     *batchers = fresh;
     report.rebuilds += 1;

@@ -100,6 +100,20 @@ impl HybridSim {
         HybridSim { spec, cfg, noise, rng, now: 0.0, stats: SimStats::default() }
     }
 
+    /// A background process shows up *now* and steals `fraction` of core
+    /// `core`'s cycles for the rest of the run (the live-drift scenario of
+    /// `server::testing`; the scripted counterpart is
+    /// `NoiseConfig::background`).
+    pub fn inject_background(&mut self, core: usize, fraction: f64) {
+        assert!(core < self.spec.n_cores(), "core {core} out of range");
+        self.noise.add_background(BackgroundLoad {
+            core,
+            start: self.now,
+            end: 1e9,
+            fraction,
+        });
+    }
+
     /// The MLC-like reference: total stream throughput with every core
     /// pulling flat-out (GB/s).
     pub fn mlc_bandwidth(&self) -> f64 {
@@ -357,6 +371,12 @@ impl Executor for SimExecutor {
         let cost = work.cost();
         self.sim.execute_plan(Some(work), &cost, plan)
     }
+
+    fn inject_background(&mut self, workers: &[usize], fraction: f64) {
+        for &w in workers {
+            self.sim.inject_background(w, fraction);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -494,6 +514,23 @@ mod tests {
         s.execute_plan(None, &c, &plan);
         assert!((s.now - 2.0 * t1).abs() / s.now < 0.5);
         assert_eq!(s.stats.kernels, 2);
+    }
+
+    #[test]
+    fn injected_background_starts_now_not_retroactively() {
+        let spec = presets::homogeneous(2);
+        let mut ex = SimExecutor::new(spec, SimConfig::noiseless());
+        let c = cost::gemm_i8_cost(128, 256, 256);
+        let work = crate::exec::PhantomWork::new(c);
+        let plan = StaticEven.plan(128, 1, &[1.0; 2]);
+        let clean = ex.execute(&work, &plan);
+        let (c0, c1) = (clean.per_core_secs[0].unwrap(), clean.per_core_secs[1].unwrap());
+        assert!((c0 - c1).abs() / c0 < 1e-9);
+        ex.inject_background(&[1], 0.5);
+        let loaded = ex.execute(&work, &plan);
+        let (t0, t1) = (loaded.per_core_secs[0].unwrap(), loaded.per_core_secs[1].unwrap());
+        assert!((t1 / t0 - 2.0).abs() < 0.01, "t1/t0={}", t1 / t0);
+        assert!((t0 - c0).abs() / c0 < 1e-9, "unloaded core changed");
     }
 
     #[test]

@@ -51,6 +51,12 @@ impl NoiseState {
         NoiseState { eff: vec![1.0; n_cores], cfg }
     }
 
+    /// Start an additional background load mid-run (a process showing up
+    /// while the simulator is live — see `Executor::inject_background`).
+    pub fn add_background(&mut self, load: BackgroundLoad) {
+        self.cfg.background.push(load);
+    }
+
     /// Advance the OU process by `dt` virtual seconds.
     pub fn step(&mut self, dt: f64, rng: &mut Rng) {
         if self.cfg.sigma == 0.0 {

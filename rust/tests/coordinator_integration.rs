@@ -55,7 +55,7 @@ fn run_decode_stream(rt: &mut ParallelRuntime<SimExecutor>, cfg: &ModelConfig, s
 fn assert_disjoint_covering(coord: &Coordinator) {
     let mut seen = vec![false; coord.machine().n_cores()];
     for lease in coord.leases() {
-        for &core in &lease.cores {
+        for &core in &lease.cores() {
             assert!(!seen[core], "core {core} leased twice");
             seen[core] = true;
         }
@@ -142,9 +142,8 @@ fn leases_rebalance_after_mid_run_background_load_shift() {
 
     // ---- phase 2: background load steals 50% of stream 0's P-cores ----
     let degraded: Vec<usize> = leases[0]
-        .cores
-        .iter()
-        .copied()
+        .cores()
+        .into_iter()
         .filter(|&g| machine.cores[g].kind == CoreKind::Performance)
         .collect();
     assert_eq!(degraded.len(), 4);
@@ -167,9 +166,8 @@ fn leases_rebalance_after_mid_run_background_load_shift() {
     // the coordinator learned the degradation from timing alone
     let s = coord.strengths();
     let healthy_p = leases[1]
-        .cores
-        .iter()
-        .copied()
+        .cores()
+        .into_iter()
         .find(|&g| machine.cores[g].kind == CoreKind::Performance)
         .unwrap();
     for &g in &degraded {
@@ -188,8 +186,8 @@ fn leases_rebalance_after_mid_run_background_load_shift() {
     assert_disjoint_covering(&coord);
     let new_leases: Vec<Lease> = coord.leases().cloned().collect();
     for lease in &new_leases {
-        let n_degraded = lease.cores.iter().filter(|c| degraded.contains(c)).count();
-        assert_eq!(n_degraded, 2, "degraded cores not spread evenly: {:?}", lease.cores);
+        let n_degraded = lease.cores().iter().filter(|c| degraded.contains(c)).count();
+        assert_eq!(n_degraded, 2, "degraded cores not spread evenly: {:?}", lease.cores());
         assert_eq!(lease.n_cores(), 8);
     }
 
@@ -214,4 +212,77 @@ fn leases_rebalance_after_mid_run_background_load_shift() {
     );
     // still slower than fully healthy (the stolen cycles are really gone)
     assert!(post_max > h0.max(h1), "degradation vanished: post {post_max} healthy {h0}");
+}
+
+/// Acceptance: a lease can own cores **and** an accelerator end-to-end. On
+/// a 4-P-core machine with one NPU, two streams under `Floating` affinity
+/// split into "2 P-cores + NPU" and "2 P-cores"; running the paper's
+/// prefill-scale GEMM through each lease's executor, the heterogeneous
+/// fleet sustains well over 1.5× the aggregate rate of the best cores-only
+/// split (2P/2P) of the same hardware — the NPU is real extra compute, and
+/// the coordinator now hands it out like any other unit.
+#[test]
+fn hetero_lease_with_npu_beats_best_cores_only_split() {
+    use dynpar::bench_harness::pr3::sustained_rate;
+    use dynpar::coordinator::{bus_share, XpuAffinity};
+    use dynpar::kernels::KernelClass;
+    use dynpar::sim::xpu::AcceleratorSpec;
+
+    let ultra = presets::ultra_125h();
+    let p_cores = [0usize, 1, 2, 3];
+    let machine = ultra.subset(&p_cores, bus_share(&ultra, &p_cores));
+    let accels = vec![AcceleratorSpec::npu()];
+    let mut coord = Coordinator::with_accelerators(
+        machine.clone(),
+        accels.clone(),
+        AllocPolicy::Balanced,
+        XpuAffinity::Floating,
+    );
+    coord.admit(0);
+    coord.admit(1);
+    let leases: Vec<Lease> = coord.leases().cloned().collect();
+    let with_npu = leases.iter().find(|l| !l.accels().is_empty()).unwrap();
+    let cores_only = leases.iter().find(|l| l.accels().is_empty()).unwrap();
+    // the ROADMAP shape, literally: one stream owns "2 P-cores + the NPU"
+    assert_eq!(with_npu.n_cores(), 2);
+    assert_eq!(with_npu.accels(), vec![0]);
+    assert_eq!(cores_only.n_cores(), 2);
+    assert!(cores_only.accels().is_empty());
+
+    // prefill-scale GEMM (the phase the paper targets with hybrid units)
+    let probe = PhantomWork::new(cost::gemm_i8_cost(512, 2048, 2048));
+
+    // heterogeneous fleet: each stream on its lease's executor; rate after
+    // the device table converged
+    let mut hetero_rates = Vec::new();
+    let mut npu_row = Vec::new();
+    for lease in &leases {
+        let exec = lease.xpu_executor(&machine, &accels, SimConfig::noiseless());
+        let (rate, mut exec) = sustained_rate(exec, &probe, 15);
+        hetero_rates.push(rate);
+        if !lease.accels().is_empty() {
+            npu_row = exec.xpu.device_ratios(KernelClass::GemmI8).to_vec();
+        }
+    }
+
+    // best cores-only split of the same 4 P-cores: symmetric 2P / 2P
+    let mut cores_rates = Vec::new();
+    for lease in &leases {
+        let spec = machine.subset(&lease.cores(), bus_share(&machine, &lease.cores()));
+        let exec = SimExecutor::new(spec, SimConfig::noiseless());
+        cores_rates.push(sustained_rate(exec, &probe, 15).0);
+    }
+
+    // aggregate sustained rate (each stream drains its own queue)
+    let hetero: f64 = hetero_rates.iter().sum();
+    let cores: f64 = cores_rates.iter().sum();
+    let speedup = hetero / cores;
+    assert!(speedup > 1.5, "hetero {hetero:.0} vs cores-only {cores:.0} units/s (x{speedup:.2})");
+    assert!(speedup < 10.0, "implausible speedup x{speedup:.2}");
+    // the learned device row backs the split: the NPU out-ranks its 2 cores
+    assert!(npu_row[1] > npu_row[0], "device row {npu_row:?}");
+    // the cores-only stream is unaffected by its sibling's accelerator
+    let idx = leases.iter().position(|l| l.accels().is_empty()).unwrap();
+    let ratio = hetero_rates[idx] / cores_rates[idx];
+    assert!((0.8..1.25).contains(&ratio), "cores-only stream shifted x{ratio:.2}");
 }

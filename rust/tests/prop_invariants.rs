@@ -205,7 +205,7 @@ fn prop_coordinator_leases_disjoint_covering_topology_aware() {
             }
             let mut owner = vec![None; n];
             for lease in coord.leases() {
-                for &c in &lease.cores {
+                for &c in &lease.cores() {
                     if c >= n {
                         return Err(format!("core {c} out of range"));
                     }
@@ -230,7 +230,7 @@ fn prop_coordinator_leases_disjoint_covering_topology_aware() {
                 for kind in [CoreKind::Performance, CoreKind::Efficiency, CoreKind::LowPower] {
                     let counts: Vec<usize> = coord
                         .leases()
-                        .map(|l| l.cores.iter().filter(|&&c| spec.cores[c].kind == kind).count())
+                        .map(|l| l.cores().iter().filter(|&&c| spec.cores[c].kind == kind).count())
                         .collect();
                     let (mn, mx) = (
                         counts.iter().min().copied().unwrap_or(0),
@@ -354,7 +354,7 @@ fn prop_coordinator_rebalance_stable_under_random_observations() {
                 }
                 let mut seen = vec![false; n];
                 for lease in coord.leases() {
-                    for &c in &lease.cores {
+                    for &c in &lease.cores() {
                         if seen[c] {
                             return Err(format!("core {c} leased twice after rebalance"));
                         }
@@ -364,6 +364,127 @@ fn prop_coordinator_rebalance_stable_under_random_observations() {
                 if seen.iter().any(|&s| !s) {
                     return Err("rebalance lost a core".into());
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Heterogeneous leasing: with accelerators enabled, any admit / finish /
+/// rebalance / observe sequence keeps core leases disjoint and covering,
+/// every accelerator owned by at most one lease and never by a core-less
+/// one, and — under `Pinned` affinity — an accelerator's owner stable for
+/// as long as that stream lives.
+#[test]
+fn prop_hetero_leases_stay_disjoint_covering_with_single_owner_accels() {
+    use dynpar::coordinator::{ComputeUnit, XpuAffinity};
+    use dynpar::exec::RunResult;
+    use dynpar::sim::xpu::AcceleratorSpec;
+    prop::check_with(
+        "hetero_lease_invariants",
+        PropConfig { iters: 30, seed: 0xACE1 },
+        &mut |rng| {
+            let spec = presets::preset_by_name(
+                ["core_12900k", "ultra_125h", "homogeneous_16"][rng.below(3) as usize],
+            )
+            .unwrap();
+            let n = spec.n_cores();
+            let mut accels = vec![AcceleratorSpec::npu()];
+            if rng.chance(0.5) {
+                accels.push(AcceleratorSpec::igpu());
+            }
+            let n_accels = accels.len();
+            let affinity =
+                if rng.chance(0.5) { XpuAffinity::Pinned } else { XpuAffinity::Floating };
+            let policy =
+                if rng.chance(0.5) { AllocPolicy::Balanced } else { AllocPolicy::Packed };
+            let mut coord = Coordinator::with_accelerators(spec, accels, policy, affinity);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_stream = 0u64;
+            let mut prev_owner: Vec<Option<u64>> = vec![None; n_accels];
+            for _ in 0..16 {
+                match rng.below(4) {
+                    0 => {
+                        coord.admit(next_stream);
+                        live.push(next_stream);
+                        next_stream += 1;
+                    }
+                    1 if live.len() > 1 => {
+                        let s = live.remove(rng.below(live.len() as u64) as usize);
+                        coord.finish(s);
+                    }
+                    2 => coord.rebalance(),
+                    _ if !live.is_empty() => {
+                        let s = live[rng.below(live.len() as u64) as usize];
+                        let lease = coord.lease(s).unwrap().clone();
+                        let nu = lease.n_units();
+                        let res = RunResult {
+                            per_core_secs: (0..nu)
+                                .map(|_| {
+                                    if rng.chance(0.8) {
+                                        Some(rng.uniform(1e-6, 2.0))
+                                    } else {
+                                        None
+                                    }
+                                })
+                                .collect(),
+                            wall_secs: 1.0,
+                            units_done: (0..nu).map(|_| rng.below(10_000) as usize).collect(),
+                        };
+                        coord.observe(&lease, &res);
+                    }
+                    _ => {}
+                }
+                if live.is_empty() {
+                    continue;
+                }
+                // cores disjoint + covering; accel owners unique + cored
+                let mut seen = vec![false; n];
+                let mut owner: Vec<Option<u64>> = vec![None; n_accels];
+                for lease in coord.leases() {
+                    for &c in &lease.cores() {
+                        if seen[c] {
+                            return Err(format!("core {c} leased twice"));
+                        }
+                        seen[c] = true;
+                    }
+                    for &a in &lease.accels() {
+                        if owner[a].is_some() {
+                            return Err(format!("accelerator {a} leased twice"));
+                        }
+                        if lease.is_empty() {
+                            return Err(format!("accelerator {a} on a core-less lease"));
+                        }
+                        owner[a] = Some(lease.stream);
+                    }
+                    // unit list is canonical: cores first, ascending
+                    let mut sorted = lease.units.clone();
+                    sorted.sort();
+                    if sorted != lease.units {
+                        return Err(format!("units not canonical: {:?}", lease.units));
+                    }
+                    if lease.units.len() != lease.strengths.len() {
+                        return Err("strengths not parallel to units".into());
+                    }
+                    if lease.units.iter().any(|&u| matches!(u, ComputeUnit::Core(g) if g >= n)) {
+                        return Err("core id out of range".into());
+                    }
+                }
+                if seen.iter().any(|&s| !s) {
+                    return Err("cores not covering".into());
+                }
+                if affinity == XpuAffinity::Pinned {
+                    for (a, (prev, cur)) in prev_owner.iter().zip(&owner).enumerate() {
+                        if let (Some(prev), Some(cur)) = (prev, cur) {
+                            if live.contains(prev) && prev != cur {
+                                return Err(format!(
+                                    "pinned accelerator {a} moved {prev} → {cur}"
+                                ));
+                            }
+                        }
+                    }
+                }
+                prev_owner = owner;
             }
             Ok(())
         },

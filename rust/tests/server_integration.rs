@@ -97,8 +97,8 @@ fn start_dynamic_server() -> ServerHandle {
             )
         }
     };
-    serve_dynamic("127.0.0.1:0", machine, AllocPolicy::Balanced, factory, ServerOpts::default())
-        .unwrap()
+    let coord = Coordinator::new(machine, AllocPolicy::Balanced);
+    serve_dynamic("127.0.0.1:0", coord, factory, ServerOpts::default()).unwrap()
 }
 
 #[test]

@@ -27,7 +27,7 @@ use crate::server::fleet::{DriftMonitor, EngineFactory};
 use crate::server::protocol::Request;
 use crate::server::testing::{run_fleet, TraceEvent};
 use crate::server::BatcherOpts;
-use crate::sim::xpu::{AcceleratorSpec, XpuExecutor};
+use crate::sim::xpu::{AcceleratorSpec, XpuDispatch, XpuExecutor};
 use crate::sim::{SimConfig, SimExecutor};
 use crate::util::json::Json;
 
@@ -42,7 +42,7 @@ fn machine() -> (CpuSpec, Vec<AcceleratorSpec>) {
 fn factory(machine: CpuSpec, accels: Vec<AcceleratorSpec>) -> EngineFactory<XpuExecutor> {
     let cfg = ModelConfig::micro();
     let weights = Arc::new(ModelWeights::random_init(&cfg, WEIGHTS_SEED));
-    Box::new(move |lease: &Lease| {
+    Box::new(move |lease: &Lease, _dispatch: XpuDispatch| {
         let exec = lease.xpu_executor(
             &machine,
             &accels,

@@ -55,7 +55,7 @@ use crate::exec::RunResult;
 use crate::pool::HostPool;
 use crate::sched::largest_remainder_split;
 use crate::sim::bw::{waterfill, Contender};
-use crate::sim::xpu::{AcceleratorSpec, XpuExecutor, XpuSim};
+use crate::sim::xpu::{AcceleratorSpec, XpuDispatch, XpuExecutor, XpuSim};
 use crate::sim::{BackgroundLoad, SimConfig, SimExecutor};
 
 /// Caller-chosen identity of one serving stream.
@@ -95,6 +95,26 @@ pub enum XpuAffinity {
     /// least total strength — they follow the balance like cores do
     #[default]
     Floating,
+}
+
+/// How a heterogeneous lease (cores + accelerator) turns its units into
+/// token throughput.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// The paper's §2 split: every kernel's range is partitioned across
+    /// cores *and* devices so all units finish in lockstep. Best when a
+    /// single kernel is large enough to amortize the device launch.
+    #[default]
+    IntraKernel,
+    /// APEX-style parallel-batch execution: the accelerator runs one
+    /// sub-batcher's whole token rounds while the cores run another's,
+    /// concurrently. Admissions are routed by [`Coordinator::split_ratio`]
+    /// and the ratio is re-learned online via
+    /// [`Coordinator::observe_round`]. Wins when per-kernel device time is
+    /// dominated by launch overhead (small models / short rows) — the
+    /// intra-kernel split then serializes launches that `AsyncBatch`
+    /// overlaps with CPU compute.
+    AsyncBatch,
 }
 
 /// The memory-bus bandwidth (GB/s) the given cores can claim for
@@ -160,6 +180,9 @@ pub struct Lease {
     pub bus_share_gbps: f64,
     /// allocation epoch this lease was issued under
     pub epoch: u64,
+    /// how a hetero lease executes ([`ExecMode`]); cores-only leases
+    /// ignore it
+    pub mode: ExecMode,
 }
 
 impl Lease {
@@ -169,7 +192,14 @@ impl Lease {
     pub fn cores_only(stream: StreamId, cores: Vec<usize>, epoch: u64) -> Lease {
         let units: Vec<ComputeUnit> = cores.into_iter().map(ComputeUnit::Core).collect();
         let strengths = vec![1.0; units.len()];
-        Lease { stream, units, strengths, bus_share_gbps: 0.0, epoch }
+        Lease {
+            stream,
+            units,
+            strengths,
+            bus_share_gbps: 0.0,
+            epoch,
+            mode: ExecMode::IntraKernel,
+        }
     }
 
     pub fn n_units(&self) -> usize {
@@ -268,6 +298,21 @@ impl Lease {
         accels: &[AcceleratorSpec],
         cfg: SimConfig,
     ) -> XpuExecutor {
+        self.xpu_executor_mode(machine, accels, cfg, XpuDispatch::Split)
+    }
+
+    /// [`Lease::xpu_executor`] with an explicit [`XpuDispatch`]: `Split` is
+    /// the intra-kernel default; `CpuOnly` / `DeviceOnly` build the two
+    /// halves of an [`ExecMode::AsyncBatch`] batcher pair, where each
+    /// executor runs whole kernels on one side of the lease while the other
+    /// side runs its own batch concurrently.
+    pub fn xpu_executor_mode(
+        &self,
+        machine: &CpuSpec,
+        accels: &[AcceleratorSpec],
+        cfg: SimConfig,
+        dispatch: XpuDispatch,
+    ) -> XpuExecutor {
         let owned: Vec<AcceleratorSpec> =
             self.accels().iter().map(|&a| accels[a].clone()).collect();
         let cpu_strength: f64 = self
@@ -285,7 +330,7 @@ impl Lease {
             }
         }
         let sim = XpuSim::new(self.spec(machine), cfg, owned).with_device_seeds(seeds);
-        XpuExecutor::new(sim)
+        XpuExecutor::with_dispatch(sim, dispatch)
     }
 
     /// Real-thread executor: one worker per leased core, pinned to the
@@ -334,6 +379,7 @@ pub struct Coordinator {
     spec: CpuSpec,
     policy: AllocPolicy,
     affinity: XpuAffinity,
+    exec_mode: ExecMode,
     accels: Vec<AcceleratorSpec>,
     /// EWMA gain α for strength updates (weight of the old value, like
     /// `PerfConfig::alpha`; paper uses 0.3).
@@ -382,6 +428,7 @@ impl Coordinator {
             spec,
             policy,
             affinity,
+            exec_mode: ExecMode::IntraKernel,
             accels,
             alpha: 0.3,
             strength,
@@ -399,6 +446,23 @@ impl Coordinator {
 
     pub fn accelerators(&self) -> &[AcceleratorSpec] {
         &self.accels
+    }
+
+    /// Execution mode stamped on every issued hetero lease.
+    pub fn exec_mode(&self) -> ExecMode {
+        self.exec_mode
+    }
+
+    /// Switch the execution mode for all future leases. Live leases are
+    /// re-issued (epoch bump) so holders pick up the new mode on their
+    /// next refresh.
+    pub fn set_exec_mode(&mut self, mode: ExecMode) {
+        if self.exec_mode != mode {
+            self.exec_mode = mode;
+            if !self.streams.is_empty() {
+                self.assign();
+            }
+        }
     }
 
     pub fn n_streams(&self) -> usize {
@@ -498,6 +562,109 @@ impl Coordinator {
         }
         let rate_sum: f64 = rates.iter().map(|(_, r)| r).sum();
         if !(rate_sum.is_finite() && rate_sum > 0.0 && mass > 0.0) {
+            return false;
+        }
+        let scale = mass / rate_sum;
+        for (idx, r) in rates {
+            self.strength[idx] = self.alpha * self.strength[idx] + (1.0 - self.alpha) * r * scale;
+        }
+        self.observations += 1;
+        true
+    }
+
+    /// The fraction of a hetero lease's admissions that should be routed
+    /// to its accelerator-path sub-batcher under
+    /// [`ExecMode::AsyncBatch`]: the *live* accelerator share of the
+    /// lease's total learned strength, clamped to `[0.05, 0.95]` so
+    /// neither side is ever starved of the traffic it needs to keep its
+    /// timings observable. Cores-only leases route everything to the CPU
+    /// path (0.0).
+    pub fn split_ratio(&self, lease: &Lease) -> f64 {
+        let mut cpu = 0.0f64;
+        let mut dev = 0.0f64;
+        for &u in &lease.units {
+            let s = self.strength[self.strength_index(u)];
+            if u.is_core() {
+                cpu += s;
+            } else {
+                dev += s;
+            }
+        }
+        if dev <= 0.0 {
+            return 0.0;
+        }
+        (dev / (cpu + dev).max(1e-30)).clamp(0.05, 0.95)
+    }
+
+    /// Fold one [`ExecMode::AsyncBatch`] round — the CPU sub-batcher's and
+    /// the device sub-batcher's most recent `(wall_secs, tokens)` — into
+    /// the same strength table that [`Coordinator::observe`] feeds. The
+    /// two batchers never co-measure inside one kernel, so their raw round
+    /// walls carry no relative signal once both run saturated; instead the
+    /// per-path *token rates* `R = tokens / wall` are distributed over the
+    /// path's units in proportion to their current strengths and folded
+    /// through the usual mass-preserving EWMA. Algebraically the learned
+    /// device share then converges geometrically (its residual shrinking
+    /// by the old-value weight `α` each round) to
+    /// `R_dev / (R_cpu + R_dev)` — the true device throughput
+    /// share — independent of batch occupancy, which is exactly what
+    /// [`Coordinator::split_ratio`] reads back. Stale or foreign leases
+    /// are dropped like in `observe`; returns whether the round was
+    /// folded.
+    pub fn observe_round(
+        &mut self,
+        lease: &Lease,
+        cpu: (f64, usize),
+        dev: (f64, usize),
+    ) -> bool {
+        match self.leases.get(&lease.stream) {
+            Some(current) if current == lease => {}
+            _ => return false, // stale or foreign lease
+        }
+        let (cpu_wall, cpu_tokens) = cpu;
+        let (dev_wall, dev_tokens) = dev;
+        if !(cpu_wall.is_finite() && cpu_wall > 0.0 && dev_wall.is_finite() && dev_wall > 0.0) {
+            return false;
+        }
+        if cpu_tokens == 0 || dev_tokens == 0 {
+            return false;
+        }
+        let r_cpu = cpu_tokens as f64 / cpu_wall;
+        let r_dev = dev_tokens as f64 / dev_wall;
+        let cores: Vec<usize> = lease
+            .units
+            .iter()
+            .filter(|u| u.is_core())
+            .map(|&u| self.strength_index(u))
+            .collect();
+        let devs: Vec<usize> = lease
+            .units
+            .iter()
+            .filter(|u| !u.is_core())
+            .map(|&u| self.strength_index(u))
+            .collect();
+        if cores.is_empty() || devs.is_empty() {
+            return false;
+        }
+        let cpu_mass: f64 = cores.iter().map(|&i| self.strength[i]).sum();
+        let dev_mass: f64 = devs.iter().map(|&i| self.strength[i]).sum();
+        if !(cpu_mass > 0.0 && dev_mass > 0.0) {
+            return false;
+        }
+        // per-unit rates: each path's token rate split strength-
+        // proportionally over its units, then the standard fold
+        let mut mass = 0.0f64;
+        let mut rates: Vec<(usize, f64)> = Vec::new();
+        for &i in &cores {
+            mass += self.strength[i];
+            rates.push((i, r_cpu * self.strength[i] / cpu_mass));
+        }
+        for &i in &devs {
+            mass += self.strength[i];
+            rates.push((i, r_dev * self.strength[i] / dev_mass));
+        }
+        let rate_sum: f64 = rates.iter().map(|(_, r)| r).sum();
+        if !(rate_sum.is_finite() && rate_sum > 0.0) {
             return false;
         }
         let scale = mass / rate_sum;
@@ -739,7 +906,14 @@ impl Coordinator {
             };
             self.leases.insert(
                 stream,
-                Lease { stream, units, strengths, bus_share_gbps: bus, epoch: self.epoch },
+                Lease {
+                    stream,
+                    units,
+                    strengths,
+                    bus_share_gbps: bus,
+                    epoch: self.epoch,
+                    mode: self.exec_mode,
+                },
             );
         }
     }

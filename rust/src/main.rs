@@ -28,6 +28,7 @@ use dynpar::util::argparse::Args;
 const USAGE: &str = "usage: dynpar <presets|mlc|bench|trace|infer|serve|ablate> [options]
   dynpar bench <gemm|gemv|e2e|all> [--preset <name|all>] [--iters N] [--prompt N] [--decode N] [--noisy]
   dynpar bench pr3 [--out BENCH_pr3.json]     hetero-lease (cores+NPU) serving trajectory
+  dynpar bench pr4 [--out BENCH_pr4.json]     async CPU/XPU batch split vs intra-kernel
   dynpar trace [--preset ultra_125h] [--alpha 0.3] [--init 5] [--prompt N] [--decode N] [--out file.csv]
   dynpar infer [--model tiny|micro] [--backend native|pjrt|both] [--preset X] [--sched dynamic] [--new N]
   dynpar serve [--addr 127.0.0.1:7878] [--model micro] [--preset X] [--max-batch 4]
@@ -115,6 +116,17 @@ fn cmd_bench(args: &Args) {
             Some(path) => {
                 std::fs::write(path, format!("{}\n", j.dump())).expect("write pr3 trajectory");
                 eprintln!("wrote PR-3 trajectory to {path}");
+            }
+            None => println!("{}", j.dump()),
+        }
+        return;
+    }
+    if which == "pr4" {
+        let j = dynpar::bench_harness::pr4::run();
+        match args.opt("out") {
+            Some(path) => {
+                std::fs::write(path, format!("{}\n", j.dump())).expect("write pr4 trajectory");
+                eprintln!("wrote PR-4 trajectory to {path}");
             }
             None => println!("{}", j.dump()),
         }

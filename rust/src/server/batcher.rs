@@ -27,6 +27,7 @@ use crate::engine::Engine;
 use crate::exec::Executor;
 use crate::metrics::PhaseMetrics;
 use crate::model::{argmax, Session, SessionPool};
+use crate::sim::xpu::XpuDispatch;
 
 use super::protocol::{Event, Request};
 
@@ -78,6 +79,19 @@ pub struct ActiveRequest {
     emitted_first: bool,
 }
 
+impl ActiveRequest {
+    pub fn id(&self) -> u64 {
+        self.req.id
+    }
+
+    /// Refuse further service — the fleet it migrated off has no batcher
+    /// left to adopt it. Answers the client with a retryable error instead
+    /// of silently dropping the stream.
+    pub fn reject(self, msg: &str) {
+        let _ = self.tx.send(Event::Error { id: self.req.id, msg: msg.into() });
+    }
+}
+
 /// A retired request, reported to the caller for metrics.
 #[derive(Clone, Debug)]
 pub struct Retired {
@@ -110,18 +124,47 @@ pub struct LeaseBatcher<E: Executor> {
     /// the coordinator lease this engine was built from (`None` for the
     /// static single-/multi-engine servers)
     pub lease: Option<Lease>,
+    /// which side of the lease this batcher's engine runs on — `Split`
+    /// for intra-kernel execution, `CpuOnly` / `DeviceOnly` for the two
+    /// halves of an `ExecMode::AsyncBatch` pair
+    dispatch: XpuDispatch,
     pool: SessionPool,
     active: Vec<ActiveRequest>,
+    /// lifetime count of requests admitted here (not adopted) — drives
+    /// the deficit-based admission routing of an async-batch pair
+    admitted: usize,
     opts: BatcherOpts,
 }
 
 impl<E: Executor> LeaseBatcher<E> {
-    pub fn new(mut engine: Engine<E>, lease: Option<Lease>, opts: BatcherOpts) -> LeaseBatcher<E> {
+    pub fn new(engine: Engine<E>, lease: Option<Lease>, opts: BatcherOpts) -> LeaseBatcher<E> {
+        LeaseBatcher::with_dispatch(engine, lease, opts, XpuDispatch::Split)
+    }
+
+    /// A batcher tagged with the [`XpuDispatch`] its engine was built for
+    /// — `server::fleet` uses this to pair the two halves of an
+    /// async-batch lease.
+    pub fn with_dispatch(
+        mut engine: Engine<E>,
+        lease: Option<Lease>,
+        opts: BatcherOpts,
+        dispatch: XpuDispatch,
+    ) -> LeaseBatcher<E> {
         // the serving layer reads per-round measurements (coordinator
         // strength observations), so keep them on this engine
         engine.rt.capture_last = true;
         let pool = SessionPool::new(&engine.cfg, opts.max_batch.max(1));
-        LeaseBatcher { engine, lease, pool, active: Vec::new(), opts }
+        LeaseBatcher { engine, lease, dispatch, pool, active: Vec::new(), admitted: 0, opts }
+    }
+
+    pub fn dispatch(&self) -> XpuDispatch {
+        self.dispatch
+    }
+
+    /// Requests admitted over this batcher's lifetime (adoptions from a
+    /// previous epoch's fleet excluded).
+    pub fn admitted(&self) -> usize {
+        self.admitted
     }
 
     pub fn n_active(&self) -> usize {
@@ -178,6 +221,7 @@ impl<E: Executor> LeaseBatcher<E> {
             *t %= vocab;
         }
         let metrics = PhaseMetrics { prompt_tokens: req.prompt.len(), ..Default::default() };
+        self.admitted += 1;
         self.active.push(ActiveRequest {
             req,
             tx: pending.tx,

@@ -9,10 +9,27 @@
 //! are shared by the threaded TCP server ([`super::serve_dynamic`]) and
 //! the deterministic harness ([`super::testing`]), so the lifecycle under
 //! test is the lifecycle in production.
+//!
+//! A hetero lease whose [`ExecMode`] is `AsyncBatch` materializes as
+//! **two** batchers instead of one — a CPU-path engine
+//! ([`XpuDispatch::CpuOnly`]) and a device-path engine
+//! ([`XpuDispatch::DeviceOnly`]) — running their own batches concurrently
+//! on the two halves of the lease. Admissions between the pair are routed
+//! by [`route_admission`]: a deterministic deficit rule that tracks the
+//! coordinator's live [`split_ratio`](Coordinator::split_ratio) (the
+//! learned device share of the lease's strength) without randomness, plus
+//! a work-conserving override so a side with free slots never idles while
+//! requests queue. `AsyncBatch` wins over the default intra-kernel split
+//! when single kernels are too small to amortize the device's launch
+//! overhead — decode GEMVs on an NPU — because each side then amortizes
+//! its overheads over whole token rounds of its own batch. Migration
+//! across epoch rebuilds is unchanged: sessions carry the KV state, so
+//! streams stay bit-identical whichever side (or mode) they land on.
 
-use crate::coordinator::{Coordinator, Lease};
+use crate::coordinator::{Coordinator, ExecMode, Lease};
 use crate::engine::Engine;
 use crate::exec::Executor;
+use crate::sim::xpu::XpuDispatch;
 
 use super::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher};
 
@@ -62,38 +79,87 @@ impl DriftMonitor {
     }
 }
 
-/// Builds an engine for a lease. The serving layer owns *when* engines are
-/// rebuilt (epoch changes); the factory owns *how* (executor choice,
-/// shared weights, scheduler, perf config).
-pub type EngineFactory<E> = Box<dyn Fn(&Lease) -> Engine<E> + Send>;
+/// Builds an engine for one side of a lease. The serving layer owns *when*
+/// engines are rebuilt (epoch changes); the factory owns *how* (executor
+/// choice, shared weights, scheduler, perf config). The dispatch argument
+/// is `Split` for ordinary leases and `CpuOnly` / `DeviceOnly` for the two
+/// engines of an [`ExecMode::AsyncBatch`] pair — cores-only factories can
+/// ignore it.
+pub type EngineFactory<E> = Box<dyn Fn(&Lease, XpuDispatch) -> Engine<E> + Send>;
 
-/// One batcher per non-empty lease of the coordinator's current epoch.
-/// (Empty leases — more streams than cores — wait for capacity and get no
-/// engine.)
+/// One batcher per non-empty lease of the coordinator's current epoch —
+/// except [`ExecMode::AsyncBatch`] hetero leases, which get a
+/// CPU-path/device-path batcher *pair*. (Empty leases — more streams than
+/// cores — wait for capacity and get no engine.)
 pub fn build_batchers<E: Executor>(
     coord: &Coordinator,
     factory: &EngineFactory<E>,
     opts: BatcherOpts,
 ) -> Vec<LeaseBatcher<E>> {
-    coord
-        .leases()
-        .filter(|l| !l.is_empty())
-        .map(|l| LeaseBatcher::new(factory(l), Some(l.clone()), opts))
-        .collect()
+    let mut out = Vec::new();
+    for l in coord.leases().filter(|l| !l.is_empty()) {
+        if l.mode == ExecMode::AsyncBatch && !l.accels().is_empty() {
+            for d in [XpuDispatch::CpuOnly, XpuDispatch::DeviceOnly] {
+                out.push(LeaseBatcher::with_dispatch(factory(l, d), Some(l.clone()), opts, d));
+            }
+        } else {
+            let d = XpuDispatch::Split;
+            out.push(LeaseBatcher::with_dispatch(factory(l, d), Some(l.clone()), opts, d));
+        }
+    }
+    out
+}
+
+/// Which side of an async-batch pair should admit the next request, by
+/// the deterministic deficit rule: the device side admits while its
+/// admission count lags `ratio` of the pair total, the CPU side while it
+/// lags `1 − ratio` — so the running split tracks the learned throughput
+/// ratio with no randomness. When neither side is owed a request (or the
+/// owed side is full), a work-conserving override lets any side with free
+/// batch slots admit anyway; `None` means both sides are full.
+pub fn route_admission<E: Executor>(
+    cpu: &LeaseBatcher<E>,
+    dev: &LeaseBatcher<E>,
+    ratio: f64,
+) -> Option<XpuDispatch> {
+    let total = (cpu.admitted() + dev.admitted() + 1) as f64;
+    let dev_owed = (dev.admitted() as f64) < ratio * total;
+    let cpu_owed = (cpu.admitted() as f64) < (1.0 - ratio) * total;
+    if dev_owed && dev.has_capacity() {
+        return Some(XpuDispatch::DeviceOnly);
+    }
+    if cpu_owed && cpu.has_capacity() {
+        return Some(XpuDispatch::CpuOnly);
+    }
+    // work-conserving override: never idle a side while requests queue
+    if dev.has_capacity() {
+        return Some(XpuDispatch::DeviceOnly);
+    }
+    if cpu.has_capacity() {
+        return Some(XpuDispatch::CpuOnly);
+    }
+    None
 }
 
 /// Spread carried-over in-flight requests across a fresh fleet, always
-/// onto the least-loaded batcher. With an empty fleet (every stream gone)
-/// the carried requests are dropped — their clients are gone too, so every
-/// pending send would fail anyway.
-pub fn distribute<E: Executor>(carried: Vec<ActiveRequest>, batchers: &mut [LeaseBatcher<E>]) {
-    if batchers.is_empty() {
-        return;
-    }
+/// onto the least-loaded batcher. Requests that found no batcher to adopt
+/// them (an empty fleet: every stream finished mid-rebuild, or a
+/// degenerate machine) are handed back — the caller answers their clients
+/// with a retryable error ([`ActiveRequest::reject`]) instead of dropping
+/// the streams on the floor.
+#[must_use = "leftover requests must be rejected, not dropped"]
+pub fn distribute<E: Executor>(
+    carried: Vec<ActiveRequest>,
+    batchers: &mut [LeaseBatcher<E>],
+) -> Vec<ActiveRequest> {
+    let mut leftover = Vec::new();
     for a in carried {
-        let target = batchers.iter_mut().min_by_key(|b| b.n_active()).unwrap();
-        target.adopt(a);
+        match batchers.iter_mut().min_by_key(|b| b.n_active()) {
+            Some(target) => target.adopt(a),
+            None => leftover.push(a),
+        }
     }
+    leftover
 }
 
 #[cfg(test)]
@@ -113,7 +179,7 @@ mod tests {
         let machine = presets::core_12900k();
         let cfg = ModelConfig::micro();
         let weights = Arc::new(ModelWeights::random_init(&cfg, 5));
-        Box::new(move |lease: &Lease| {
+        Box::new(move |lease: &Lease, _dispatch: XpuDispatch| {
             let exec = lease.sim_executor(
                 &machine,
                 SimConfig { execute_real: true, ..SimConfig::noiseless() },
@@ -153,7 +219,7 @@ mod tests {
 
         // solo oracle for the full request
         let solo_lease = coord.lease(0).unwrap().clone();
-        let mut oracle = f(&solo_lease);
+        let mut oracle = f(&solo_lease, XpuDispatch::Split);
         let mut s = oracle.new_session();
         let (expect, _) = oracle.generate(&mut s, &[4, 2, 7], 8);
 
@@ -170,7 +236,7 @@ mod tests {
         coord.admit(1); // epoch change: fleet is rebuilt on halved leases
         let mut fleet = build_batchers(&coord, &f, BatcherOpts::default());
         assert_eq!(fleet.len(), 2);
-        distribute(carried, &mut fleet);
+        assert!(distribute(carried, &mut fleet).is_empty());
         assert_eq!(fleet.iter().map(|b| b.n_active()).sum::<usize>(), 1);
 
         let mut guard = 0;
@@ -232,12 +298,12 @@ mod tests {
     }
 
     #[test]
-    fn empty_fleet_drops_carried_requests() {
+    fn empty_fleet_rejects_carried_requests_with_retry_error() {
         let f = factory();
         let mut coord = Coordinator::new(presets::core_12900k(), AllocPolicy::Balanced);
         coord.admit(0);
         let mut fleet = build_batchers(&coord, &f, BatcherOpts::default());
-        let (tx, _rx) = std::sync::mpsc::channel();
+        let (tx, rx) = std::sync::mpsc::channel();
         let req = Request { id: 1, prompt: vec![1], max_new_tokens: 2 };
         fleet[0].admit(Pending::new(req, tx)).map_err(|_| ()).unwrap();
         fleet[0].step();
@@ -246,6 +312,93 @@ mod tests {
         coord.finish(0);
         let mut fleet = build_batchers(&coord, &f, BatcherOpts::default());
         assert!(fleet.is_empty());
-        distribute(carried, &mut fleet); // no panic, requests dropped
+        // no panic and no silent drop: the in-flight request comes back
+        // and its client hears a retryable error
+        let leftover = distribute(carried, &mut fleet);
+        assert_eq!(leftover.len(), 1);
+        assert_eq!(leftover[0].id(), 1);
+        for a in leftover {
+            a.reject("no serving capacity, retry");
+        }
+        match rx.try_recv().unwrap() {
+            crate::server::protocol::Event::Error { id, msg } => {
+                assert_eq!(id, 1);
+                assert!(msg.contains("retry"), "unhelpful error: {msg}");
+            }
+            other => panic!("expected a retry error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn async_batch_lease_builds_a_cpu_device_batcher_pair() {
+        use crate::coordinator::{ExecMode, XpuAffinity};
+        use crate::sim::xpu::AcceleratorSpec;
+        let mut coord = Coordinator::with_accelerators(
+            presets::ultra_125h(),
+            vec![AcceleratorSpec::npu()],
+            AllocPolicy::Balanced,
+            XpuAffinity::Floating,
+        );
+        coord.set_exec_mode(ExecMode::AsyncBatch);
+        coord.admit(0);
+        coord.admit(1);
+        let f = factory();
+        let fleet = build_batchers(&coord, &f, BatcherOpts::default());
+        // hetero lease → CpuOnly + DeviceOnly pair; cores-only lease → one
+        assert_eq!(fleet.len(), 3);
+        let hetero_stream =
+            coord.leases().find(|l| !l.accels().is_empty()).unwrap().stream;
+        let pair: Vec<XpuDispatch> = fleet
+            .iter()
+            .filter(|b| b.lease.as_ref().unwrap().stream == hetero_stream)
+            .map(|b| b.dispatch())
+            .collect();
+        assert_eq!(pair, vec![XpuDispatch::CpuOnly, XpuDispatch::DeviceOnly]);
+        let solo: Vec<XpuDispatch> = fleet
+            .iter()
+            .filter(|b| b.lease.as_ref().unwrap().stream != hetero_stream)
+            .map(|b| b.dispatch())
+            .collect();
+        assert_eq!(solo, vec![XpuDispatch::Split]);
+    }
+
+    #[test]
+    fn route_admission_tracks_the_ratio_and_stays_work_conserving() {
+        let f = factory();
+        let mut coord = Coordinator::new(presets::core_12900k(), AllocPolicy::Balanced);
+        coord.admit(0);
+        let lease = coord.lease(0).unwrap().clone();
+        let opts = BatcherOpts { max_batch: 64, prefill_chunk: 4 };
+        let mk = |d| {
+            LeaseBatcher::with_dispatch(f(&lease, d), Some(lease.clone()), opts, d)
+        };
+        let mut cpu = mk(XpuDispatch::CpuOnly);
+        let mut dev = mk(XpuDispatch::DeviceOnly);
+        // a 0.75 device ratio: admissions settle at ~3:1 device:cpu
+        for id in 0..40u64 {
+            let side = route_admission(&cpu, &dev, 0.75).expect("capacity left");
+            let (tx, _rx) = std::sync::mpsc::channel();
+            let p = Pending::new(Request { id, prompt: vec![1], max_new_tokens: 1 }, tx);
+            match side {
+                XpuDispatch::DeviceOnly => dev.admit(p).map_err(|_| ()).unwrap(),
+                _ => cpu.admit(p).map_err(|_| ()).unwrap(),
+            }
+        }
+        assert_eq!(cpu.admitted() + dev.admitted(), 40);
+        assert_eq!(dev.admitted(), 30, "deficit routing drifted: {}", dev.admitted());
+        // work conservation: with the owed side full, the other admits
+        let mut tiny_dev = LeaseBatcher::with_dispatch(
+            f(&lease, XpuDispatch::DeviceOnly),
+            Some(lease.clone()),
+            BatcherOpts { max_batch: 0, prefill_chunk: 4 },
+            XpuDispatch::DeviceOnly,
+        );
+        assert_eq!(
+            route_admission(&cpu, &tiny_dev, 0.95),
+            Some(XpuDispatch::CpuOnly),
+            "full device side must not stall the queue"
+        );
+        tiny_dev.take_actives();
+        assert_eq!(route_admission(&tiny_dev, &tiny_dev, 0.5), None);
     }
 }

@@ -53,19 +53,29 @@ pub mod testing;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{Coordinator, Lease, StreamId};
 use crate::engine::Engine;
 use crate::exec::Executor;
 use crate::metrics::ServingMetrics;
+use crate::sim::xpu::XpuDispatch;
 use crate::util::json::Json;
 
 pub use batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending};
 pub use queue::{AdmissionPolicy, AdmissionQueue};
 
 use protocol::ClientMessage;
+
+/// Poison-recovering lock: the shared state guarded by the server's
+/// mutexes (queue, metrics, coordinator, pair stats) is valid after any
+/// panic — every critical section leaves it consistent — so a worker or
+/// handler that panicked must not cascade into every other thread's
+/// `lock().unwrap()`. Recover the guard and keep serving.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct ServerOpts {
@@ -115,6 +125,52 @@ impl ServerOpts {
 enum ConnEvent {
     Connect(StreamId),
     Disconnect(StreamId),
+}
+
+/// Shared state of one `ExecMode::AsyncBatch` batcher pair: lifetime
+/// admission counters for the deficit routing, each side's free-slot flag
+/// for the work-conserving override, and the latest round timings waiting
+/// to be stitched into one [`Coordinator::observe_round`] call.
+#[derive(Default)]
+struct PairState {
+    cpu_admitted: AtomicUsize,
+    dev_admitted: AtomicUsize,
+    cpu_free: AtomicBool,
+    dev_free: AtomicBool,
+    round: Mutex<PairRound>,
+}
+
+/// Most recent decode-round `(wall_secs, tokens)` per side of a pair.
+#[derive(Default)]
+struct PairRound {
+    cpu: Option<(f64, usize)>,
+    dev: Option<(f64, usize)>,
+}
+
+impl PairState {
+    /// May `side_is_dev` admit the next request? The deficit rule keeps
+    /// the running admission split on the coordinator's learned ratio; a
+    /// side that is not owed may still admit when its twin has no free
+    /// slot (work conservation — never idle capacity while requests wait).
+    fn may_admit(&self, side_is_dev: bool, ratio: f64) -> bool {
+        let c = self.cpu_admitted.load(Ordering::SeqCst);
+        let d = self.dev_admitted.load(Ordering::SeqCst);
+        let total = (c + d + 1) as f64;
+        let (owed, twin_free) = if side_is_dev {
+            ((d as f64) < ratio * total, self.cpu_free.load(Ordering::SeqCst))
+        } else {
+            ((c as f64) < (1.0 - ratio) * total, self.dev_free.load(Ordering::SeqCst))
+        };
+        owed || !twin_free
+    }
+
+    fn note_admitted(&self, side_is_dev: bool) {
+        if side_is_dev {
+            self.dev_admitted.fetch_add(1, Ordering::SeqCst);
+        } else {
+            self.cpu_admitted.fetch_add(1, Ordering::SeqCst);
+        }
+    }
 }
 
 struct Shared {
@@ -201,7 +257,7 @@ pub fn serve_multi<E: Executor + Send + 'static>(
         let shared2 = Arc::clone(&shared);
         let b = LeaseBatcher::new(engine, None, opts.batcher());
         threads.push(std::thread::spawn(move || {
-            let _ = run_batcher(b, shared2, 0, None);
+            let _ = run_batcher(b, shared2, 0, None, None);
         }));
     }
     threads.push(spawn_accept_loop(listener, Arc::clone(&shared), None));
@@ -227,7 +283,7 @@ pub fn serve_dynamic<E, F>(
 ) -> std::io::Result<ServerHandle>
 where
     E: Executor + Send + 'static,
-    F: Fn(&Lease) -> Engine<E> + Send + 'static,
+    F: Fn(&Lease, XpuDispatch) -> Engine<E> + Send + 'static,
 {
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
@@ -283,7 +339,7 @@ fn supervise<E: Executor + Send + 'static>(
                 if shared.shutdown.load(Ordering::SeqCst) {
                     break;
                 }
-                if monitor.check_drift(&coord.lock().unwrap()).is_none() {
+                if monitor.check_drift(&lock(&coord)).is_none() {
                     continue;
                 }
                 Vec::new()
@@ -308,7 +364,7 @@ fn supervise<E: Executor + Send + 'static>(
         // membership (or learned drift) → coordinator: either path bumps
         // the epoch and re-issues every lease
         let mut batchers = {
-            let mut c = coord.lock().unwrap();
+            let mut c = lock(&coord);
             if drift {
                 c.rebalance();
             } else {
@@ -325,20 +381,41 @@ fn supervise<E: Executor + Send + 'static>(
             shared.epoch.store(c.epoch(), Ordering::SeqCst);
             batchers
         };
-        fleet::distribute(carried, &mut batchers);
+        for a in fleet::distribute(carried, &mut batchers) {
+            // nobody left to serve the migrated stream: answer its client
+            // instead of silently dropping it
+            a.reject("no serving capacity, retry");
+        }
         shared.n_engines.store(batchers.len(), Ordering::SeqCst);
         {
-            let mut m = shared.metrics.lock().unwrap();
+            let mut m = lock(&shared.metrics);
             m.rebuilds += 1;
             if drift {
                 m.drift_rebalances += 1;
+            }
+        }
+        // one shared PairState per async-batch lease (its two batchers
+        // carry the same stream id with CpuOnly/DeviceOnly dispatch)
+        let mut pairs: std::collections::BTreeMap<StreamId, Arc<PairState>> =
+            std::collections::BTreeMap::new();
+        for b in &batchers {
+            if b.dispatch() != XpuDispatch::Split {
+                if let Some(l) = b.lease.as_ref() {
+                    pairs.entry(l.stream).or_default();
+                }
             }
         }
         let gen = shared.generation.load(Ordering::SeqCst);
         for b in batchers {
             let shared2 = Arc::clone(&shared);
             let coord2 = Arc::clone(&coord);
-            workers.push(std::thread::spawn(move || run_batcher(b, shared2, gen, Some(coord2))));
+            let pair = match b.dispatch() {
+                XpuDispatch::Split => None,
+                _ => b.lease.as_ref().and_then(|l| pairs.get(&l.stream)).map(Arc::clone),
+            };
+            workers.push(std::thread::spawn(move || {
+                run_batcher(b, shared2, gen, Some(coord2), pair)
+            }));
         }
         shared.work.notify_all();
     }
@@ -349,7 +426,7 @@ fn supervise<E: Executor + Send + 'static>(
     }
     // with zero workers left, anything still queued would strand its
     // handler on a channel that never closes — drop it now
-    let mut q = shared.queue.lock().unwrap();
+    let mut q = lock(&shared.queue);
     while q.pop().is_some() {}
     shared.space.notify_all();
 }
@@ -357,16 +434,26 @@ fn supervise<E: Executor + Send + 'static>(
 /// One engine's scheduler thread: admit from the shared queue between
 /// rounds, step the batcher, export metrics, feed measured per-core rates
 /// to the coordinator. Returns the in-flight requests when its generation
-/// is retired (fleet rebuild).
+/// is retired (fleet rebuild). A member of an async-batch pair routes its
+/// admissions through the shared [`PairState`] and stitches its round
+/// timings with its twin's into [`Coordinator::observe_round`].
 fn run_batcher<E: Executor>(
     mut b: LeaseBatcher<E>,
     shared: Arc<Shared>,
     my_gen: u64,
     coord: Option<Arc<Mutex<Coordinator>>>,
+    pair: Option<Arc<PairState>>,
 ) -> Vec<ActiveRequest> {
+    let is_dev = b.dispatch() == XpuDispatch::DeviceOnly;
     loop {
+        // the learned device share steering this pair's admissions —
+        // re-read every round so the split follows the online ratio
+        let ratio = match (&pair, &coord, b.lease.as_ref()) {
+            (Some(_), Some(c), Some(l)) => lock(c).split_ratio(l),
+            _ => 0.0,
+        };
         {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock(&shared.queue);
             loop {
                 if shared.generation.load(Ordering::SeqCst) != my_gen {
                     return b.take_actives();
@@ -377,25 +464,43 @@ fn run_batcher<E: Executor>(
                 if !b.is_idle() || !q.is_empty() {
                     break;
                 }
-                let (qq, _) = shared.work.wait_timeout(q, Duration::from_millis(20)).unwrap();
+                let (qq, _) = shared
+                    .work
+                    .wait_timeout(q, Duration::from_millis(20))
+                    .unwrap_or_else(PoisonError::into_inner);
                 q = qq;
             }
             // per-round observables + admission between decode rounds
-            shared.metrics.lock().unwrap().queue_depth.record(q.len() as f64);
+            lock(&shared.metrics).queue_depth.record(q.len() as f64);
             while b.has_capacity() {
+                if let Some(pair) = &pair {
+                    if !pair.may_admit(is_dev, ratio) {
+                        break; // the twin is owed this request
+                    }
+                }
                 let Some(p) = q.pop() else { break };
                 shared.space.notify_all();
+                let before = b.admitted();
                 if let Err(p) = b.admit(p) {
                     q.push_front(p);
                     break;
                 }
+                if b.admitted() > before {
+                    if let Some(pair) = &pair {
+                        pair.note_admitted(is_dev);
+                    }
+                }
+            }
+            if let Some(pair) = &pair {
+                let free = if is_dev { &pair.dev_free } else { &pair.cpu_free };
+                free.store(b.has_capacity(), Ordering::SeqCst);
             }
         }
 
         let report = b.step();
 
         if !report.ttft_wall.is_empty() || !report.retired.is_empty() {
-            let mut m = shared.metrics.lock().unwrap();
+            let mut m = lock(&shared.metrics);
             for d in &report.ttft_wall {
                 m.ttft.record(d.as_secs_f64());
             }
@@ -404,13 +509,30 @@ fn run_batcher<E: Executor>(
             }
         }
 
-        // fold this round's per-core measurement into the coordinator's
-        // strength table; a result taken under a stale lease epoch is
-        // dropped by `observe` rather than mis-attributed
+        // fold this round's measurement into the coordinator's strength
+        // table; a result taken under a stale lease epoch is dropped
+        // rather than mis-attributed
         if let Some(coord) = &coord {
-            if let (Some(lease), Some(res)) = (b.lease.as_ref(), b.engine.rt.last_result.as_ref())
+            if let Some(pair) = &pair {
+                // async pair: single-device rounds carry no relative
+                // signal on their own — park this side's (wall, tokens)
+                // and fold once the twin's round is in too
+                if let Some(lease) = b.lease.as_ref() {
+                    if report.decoded_tokens > 0 && report.kernel_secs > 0.0 {
+                        let mut pr = lock(&pair.round);
+                        let slot = if is_dev { &mut pr.dev } else { &mut pr.cpu };
+                        *slot = Some((report.kernel_secs, report.decoded_tokens));
+                        if let (Some(c), Some(d)) = (pr.cpu, pr.dev) {
+                            *pr = PairRound::default();
+                            drop(pr);
+                            let _ = lock(coord).observe_round(lease, c, d);
+                        }
+                    }
+                }
+            } else if let (Some(lease), Some(res)) =
+                (b.lease.as_ref(), b.engine.rt.last_result.as_ref())
             {
-                let _ = coord.lock().unwrap().observe(lease, res);
+                let _ = lock(coord).observe(lease, res);
             }
         }
     }
@@ -419,7 +541,7 @@ fn run_batcher<E: Executor>(
 /// Submit a request to the bounded queue, honoring the overflow policy.
 fn submit(shared: &Arc<Shared>, pending: Pending) -> Result<(), Pending> {
     let mut pending = pending;
-    let mut q = shared.queue.lock().unwrap();
+    let mut q = lock(&shared.queue);
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
             return Err(pending);
@@ -433,7 +555,10 @@ fn submit(shared: &Arc<Shared>, pending: Pending) -> Result<(), Pending> {
                 AdmissionPolicy::Reject => return Err(p),
                 AdmissionPolicy::Block => {
                     pending = p;
-                    let (qq, _) = shared.space.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                    let (qq, _) = shared
+                        .space
+                        .wait_timeout(q, Duration::from_millis(50))
+                        .unwrap_or_else(PoisonError::into_inner);
                     q = qq;
                 }
             },
@@ -527,7 +652,7 @@ fn client_loop(
         }
         match protocol::parse_client_line(line.trim()) {
             Ok(ClientMessage::Metrics) => {
-                let snap = shared.metrics.lock().unwrap().to_json(
+                let snap = lock(&shared.metrics).to_json(
                     shared.n_engines.load(Ordering::SeqCst),
                     shared.epoch.load(Ordering::SeqCst),
                 );
@@ -562,7 +687,7 @@ fn client_loop(
                         let msg = if shared.shutdown.load(Ordering::SeqCst) {
                             "server shutting down"
                         } else {
-                            shared.metrics.lock().unwrap().rejected += 1;
+                            lock(&shared.metrics).rejected += 1;
                             "admission queue full"
                         };
                         writeln!(writer, "{}", protocol::error_line(id, msg))?;
@@ -766,6 +891,29 @@ mod tests {
         let m = metrics[0].get("metrics").unwrap();
         assert_eq!(m.get("rejected").unwrap().as_i64(), Some(1));
         assert_eq!(m.get("requests").unwrap().as_i64(), Some(0));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn poisoned_shared_mutexes_do_not_cascade() {
+        // regression: a panicking handler used to poison `queue`/`metrics`
+        // and every other thread's `lock().unwrap()` then panicked in
+        // cascade, deadlocking shutdown. The recover-guards keep serving.
+        let handle = serve("127.0.0.1:0", test_engine(), ServerOpts::default()).unwrap();
+        let shared = Arc::clone(&handle.shared);
+        let panicker = std::thread::spawn(move || {
+            let _q = shared.queue.lock().unwrap();
+            let _m = shared.metrics.lock().unwrap();
+            panic!("injected handler panic");
+        });
+        assert!(panicker.join().is_err());
+        assert!(handle.shared.queue.lock().is_err(), "queue mutex should be poisoned");
+        // the server must still serve a full request through the poisoned
+        // locks and then shut down cleanly (joining every thread)
+        let msgs =
+            send_request(handle.addr, r#"{"id": 7, "prompt": [1,2], "max_new_tokens": 3}"#);
+        assert_eq!(msgs.iter().filter(|m| m.get("token").is_some()).count(), 3);
+        assert!(msgs.iter().any(|m| m.get("done").is_some()));
         handle.shutdown();
     }
 

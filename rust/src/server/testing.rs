@@ -21,6 +21,7 @@ use std::sync::mpsc;
 
 use crate::coordinator::{Coordinator, Lease, StreamId};
 use crate::exec::{Executor, RunResult};
+use crate::sim::xpu::XpuDispatch;
 use crate::util::rng::Rng;
 
 use super::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending, StepReport};
@@ -142,6 +143,9 @@ pub struct HarnessReport {
     pub stale_observations_dropped: usize,
     /// ...and how many of those were wrongly accepted (must stay 0)
     pub stale_observations_accepted: usize,
+    /// final learned device share (`Coordinator::split_ratio`) of every
+    /// hetero lease still live when the run drained
+    pub split_ratios: Vec<f64>,
 }
 
 impl HarnessReport {
@@ -169,6 +173,20 @@ impl HarnessReport {
 
     pub fn all_finished(&self) -> bool {
         self.requests.values().all(|r| r.finished_at.is_some() || r.error.is_some())
+    }
+}
+
+/// A script with a NaN/∞ event time has no defined delivery order — fail
+/// at trace construction with a pointed message instead of letting a sort
+/// comparator panic (or worse, silently misorder) deep in the run.
+fn validate_trace(trace: &[TraceEvent]) {
+    for (i, ev) in trace.iter().enumerate() {
+        assert!(
+            ev.at().is_finite(),
+            "trace event {i} has a non-finite time ({}): fix the script — \
+             event times must be finite seconds",
+            ev.at()
+        );
     }
 }
 
@@ -234,7 +252,8 @@ pub fn run_single<E: Executor>(
     queue_depth: usize,
     mut script: Vec<TraceEvent>,
 ) -> HarnessReport {
-    script.sort_by(|a, b| a.at().partial_cmp(&b.at()).unwrap());
+    validate_trace(&script);
+    script.sort_by(|a, b| a.at().total_cmp(&b.at()));
     let mut report = HarnessReport::default();
     let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(queue_depth);
     let mut rxs: BTreeMap<u64, mpsc::Receiver<Event>> = BTreeMap::new();
@@ -318,7 +337,8 @@ pub fn run_fleet<E: Executor>(
     mut monitor: DriftMonitor,
     mut trace: Vec<TraceEvent>,
 ) -> HarnessReport {
-    trace.sort_by(|a, b| a.at().partial_cmp(&b.at()).unwrap());
+    validate_trace(&trace);
+    trace.sort_by(|a, b| a.at().total_cmp(&b.at()));
     let mut report = HarnessReport::default();
     let mut batchers: Vec<LeaseBatcher<E>> = Vec::new();
     let mut offsets: Vec<f64> = Vec::new();
@@ -326,6 +346,10 @@ pub fn run_fleet<E: Executor>(
     let mut rxs: BTreeMap<u64, mpsc::Receiver<Event>> = BTreeMap::new();
     // background loads by physical core — they outlive any one fleet
     let mut degraded: Vec<(Vec<usize>, f64)> = Vec::new();
+    // admission counters + parked round timings per async-batch pair,
+    // keyed by the lease's stream; reset whenever the fleet is rebuilt
+    // (exactly like the live supervisor's per-generation `PairState`)
+    let mut pairs: BTreeMap<StreamId, PairSlot> = BTreeMap::new();
     let mut cursor = 0usize;
     let mut guard = 0u64;
     loop {
@@ -336,9 +360,13 @@ pub fn run_fleet<E: Executor>(
         let mut pick: Option<(usize, f64)> = None;
         for i in 0..batchers.len() {
             let clock = offsets[i] + batchers[i].engine.kernel_secs;
-            let works =
-                !batchers[i].is_idle() || (!queue.is_empty() && batchers[i].has_capacity());
-            if works && pick.map_or(true, |(_, c)| clock < c) {
+            // an idle pair member the deficit router will not feed has
+            // nothing to do — stepping it would spin the guard counter
+            let works = !batchers[i].is_idle()
+                || (!queue.is_empty()
+                    && batchers[i].has_capacity()
+                    && pair_may_admit(&batchers, &pairs, &coord, i));
+            if works && pick.is_none_or(|(_, c)| clock < c) {
                 pick = Some((i, clock));
             }
         }
@@ -387,17 +415,40 @@ pub fn run_fleet<E: Executor>(
                     t,
                     &mut report,
                 );
+                pairs.clear();
             }
             continue;
         }
 
-        let (i, clock) = pick.unwrap();
+        let (i, mut clock) = pick.unwrap();
         report.queue_depth_samples.push(queue.len());
-        while batchers[i].has_capacity() {
+        let was_idle = batchers[i].is_idle();
+        while batchers[i].has_capacity() && pair_may_admit(&batchers, &pairs, &coord, i) {
             let Some(p) = queue.pop() else { break };
             let id = p.req.id;
+            let before = batchers[i].admitted();
             match batchers[i].admit(p) {
                 Ok(()) => {
+                    if batchers[i].admitted() > before {
+                        if let Some((stream, is_dev)) = pair_side(&batchers[i]) {
+                            let slot = pairs.entry(stream).or_default();
+                            if is_dev {
+                                slot.dev_admitted += 1;
+                            } else {
+                                slot.cpu_admitted += 1;
+                            }
+                        }
+                        // a lease that sat idle starts this request at its
+                        // arrival instant, not at the stale idle clock
+                        if was_idle {
+                            if let Some(rec) = report.requests.get(&id) {
+                                if clock < rec.arrived_at {
+                                    clock = rec.arrived_at;
+                                    offsets[i] = clock - batchers[i].engine.kernel_secs;
+                                }
+                            }
+                        }
+                    }
                     if let Some(rec) = report.requests.get_mut(&id) {
                         rec.admitted_at = Some(clock);
                     }
@@ -411,7 +462,23 @@ pub fn run_fleet<E: Executor>(
         let step = batchers[i].step();
         absorb(&mut report, &step, offsets[i]);
         // live measurement → strength table (current lease, current epoch)
-        if let (Some(lease), Some(res)) =
+        if let Some((stream, is_dev)) = pair_side(&batchers[i]) {
+            // async pair: park this side's round and fold both sides into
+            // one relative observation once the twin's round lands too
+            if step.decoded_tokens > 0 && step.kernel_secs > 0.0 {
+                let slot = pairs.entry(stream).or_default();
+                let cell = if is_dev { &mut slot.dev_round } else { &mut slot.cpu_round };
+                *cell = Some((step.kernel_secs, step.decoded_tokens));
+                if let (Some(c), Some(d)) = (slot.cpu_round, slot.dev_round) {
+                    slot.cpu_round = None;
+                    slot.dev_round = None;
+                    let lease = batchers[i].lease.as_ref().unwrap().clone();
+                    if coord.observe_round(&lease, c, d) {
+                        report.observations_accepted += 1;
+                    }
+                }
+            }
+        } else if let (Some(lease), Some(res)) =
             (batchers[i].lease.as_ref(), batchers[i].engine.rt.last_result.as_ref())
         {
             if coord.observe(lease, res) {
@@ -437,12 +504,69 @@ pub fn run_fleet<E: Executor>(
                 now,
                 &mut report,
             );
+            pairs.clear();
             report.drift_rebalances += 1;
             report.skew_at_trigger.push(skew);
         }
     }
+    for l in coord.leases() {
+        if !l.accels().is_empty() {
+            report.split_ratios.push(coord.split_ratio(l));
+        }
+    }
     finalize(&mut report, &rxs);
     report
+}
+
+/// Harness-side state of one `ExecMode::AsyncBatch` batcher pair: lifetime
+/// admission counters driving the deficit router and the parked per-side
+/// round timings waiting to be stitched into `Coordinator::observe_round`.
+#[derive(Default)]
+struct PairSlot {
+    cpu_admitted: usize,
+    dev_admitted: usize,
+    cpu_round: Option<(f64, usize)>,
+    dev_round: Option<(f64, usize)>,
+}
+
+/// `(stream, is_device_side)` when batcher is half of an async pair.
+fn pair_side<E: Executor>(b: &LeaseBatcher<E>) -> Option<(StreamId, bool)> {
+    if b.dispatch() == XpuDispatch::Split {
+        return None;
+    }
+    b.lease.as_ref().map(|l| (l.stream, b.dispatch() == XpuDispatch::DeviceOnly))
+}
+
+/// The deficit-routing rule of an async pair, mirroring the live server:
+/// a side may admit while its admission count trails its share of the
+/// coordinator's learned split ratio; a side that is not owed may still
+/// admit when its twin has no free slot (work conservation). Non-pair
+/// batchers always may.
+fn pair_may_admit<E: Executor>(
+    batchers: &[LeaseBatcher<E>],
+    pairs: &BTreeMap<StreamId, PairSlot>,
+    coord: &Coordinator,
+    i: usize,
+) -> bool {
+    let Some((stream, is_dev)) = pair_side(&batchers[i]) else { return true };
+    let Some(lease) = batchers[i].lease.as_ref() else { return true };
+    let ratio = coord.split_ratio(lease);
+    let (c, d) = pairs.get(&stream).map_or((0, 0), |s| (s.cpu_admitted, s.dev_admitted));
+    let total = (c + d + 1) as f64;
+    let owed = if is_dev {
+        (d as f64) < ratio * total
+    } else {
+        (c as f64) < (1.0 - ratio) * total
+    };
+    if owed {
+        return true;
+    }
+    let twin_free = batchers.iter().enumerate().any(|(j, b)| {
+        j != i
+            && pair_side(b).is_some_and(|(s, dev)| s == stream && dev != is_dev)
+            && b.has_capacity()
+    });
+    !twin_free
 }
 
 /// What a rebuild applies to the coordinator.
@@ -504,7 +628,11 @@ fn rebuild<E: Executor>(
         FleetChange::Rebalance => coord.rebalance(),
     }
     let mut fresh = fleet::build_batchers(coord, factory, opts);
-    fleet::distribute(carried, &mut fresh);
+    for a in fleet::distribute(carried, &mut fresh) {
+        // the new fleet has nowhere to put this migrated stream — answer
+        // its client instead of silently dropping it
+        a.reject("no serving capacity, retry");
+    }
     // the background load follows the physical core onto the new fleet
     for (cores, fraction) in degraded {
         apply_degradation(&mut fresh, cores, *fraction);
@@ -621,6 +749,17 @@ mod tests {
             .collect();
         assert_eq!(served, vec![0, 1]);
         assert!(rep.queue_depth_samples.iter().all(|&d| d <= 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn non_finite_event_time_is_rejected_at_construction() {
+        // regression: a NaN arrival time used to reach the script sort's
+        // `partial_cmp().unwrap()` and panic with no hint of the cause —
+        // now the trace is validated up front with a pointed message
+        let b = LeaseBatcher::new(engine(3), None, BatcherOpts::default());
+        let script = vec![TraceEvent::arrive(f64::NAN, 0, req(1, &[1], 1))];
+        let _ = run_single(b, AdmitMode::Continuous, 16, script);
     }
 
     #[test]

@@ -22,6 +22,22 @@
 //!   the per-core entries — the same canonical unit order a lease uses —
 //!   so `Coordinator::observe` folds device timings into the strength
 //!   table with no special casing.
+//!
+//! The intra-kernel range split above is one of two execution modes
+//! (`coordinator::ExecMode`). Under **`AsyncBatch`** the lease is served
+//! by *two* engines built from this module instead of one:
+//! [`XpuDispatch::CpuOnly`] runs every kernel entirely on the cores and
+//! [`XpuDispatch::DeviceOnly`] entirely on the accelerator(s), each at the
+//! bus share it gets when both sides stream concurrently. The serving
+//! layer (`server::fleet`) pairs one batcher on each and routes requests
+//! between them, so the 20 µs device launch amortizes over a *whole token
+//! round* of its own batch instead of gating every shared kernel — the
+//! regime where `AsyncBatch` beats the intra-kernel split is exactly
+//! µs-scale decode kernels on launch-heavy devices. Neither single-device
+//! path can learn a device:CPU ratio from its own timings (one
+//! participant, no relative signal); that learning moves up to
+//! `Coordinator::observe_round`, which stitches the two batchers'
+//! per-round walls back into the shared strength table.
 
 use std::collections::BTreeMap;
 
@@ -70,6 +86,22 @@ impl AcceleratorSpec {
             launch_overhead_secs: 30e-6,
         }
     }
+}
+
+/// How an [`XpuExecutor`] maps one kernel onto the lease's devices.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum XpuDispatch {
+    /// intra-kernel range split across CPU + accelerators by the learned
+    /// class ratios (the paper's mechanism, default)
+    #[default]
+    Split,
+    /// whole kernel on the CPU cores only, at the bus share the CPU side
+    /// sustains while the paired device batcher streams concurrently —
+    /// the core half of an `ExecMode::AsyncBatch` pair
+    CpuOnly,
+    /// whole kernel on the accelerator(s) only, the CPU side idle for
+    /// this batch — the device half of an `ExecMode::AsyncBatch` pair
+    DeviceOnly,
 }
 
 /// Result of one cross-device dispatch.
@@ -259,15 +291,75 @@ impl XpuSim {
 /// `Coordinator::observe` folds them into the unit strength table.
 pub struct XpuExecutor {
     pub xpu: XpuSim,
+    /// device mapping for every kernel this executor runs
+    pub dispatch: XpuDispatch,
 }
 
 impl XpuExecutor {
     pub fn new(xpu: XpuSim) -> XpuExecutor {
-        XpuExecutor { xpu }
+        XpuExecutor::with_dispatch(xpu, XpuDispatch::Split)
+    }
+
+    /// An executor locked to one [`XpuDispatch`] — `CpuOnly` /
+    /// `DeviceOnly` build the two halves of an async-batch pair.
+    pub fn with_dispatch(xpu: XpuSim, dispatch: XpuDispatch) -> XpuExecutor {
+        XpuExecutor { xpu, dispatch }
     }
 
     pub fn spec(&self) -> &CpuSpec {
         &self.xpu.cpu.spec
+    }
+
+    /// Whole kernel on the CPU cores at the both-sides-active bus share.
+    fn execute_cpu_only(&mut self, work: &dyn Work, plan: &DispatchPlan) -> RunResult {
+        let cost = work.cost();
+        let n_acc = self.xpu.accels.len();
+        // the paired device batcher streams concurrently: waterfill with
+        // every device active and keep only the CPU's share
+        let bws = self.xpu.device_bandwidths(&vec![true; 1 + n_acc]);
+        let saved_bus = self.xpu.cpu.spec.bus_bw_gbps;
+        self.xpu.cpu.spec.bus_bw_gbps = bws[0].max(1e-3);
+        let mut res = self.xpu.cpu.execute_plan(Some(work), &cost, plan);
+        self.xpu.cpu.spec.bus_bw_gbps = saved_bus;
+        // keep the canonical lease layout: one (idle) entry per device
+        for _ in 0..n_acc {
+            res.per_core_secs.push(None);
+            res.units_done.push(0);
+        }
+        res
+    }
+
+    /// Whole kernel on the accelerator(s), CPU idle for this batch.
+    fn execute_device_only(&mut self, work: &dyn Work) -> RunResult {
+        let cost = work.cost();
+        let n_cores = self.xpu.cpu.spec.n_cores();
+        let n_acc = self.xpu.accels.len();
+        let bws = self.xpu.device_bandwidths(&vec![true; 1 + n_acc]);
+        // split across the devices by their class-row shares (all units
+        // to the single accelerator in the common case)
+        let ratios: Vec<f64> = self.xpu.device_ratios(cost.class)[1..].to_vec();
+        let split = largest_remainder_split(cost.units, &ratios);
+        let mut per_core_secs: Vec<Option<f64>> = vec![None; n_cores];
+        let mut units_done = vec![0usize; n_cores];
+        let mut wall = 0.0f64;
+        let mut cursor = 0usize;
+        for (i, &units) in split.iter().enumerate() {
+            if units > 0 {
+                if self.xpu.cpu.cfg.execute_real {
+                    work.run_range(n_cores + i, cursor..cursor + units);
+                }
+                cursor += units;
+                let t = self.xpu.accel_secs(i, units, &cost, bws[i + 1]);
+                wall = wall.max(t);
+                per_core_secs.push(Some(t));
+            } else {
+                per_core_secs.push(None);
+            }
+            units_done.push(units);
+        }
+        // the lease's virtual clock advances by the device wall
+        self.xpu.cpu.now += wall;
+        RunResult { per_core_secs, wall_secs: wall, units_done }
     }
 }
 
@@ -283,6 +375,11 @@ impl Executor for XpuExecutor {
         if n_acc == 0 {
             // cores-only lease: exactly the plain simulator path
             return self.xpu.cpu.execute_plan(Some(work), &cost, plan);
+        }
+        match self.dispatch {
+            XpuDispatch::Split => {}
+            XpuDispatch::CpuOnly => return self.execute_cpu_only(work, plan),
+            XpuDispatch::DeviceOnly => return self.execute_device_only(work),
         }
 
         let split = self.xpu.device_split(&cost);
@@ -513,6 +610,62 @@ mod tests {
         let plan = DynamicScheduler.plan(512, 1, &converged_cpu_ratios());
         x.execute(&work, &plan);
         assert_eq!(counter.load(Ordering::Relaxed), 512, "accelerator share skipped");
+    }
+
+    #[test]
+    fn cpu_only_dispatch_keeps_layout_and_leaves_devices_idle() {
+        let mut x = XpuExecutor::with_dispatch(
+            XpuSim::new(
+                presets::ultra_125h(),
+                SimConfig::noiseless(),
+                vec![AcceleratorSpec::npu()],
+            ),
+            XpuDispatch::CpuOnly,
+        );
+        let n_cores = x.n_workers();
+        let c = cost::gemm_i8_cost(512, 1024, 1024);
+        let work = PhantomWork::new(c);
+        let plan = DynamicScheduler.plan(512, 1, &converged_cpu_ratios());
+        let res = x.execute(&work, &plan);
+        assert_eq!(res.per_core_secs.len(), n_cores + 1);
+        assert_eq!(res.per_core_secs[n_cores], None, "device must stay idle");
+        assert_eq!(res.units_done[n_cores], 0);
+        assert_eq!(res.units_done.iter().sum::<usize>(), 512);
+        // the concurrent device batcher eats bus: slower than a solo run
+        // with the whole bus on a memory-bound kernel
+        let mut solo =
+            super::super::SimExecutor::new(presets::ultra_125h(), SimConfig::noiseless());
+        let mem = cost::gemv_q4_cost(4096, 4096);
+        let mwork = PhantomWork::new(mem);
+        let mplan = DynamicScheduler.plan(4096, 1, &converged_cpu_ratios());
+        let shared = x.execute(&mwork, &mplan).wall_secs;
+        let alone = solo.execute(&mwork, &mplan).wall_secs;
+        assert!(shared > alone, "bus contention missing: {shared} vs {alone}");
+    }
+
+    #[test]
+    fn device_only_dispatch_runs_the_whole_kernel_on_the_accelerator() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let cfg = SimConfig { execute_real: true, ..SimConfig::noiseless() };
+        let mut x = XpuExecutor::with_dispatch(
+            XpuSim::new(presets::ultra_125h(), cfg, vec![AcceleratorSpec::npu()]),
+            XpuDispatch::DeviceOnly,
+        );
+        let n_cores = x.n_workers();
+        let counter = AtomicUsize::new(0);
+        let work = FnWork::new(cost::gemm_i8_cost(256, 1024, 1024), 1, |_w, r| {
+            counter.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        let plan = DynamicScheduler.plan(256, 1, &converged_cpu_ratios());
+        let before = x.xpu.cpu.now;
+        let res = x.execute(&work, &plan);
+        assert_eq!(counter.load(Ordering::Relaxed), 256, "device range skipped");
+        assert!(res.per_core_secs[..n_cores].iter().all(|t| t.is_none()), "cores must idle");
+        assert_eq!(res.units_done[n_cores], 256);
+        let dev = res.per_core_secs[n_cores].expect("device idle");
+        assert!((dev - res.wall_secs).abs() < 1e-15);
+        assert!(res.wall_secs >= AcceleratorSpec::npu().launch_overhead_secs);
+        assert!(x.xpu.cpu.now > before, "virtual clock did not advance");
     }
 
     #[test]

@@ -648,6 +648,179 @@ fn prop_kv_slots_unique_and_reused() {
     );
 }
 
+/// The async-batch feedback loop: feeding paired per-round device/core
+/// timings through `Coordinator::observe_round` converges `split_ratio`
+/// to the true throughput share `R_dev / (R_cpu + R_dev)` for *any*
+/// random pair of underlying rates — no one-shot profiling, occupancy
+/// cancels out, and the EWMA transient dies geometrically.
+#[test]
+fn prop_observe_round_converges_split_ratio_to_throughput_share() {
+    use dynpar::coordinator::XpuAffinity;
+    use dynpar::sim::xpu::AcceleratorSpec;
+    prop::check_with(
+        "split_ratio_converges",
+        PropConfig { iters: 25, seed: 0x5B117 },
+        &mut |rng| {
+            let spec = presets::preset_by_name(
+                ["core_12900k", "ultra_125h", "homogeneous_16"][rng.below(3) as usize],
+            )
+            .unwrap();
+            let mut coord = Coordinator::with_accelerators(
+                spec,
+                vec![AcceleratorSpec::npu()],
+                AllocPolicy::Balanced,
+                XpuAffinity::Floating,
+            );
+            coord.admit(0);
+            let lease = coord.leases().next().unwrap().clone();
+            // true sustained rates (tokens/s); the target share stays
+            // inside the [0.05, 0.95] clamp so it is actually reachable
+            let r_cpu = rng.uniform(1.0, 10.0);
+            let r_dev = rng.uniform(1.0, 10.0);
+            let target = r_dev / (r_cpu + r_dev);
+            for _ in 0..60 {
+                // rounds of random occupancy: wall = tokens / rate, so a
+                // busier round carries no extra weight per token
+                let n_c = 1 + rng.below(8) as usize;
+                let n_d = 1 + rng.below(8) as usize;
+                let folded = coord.observe_round(
+                    &lease,
+                    (n_c as f64 / r_cpu, n_c),
+                    (n_d as f64 / r_dev, n_d),
+                );
+                if !folded {
+                    return Err("live-lease round was rejected".into());
+                }
+            }
+            let ratio = coord.split_ratio(&lease);
+            if (ratio - target).abs() > 0.02 {
+                return Err(format!(
+                    "split_ratio {ratio:.4} did not converge to {target:.4} \
+                     (r_cpu {r_cpu:.2}, r_dev {r_dev:.2})"
+                ));
+            }
+            // stale lease (post-rebalance epoch) must be dropped, never folded
+            coord.rebalance();
+            if coord.observe_round(&lease, (1.0, 1), (1.0, 1)) {
+                return Err("stale-epoch round was folded".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// AsyncBatch never changes the numbers: under random traces with a
+/// mid-flight membership change (epoch bump → dual-batcher fleet rebuild
+/// and migration), every request's token stream stays bit-identical to a
+/// solo `Engine::generate` on the same weights — the CpuOnly/DeviceOnly
+/// split and any cross-batcher migration only ever change timing.
+#[test]
+fn prop_async_batch_migration_keeps_streams_bit_identical() {
+    use dynpar::coordinator::{bus_share, ExecMode, Lease, XpuAffinity};
+    use dynpar::engine::Engine;
+    use dynpar::model::{ModelConfig, ModelWeights};
+    use dynpar::server::fleet::{DriftMonitor, EngineFactory};
+    use dynpar::server::protocol::Request;
+    use dynpar::server::testing::{run_fleet, TraceEvent};
+    use dynpar::server::BatcherOpts;
+    use dynpar::sim::xpu::{AcceleratorSpec, XpuDispatch, XpuExecutor};
+    use std::sync::Arc;
+
+    prop::check_with(
+        "async_batch_migration_identical",
+        PropConfig { iters: 6, seed: 0xA5B1 },
+        &mut |rng| {
+            let ultra = presets::ultra_125h();
+            let p_cores = [0usize, 1, 2, 3];
+            let spec = ultra.subset(&p_cores, bus_share(&ultra, &p_cores));
+            let accels = vec![AcceleratorSpec::npu()];
+            let cfg = ModelConfig::micro();
+            let weights = Arc::new(ModelWeights::random_init(&cfg, rng.next_u64()));
+            let factory: EngineFactory<XpuExecutor> = {
+                let spec = spec.clone();
+                let accels = accels.clone();
+                let cfg = cfg.clone();
+                let weights = Arc::clone(&weights);
+                Box::new(move |lease: &Lease, dispatch: XpuDispatch| {
+                    let exec = lease.xpu_executor_mode(
+                        &spec,
+                        &accels,
+                        SimConfig { execute_real: true, ..SimConfig::noiseless() },
+                        dispatch,
+                    );
+                    Engine::new(
+                        cfg.clone(),
+                        Arc::clone(&weights),
+                        exec,
+                        scheduler_by_name("dynamic").unwrap(),
+                        PerfConfig::default(),
+                    )
+                })
+            };
+            let oracle_spec = spec.clone();
+            let mut coord = Coordinator::with_accelerators(
+                spec,
+                accels,
+                AllocPolicy::Balanced,
+                XpuAffinity::Floating,
+            );
+            coord.set_exec_mode(ExecMode::AsyncBatch);
+            let n_req = 3 + rng.below(3) as usize;
+            let mut reqs = Vec::new();
+            let mut trace = vec![TraceEvent::Connect { at: 0.0, stream: 0 }];
+            for id in 0..n_req {
+                let plen = 1 + rng.below(8) as usize;
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.below(128) as u32).collect();
+                let req =
+                    Request { id: id as u64, prompt, max_new_tokens: 2 + rng.below(6) as usize };
+                trace.push(TraceEvent::arrive(rng.uniform(1e-6, 1e-3), 0, req.clone()));
+                reqs.push(req);
+            }
+            // a second stream joins mid-trace: epoch bump, both pair
+            // batchers torn down, in-flight requests migrate
+            trace.push(TraceEvent::Connect { at: 5e-4, stream: 1 });
+            let rep = run_fleet(
+                coord,
+                &factory,
+                BatcherOpts {
+                    max_batch: 1 + rng.below(3) as usize,
+                    prefill_chunk: 1 + rng.below(5) as usize,
+                },
+                64,
+                DriftMonitor::disabled(),
+                trace,
+            );
+            if !rep.all_finished() {
+                return Err("not every request finished".into());
+            }
+            if rep.rebuilds < 2 {
+                return Err(format!("expected a mid-trace rebuild, saw {}", rep.rebuilds));
+            }
+            for r in &reqs {
+                // solo oracle on the same weights: partitioning and
+                // dispatch mode must never change the numbers
+                let exec = SimExecutor::new(
+                    oracle_spec.clone(),
+                    SimConfig { execute_real: true, ..SimConfig::noiseless() },
+                );
+                let mut e = Engine::new(
+                    cfg.clone(),
+                    Arc::clone(&weights),
+                    exec,
+                    scheduler_by_name("dynamic").unwrap(),
+                    PerfConfig::default(),
+                );
+                let mut s = e.new_session();
+                let (expect, _) = e.generate(&mut s, &r.prompt, r.max_new_tokens);
+                if rep.tokens_of(r.id) != &expect[..] {
+                    return Err(format!("request {} diverged across async migration", r.id));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_virtual_time_is_monotone_and_additive() {
     prop::check_with(

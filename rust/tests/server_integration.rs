@@ -13,6 +13,7 @@ use dynpar::model::{ModelConfig, ModelWeights};
 use dynpar::perf::PerfConfig;
 use dynpar::sched::DynamicScheduler;
 use dynpar::server::{serve, serve_dynamic, serve_multi, ServerHandle, ServerOpts};
+use dynpar::sim::xpu::XpuDispatch;
 use dynpar::sim::{SimConfig, SimExecutor};
 use dynpar::util::json::Json;
 
@@ -83,7 +84,7 @@ fn start_dynamic_server() -> ServerHandle {
     let weights = Arc::new(ModelWeights::random_init(&cfg, 5));
     let factory = {
         let machine = machine.clone();
-        move |lease: &Lease| {
+        move |lease: &Lease, _dispatch: XpuDispatch| {
             let exec = lease.sim_executor(
                 &machine,
                 SimConfig { execute_real: true, ..SimConfig::noiseless() },

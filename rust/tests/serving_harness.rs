@@ -31,6 +31,7 @@ use dynpar::server::fleet::{DriftMonitor, EngineFactory};
 use dynpar::server::protocol::Request;
 use dynpar::server::testing::{run_fleet, run_single, AdmitMode, TraceEvent};
 use dynpar::server::{BatcherOpts, LeaseBatcher};
+use dynpar::sim::xpu::XpuDispatch;
 use dynpar::sim::{SimConfig, SimExecutor};
 
 const WEIGHTS_SEED: u64 = 17;
@@ -49,7 +50,7 @@ fn lease_factory() -> EngineFactory<SimExecutor> {
     let machine = presets::core_12900k();
     let cfg = ModelConfig::micro();
     let weights = Arc::new(ModelWeights::random_init(&cfg, WEIGHTS_SEED));
-    Box::new(move |lease: &Lease| {
+    Box::new(move |lease: &Lease, _dispatch: XpuDispatch| {
         let exec = lease
             .sim_executor(&machine, SimConfig { execute_real: true, ..SimConfig::noiseless() });
         Engine::new(
@@ -299,7 +300,7 @@ fn compute_bound_sim_config() -> SimConfig {
 fn drift_factory(machine: CpuSpec) -> EngineFactory<SimExecutor> {
     let cfg = ModelConfig::micro();
     let weights = Arc::new(ModelWeights::random_init(&cfg, WEIGHTS_SEED));
-    Box::new(move |lease: &Lease| {
+    Box::new(move |lease: &Lease, _dispatch: XpuDispatch| {
         let exec = lease.sim_executor(&machine, compute_bound_sim_config());
         Engine::new(
             cfg.clone(),

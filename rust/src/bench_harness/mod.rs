@@ -7,6 +7,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod pr3;
 pub mod pr4;
+pub mod pr7;
 pub mod report;
 
 use crate::cpu::CpuSpec;

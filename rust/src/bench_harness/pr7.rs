@@ -1,0 +1,169 @@
+//! PR-7 perf trajectory: what [`ExecMode::Disaggregated`] phase splitting
+//! buys over a blended lease on the 12900k.
+//!
+//! One scripted long-prompt trace (24 requests, 96-token prompts chunked
+//! by 24, 16 decode rounds each) is served twice through the
+//! deterministic harness on the stock `core_12900k` preset:
+//!
+//! * **blended** — the baseline: one batcher owns all 16 cores and
+//!   interleaves prefill chunks and decode rounds on a single virtual
+//!   clock, so every request's first token queues behind whole prefill
+//!   chunks of its batch neighbours.
+//! * **disaggregated** — the tentpole: [`Coordinator::phase_leases`]
+//!   splits the lease into a GEMM-steered prefill sub-lease (the P-cores)
+//!   and a GEMV-steered decode sub-lease (the rest), each with its
+//!   waterfill-derived share of the 68 GB/s bus. Finished prompts migrate
+//!   decode-side by bit-identical session handoff
+//!   ([`crate::server::fleet::route_handoff`]), so prefill of the next
+//!   cohort overlaps decode of the previous one on two concurrent clocks.
+//!
+//! The model is deliberately small (d_model 256): per-kernel dispatch
+//! overhead is then a significant minority of round time, which is
+//! exactly the regime where phase overlap — not raw FLOPs — decides both
+//! TTFT and aggregate throughput. (At d_model 2048 the same trace is
+//! bus-bound and the static phase split buys nothing; see ROADMAP.)
+//!
+//! `dynpar bench pr7 [--out BENCH_pr7.json]` renders the JSON trajectory.
+
+use std::sync::Arc;
+
+use crate::coordinator::{AllocPolicy, Coordinator, ExecMode, Lease};
+use crate::cpu::presets;
+use crate::engine::Engine;
+use crate::model::{ModelConfig, ModelWeights};
+use crate::perf::PerfConfig;
+use crate::sched::DynamicScheduler;
+use crate::server::fleet::{DriftMonitor, EngineFactory};
+use crate::server::protocol::Request;
+use crate::server::testing::{run_fleet, HarnessReport, TraceEvent};
+use crate::server::BatcherOpts;
+use crate::sim::xpu::XpuDispatch;
+use crate::sim::{SimConfig, SimExecutor};
+use crate::util::json::Json;
+
+const WEIGHTS_SEED: u64 = 23;
+const N_REQ: u64 = 24;
+const PROMPT_LEN: usize = 96;
+const MAX_NEW: usize = 16;
+const CHUNK: usize = 24;
+
+/// Small-vocab 2-layer model at d_model 256: small enough that the
+/// 2 µs/kernel dispatch overhead is a real fraction of every round (the
+/// phase-overlap regime), large enough that the partitioned kernels still
+/// exercise the hybrid P/E split.
+fn model() -> ModelConfig {
+    ModelConfig {
+        name: "pr7".into(),
+        vocab: 512,
+        d_model: 256,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 512,
+        t_max: 128,
+        prefill_len: CHUNK,
+        rope_theta: 10000.0,
+        rms_eps: 1e-5,
+    }
+}
+
+fn factory(machine: crate::cpu::CpuSpec) -> EngineFactory<SimExecutor> {
+    let cfg = model();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, WEIGHTS_SEED));
+    Box::new(move |lease: &Lease, _dispatch: XpuDispatch| {
+        // cost-model timing only: the trace moves ~2700 prompt tokens and
+        // 384 decode tokens; real matmuls would dominate bench wall-clock
+        // without changing any virtual timestamp
+        let exec = lease.sim_executor(&machine, SimConfig::noiseless());
+        Engine::new(
+            cfg.clone(),
+            Arc::clone(&weights),
+            exec,
+            Box::new(DynamicScheduler),
+            PerfConfig::default(),
+        )
+    })
+}
+
+/// Frozen arrival script: one stream, 24 near-simultaneous long-prompt
+/// requests — 96 prompt tokens (4 prefill chunks) then 16 decode rounds
+/// each, so prefill and decode carry comparable total work and the phase
+/// pipeline stays full for ~6 cohorts.
+fn trace() -> Vec<TraceEvent> {
+    let mut t = vec![TraceEvent::Connect { at: 0.0, stream: 0 }];
+    for i in 0..N_REQ {
+        let prompt: Vec<u32> =
+            (0..PROMPT_LEN as u32).map(|k| 1 + (i as u32 * 7 + k * 13) % 500).collect();
+        let req = Request { id: i, prompt, max_new_tokens: MAX_NEW };
+        t.push(TraceEvent::arrive(1.0e-6 + i as f64 * 1.0e-4, 0, req));
+    }
+    t
+}
+
+/// Serve the frozen trace under one execution mode.
+fn scenario(mode: ExecMode) -> HarnessReport {
+    let spec = presets::core_12900k();
+    let mut coord = Coordinator::new(spec.clone(), AllocPolicy::Balanced);
+    coord.set_exec_mode(mode);
+    let rep = run_fleet(
+        coord,
+        &factory(spec),
+        BatcherOpts { max_batch: 4, prefill_chunk: CHUNK },
+        64,
+        DriftMonitor::disabled(),
+        trace(),
+    );
+    assert!(rep.all_finished(), "bench trace did not drain");
+    assert_eq!(rep.total_decoded, N_REQ as usize * MAX_NEW, "tokens went missing");
+    rep
+}
+
+/// Full PR-7 trajectory as JSON.
+pub fn run() -> Json {
+    let blended = scenario(ExecMode::IntraKernel);
+    let disagg = scenario(ExecMode::Disaggregated);
+    let speedup = disagg.throughput() / blended.throughput();
+    let ttft_ratio = blended.mean_ttft() / disagg.mean_ttft();
+    let side = |rep: &HarnessReport| {
+        Json::obj(vec![
+            ("tok_s", Json::num(rep.throughput())),
+            ("mean_ttft_us", Json::num(rep.mean_ttft() * 1e6)),
+            ("makespan_s", Json::num(rep.makespan)),
+            ("handoffs", Json::num(rep.handoffs as f64)),
+        ])
+    };
+    Json::obj(vec![
+        ("bench", Json::str("pr7")),
+        ("machine", Json::str("core_12900k (8P+8E, bus 68 GB/s)")),
+        ("model", Json::str("pr7 (d256, 2L, cost-model timing)")),
+        ("trace", Json::str("24 req x (96 prompt / chunk 24 + 16 decode), 1 stream")),
+        ("blended", side(&blended)),
+        ("disaggregated", side(&disagg)),
+        ("speedup", Json::num(speedup)),
+        ("ttft_ratio", Json::num(ttft_ratio)),
+        ("observations", Json::num(disagg.observations_accepted as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pr7_disaggregation_beats_blended_on_ttft_and_throughput() {
+        let j = run();
+        // acceptance floor: disaggregated must win BOTH metrics — the
+        // timing port places the wins near 1.35x/1.33x, so 1.10x leaves
+        // headroom without accepting a regression to parity
+        let speedup = j.get("speedup").unwrap().as_f64().unwrap();
+        assert!(speedup >= 1.10, "disagg throughput speedup {speedup:.3} below the 1.10x floor");
+        let ttft = j.get("ttft_ratio").unwrap().as_f64().unwrap();
+        assert!(ttft >= 1.10, "disagg TTFT improvement {ttft:.3} below the 1.10x floor");
+        // every request must actually flow prefill→decode across the pair
+        let handoffs =
+            j.get("disaggregated").unwrap().get("handoffs").unwrap().as_f64().unwrap();
+        assert_eq!(handoffs as u64, N_REQ, "not every request was handed off");
+        let blended_handoffs =
+            j.get("blended").unwrap().get("handoffs").unwrap().as_f64().unwrap();
+        assert_eq!(blended_handoffs as u64, 0, "blended mode must not hand off");
+    }
+}

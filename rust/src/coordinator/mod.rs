@@ -18,10 +18,18 @@
 //!
 //! Rebalancing reuses the paper's own mechanism one level up: every
 //! [`Coordinator::observe`] folds a kernel's measured per-unit rates —
-//! cores and accelerator devices alike — into one per-unit **strength**
-//! table with the same mass-preserving EWMA as `perf::PerfTable` (eq. 2),
-//! and [`Coordinator::rebalance`] re-partitions units so each stream's
-//! total strength is as equal as the topology allows. A background process
+//! cores and accelerator devices alike — into a **class-keyed** per-unit
+//! strength table (one row per [`KernelClass`], mirroring the device-ratio
+//! tables of [`crate::sim::xpu::XpuSim`]) with the same mass-preserving
+//! EWMA as `perf::PerfTable` (eq. 2). Keeping GEMM and GEMV rows apart is
+//! what phase-disaggregated serving steers by: an E-core can be 0.4× a
+//! P-core on compute-bound prefill GEMMs yet 0.9× on bandwidth-bound
+//! decode GEMVs, and one blended number would hide exactly that
+//! difference. [`Coordinator::rebalance`] re-partitions units so each
+//! stream's total blended strength is as equal as the topology allows,
+//! while [`Coordinator::phase_leases`] splits one stream's lease into a
+//! GEMM-steered prefill side and a GEMV-steered decode side
+//! ([`ExecMode::Disaggregated`]). A background process
 //! stealing half of one lease's P-cores is therefore detected from timing
 //! alone and answered by spreading the degraded cores across streams (see
 //! `rust/tests/coordinator_integration.rs`). [`Coordinator::strength_skew`]
@@ -52,6 +60,7 @@ use std::collections::BTreeMap;
 
 use crate::cpu::{CoreKind, CpuSpec, Isa};
 use crate::exec::RunResult;
+use crate::kernels::KernelClass;
 use crate::pool::HostPool;
 use crate::sched::largest_remainder_split;
 use crate::sim::bw::{waterfill, Contender};
@@ -115,6 +124,16 @@ pub enum ExecMode {
     /// intra-kernel split then serializes launches that `AsyncBatch`
     /// overlaps with CPU compute.
     AsyncBatch,
+    /// Phase-disaggregated serving (PAPI-style): the lease is split by
+    /// [`Coordinator::phase_leases`] into a **prefill** sub-lease on the
+    /// units whose GEMM-class strength row is strongest (P-cores plus
+    /// GEMM-favouring accelerators) and a **decode** sub-lease on the
+    /// bandwidth-rich remainder steered by the GEMV row. Admissions enter
+    /// the prefill side; sessions whose prompt is fully prefetched are
+    /// handed off — KV cache and all, bit-identically — to the decode
+    /// side, so compute-bound and bandwidth-bound phases stop sharing
+    /// hardware they degrade each other on.
+    Disaggregated,
 }
 
 /// The memory-bus bandwidth (GB/s) the given cores can claim for
@@ -173,9 +192,17 @@ pub struct Lease {
     /// owned units in canonical order: cores ascending, then accelerators
     /// ascending — lease-local index `i` is executor worker `i`
     pub units: Vec<ComputeUnit>,
-    /// learned strength of each unit when the lease was issued (parallel
-    /// to `units`) — seeds the device-level split of [`Lease::xpu_executor`]
+    /// learned blended strength of each unit when the lease was issued
+    /// (parallel to `units`) — seeds the device-level split of
+    /// [`Lease::xpu_executor`]
     pub strengths: Vec<f64>,
+    /// class-keyed strength rows at issue time (each parallel to `units`):
+    /// only the classes the coordinator has actually observed appear here.
+    /// [`Lease::xpu_executor_mode`] seeds each device-ratio class row from
+    /// its matching entry so a collapsed GEMV row never poisons the GEMM
+    /// seed, and [`Coordinator::phase_leases`] steers by the GEMM/GEMV
+    /// rows.
+    pub class_strengths: BTreeMap<KernelClass, Vec<f64>>,
     /// this lease's proportional share of the machine bus (GB/s)
     pub bus_share_gbps: f64,
     /// allocation epoch this lease was issued under
@@ -196,6 +223,7 @@ impl Lease {
             stream,
             units,
             strengths,
+            class_strengths: BTreeMap::new(),
             bus_share_gbps: 0.0,
             epoch,
             mode: ExecMode::IntraKernel,
@@ -315,22 +343,36 @@ impl Lease {
     ) -> XpuExecutor {
         let owned: Vec<AcceleratorSpec> =
             self.accels().iter().map(|&a| accels[a].clone()).collect();
-        let cpu_strength: f64 = self
-            .units
-            .iter()
-            .zip(&self.strengths)
-            .filter(|(u, _)| u.is_core())
-            .map(|(_, s)| s)
-            .sum();
+        let seeds = Lease::device_seeds(&self.units, &self.strengths);
+        let mut sim = XpuSim::new(self.spec(machine), cfg, owned).with_device_seeds(seeds);
+        if !self.class_strengths.is_empty() {
+            // classes the coordinator has observed seed their own device
+            // rows: a launch-collapsed GEMV row must not write off the
+            // device for prefill GEMMs (and vice versa)
+            let class_seeds: BTreeMap<KernelClass, Vec<f64>> = self
+                .class_strengths
+                .iter()
+                .map(|(&cl, row)| (cl, Lease::device_seeds(&self.units, row)))
+                .collect();
+            sim = sim.with_class_seeds(class_seeds);
+        }
+        XpuExecutor::with_dispatch(sim, dispatch)
+    }
+
+    /// Device-level seed vector `[cpu, dev...]` from one strength row
+    /// (parallel to `units`): CPU seed = summed core strength, device
+    /// seeds floored at 5% of it so a collapsed device re-auditions.
+    fn device_seeds(units: &[ComputeUnit], row: &[f64]) -> Vec<f64> {
+        let cpu_strength: f64 =
+            units.iter().zip(row).filter(|(u, _)| u.is_core()).map(|(_, s)| s).sum();
         let cpu_seed = cpu_strength.max(1e-9);
         let mut seeds = vec![cpu_seed];
-        for (u, s) in self.units.iter().zip(&self.strengths) {
+        for (u, s) in units.iter().zip(row) {
             if !u.is_core() {
                 seeds.push(s.max(cpu_seed * 0.05));
             }
         }
-        let sim = XpuSim::new(self.spec(machine), cfg, owned).with_device_seeds(seeds);
-        XpuExecutor::with_dispatch(sim, dispatch)
+        seeds
     }
 
     /// Real-thread executor: one worker per leased core, pinned to the
@@ -384,9 +426,15 @@ pub struct Coordinator {
     /// EWMA gain α for strength updates (weight of the old value, like
     /// `PerfConfig::alpha`; paper uses 0.3).
     pub alpha: f64,
-    /// per-unit measured strength: cores (global order) then accelerators,
-    /// seeded from the spec's ideal VNNI compute ratios (slowest core = 1.0)
-    strength: Vec<f64>,
+    /// per-unit strength seed: cores (global order) then accelerators,
+    /// from the spec's ideal VNNI compute ratios (slowest core = 1.0) —
+    /// the starting row for every kernel class
+    seed: Vec<f64>,
+    /// class-keyed measured strengths (each row parallel to `seed`),
+    /// lazily seeded on a class's first observation — same shape as the
+    /// device-ratio tables in [`crate::sim::xpu::XpuSim`]. Classes never
+    /// observed read the seed row.
+    strength: BTreeMap<KernelClass, Vec<f64>>,
     /// `Pinned` affinity: accelerator → owning stream while it lives
     pinned: Vec<Option<StreamId>>,
     /// admitted streams in admission order
@@ -413,7 +461,7 @@ impl Coordinator {
         affinity: XpuAffinity,
     ) -> Coordinator {
         spec.validate().expect("invalid CpuSpec");
-        let mut strength = spec.ideal_ratios(Isa::AvxVnni);
+        let mut seed = spec.ideal_ratios(Isa::AvxVnni);
         let slowest = spec
             .cores
             .iter()
@@ -421,7 +469,7 @@ impl Coordinator {
             .fold(f64::INFINITY, f64::min)
             .max(1e-30);
         for a in &accels {
-            strength.push((a.ops_per_sec / slowest).max(1e-9));
+            seed.push((a.ops_per_sec / slowest).max(1e-9));
         }
         let pinned = vec![None; accels.len()];
         Coordinator {
@@ -431,7 +479,8 @@ impl Coordinator {
             exec_mode: ExecMode::IntraKernel,
             accels,
             alpha: 0.3,
-            strength,
+            seed,
+            strength: BTreeMap::new(),
             pinned,
             streams: Vec::new(),
             leases: BTreeMap::new(),
@@ -475,10 +524,43 @@ impl Coordinator {
         self.epoch
     }
 
-    /// Current measured per-unit strengths: cores in global order, then
-    /// one entry per accelerator.
-    pub fn strengths(&self) -> &[f64] {
-        &self.strength
+    /// Current measured per-unit strengths **blended across kernel
+    /// classes** (the mean over every observed class row; the seed row
+    /// when nothing was observed yet): cores in global order, then one
+    /// entry per accelerator. Allocation balances this blend; phase
+    /// routing reads the per-class rows via
+    /// [`Coordinator::class_strengths`].
+    pub fn strengths(&self) -> Vec<f64> {
+        if self.strength.is_empty() {
+            return self.seed.clone();
+        }
+        let mut blend = vec![0.0f64; self.seed.len()];
+        for row in self.strength.values() {
+            for (b, v) in blend.iter_mut().zip(row) {
+                *b += v;
+            }
+        }
+        let k = self.strength.len() as f64;
+        for b in &mut blend {
+            *b /= k;
+        }
+        blend
+    }
+
+    /// The per-unit strength row of one kernel class (the seed row until
+    /// that class is first observed) — same unit order as
+    /// [`Coordinator::strengths`].
+    pub fn class_strengths(&self, class: KernelClass) -> Vec<f64> {
+        self.row(class).to_vec()
+    }
+
+    fn row(&self, class: KernelClass) -> &[f64] {
+        self.strength.get(&class).map(|r| &r[..]).unwrap_or(&self.seed)
+    }
+
+    fn row_mut(&mut self, class: KernelClass) -> &mut Vec<f64> {
+        let seed = &self.seed;
+        self.strength.entry(class).or_insert_with(|| seed.clone())
     }
 
     /// Lifetime count of accepted observations — the serving layer's
@@ -524,49 +606,83 @@ impl Coordinator {
         self.leases.values()
     }
 
-    /// Fold one kernel's measured per-unit result back into the strength
-    /// table. `lease` must be the exact lease the measuring executor was
-    /// built from: the result's local→unit mapping is only valid for it,
-    /// so results measured under a stale lease (the coordinator
-    /// re-partitioned since — different epoch or units) or an unknown
-    /// stream are silently dropped rather than mis-attributed to units
-    /// the stream no longer owns. Entries past the lease's core count map
-    /// onto its accelerators (the [`XpuExecutor`] result layout), so
-    /// device timings feed the same table as core timings. Mirrors the
-    /// paper's eq. 2: participating units' rates are rescaled so their
-    /// strength mass is preserved, then EWMA-filtered with `alpha`. A
-    /// single participant carries no relative information and is skipped.
+    /// `lease` is acceptable for an observation when it is the stream's
+    /// exact current lease, or a **phase sub-lease** of it
+    /// ([`Coordinator::phase_leases`]): same stream and epoch with a unit
+    /// set contained in the current lease's. An equal epoch implies the
+    /// same global partition, so a sub-lease's local→unit mapping is
+    /// still valid; anything from an older epoch (or an unknown stream)
+    /// is stale and must be dropped rather than mis-attributed.
+    fn lease_current(&self, lease: &Lease) -> bool {
+        match self.leases.get(&lease.stream) {
+            Some(current) if current == lease => true,
+            Some(current) => {
+                current.epoch == lease.epoch
+                    && lease.units.iter().all(|u| current.units.contains(u))
+            }
+            None => false,
+        }
+    }
+
+    /// Fold one kernel's measured per-unit result into the strength row
+    /// of its kernel `class` (the serving layer reads the class off
+    /// `ParallelRuntime::last_class`). `lease` must be the lease the
+    /// measuring executor was built from — the current lease or one of
+    /// its phase sub-leases (see [`Coordinator::phase_leases`]); stale or
+    /// foreign leases are silently dropped rather than mis-attributed to
+    /// units the stream no longer owns. Entries past the lease's core
+    /// count map onto its accelerators (the [`XpuExecutor`] result
+    /// layout), so device timings feed the same table as core timings.
+    /// Mirrors the paper's eq. 2: participating units' rates are rescaled
+    /// so their strength mass is preserved, then EWMA-filtered with
+    /// `alpha`. A single participant carries no relative information and
+    /// is skipped, and non-finite or zero per-unit walls are rejected
+    /// before they can divide a NaN into the table — one poisoned timing
+    /// would otherwise panic every later rebalance sort.
     ///
     /// Returns `true` when the observation was folded into the strength
     /// table, `false` when it was dropped (stale epoch, foreign stream or
     /// degenerate measurement) — the serving layer uses this to count
     /// epoch-stale measurements racing a rebuild.
-    pub fn observe(&mut self, lease: &Lease, res: &RunResult) -> bool {
-        match self.leases.get(&lease.stream) {
-            Some(current) if current == lease => {}
-            _ => return false, // stale or foreign lease
+    pub fn observe(&mut self, lease: &Lease, class: KernelClass, res: &RunResult) -> bool {
+        if !self.lease_current(lease) {
+            return false;
         }
         let mut mass = 0.0f64;
         let mut rates: Vec<(usize, f64)> = Vec::new();
-        for (local, t) in res.per_core_secs.iter().enumerate() {
-            let Some(t) = t else { continue };
-            let units = res.units_done.get(local).copied().unwrap_or(0);
-            if *t > 0.0 && units > 0 && local < lease.units.len() {
-                let idx = self.strength_index(lease.units[local]);
-                mass += self.strength[idx];
-                rates.push((idx, units as f64 / t));
+        {
+            let row = self.row(class);
+            for (local, t) in res.per_core_secs.iter().enumerate() {
+                let Some(t) = t else { continue };
+                if !(t.is_finite() && *t > 0.0) {
+                    // a 0-second or NaN/∞ per-unit wall marks the whole
+                    // measurement as corrupt — drop it wholesale instead
+                    // of folding the surviving entries of a bad sample
+                    return false;
+                }
+                let units = res.units_done.get(local).copied().unwrap_or(0);
+                if units > 0 && local < lease.units.len() {
+                    let idx = match lease.units[local] {
+                        ComputeUnit::Core(g) => g,
+                        ComputeUnit::Xpu(a) => self.spec.n_cores() + a,
+                    };
+                    mass += row[idx];
+                    rates.push((idx, units as f64 / t));
+                }
             }
         }
         if rates.len() < 2 {
             return false;
         }
         let rate_sum: f64 = rates.iter().map(|(_, r)| r).sum();
-        if !(rate_sum.is_finite() && rate_sum > 0.0 && mass > 0.0) {
+        if !(rate_sum.is_finite() && rate_sum > 0.0 && mass > 0.0 && mass.is_finite()) {
             return false;
         }
         let scale = mass / rate_sum;
+        let alpha = self.alpha;
+        let row = self.row_mut(class);
         for (idx, r) in rates {
-            self.strength[idx] = self.alpha * self.strength[idx] + (1.0 - self.alpha) * r * scale;
+            row[idx] = alpha * row[idx] + (1.0 - alpha) * r * scale;
         }
         self.observations += 1;
         true
@@ -578,12 +694,15 @@ impl Coordinator {
     /// lease's total learned strength, clamped to `[0.05, 0.95]` so
     /// neither side is ever starved of the traffic it needs to keep its
     /// timings observable. Cores-only leases route everything to the CPU
-    /// path (0.0).
+    /// path (0.0). Reads the blended strengths — under `AsyncBatch` the
+    /// paired rounds fold into the decode (GEMV) row, which then *is* the
+    /// blend's live component.
     pub fn split_ratio(&self, lease: &Lease) -> f64 {
+        let blend = self.strengths();
         let mut cpu = 0.0f64;
         let mut dev = 0.0f64;
         for &u in &lease.units {
-            let s = self.strength[self.strength_index(u)];
+            let s = blend[self.strength_index(u)];
             if u.is_core() {
                 cpu += s;
             } else {
@@ -608,18 +727,21 @@ impl Coordinator {
     /// by the old-value weight `α` each round) to
     /// `R_dev / (R_cpu + R_dev)` — the true device throughput
     /// share — independent of batch occupancy, which is exactly what
-    /// [`Coordinator::split_ratio`] reads back. Stale or foreign leases
-    /// are dropped like in `observe`; returns whether the round was
-    /// folded.
+    /// [`Coordinator::split_ratio`] reads back. The fold lands in the
+    /// given `class`'s row (serving passes the round's dominant kernel
+    /// class — [`KernelClass::GemvQ4`] for decode-dominated token
+    /// rounds). Stale or foreign leases are dropped like in `observe`;
+    /// non-finite or zero walls are rejected before they divide; returns
+    /// whether the round was folded.
     pub fn observe_round(
         &mut self,
         lease: &Lease,
+        class: KernelClass,
         cpu: (f64, usize),
         dev: (f64, usize),
     ) -> bool {
-        match self.leases.get(&lease.stream) {
-            Some(current) if current == lease => {}
-            _ => return false, // stale or foreign lease
+        if !self.lease_current(lease) {
+            return false;
         }
         let (cpu_wall, cpu_tokens) = cpu;
         let (dev_wall, dev_tokens) = dev;
@@ -646,9 +768,10 @@ impl Coordinator {
         if cores.is_empty() || devs.is_empty() {
             return false;
         }
-        let cpu_mass: f64 = cores.iter().map(|&i| self.strength[i]).sum();
-        let dev_mass: f64 = devs.iter().map(|&i| self.strength[i]).sum();
-        if !(cpu_mass > 0.0 && dev_mass > 0.0) {
+        let row = self.row(class);
+        let cpu_mass: f64 = cores.iter().map(|&i| row[i]).sum();
+        let dev_mass: f64 = devs.iter().map(|&i| row[i]).sum();
+        if !(cpu_mass > 0.0 && dev_mass > 0.0 && cpu_mass.is_finite() && dev_mass.is_finite()) {
             return false;
         }
         // per-unit rates: each path's token rate split strength-
@@ -656,20 +779,22 @@ impl Coordinator {
         let mut mass = 0.0f64;
         let mut rates: Vec<(usize, f64)> = Vec::new();
         for &i in &cores {
-            mass += self.strength[i];
-            rates.push((i, r_cpu * self.strength[i] / cpu_mass));
+            mass += row[i];
+            rates.push((i, r_cpu * row[i] / cpu_mass));
         }
         for &i in &devs {
-            mass += self.strength[i];
-            rates.push((i, r_dev * self.strength[i] / dev_mass));
+            mass += row[i];
+            rates.push((i, r_dev * row[i] / dev_mass));
         }
         let rate_sum: f64 = rates.iter().map(|(_, r)| r).sum();
         if !(rate_sum.is_finite() && rate_sum > 0.0) {
             return false;
         }
         let scale = mass / rate_sum;
+        let alpha = self.alpha;
+        let row = self.row_mut(class);
         for (idx, r) in rates {
-            self.strength[idx] = self.alpha * self.strength[idx] + (1.0 - self.alpha) * r * scale;
+            row[idx] = alpha * row[idx] + (1.0 - alpha) * r * scale;
         }
         self.observations += 1;
         true
@@ -690,6 +815,18 @@ impl Coordinator {
     /// the drift monitor is blind. Use `Balanced` (the default) when live
     /// drift rebalancing matters.
     pub fn strength_skew(&self) -> f64 {
+        self.strength_skew_for(None)
+    }
+
+    /// [`Coordinator::strength_skew`] over one class's strength row
+    /// (`Some(class)`) or over the cross-class blend (`None`) — phase
+    /// routing can watch GEMM-row drift without decode noise, and vice
+    /// versa.
+    pub fn strength_skew_for(&self, class: Option<KernelClass>) -> f64 {
+        let strengths = match class {
+            Some(c) => self.row(c).to_vec(),
+            None => self.strengths(),
+        };
         let mut skew = 1.0f64;
         for kind in [CoreKind::Performance, CoreKind::Efficiency, CoreKind::LowPower] {
             let mut means: Vec<f64> = Vec::new();
@@ -699,7 +836,7 @@ impl Coordinator {
                     .iter()
                     .filter_map(|u| match u {
                         ComputeUnit::Core(g) if self.spec.cores[*g].kind == kind => {
-                            Some(self.strength[*g])
+                            Some(strengths[*g])
                         }
                         _ => None,
                     })
@@ -717,6 +854,97 @@ impl Coordinator {
             }
         }
         skew
+    }
+
+    /// Split one stream's lease into a **(prefill, decode)** pair of
+    /// phase sub-leases for [`ExecMode::Disaggregated`].
+    ///
+    /// Cores are ranked by their GEMM:GEMV strength-row ratio — how much
+    /// better the unit is at compute-bound prefill GEMMs than at
+    /// bandwidth-bound decode GEMVs — and the split point is chosen to
+    /// maximize `(prefill GEMM mass) × (decode GEMV mass)`, i.e. neither
+    /// phase is starved while each keeps the units it is relatively
+    /// strongest on (with uniform rows this degenerates to an equal-mass
+    /// split, P-cores on the prefill side). Each accelerator joins the
+    /// decode side only when its GEMV row beats its GEMM row — the usual
+    /// launch-overhead verdict keeps NPUs with the prefill GEMMs they
+    /// amortize on. Both sides carry the parent's stream, epoch and mode,
+    /// so [`Coordinator::observe`] accepts their measurements as phase
+    /// sub-leases. Returns `None` when the lease has fewer than two cores
+    /// (nothing to disaggregate — serve it blended).
+    pub fn phase_leases(&self, lease: &Lease) -> Option<(Lease, Lease)> {
+        let cores = lease.cores();
+        if cores.len() < 2 {
+            return None;
+        }
+        let gemm = self.row(KernelClass::GemmI8);
+        let gemv = self.row(KernelClass::GemvQ4);
+        let mut order = cores;
+        order.sort_by(|&a, &b| {
+            let ra = gemm[a] / gemv[a].max(1e-30);
+            let rb = gemm[b] / gemv[b].max(1e-30);
+            rb.total_cmp(&ra).then(a.cmp(&b))
+        });
+        let mut best_k = 1usize;
+        let mut best = f64::NEG_INFINITY;
+        for k in 1..order.len() {
+            let pf: f64 = order[..k].iter().map(|&c| gemm[c]).sum();
+            let dc: f64 = order[k..].iter().map(|&c| gemv[c]).sum();
+            let score = pf * dc;
+            if score > best {
+                best = score;
+                best_k = k;
+            }
+        }
+        let (pf_cores, dc_cores) = order.split_at(best_k);
+        let mut pf_accels: Vec<usize> = Vec::new();
+        let mut dc_accels: Vec<usize> = Vec::new();
+        let n_cores = self.spec.n_cores();
+        for a in lease.accels() {
+            let idx = n_cores + a;
+            if gemv[idx] > gemm[idx] {
+                dc_accels.push(a);
+            } else {
+                pf_accels.push(a); // ties: stay with the GEMM engines
+            }
+        }
+        Some((
+            self.sub_lease(lease, pf_cores, &pf_accels),
+            self.sub_lease(lease, dc_cores, &dc_accels),
+        ))
+    }
+
+    /// A phase sub-lease: a subset of `parent`'s units re-snapshotted
+    /// with current strengths and its own proportional bus share (the two
+    /// phase shares sum to the parent's — bus shares are additive over
+    /// units).
+    fn sub_lease(&self, parent: &Lease, cores: &[usize], accels: &[usize]) -> Lease {
+        let mut units: Vec<ComputeUnit> = cores.iter().map(|&c| ComputeUnit::Core(c)).collect();
+        units.extend(accels.iter().map(|&a| ComputeUnit::Xpu(a)));
+        units.sort();
+        let blend = self.strengths();
+        let strengths: Vec<f64> =
+            units.iter().map(|&u| blend[self.strength_index(u)]).collect();
+        let class_strengths: BTreeMap<KernelClass, Vec<f64>> = self
+            .strength
+            .iter()
+            .map(|(&cl, row)| {
+                (cl, units.iter().map(|&u| row[self.strength_index(u)]).collect())
+            })
+            .collect();
+        let contending: &[AcceleratorSpec] = match self.affinity {
+            XpuAffinity::None => &[],
+            _ => &self.accels,
+        };
+        Lease {
+            stream: parent.stream,
+            units: units.clone(),
+            strengths,
+            class_strengths,
+            bus_share_gbps: bus_share_units(&self.spec, contending, &units),
+            epoch: parent.epoch,
+            mode: parent.mode,
+        }
     }
 
     /// Re-partition units across the admitted streams using the current
@@ -743,6 +971,10 @@ impl Coordinator {
             return;
         }
         let n_cores = self.spec.n_cores();
+        // partition on the cross-class blend (total_cmp throughout: a NaN
+        // smuggled into a strength row must degrade one pick, not panic
+        // the whole rebalance)
+        let blend = self.strengths();
         let mut cores_per_stream: Vec<Vec<usize>> = vec![Vec::new(); k];
         let mut accels_per_stream: Vec<Vec<usize>> = vec![Vec::new(); k];
         let mut strength_sum = vec![0.0f64; k];
@@ -752,8 +984,8 @@ impl Coordinator {
             // strongest device first; ties toward the lower index
             let mut order: Vec<usize> = (0..self.accels.len()).collect();
             order.sort_by(|&a, &b| {
-                let (sa, sb) = (self.strength[n_cores + a], self.strength[n_cores + b]);
-                sb.partial_cmp(&sa).unwrap().then(a.cmp(&b))
+                let (sa, sb) = (blend[n_cores + a], blend[n_cores + b]);
+                sb.total_cmp(&sa).then(a.cmp(&b))
             });
             for a in order {
                 let pinned_slot = match self.affinity {
@@ -765,7 +997,7 @@ impl Coordinator {
                     // weakest strength sum so far; ties toward admission order
                     (0..k)
                         .min_by(|&x, &y| {
-                            strength_sum[x].partial_cmp(&strength_sum[y]).unwrap().then(x.cmp(&y))
+                            strength_sum[x].total_cmp(&strength_sum[y]).then(x.cmp(&y))
                         })
                         .unwrap()
                 });
@@ -773,22 +1005,20 @@ impl Coordinator {
                     self.pinned[a] = Some(self.streams[s]);
                 }
                 accels_per_stream[s].push(a);
-                strength_sum[s] += self.strength[n_cores + a];
+                strength_sum[s] += blend[n_cores + a];
             }
         }
 
         match self.policy {
             AllocPolicy::Packed => {
                 let mut order: Vec<usize> = (0..n_cores).collect();
-                order.sort_by(|&a, &b| {
-                    self.strength[b].partial_cmp(&self.strength[a]).unwrap().then(a.cmp(&b))
-                });
+                order.sort_by(|&a, &b| blend[b].total_cmp(&blend[a]).then(a.cmp(&b)));
                 let sizes = largest_remainder_split(order.len(), &vec![1.0; k]);
                 let mut cursor = 0;
                 for (s, &sz) in sizes.iter().enumerate() {
                     for &core in &order[cursor..cursor + sz] {
                         cores_per_stream[s].push(core);
-                        strength_sum[s] += self.strength[core];
+                        strength_sum[s] += blend[core];
                     }
                     cursor += sz;
                 }
@@ -806,9 +1036,7 @@ impl Coordinator {
                         continue;
                     }
                     // strongest first; ties toward the lower core id
-                    pool.sort_by(|&a, &b| {
-                        self.strength[b].partial_cmp(&self.strength[a]).unwrap().then(a.cmp(&b))
-                    });
+                    pool.sort_by(|&a, &b| blend[b].total_cmp(&blend[a]).then(a.cmp(&b)));
                     // every stream gets its fair share of this kind (±1)
                     let mut quota = largest_remainder_split(pool.len(), &vec![1.0; k]);
                     for &core in &pool {
@@ -828,7 +1056,7 @@ impl Coordinator {
                         let s = best.expect("kind quotas sum to the kind's core count");
                         quota[s] -= 1;
                         cores_per_stream[s].push(core);
-                        strength_sum[s] += self.strength[core];
+                        strength_sum[s] += blend[core];
                     }
                 }
             }
@@ -842,19 +1070,19 @@ impl Coordinator {
                 .filter(|&s| cores_per_stream[s].len() >= 2)
                 .max_by(|&a, &b| {
                     let by_strength =
-                        strength_sum[a].partial_cmp(&strength_sum[b]).unwrap().then(b.cmp(&a));
+                        strength_sum[a].total_cmp(&strength_sum[b]).then(b.cmp(&a));
                     cores_per_stream[a].len().cmp(&cores_per_stream[b].len()).then(by_strength)
                 });
             let Some(rich) = rich else { break };
             let pos = (0..cores_per_stream[rich].len())
                 .min_by(|&i, &j| {
                     let (a, b) = (cores_per_stream[rich][i], cores_per_stream[rich][j]);
-                    self.strength[a].partial_cmp(&self.strength[b]).unwrap().then(a.cmp(&b))
+                    blend[a].total_cmp(&blend[b]).then(a.cmp(&b))
                 })
                 .unwrap();
             let core = cores_per_stream[rich].remove(pos);
-            strength_sum[rich] -= self.strength[core];
-            strength_sum[empty] += self.strength[core];
+            strength_sum[rich] -= blend[core];
+            strength_sum[empty] += blend[core];
             cores_per_stream[empty].push(core);
         }
 
@@ -866,18 +1094,18 @@ impl Coordinator {
             }
             let accels = std::mem::take(&mut accels_per_stream[s]);
             for a in accels {
-                strength_sum[s] -= self.strength[n_cores + a];
+                strength_sum[s] -= blend[n_cores + a];
                 let target = (0..k)
                     .filter(|&t| !cores_per_stream[t].is_empty())
                     .min_by(|&x, &y| {
-                        strength_sum[x].partial_cmp(&strength_sum[y]).unwrap().then(x.cmp(&y))
+                        strength_sum[x].total_cmp(&strength_sum[y]).then(x.cmp(&y))
                     });
                 let Some(t) = target else { break };
                 if self.affinity == XpuAffinity::Pinned {
                     self.pinned[a] = Some(self.streams[t]);
                 }
                 accels_per_stream[t].push(a);
-                strength_sum[t] += self.strength[n_cores + a];
+                strength_sum[t] += blend[n_cores + a];
             }
         }
 
@@ -898,7 +1126,17 @@ impl Coordinator {
             units.extend(accels.into_iter().map(ComputeUnit::Xpu));
             units.sort();
             let strengths: Vec<f64> =
-                units.iter().map(|&u| self.strength[self.strength_index(u)]).collect();
+                units.iter().map(|&u| blend[self.strength_index(u)]).collect();
+            // snapshot each *observed* class row in unit order, so the
+            // executor can seed per-class device ratios and phase routing
+            // can steer by GEMM vs GEMV strength
+            let class_strengths: BTreeMap<KernelClass, Vec<f64>> = self
+                .strength
+                .iter()
+                .map(|(&cl, row)| {
+                    (cl, units.iter().map(|&u| row[self.strength_index(u)]).collect())
+                })
+                .collect();
             let bus = if units.iter().any(ComputeUnit::is_core) {
                 bus_share_units(&self.spec, contending, &units)
             } else {
@@ -910,6 +1148,7 @@ impl Coordinator {
                     stream,
                     units,
                     strengths,
+                    class_strengths,
                     bus_share_gbps: bus,
                     epoch: self.epoch,
                     mode: self.exec_mode,
@@ -1072,7 +1311,7 @@ mod tests {
                 wall_secs: 2.0,
                 units_done: vec![100, 100],
             };
-            c.observe(&l0, &res);
+            c.observe(&l0, KernelClass::GemvQ4, &res);
         }
         assert_eq!(c.observations(), 20);
         let slow = l0.global_core(0);
@@ -1102,6 +1341,7 @@ mod tests {
         // single participant: no relative information
         let accepted = c.observe(
             &l0,
+            KernelClass::GemvQ4,
             &RunResult {
                 per_core_secs: vec![Some(1.0), None, None, None],
                 wall_secs: 1.0,
@@ -1116,7 +1356,7 @@ mod tests {
             wall_secs: 4.0,
             units_done: vec![100, 100],
         };
-        assert!(!c.observe(&foreign, &skewed));
+        assert!(!c.observe(&foreign, KernelClass::GemvQ4, &skewed));
         assert_eq!(c.strengths(), &before[..]);
         assert_eq!(c.observations(), 0);
         // stale lease: admitting stream 1 re-partitions, so a result
@@ -1124,11 +1364,11 @@ mod tests {
         // the new 2-core lease's globals
         c.admit(1);
         let before = c.strengths().to_vec();
-        assert!(!c.observe(&l0, &skewed));
+        assert!(!c.observe(&l0, KernelClass::GemvQ4, &skewed));
         assert_eq!(c.strengths(), &before[..]);
         // the refreshed lease is accepted
         let fresh = c.lease(0).unwrap().clone();
-        assert!(c.observe(&fresh, &skewed));
+        assert!(c.observe(&fresh, KernelClass::GemvQ4, &skewed));
         assert_ne!(c.strengths(), &before[..]);
         assert_eq!(c.observations(), 1);
     }
@@ -1313,7 +1553,7 @@ mod tests {
         };
         for _ in 0..10 {
             let cur = c.lease(0).unwrap().clone();
-            assert!(c.observe(&cur, &res));
+            assert!(c.observe(&cur, KernelClass::GemvQ4, &res));
         }
         let s = c.strengths();
         assert!(
@@ -1347,7 +1587,7 @@ mod tests {
             per_core_secs: times,
         };
         for _ in 0..12 {
-            assert!(c.observe(&l0, &res));
+            assert!(c.observe(&l0, KernelClass::GemvQ4, &res));
         }
         let skew = c.strength_skew();
         assert!(skew > 1.25, "drift not visible: skew {skew}");
@@ -1355,5 +1595,111 @@ mod tests {
         c.rebalance();
         let post = c.strength_skew();
         assert!(post < 1.05, "rebalance did not equalize: skew {post}");
+    }
+
+    #[test]
+    fn observe_rejects_zero_and_nonfinite_timings() {
+        // a single 0-second (or NaN/∞) timing used to mint a NaN strength
+        // that panicked every later rebalance sort — it must be rejected
+        // wholesale, leaving the table untouched
+        let mut c = Coordinator::new(presets::homogeneous(4), AllocPolicy::Balanced);
+        let l0 = c.admit(0);
+        let before = c.strengths();
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let res = RunResult {
+                per_core_secs: vec![Some(bad), Some(1.0), Some(1.0), Some(1.0)],
+                wall_secs: 1.0,
+                units_done: vec![100, 100, 100, 100],
+            };
+            assert!(!c.observe(&l0, KernelClass::GemvQ4, &res), "accepted t={bad}");
+            assert!(!c.observe_round(&l0, KernelClass::GemvQ4, (bad, 100), (1.0, 100)));
+        }
+        assert_eq!(c.strengths(), &before[..]);
+        assert_eq!(c.observations(), 0);
+        // ...and a poisoned table (injected via a valid fold then a
+        // rebalance) must never panic: total_cmp sorts NaN, not unwrap
+        c.rebalance();
+    }
+
+    #[test]
+    fn class_rows_learn_independently() {
+        // degrade core 0 on the GEMM row only: the GEMV row must not move,
+        // and per-class reads see different pictures
+        let mut c = Coordinator::new(presets::homogeneous(4), AllocPolicy::Balanced);
+        let l0 = c.admit(0);
+        let res = RunResult {
+            per_core_secs: vec![Some(4.0), Some(1.0), Some(1.0), Some(1.0)],
+            wall_secs: 4.0,
+            units_done: vec![100, 100, 100, 100],
+        };
+        let gemv_before = c.class_strengths(KernelClass::GemvQ4);
+        for _ in 0..15 {
+            assert!(c.observe(&l0, KernelClass::GemmI8, &res));
+        }
+        let gemm = c.class_strengths(KernelClass::GemmI8);
+        assert!(gemm[0] < 0.5 * gemm[1], "GEMM row did not learn: {gemm:?}");
+        assert_eq!(
+            c.class_strengths(KernelClass::GemvQ4),
+            gemv_before,
+            "GEMM observations leaked into the GEMV row"
+        );
+        // the blend sits between the seed row and the degraded GEMM row
+        let blend = c.strengths();
+        assert!(blend[0] < 1.0 && blend[0] > gemm[0]);
+    }
+
+    #[test]
+    fn phase_leases_split_covering_and_steer_by_class() {
+        let spec = presets::core_12900k();
+        let mut c = Coordinator::new(spec.clone(), AllocPolicy::Balanced);
+        let lease = c.admit(0);
+        // teach the table: P-cores dominate GEMM (compute), E-cores close
+        // the gap on GEMV (bandwidth-bound — per-core compute barely counts)
+        let gemm_res = RunResult {
+            per_core_secs: (0..16)
+                .map(|g| Some(if spec.cores[g].kind == CoreKind::Performance { 0.5 } else { 2.0 }))
+                .collect(),
+            wall_secs: 2.0,
+            units_done: vec![100; 16],
+        };
+        let gemv_res = RunResult {
+            per_core_secs: vec![Some(1.0); 16],
+            wall_secs: 1.0,
+            units_done: vec![100; 16],
+        };
+        for _ in 0..15 {
+            assert!(c.observe(&lease, KernelClass::GemmI8, &gemm_res));
+            assert!(c.observe(&lease, KernelClass::GemvQ4, &gemv_res));
+        }
+        let (pf, dc) = c.phase_leases(&lease).expect("16 cores are splittable");
+        // disjoint + covering split of the parent's units
+        let mut all: Vec<ComputeUnit> = pf.units.iter().chain(&dc.units).copied().collect();
+        all.sort();
+        assert_eq!(all, lease.units);
+        // GEMM-strong P-cores land on the prefill side
+        let pf_p = kinds(&spec, &pf, CoreKind::Performance);
+        assert_eq!(pf_p, pf.n_cores(), "prefill side holds E-cores: {:?}", pf.units);
+        assert!(kinds(&spec, &dc, CoreKind::Efficiency) > 0);
+        // both sides stay observable as phase sub-leases of the parent
+        assert_eq!((pf.epoch, pf.stream), (lease.epoch, lease.stream));
+        let sub_res = RunResult {
+            per_core_secs: vec![Some(1.0); dc.n_cores()],
+            wall_secs: 1.0,
+            units_done: vec![10; dc.n_cores()],
+        };
+        assert!(c.observe(&dc, KernelClass::GemvQ4, &sub_res));
+        // bus shares are proportional and sum to the parent's
+        assert!(pf.bus_share_gbps > 0.0 && dc.bus_share_gbps > 0.0);
+        assert!(
+            (pf.bus_share_gbps + dc.bus_share_gbps - lease.bus_share_gbps).abs()
+                < 1e-6 * lease.bus_share_gbps.max(1.0),
+            "phase bus shares {} + {} != parent {}",
+            pf.bus_share_gbps,
+            dc.bus_share_gbps,
+            lease.bus_share_gbps
+        );
+        // a 1-core lease cannot disaggregate
+        let tiny = Lease::cores_only(0, vec![0], c.epoch());
+        assert!(c.phase_leases(&tiny).is_none());
     }
 }

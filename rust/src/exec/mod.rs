@@ -66,6 +66,9 @@ pub struct ParallelRuntime<E: Executor> {
     /// the per-kernel hot path pays no clone when nothing reads it.
     pub capture_last: bool,
     pub last_result: Option<RunResult>,
+    /// kernel class of the captured `last_result` — observers fold the
+    /// timing into that class's strength row
+    pub last_class: Option<KernelClass>,
 }
 
 impl<E: Executor> ParallelRuntime<E> {
@@ -77,6 +80,7 @@ impl<E: Executor> ParallelRuntime<E> {
             sched,
             capture_last: false,
             last_result: None,
+            last_class: None,
         }
     }
 
@@ -92,6 +96,7 @@ impl<E: Executor> ParallelRuntime<E> {
         self.table.update(cost.class, cost.isa, &res.per_core_secs[..n]);
         if self.capture_last {
             self.last_result = Some(res.clone());
+            self.last_class = Some(cost.class);
         }
         res
     }
@@ -156,14 +161,10 @@ mod tests {
         fn execute(&mut self, work: &dyn Work, plan: &DispatchPlan) -> RunResult {
             let units: Vec<usize> = match plan {
                 DispatchPlan::Partitioned(rs) => rs.iter().map(|r| r.len()).collect(),
-                // crude chunked model: proportional to rate (perfect stealing)
-                _ => {
-                    let rsum: f64 = self.rates.iter().sum();
-                    self.rates
-                        .iter()
-                        .map(|r| (work.total_units() as f64 * r / rsum) as usize)
-                        .collect()
-                }
+                // crude chunked model: proportional to rate (perfect
+                // stealing); largest-remainder so no unit of work is lost
+                // to truncation
+                _ => crate::sched::largest_remainder_split(work.total_units(), &self.rates),
             };
             let times: Vec<Option<f64>> = units
                 .iter()
@@ -204,6 +205,40 @@ mod tests {
         // converged ratios ≈ 3:1
         let rel = dynamic.relative_ratios(KernelClass::GemmI8, Isa::AvxVnni).unwrap();
         assert!((rel[0] - 3.0).abs() < 0.1, "{rel:?}");
+    }
+
+    #[test]
+    fn prop_chunked_fake_exec_conserves_units() {
+        // the old `as usize` truncation could drop up to n_workers-1 tail
+        // units; largest-remainder assignments must sum exactly
+        crate::util::prop::check("fake-exec-unit-conservation", |rng| {
+            let n_workers = 1 + rng.below(8) as usize;
+            let rates: Vec<f64> = (0..n_workers).map(|_| rng.uniform(0.1, 8.0)).collect();
+            let total = 1 + rng.below(5000) as usize;
+            let mut exec = FakeExec { rates };
+            let work = PhantomWork::new(cost::gemm_i8_cost(total, 64, 64));
+            let res = exec.execute(&work, &DispatchPlan::Chunked { chunk: 1 });
+            let done: usize = res.units_done.iter().sum();
+            if done != total {
+                return Err(format!("assigned {done} of {total} units"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn run_captures_last_class_when_enabled() {
+        let mut rt = ParallelRuntime::new(
+            FakeExec { rates: vec![1.0, 1.0] },
+            Box::new(crate::sched::DynamicScheduler),
+            PerfConfig::default(),
+        );
+        rt.run(&PhantomWork::new(cost::gemv_q4_cost(256, 256)));
+        assert!(rt.last_result.is_none() && rt.last_class.is_none());
+        rt.capture_last = true;
+        rt.run(&PhantomWork::new(cost::qmatmul_cost(8, 256, 256)));
+        assert_eq!(rt.last_class, Some(KernelClass::GemmI8));
+        assert!(rt.last_result.is_some());
     }
 
     #[test]

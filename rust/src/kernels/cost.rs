@@ -116,11 +116,14 @@ pub fn gemv_q4_cost(k: usize, n: usize) -> WorkCost {
     WorkCost::new(KernelClass::GemvQ4, n, ops, bytes)
 }
 
-/// Q4_0 matmul `S×K×N` (prefill chunk) split along N.
+/// Q4_0 matmul `S×K×N` (prefill chunk) split along N. With `s` activation
+/// rows per weight pass this is the prefill phase's GEMM class: its
+/// arithmetic intensity grows with the chunk length, so it must not share
+/// a learned ratio row with the memory-bound µs-scale decode GEMV.
 pub fn qmatmul_cost(s: usize, k: usize, n: usize) -> WorkCost {
     let ops = (s * k) as f64;
     let bytes = (k / 2) as f64 + (k / 32) as f64 * 2.0 + (s * k) as f64 * 4.0 / n as f64;
-    WorkCost::new(KernelClass::GemvQ4, n, ops, bytes)
+    WorkCost::new(KernelClass::GemmI8, n, ops, bytes)
 }
 
 /// Decode attention over `h` heads, `t` cached positions, head dim `dh`:
@@ -191,6 +194,18 @@ mod tests {
         let c = copy_cost(1 << 20);
         assert_eq!(c.total_ops(), 0.0);
         assert_eq!(c.units, 256);
+    }
+
+    #[test]
+    fn prefill_and_decode_matmuls_are_distinct_classes() {
+        // phase-disaggregated routing steers prefill by the GEMM row and
+        // decode by the GEMV row — the two constructors must not collide
+        assert_eq!(qmatmul_cost(16, 2048, 2048).class, KernelClass::GemmI8);
+        assert_eq!(gemv_q4_cost(2048, 2048).class, KernelClass::GemvQ4);
+        // chunked prefill is markedly more compute-dense than decode
+        let pf = qmatmul_cost(16, 2048, 2048);
+        let dc = gemv_q4_cost(2048, 2048);
+        assert!(pf.intensity() > 4.0 * dc.intensity());
     }
 
     #[test]

@@ -29,6 +29,7 @@ const USAGE: &str = "usage: dynpar <presets|mlc|bench|trace|infer|serve|ablate> 
   dynpar bench <gemm|gemv|e2e|all> [--preset <name|all>] [--iters N] [--prompt N] [--decode N] [--noisy]
   dynpar bench pr3 [--out BENCH_pr3.json]     hetero-lease (cores+NPU) serving trajectory
   dynpar bench pr4 [--out BENCH_pr4.json]     async CPU/XPU batch split vs intra-kernel
+  dynpar bench pr7 [--out BENCH_pr7.json]     disaggregated prefill/decode vs blended lease
   dynpar trace [--preset ultra_125h] [--alpha 0.3] [--init 5] [--prompt N] [--decode N] [--out file.csv]
   dynpar infer [--model tiny|micro] [--backend native|pjrt|both] [--preset X] [--sched dynamic] [--new N]
   dynpar serve [--addr 127.0.0.1:7878] [--model micro] [--preset X] [--max-batch 4]
@@ -127,6 +128,17 @@ fn cmd_bench(args: &Args) {
             Some(path) => {
                 std::fs::write(path, format!("{}\n", j.dump())).expect("write pr4 trajectory");
                 eprintln!("wrote PR-4 trajectory to {path}");
+            }
+            None => println!("{}", j.dump()),
+        }
+        return;
+    }
+    if which == "pr7" {
+        let j = dynpar::bench_harness::pr7::run();
+        match args.opt("out") {
+            Some(path) => {
+                std::fs::write(path, format!("{}\n", j.dump())).expect("write pr7 trajectory");
+                eprintln!("wrote PR-7 trajectory to {path}");
             }
             None => println!("{}", j.dump()),
         }

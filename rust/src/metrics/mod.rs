@@ -136,6 +136,9 @@ pub struct ServingMetrics {
     /// rebuilds triggered by the drift monitor (learned-strength skew →
     /// live `rebalance()`), a subset of `rebuilds`
     pub drift_rebalances: u64,
+    /// prefill→decode session migrations between the two batchers of a
+    /// phase-disaggregated lease (`ExecMode::Disaggregated`)
+    pub handoffs: u64,
     pub prefill: LatencyHistogram,
     pub decode_per_token: LatencyHistogram,
     pub ttft: LatencyHistogram,
@@ -162,6 +165,7 @@ impl ServingMetrics {
             ("epoch", Json::num(epoch as f64)),
             ("rebuilds", Json::num(self.rebuilds as f64)),
             ("drift_rebalances", Json::num(self.drift_rebalances as f64)),
+            ("handoffs", Json::num(self.handoffs as f64)),
         ];
         if let Some(s) = self.prefill.summary() {
             fields.push(("prefill_p50_secs", Json::num(s.p50)));
@@ -239,6 +243,7 @@ mod tests {
         sm.rejected = 1;
         sm.rebuilds = 2;
         sm.drift_rebalances = 1;
+        sm.handoffs = 3;
         let j = sm.to_json(4, 7);
         assert_eq!(j.get("requests").unwrap().as_i64(), Some(2));
         assert_eq!(j.get("tokens").unwrap().as_i64(), Some(20));
@@ -247,6 +252,7 @@ mod tests {
         assert_eq!(j.get("epoch").unwrap().as_i64(), Some(7));
         assert_eq!(j.get("rebuilds").unwrap().as_i64(), Some(2));
         assert_eq!(j.get("drift_rebalances").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("handoffs").unwrap().as_i64(), Some(3));
         assert_eq!(j.get("ttft_p50_secs").unwrap().as_f64(), Some(0.25));
         assert_eq!(j.get("queue_depth_p50").unwrap().as_f64(), Some(3.0));
         let decode_p50 = j.get("decode_p50_secs_per_token").unwrap().as_f64().unwrap();

@@ -109,6 +109,25 @@ impl SessionPool {
             self.free.push(session);
         }
     }
+
+    /// Hand a live session off to another pool **mid-request**: the KV
+    /// contents travel with the session (its cursor is NOT reset — a
+    /// prefilled cache must replay bit-identically on the adopting side),
+    /// while this pool's slot is reclaimed immediately by pushing a fresh
+    /// same-shape session under the departing slot id. Without the
+    /// replacement every handoff would leak one unit of capacity until the
+    /// donor pool starved. The detached session is re-tagged `usize::MAX`
+    /// so the adopting pool absorbs it like any migrated-in session.
+    pub fn detach(&mut self, session: &mut Session) {
+        if session.slot < self.capacity {
+            let mut replacement = Session::new(&self.cfg);
+            replacement.slot = session.slot;
+            if self.free.len() < self.capacity {
+                self.free.push(replacement);
+            }
+        }
+        session.slot = usize::MAX;
+    }
 }
 
 /// Serial single-threaded decode step — the correctness oracle for the
@@ -296,6 +315,31 @@ mod tests {
         assert_eq!(pool.allocated(), 2);
         pool.release(native);
         assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn session_pool_detach_keeps_kv_and_reclaims_the_slot() {
+        let (cfg, w) = tiny_setup();
+        let mut donor = SessionPool::new(&cfg, 1);
+        let mut adopter = SessionPool::new(&cfg, 2);
+        let mut s = donor.acquire().unwrap();
+        let mid = decode_step_serial(&cfg, &w, &mut s, 5);
+        // detach mid-request: cursor and KV stay with the session...
+        donor.detach(&mut s);
+        assert_eq!(s.pos, 1);
+        assert_eq!(s.slot, usize::MAX);
+        // ...the donor immediately regains its capacity...
+        assert_eq!(donor.idle(), 1);
+        assert!(donor.acquire().is_some());
+        // ...and the adopting side continues the stream bit-identically
+        let cont = decode_step_serial(&cfg, &w, &mut s, 9);
+        let mut oracle = Session::new(&cfg);
+        decode_step_serial(&cfg, &w, &mut oracle, 5);
+        let oracle_cont = decode_step_serial(&cfg, &w, &mut oracle, 9);
+        assert_eq!(mid.len(), cont.len());
+        assert_eq!(cont, oracle_cont);
+        adopter.release(s);
+        assert_eq!(adopter.allocated(), 1);
     }
 
     #[test]

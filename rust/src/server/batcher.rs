@@ -47,6 +47,23 @@ impl Default for BatcherOpts {
     }
 }
 
+/// Which serving phase a batcher is dedicated to under
+/// [`crate::coordinator::ExecMode::Disaggregated`].
+///
+/// A `Prefill` batcher consumes prompts in chunks but never decodes: a
+/// request that finishes its prompt parks (first token already computed by
+/// the prefill argmax) until [`LeaseBatcher::take_prefilled`] hands it to
+/// the paired `Decode` batcher, which streams tokens but admits nothing
+/// directly. `Mixed` is the classic single-batcher behavior (both phases
+/// interleaved in one token round) and the default everywhere else.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PhaseRole {
+    #[default]
+    Mixed,
+    Prefill,
+    Decode,
+}
+
 /// A queued request: parsed body, the channel its events stream back on,
 /// and (for the TCP path) its wall-clock enqueue instant for TTFT.
 pub struct Pending {
@@ -128,6 +145,9 @@ pub struct LeaseBatcher<E: Executor> {
     /// for intra-kernel execution, `CpuOnly` / `DeviceOnly` for the two
     /// halves of an `ExecMode::AsyncBatch` pair
     dispatch: XpuDispatch,
+    /// serving phase this batcher is dedicated to ([`PhaseRole::Mixed`]
+    /// unless the fleet built a disaggregated prefill/decode pair)
+    role: PhaseRole,
     pool: SessionPool,
     active: Vec<ActiveRequest>,
     /// lifetime count of requests admitted here (not adopted) — drives
@@ -154,7 +174,27 @@ impl<E: Executor> LeaseBatcher<E> {
         // strength observations), so keep them on this engine
         engine.rt.capture_last = true;
         let pool = SessionPool::new(&engine.cfg, opts.max_batch.max(1));
-        LeaseBatcher { engine, lease, dispatch, pool, active: Vec::new(), admitted: 0, opts }
+        LeaseBatcher {
+            engine,
+            lease,
+            dispatch,
+            role: PhaseRole::Mixed,
+            pool,
+            active: Vec::new(),
+            admitted: 0,
+            opts,
+        }
+    }
+
+    /// Dedicate this batcher to one serving phase (builder-style; see
+    /// [`PhaseRole`]).
+    pub fn with_role(mut self, role: PhaseRole) -> LeaseBatcher<E> {
+        self.role = role;
+        self
+    }
+
+    pub fn role(&self) -> PhaseRole {
+        self.role
     }
 
     pub fn dispatch(&self) -> XpuDispatch {
@@ -253,6 +293,47 @@ impl<E: Executor> LeaseBatcher<E> {
         std::mem::take(&mut self.active)
     }
 
+    /// Live requests whose prompt is fully consumed — on a
+    /// [`PhaseRole::Prefill`] batcher these are parked awaiting handoff.
+    pub fn n_prefilled(&self) -> usize {
+        self.active
+            .iter()
+            .filter(|a| !a.dead && a.prefilled == a.req.prompt.len())
+            .count()
+    }
+
+    /// Admission slots currently unused (0 when a migration pushed the
+    /// batcher transiently over `max_batch`).
+    pub fn free_slots(&self) -> usize {
+        self.opts.max_batch.saturating_sub(self.active.len())
+    }
+
+    /// Hand off up to `limit` prefill-complete requests for adoption by
+    /// the paired decode batcher. Each departing session is
+    /// [`SessionPool::detach`]ed so its KV (and the already-computed first
+    /// token in `next`) travel with it while this pool's slot is reclaimed
+    /// immediately — the handoff is bit-identical because the decode side
+    /// replays exactly the `emit(next) → decode_step` sequence a
+    /// [`PhaseRole::Mixed`] batcher would have run locally.
+    pub fn take_prefilled(&mut self, limit: usize) -> Vec<ActiveRequest> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() && out.len() < limit {
+            let ready = {
+                let a = &self.active[i];
+                !a.dead && a.prefilled == a.req.prompt.len()
+            };
+            if ready {
+                let mut a = self.active.remove(i);
+                self.pool.detach(&mut a.session);
+                out.push(a);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
     /// One scheduler round over the live batch; finished or abandoned
     /// requests are retired at the end of the round and their slots
     /// released for reuse.
@@ -262,12 +343,18 @@ impl<E: Executor> LeaseBatcher<E> {
         let round_start = self.engine.kernel_secs;
 
         {
-            let LeaseBatcher { engine, active, .. } = self;
+            let LeaseBatcher { engine, active, role, .. } = self;
+            let role = *role;
             for a in active.iter_mut() {
                 if a.dead {
                     continue;
                 }
                 let prompt_len = a.req.prompt.len();
+                if a.prefilled == prompt_len && role == PhaseRole::Prefill {
+                    // prefill-complete on a dedicated prefill batcher:
+                    // park for handoff instead of decoding here
+                    continue;
+                }
                 if a.prefilled < prompt_len {
                     // ---- prefill quantum: one bounded chunk ----
                     let end = (a.prefilled + chunk).min(prompt_len);
@@ -491,6 +578,37 @@ mod tests {
             }
             other => panic!("expected error, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn prefill_role_parks_and_handoff_stream_is_bit_identical() {
+        let mut oracle = test_engine(11);
+        let mut session = oracle.new_session();
+        let (expect, _) = oracle.generate(&mut session, &[4, 7, 1, 3], 6);
+
+        let opts = BatcherOpts { max_batch: 2, prefill_chunk: 2 };
+        let mut pf = LeaseBatcher::new(test_engine(11), None, opts).with_role(PhaseRole::Prefill);
+        let mut dc = LeaseBatcher::new(test_engine(11), None, opts).with_role(PhaseRole::Decode);
+        let (p, rx) = pending(1, &[4, 7, 1, 3], 6);
+        pf.admit(p).map_err(|_| ()).unwrap();
+        // the prefill batcher chews through the prompt but never decodes
+        let mut guard = 0;
+        while pf.n_prefilled() == 0 {
+            pf.step();
+            guard += 1;
+            assert!(guard < 100, "prefill never completed");
+        }
+        assert!(drain_tokens(&rx).is_empty(), "prefill batcher decoded");
+        // handoff reclaims the prefill slot immediately
+        let ready = pf.take_prefilled(8);
+        assert_eq!(ready.len(), 1);
+        assert!(pf.is_idle());
+        assert_eq!(pf.pool().idle(), 1);
+        for a in ready {
+            dc.adopt(a);
+        }
+        run_until_idle(&mut dc);
+        assert_eq!(drain_tokens(&rx), expect, "handoff broke the token stream");
     }
 
     #[test]

@@ -25,13 +25,25 @@
 //! its overheads over whole token rounds of its own batch. Migration
 //! across epoch rebuilds is unchanged: sessions carry the KV state, so
 //! streams stay bit-identical whichever side (or mode) they land on.
+//!
+//! [`ExecMode::Disaggregated`] also builds a batcher pair per lease, but
+//! split by **serving phase** instead of by device: the coordinator's
+//! [`phase_leases`](Coordinator::phase_leases) carves the lease into a
+//! prefill sub-lease over its GEMM-strong units and a decode sub-lease
+//! over its bandwidth-rich remainder, and the fleet dedicates a
+//! [`PhaseRole::Prefill`] batcher to the former and a
+//! [`PhaseRole::Decode`] batcher to the latter. Admissions always enter
+//! the prefill side; [`route_handoff`] moves prefill-complete requests to
+//! the decode side through the same session-carrying migration machinery,
+//! so the handed-off stream is bit-identical to one served by a single
+//! blended batcher.
 
 use crate::coordinator::{Coordinator, ExecMode, Lease};
 use crate::engine::Engine;
 use crate::exec::Executor;
 use crate::sim::xpu::XpuDispatch;
 
-use super::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher};
+use super::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, PhaseRole};
 
 /// Decides when learned strength drift warrants a live `rebalance()` +
 /// fleet rebuild. The signal is [`Coordinator::strength_skew`] — how far
@@ -97,13 +109,35 @@ pub fn build_batchers<E: Executor>(
     opts: BatcherOpts,
 ) -> Vec<LeaseBatcher<E>> {
     let mut out = Vec::new();
+    let d = XpuDispatch::Split;
     for l in coord.leases().filter(|l| !l.is_empty()) {
         if l.mode == ExecMode::AsyncBatch && !l.accels().is_empty() {
             for d in [XpuDispatch::CpuOnly, XpuDispatch::DeviceOnly] {
                 out.push(LeaseBatcher::with_dispatch(factory(l, d), Some(l.clone()), opts, d));
             }
+        } else if l.mode == ExecMode::Disaggregated {
+            match coord.phase_leases(l) {
+                Some((pf, dc)) => {
+                    // phase pair: each side intra-kernel-splits across its
+                    // own sub-lease's units
+                    out.push(
+                        LeaseBatcher::with_dispatch(factory(&pf, d), Some(pf.clone()), opts, d)
+                            .with_role(PhaseRole::Prefill),
+                    );
+                    out.push(
+                        LeaseBatcher::with_dispatch(factory(&dc, d), Some(dc.clone()), opts, d)
+                            .with_role(PhaseRole::Decode),
+                    );
+                }
+                // too few cores to disaggregate: serve the lease blended
+                None => out.push(LeaseBatcher::with_dispatch(
+                    factory(l, d),
+                    Some(l.clone()),
+                    opts,
+                    d,
+                )),
+            }
         } else {
-            let d = XpuDispatch::Split;
             out.push(LeaseBatcher::with_dispatch(factory(l, d), Some(l.clone()), opts, d));
         }
     }
@@ -139,6 +173,20 @@ pub fn route_admission<E: Executor>(
         return Some(XpuDispatch::CpuOnly);
     }
     None
+}
+
+/// How many prefill-complete requests a [`PhaseRole::Prefill`] batcher
+/// should hand to its paired [`PhaseRole::Decode`] batcher this round —
+/// the disaggregated analogue of [`route_admission`]'s deficit rule: the
+/// decode side is owed every parked request its free slots can seat
+/// (`min(ready, free)`), which keeps prefill slots turning over without
+/// ever pushing the decode batch past `max_batch`. Returns 0 while
+/// nothing is parked or the decode side is full.
+pub fn route_handoff<E: Executor>(
+    prefill: &LeaseBatcher<E>,
+    decode: &LeaseBatcher<E>,
+) -> usize {
+    prefill.n_prefilled().min(decode.free_slots())
 }
 
 /// Spread carried-over in-flight requests across a fresh fleet, always
@@ -284,10 +332,10 @@ mod tests {
             units_done: vec![100; l0.n_cores()],
         };
         for _ in 0..2 {
-            assert!(coord.observe(&l0, &res));
+            assert!(coord.observe(&l0, crate::kernels::KernelClass::GemvQ4, &res));
             assert!(mon.check_drift(&coord).is_none(), "fired inside the cooldown");
         }
-        assert!(coord.observe(&l0, &res));
+        assert!(coord.observe(&l0, crate::kernels::KernelClass::GemvQ4, &res));
         let skew = mon.check_drift(&coord).expect("drift past threshold not detected");
         assert!(skew > 1.25, "reported skew {skew}");
 
@@ -360,6 +408,64 @@ mod tests {
             .map(|b| b.dispatch())
             .collect();
         assert_eq!(solo, vec![XpuDispatch::Split]);
+    }
+
+    #[test]
+    fn disaggregated_lease_builds_a_phase_batcher_pair() {
+        use crate::coordinator::ExecMode;
+        let mut coord = Coordinator::new(presets::core_12900k(), AllocPolicy::Balanced);
+        coord.set_exec_mode(ExecMode::Disaggregated);
+        coord.admit(0);
+        let f = factory();
+        let fleet = build_batchers(&coord, &f, BatcherOpts::default());
+        assert_eq!(fleet.len(), 2);
+        let roles: Vec<PhaseRole> = fleet.iter().map(|b| b.role()).collect();
+        assert_eq!(roles, vec![PhaseRole::Prefill, PhaseRole::Decode]);
+        // each batcher's engine runs on exactly its phase sub-lease's cores
+        let parent = coord.lease(0).unwrap();
+        let mut covered = 0;
+        for b in &fleet {
+            let sub = b.lease.as_ref().unwrap();
+            assert_eq!(sub.epoch, parent.epoch);
+            assert_eq!(b.engine.rt.exec.sim.spec.n_cores(), sub.n_cores());
+            covered += sub.n_cores();
+        }
+        assert_eq!(covered, parent.n_cores());
+    }
+
+    #[test]
+    fn route_handoff_is_capacity_bounded() {
+        use crate::coordinator::ExecMode;
+        let mut coord = Coordinator::new(presets::core_12900k(), AllocPolicy::Balanced);
+        coord.set_exec_mode(ExecMode::Disaggregated);
+        coord.admit(0);
+        let f = factory();
+        let opts = BatcherOpts { max_batch: 2, prefill_chunk: 64 };
+        let mut fleet = build_batchers(&coord, &f, opts);
+        let (mut pf, mut dc) = {
+            let dc = fleet.pop().unwrap();
+            let pf = fleet.pop().unwrap();
+            (pf, dc)
+        };
+        assert_eq!(route_handoff(&pf, &dc), 0, "nothing parked yet");
+        for id in 0..2u64 {
+            let (tx, _rx) = std::sync::mpsc::channel();
+            let p = Pending::new(Request { id, prompt: vec![1, 2], max_new_tokens: 4 }, tx);
+            pf.admit(p).map_err(|_| ()).unwrap();
+        }
+        pf.step(); // one chunk fully prefills both prompts
+        assert_eq!(pf.n_prefilled(), 2);
+        assert_eq!(route_handoff(&pf, &dc), 2);
+        // a busy decode side caps the handoff at its free slots
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let p = Pending::new(Request { id: 9, prompt: vec![3], max_new_tokens: 4 }, tx);
+        dc.admit(p).map_err(|_| ()).unwrap();
+        assert_eq!(route_handoff(&pf, &dc), 1);
+        for a in pf.take_prefilled(route_handoff(&pf, &dc)) {
+            dc.adopt(a);
+        }
+        assert_eq!(route_handoff(&pf, &dc), 0, "decode side is full");
+        assert_eq!(pf.n_prefilled(), 1);
     }
 
     #[test]

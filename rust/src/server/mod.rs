@@ -19,7 +19,14 @@
 //! * [`fleet`] — lease lifecycle: one batcher per non-empty coordinator
 //!   lease, rebuilt on every epoch change with in-flight sessions migrating
 //!   onto the new fleet (bit-identical streams; partitioning only changes
-//!   timing).
+//!   timing). A lease in [`crate::coordinator::ExecMode::Disaggregated`]
+//!   becomes a *pair* of batchers — a compute-steered prefill side and a
+//!   bandwidth-steered decode side — linked here by a shared [`PhaseState`]:
+//!   the prefill worker parks prefill-complete sessions and hands them
+//!   through the buffer (bounded by the decode side's published free
+//!   slots), the decode worker adopts and streams them. The handoff reuses
+//!   the same `SessionPool` detach/adopt migration as a fleet rebuild, so
+//!   token streams stay bit-identical to a blended lease.
 //! * [`testing`] — a deterministic, virtual-time harness that drives the
 //!   same batcher/fleet code with scripted arrival traces: the standard way
 //!   to test serving features without sockets or wall-clock sleeps.
@@ -59,11 +66,12 @@ use std::time::{Duration, Instant};
 use crate::coordinator::{Coordinator, Lease, StreamId};
 use crate::engine::Engine;
 use crate::exec::Executor;
+use crate::kernels::KernelClass;
 use crate::metrics::ServingMetrics;
 use crate::sim::xpu::XpuDispatch;
 use crate::util::json::Json;
 
-pub use batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending};
+pub use batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending, PhaseRole};
 pub use queue::{AdmissionPolicy, AdmissionQueue};
 
 use protocol::ClientMessage;
@@ -173,6 +181,30 @@ impl PairState {
     }
 }
 
+/// Shared state of one `ExecMode::Disaggregated` batcher pair: the
+/// prefill→decode handoff buffer, the decode side's published free-slot
+/// count (the capacity bound mirroring [`fleet::route_handoff`] — the
+/// prefill worker never hands over more than the decode side can seat),
+/// and the prefill side's liveness flag, which sequences shutdown so the
+/// decode worker only exits once its twin can produce no more work.
+struct PhaseState {
+    handoff: Mutex<Vec<ActiveRequest>>,
+    decode_free: AtomicUsize,
+    prefill_live: AtomicBool,
+}
+
+impl PhaseState {
+    fn new(max_batch: usize) -> PhaseState {
+        PhaseState {
+            handoff: Mutex::new(Vec::new()),
+            // the decode batcher starts empty: every slot is free until
+            // its first round publishes a measured count
+            decode_free: AtomicUsize::new(max_batch),
+            prefill_live: AtomicBool::new(true),
+        }
+    }
+}
+
 struct Shared {
     queue: Mutex<AdmissionQueue<Pending>>,
     /// engine workers wait here for queued work
@@ -257,7 +289,7 @@ pub fn serve_multi<E: Executor + Send + 'static>(
         let shared2 = Arc::clone(&shared);
         let b = LeaseBatcher::new(engine, None, opts.batcher());
         threads.push(std::thread::spawn(move || {
-            let _ = run_batcher(b, shared2, 0, None, None);
+            let _ = run_batcher(b, shared2, 0, None, None, None);
         }));
     }
     threads.push(spawn_accept_loop(listener, Arc::clone(&shared), None));
@@ -405,6 +437,19 @@ fn supervise<E: Executor + Send + 'static>(
                 }
             }
         }
+        // one shared PhaseState per disaggregated lease (its two batchers
+        // carry the same stream id with Prefill/Decode roles)
+        let mut phases: std::collections::BTreeMap<StreamId, Arc<PhaseState>> =
+            std::collections::BTreeMap::new();
+        for b in &batchers {
+            if b.role() != PhaseRole::Mixed {
+                if let Some(l) = b.lease.as_ref() {
+                    phases
+                        .entry(l.stream)
+                        .or_insert_with(|| Arc::new(PhaseState::new(opts.max_batch)));
+                }
+            }
+        }
         let gen = shared.generation.load(Ordering::SeqCst);
         for b in batchers {
             let shared2 = Arc::clone(&shared);
@@ -413,8 +458,12 @@ fn supervise<E: Executor + Send + 'static>(
                 XpuDispatch::Split => None,
                 _ => b.lease.as_ref().and_then(|l| pairs.get(&l.stream)).map(Arc::clone),
             };
+            let phase = match b.role() {
+                PhaseRole::Mixed => None,
+                _ => b.lease.as_ref().and_then(|l| phases.get(&l.stream)).map(Arc::clone),
+            };
             workers.push(std::thread::spawn(move || {
-                run_batcher(b, shared2, gen, Some(coord2), pair)
+                run_batcher(b, shared2, gen, Some(coord2), pair, phase)
             }));
         }
         shared.work.notify_all();
@@ -443,8 +492,10 @@ fn run_batcher<E: Executor>(
     my_gen: u64,
     coord: Option<Arc<Mutex<Coordinator>>>,
     pair: Option<Arc<PairState>>,
+    phase: Option<Arc<PhaseState>>,
 ) -> Vec<ActiveRequest> {
     let is_dev = b.dispatch() == XpuDispatch::DeviceOnly;
+    let role = b.role();
     loop {
         // the learned device share steering this pair's admissions —
         // re-read every round so the split follows the online ratio
@@ -456,12 +507,42 @@ fn run_batcher<E: Executor>(
             let mut q = lock(&shared.queue);
             loop {
                 if shared.generation.load(Ordering::SeqCst) != my_gen {
-                    return b.take_actives();
+                    // a retiring phase batcher drains the shared handoff
+                    // buffer too — sessions parked between the pair must
+                    // migrate with the fleet, not vanish
+                    let mut out = b.take_actives();
+                    if let Some(ph) = &phase {
+                        out.append(&mut lock(&ph.handoff));
+                    }
+                    return out;
                 }
-                if shared.shutdown.load(Ordering::SeqCst) && q.is_empty() && b.is_idle() {
+                // a decode-phase batcher is fed by its twin's handoff
+                // buffer, never by the admission queue; on shutdown it
+                // must outlive the prefill side (which can still be
+                // producing work for it)
+                let phase_done = match (&phase, role) {
+                    (Some(ph), PhaseRole::Decode) => {
+                        lock(&ph.handoff).is_empty()
+                            && !ph.prefill_live.load(Ordering::SeqCst)
+                    }
+                    _ => true,
+                };
+                if shared.shutdown.load(Ordering::SeqCst)
+                    && q.is_empty()
+                    && b.is_idle()
+                    && phase_done
+                {
+                    if let (Some(ph), PhaseRole::Prefill) = (&phase, role) {
+                        ph.prefill_live.store(false, Ordering::SeqCst);
+                        shared.work.notify_all();
+                    }
                     return Vec::new();
                 }
-                if !b.is_idle() || !q.is_empty() {
+                let fed = match (&phase, role) {
+                    (Some(ph), PhaseRole::Decode) => !lock(&ph.handoff).is_empty(),
+                    _ => !q.is_empty(),
+                };
+                if !b.is_idle() || fed {
                     break;
                 }
                 let (qq, _) = shared
@@ -471,8 +552,10 @@ fn run_batcher<E: Executor>(
                 q = qq;
             }
             // per-round observables + admission between decode rounds
+            // (the decode side of a phase pair never admits fresh
+            // requests — everything it serves arrives via the handoff)
             lock(&shared.metrics).queue_depth.record(q.len() as f64);
-            while b.has_capacity() {
+            while role != PhaseRole::Decode && b.has_capacity() {
                 if let Some(pair) = &pair {
                     if !pair.may_admit(is_dev, ratio) {
                         break; // the twin is owed this request
@@ -497,7 +580,36 @@ fn run_batcher<E: Executor>(
             }
         }
 
+        // decode side: seat the sessions the prefill twin handed over,
+        // then republish how many slots remain for the next handoff
+        if let (Some(ph), PhaseRole::Decode) = (&phase, role) {
+            let mut moved = 0u64;
+            {
+                let mut buf = lock(&ph.handoff);
+                while b.has_capacity() && !buf.is_empty() {
+                    b.adopt(buf.remove(0));
+                    moved += 1;
+                }
+            }
+            ph.decode_free.store(b.free_slots(), Ordering::SeqCst);
+            if moved > 0 {
+                lock(&shared.metrics).handoffs += moved;
+            }
+        }
+
         let report = b.step();
+
+        // prefill side: hand prefill-complete sessions to the decode
+        // twin, bounded by the free slots it last published (the same
+        // capacity rule as fleet::route_handoff)
+        if let (Some(ph), PhaseRole::Prefill) = (&phase, role) {
+            let n = b.n_prefilled().min(ph.decode_free.load(Ordering::SeqCst));
+            if n > 0 {
+                let moved = b.take_prefilled(n);
+                lock(&ph.handoff).extend(moved);
+                shared.work.notify_all();
+            }
+        }
 
         if !report.ttft_wall.is_empty() || !report.retired.is_empty() {
             let mut m = lock(&shared.metrics);
@@ -525,14 +637,19 @@ fn run_batcher<E: Executor>(
                         if let (Some(c), Some(d)) = (pr.cpu, pr.dev) {
                             *pr = PairRound::default();
                             drop(pr);
-                            let _ = lock(coord).observe_round(lease, c, d);
+                            // paired rounds measure decode traffic: fold
+                            // into the GEMV row
+                            let _ =
+                                lock(coord).observe_round(lease, KernelClass::GemvQ4, c, d);
                         }
                     }
                 }
-            } else if let (Some(lease), Some(res)) =
-                (b.lease.as_ref(), b.engine.rt.last_result.as_ref())
-            {
-                let _ = lock(coord).observe(lease, res);
+            } else if let (Some(lease), Some(res), Some(class)) = (
+                b.lease.as_ref(),
+                b.engine.rt.last_result.as_ref(),
+                b.engine.rt.last_class,
+            ) {
+                let _ = lock(coord).observe(lease, class, res);
             }
         }
     }

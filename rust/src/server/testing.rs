@@ -21,10 +21,11 @@ use std::sync::mpsc;
 
 use crate::coordinator::{Coordinator, Lease, StreamId};
 use crate::exec::{Executor, RunResult};
+use crate::kernels::KernelClass;
 use crate::sim::xpu::XpuDispatch;
 use crate::util::rng::Rng;
 
-use super::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending, StepReport};
+use super::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending, PhaseRole, StepReport};
 use super::fleet::{self, DriftMonitor, EngineFactory};
 use super::protocol::{Event, Request};
 use super::queue::AdmissionQueue;
@@ -146,6 +147,9 @@ pub struct HarnessReport {
     /// final learned device share (`Coordinator::split_ratio`) of every
     /// hetero lease still live when the run drained
     pub split_ratios: Vec<f64>,
+    /// prefill→decode sessions moved between the batchers of an
+    /// [`crate::coordinator::ExecMode::Disaggregated`] phase pair
+    pub handoffs: usize,
 }
 
 impl HarnessReport {
@@ -355,15 +359,24 @@ pub fn run_fleet<E: Executor>(
     loop {
         guard += 1;
         assert!(guard < 5_000_000, "harness runaway");
+        // phase pairs first: prefill-complete sessions move to the paired
+        // decode batcher *before* the pick below, so parked work can never
+        // strand the loop (a fully-parked prefill batcher does no work)
+        drain_handoffs(&mut batchers, &mut offsets, &mut report);
         let next_at = if cursor < trace.len() { Some(trace[cursor].at()) } else { None };
         // working lease with the smallest virtual clock
         let mut pick: Option<(usize, f64)> = None;
         for i in 0..batchers.len() {
             let clock = offsets[i] + batchers[i].engine.kernel_secs;
             // an idle pair member the deficit router will not feed has
-            // nothing to do — stepping it would spin the guard counter
-            let works = !batchers[i].is_idle()
+            // nothing to do — stepping it would spin the guard counter,
+            // and so would a prefill batcher whose whole batch is parked
+            // awaiting handoff (its step advances no kernel clock)
+            let parked = batchers[i].role() == PhaseRole::Prefill
+                && batchers[i].n_prefilled() == batchers[i].n_active();
+            let works = (!batchers[i].is_idle() && !parked)
                 || (!queue.is_empty()
+                    && batchers[i].role() != PhaseRole::Decode
                     && batchers[i].has_capacity()
                     && pair_may_admit(&batchers, &pairs, &coord, i));
             if works && pick.is_none_or(|(_, c)| clock < c) {
@@ -423,7 +436,10 @@ pub fn run_fleet<E: Executor>(
         let (i, mut clock) = pick.unwrap();
         report.queue_depth_samples.push(queue.len());
         let was_idle = batchers[i].is_idle();
-        while batchers[i].has_capacity() && pair_may_admit(&batchers, &pairs, &coord, i) {
+        while batchers[i].role() != PhaseRole::Decode
+            && batchers[i].has_capacity()
+            && pair_may_admit(&batchers, &pairs, &coord, i)
+        {
             let Some(p) = queue.pop() else { break };
             let id = p.req.id;
             let before = batchers[i].admitted();
@@ -473,15 +489,19 @@ pub fn run_fleet<E: Executor>(
                     slot.cpu_round = None;
                     slot.dev_round = None;
                     let lease = batchers[i].lease.as_ref().unwrap().clone();
-                    if coord.observe_round(&lease, c, d) {
+                    // paired token rounds are decode-dominated: fold into
+                    // the GEMV row
+                    if coord.observe_round(&lease, KernelClass::GemvQ4, c, d) {
                         report.observations_accepted += 1;
                     }
                 }
             }
-        } else if let (Some(lease), Some(res)) =
-            (batchers[i].lease.as_ref(), batchers[i].engine.rt.last_result.as_ref())
-        {
-            if coord.observe(lease, res) {
+        } else if let (Some(lease), Some(res), Some(class)) = (
+            batchers[i].lease.as_ref(),
+            batchers[i].engine.rt.last_result.as_ref(),
+            batchers[i].engine.rt.last_class,
+        ) {
+            if coord.observe(lease, class, res) {
                 report.observations_accepted += 1;
             }
         }
@@ -569,6 +589,45 @@ fn pair_may_admit<E: Executor>(
     !twin_free
 }
 
+/// Move prefill-complete sessions from every [`PhaseRole::Prefill`]
+/// batcher to its same-stream [`PhaseRole::Decode`] twin, bounded by the
+/// decode side's free slots ([`fleet::route_handoff`]). The decode clock
+/// is synced forward to the prefill clock first — a session cannot be
+/// decoded before the instant its prefill finished — which is exactly the
+/// queueing delay a physical handoff would incur.
+fn drain_handoffs<E: Executor>(
+    batchers: &mut [LeaseBatcher<E>],
+    offsets: &mut [f64],
+    report: &mut HarnessReport,
+) {
+    for i in 0..batchers.len() {
+        if batchers[i].role() != PhaseRole::Prefill {
+            continue;
+        }
+        let Some(stream) = batchers[i].lease.as_ref().map(|l| l.stream) else { continue };
+        let Some(j) = (0..batchers.len()).find(|&j| {
+            batchers[j].role() == PhaseRole::Decode
+                && batchers[j].lease.as_ref().is_some_and(|l| l.stream == stream)
+        }) else {
+            continue;
+        };
+        let n = fleet::route_handoff(&batchers[i], &batchers[j]);
+        if n == 0 {
+            continue;
+        }
+        let pf_clock = offsets[i] + batchers[i].engine.kernel_secs;
+        let dc_clock = offsets[j] + batchers[j].engine.kernel_secs;
+        if dc_clock < pf_clock {
+            offsets[j] = pf_clock - batchers[j].engine.kernel_secs;
+        }
+        let moved = batchers[i].take_prefilled(n);
+        report.handoffs += moved.len();
+        for a in moved {
+            batchers[j].adopt(a);
+        }
+    }
+}
+
 /// What a rebuild applies to the coordinator.
 enum FleetChange {
     Membership { connects: Vec<StreamId>, disconnects: Vec<StreamId> },
@@ -605,11 +664,13 @@ fn rebuild<E: Executor>(
     report: &mut HarnessReport,
 ) {
     // measurements still in flight from the epoch being torn down
-    let stale: Vec<(Lease, RunResult)> = batchers
+    let stale: Vec<(Lease, KernelClass, RunResult)> = batchers
         .iter()
-        .filter_map(|b| match (b.lease.clone(), b.engine.rt.last_result.clone()) {
-            (Some(l), Some(r)) => Some((l, r)),
-            _ => None,
+        .filter_map(|b| {
+            match (b.lease.clone(), b.engine.rt.last_class, b.engine.rt.last_result.clone()) {
+                (Some(l), Some(c), Some(r)) => Some((l, c, r)),
+                _ => None,
+            }
         })
         .collect();
     let mut carried: Vec<ActiveRequest> = Vec::new();
@@ -643,8 +704,8 @@ fn rebuild<E: Executor>(
     report.epochs_seen.push(coord.epoch());
     report.lease_sets.push(coord.leases().cloned().collect());
     // the replayed pre-epoch measurements must all be dropped
-    for (lease, res) in &stale {
-        if coord.observe(lease, res) {
+    for (lease, class, res) in &stale {
+        if coord.observe(lease, *class, res) {
             report.stale_observations_accepted += 1;
         } else {
             report.stale_observations_dropped += 1;

@@ -120,9 +120,14 @@ pub struct XpuSim {
     pub accels: Vec<AcceleratorSpec>,
     pub alpha: f64,
     /// per-kernel-class learned device ratios (index 0 = CPU), lazily
-    /// seeded from `seeds` on first use of a class
+    /// seeded from `class_seeds` (when that class has a dedicated seed
+    /// row) or `seeds` on first use of a class
     tables: BTreeMap<KernelClass, Vec<f64>>,
     seeds: Vec<f64>,
+    /// per-class seed overrides — a coordinator lease that has observed a
+    /// class passes its learned row here so a fresh executor starts each
+    /// class where the fleet's last epoch left it
+    class_seeds: BTreeMap<KernelClass, Vec<f64>>,
     inner_sched: DynamicScheduler,
 }
 
@@ -135,6 +140,7 @@ impl XpuSim {
             alpha: 0.3,
             tables: BTreeMap::new(),
             seeds: vec![1.0; n_dev],
+            class_seeds: BTreeMap::new(),
             inner_sched: DynamicScheduler,
         }
     }
@@ -149,10 +155,28 @@ impl XpuSim {
         self
     }
 
+    /// Per-class seed rows (same `[cpu, dev...]` layout as
+    /// [`XpuSim::with_device_seeds`]): a class listed here starts from its
+    /// own row instead of the flat seeds, so e.g. a launch-collapsed GEMV
+    /// verdict carries across executor rebuilds without writing the device
+    /// off for GEMM work. Classes not listed still fall back to the flat
+    /// seeds.
+    pub fn with_class_seeds(mut self, class_seeds: BTreeMap<KernelClass, Vec<f64>>) -> XpuSim {
+        for (class, row) in &class_seeds {
+            assert_eq!(row.len(), 1 + self.accels.len(), "one {class:?} seed per device");
+            assert!(row.iter().all(|&s| s > 0.0), "{class:?} seeds must be positive");
+        }
+        self.class_seeds = class_seeds;
+        self
+    }
+
     /// Current learned device ratios for a kernel class (index 0 = CPU).
     pub fn device_ratios(&mut self, class: KernelClass) -> &[f64] {
         let seeds = &self.seeds;
-        self.tables.entry(class).or_insert_with(|| seeds.clone())
+        let class_seeds = &self.class_seeds;
+        self.tables
+            .entry(class)
+            .or_insert_with(|| class_seeds.get(&class).unwrap_or(seeds).clone())
     }
 
     /// Bus bandwidth each device sustains when all are active: the CPU
@@ -214,7 +238,11 @@ impl XpuSim {
     fn fold(&mut self, class: KernelClass, device_secs: &[f64]) {
         let alpha = self.alpha;
         let seeds = &self.seeds;
-        let row = self.tables.entry(class).or_insert_with(|| seeds.clone());
+        let class_seeds = &self.class_seeds;
+        let row = self
+            .tables
+            .entry(class)
+            .or_insert_with(|| class_seeds.get(&class).unwrap_or(seeds).clone());
         let mut mass = 0.0;
         let mut s = 0.0;
         let mut n_parts = 0;
@@ -557,6 +585,19 @@ mod tests {
         let c = cost::gemm_i8_cost(400, 1024, 1024);
         let res = x.execute(&c, &converged_cpu_ratios());
         assert_eq!(res.device_units[1], 300, "seeded 3:1 split, got {:?}", res.device_units);
+    }
+
+    #[test]
+    fn class_seeds_override_flat_seeds_per_class_only() {
+        let mut class_seeds = BTreeMap::new();
+        class_seeds.insert(KernelClass::GemvQ4, vec![3.0, 1.0]); // collapsed-GEMV verdict
+        let mut x = xpu().with_device_seeds(vec![1.0, 3.0]).with_class_seeds(class_seeds);
+        // the seeded GEMV row starts 3:1 toward the CPU...
+        let gemv = x.device_ratios(KernelClass::GemvQ4).to_vec();
+        assert_eq!(gemv, vec![3.0, 1.0]);
+        // ...while an unlisted class still reads the flat seeds
+        let gemm = x.device_ratios(KernelClass::GemmI8).to_vec();
+        assert_eq!(gemm, vec![1.0, 3.0]);
     }
 
     // ---- XpuExecutor ----

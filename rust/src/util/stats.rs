@@ -67,16 +67,33 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summarize `samples`, ignoring non-finite values: one poisoned
+    /// metric (NaN TTFT from a dead stream, an ∞ from a zero divide) must
+    /// not take down a whole bench report. `n` counts the finite samples
+    /// actually summarized; if every sample is non-finite the summary is
+    /// explicitly empty (`n == 0`, all fields zero).
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary::of(empty)");
-        let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|s| s.is_finite()).collect();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        if sorted.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                stddev: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
         let mut w = Welford::new();
-        for &s in samples {
+        for &s in &sorted {
             w.push(s);
         }
         Summary {
-            n: samples.len(),
+            n: sorted.len(),
             mean: w.mean(),
             stddev: w.stddev(),
             min: sorted[0],
@@ -145,6 +162,22 @@ mod tests {
         assert!((s.p50 - 50.5).abs() < 1e-9);
         assert!(s.p95 > 90.0 && s.p95 < 100.0);
         assert!(s.min == 1.0 && s.max == 100.0);
+    }
+
+    #[test]
+    fn summary_survives_poisoned_samples() {
+        // NaN/∞ entries are dropped, not propagated (and never panic the
+        // old `partial_cmp().unwrap()` sort)
+        let xs = [1.0, f64::NAN, 2.0, f64::INFINITY, 3.0, f64::NEG_INFINITY];
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        // all-poisoned input yields an explicitly empty summary
+        let e = Summary::of(&[f64::NAN, f64::NAN]);
+        assert_eq!(e.n, 0);
+        assert_eq!(e.mean, 0.0);
     }
 
     #[test]

@@ -9,7 +9,7 @@ use dynpar::coordinator::{AllocPolicy, Coordinator, Lease};
 use dynpar::cpu::{presets, CoreKind, CpuSpec};
 use dynpar::engine::phantom::{decode_invocations, PhantomSystem};
 use dynpar::exec::{ParallelRuntime, PhantomWork};
-use dynpar::kernels::cost;
+use dynpar::kernels::{cost, KernelClass};
 use dynpar::model::ModelConfig;
 use dynpar::perf::PerfConfig;
 use dynpar::sched::DynamicScheduler;
@@ -132,7 +132,7 @@ fn leases_rebalance_after_mid_run_background_load_shift() {
         let mut last = 0.0;
         for _ in 0..10 {
             let res = rt.run(&probe);
-            coord.observe(lease, &res);
+            coord.observe(lease, KernelClass::GemmI8, &res);
             last = res.wall_secs;
         }
         last_healthy.push(last);
@@ -153,7 +153,7 @@ fn leases_rebalance_after_mid_run_background_load_shift() {
         let mut last = 0.0;
         for _ in 0..12 {
             let res = rt.run(&probe);
-            coord.observe(lease, &res);
+            coord.observe(lease, KernelClass::GemmI8, &res);
             last = res.wall_secs;
         }
         shifted_last.push(last);
@@ -197,7 +197,7 @@ fn leases_rebalance_after_mid_run_background_load_shift() {
         let mut last = 0.0;
         for _ in 0..12 {
             let res = rt.run(&probe);
-            coord.observe(lease, &res);
+            coord.observe(lease, KernelClass::GemmI8, &res);
             last = res.wall_secs;
         }
         rebalanced_last.push(last);
@@ -225,7 +225,6 @@ fn leases_rebalance_after_mid_run_background_load_shift() {
 fn hetero_lease_with_npu_beats_best_cores_only_split() {
     use dynpar::bench_harness::pr3::sustained_rate;
     use dynpar::coordinator::{bus_share, XpuAffinity};
-    use dynpar::kernels::KernelClass;
     use dynpar::sim::xpu::AcceleratorSpec;
 
     let ultra = presets::ultra_125h();

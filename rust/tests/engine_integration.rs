@@ -96,8 +96,8 @@ fn perf_table_transfers_across_requests() {
     // timing difference is tiny; the kernel-level difference is not.)
     use dynpar::exec::PhantomWork;
     use dynpar::kernels::cost;
-    // compute-bound probe of the trained (GemvQ4, VNNI) row, large enough
-    // that dispatch overhead is negligible
+    // compute-bound probe of the trained (GemmI8, VNNI) row — the prefill
+    // matmul class — large enough that dispatch overhead is negligible
     let probe = PhantomWork::new(cost::qmatmul_cost(64, 4096, 4096));
 
     let mut cold_engine = engine("dynamic");
@@ -111,7 +111,7 @@ fn perf_table_transfers_across_requests() {
     // and the learned ratios are visibly hybrid
     let rel = warm_engine
         .rt
-        .relative_ratios(dynpar::kernels::KernelClass::GemvQ4, dynpar::cpu::Isa::AvxVnni)
+        .relative_ratios(dynpar::kernels::KernelClass::GemmI8, dynpar::cpu::Isa::AvxVnni)
         .unwrap();
     assert!(rel[0] > 1.2, "ratios not learned: {rel:?}");
 }

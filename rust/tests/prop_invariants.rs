@@ -340,14 +340,16 @@ fn prop_coordinator_rebalance_stable_under_random_observations() {
                     per_core_secs,
                     units_done,
                 };
-                coord.observe(&lease, &res);
+                let class = [KernelClass::GemmI8, KernelClass::GemvQ4, KernelClass::Attention]
+                    [rng.below(3) as usize];
+                coord.observe(&lease, class, &res);
                 if rng.chance(0.2) {
                     stale = coord.lease(stream).unwrap().clone();
                 }
                 if rng.chance(0.3) {
                     coord.rebalance();
                 }
-                for &s in coord.strengths() {
+                for s in coord.strengths() {
                     if !(s > 0.0 && s.is_finite()) {
                         return Err(format!("bad strength {s}"));
                     }
@@ -431,7 +433,7 @@ fn prop_hetero_leases_stay_disjoint_covering_with_single_owner_accels() {
                             wall_secs: 1.0,
                             units_done: (0..nu).map(|_| rng.below(10_000) as usize).collect(),
                         };
-                        coord.observe(&lease, &res);
+                        coord.observe(&lease, KernelClass::GemvQ4, &res);
                     }
                     _ => {}
                 }
@@ -685,6 +687,7 @@ fn prop_observe_round_converges_split_ratio_to_throughput_share() {
                 let n_d = 1 + rng.below(8) as usize;
                 let folded = coord.observe_round(
                     &lease,
+                    KernelClass::GemvQ4,
                     (n_c as f64 / r_cpu, n_c),
                     (n_d as f64 / r_dev, n_d),
                 );
@@ -701,7 +704,7 @@ fn prop_observe_round_converges_split_ratio_to_throughput_share() {
             }
             // stale lease (post-rebalance epoch) must be dropped, never folded
             coord.rebalance();
-            if coord.observe_round(&lease, (1.0, 1), (1.0, 1)) {
+            if coord.observe_round(&lease, KernelClass::GemvQ4, (1.0, 1), (1.0, 1)) {
                 return Err("stale-epoch round was folded".into());
             }
             Ok(())
@@ -814,6 +817,165 @@ fn prop_async_batch_migration_keeps_streams_bit_identical() {
                 let (expect, _) = e.generate(&mut s, &r.prompt, r.max_new_tokens);
                 if rep.tokens_of(r.id) != &expect[..] {
                     return Err(format!("request {} diverged across async migration", r.id));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Class-keyed strength learning: a fold tagged with one kernel class
+/// (a) preserves that row's total strength mass exactly (the eq.-2
+/// rescale is mass-conserving, not approximate), (b) never moves any
+/// *other* class's row, and (c) keeps the allocation blend positive and
+/// finite — for any machine, timings and class interleaving.
+#[test]
+fn prop_class_rows_fold_mass_preserving_and_independent() {
+    use dynpar::exec::RunResult;
+    prop::check_with(
+        "class_rows_independent",
+        PropConfig { iters: 30, seed: 0xC1A55 },
+        &mut |rng| {
+            let spec = presets::preset_by_name(
+                ["core_12900k", "ultra_125h", "homogeneous_16"][rng.below(3) as usize],
+            )
+            .unwrap();
+            let mut coord = Coordinator::new(spec, AllocPolicy::Balanced);
+            coord.admit(0);
+            let classes = [KernelClass::GemmI8, KernelClass::GemvQ4, KernelClass::Attention];
+            for _ in 0..12 {
+                let lease = coord.lease(0).unwrap().clone();
+                let nw = lease.n_cores();
+                let class = classes[rng.below(3) as usize];
+                let res = RunResult {
+                    per_core_secs: (0..nw).map(|_| Some(rng.uniform(1e-6, 1.0))).collect(),
+                    wall_secs: 1.0,
+                    units_done: (0..nw).map(|_| 1 + rng.below(10_000) as usize).collect(),
+                };
+                let before: Vec<Vec<f64>> =
+                    classes.iter().map(|&c| coord.class_strengths(c)).collect();
+                if !coord.observe(&lease, class, &res) {
+                    return Err("valid fold rejected".into());
+                }
+                for (&c, old) in classes.iter().zip(&before) {
+                    let now = coord.class_strengths(c);
+                    if c == class {
+                        // every core participated, so the whole row's
+                        // mass is conserved by the rescaled EWMA
+                        let (a, b): (f64, f64) = (old.iter().sum(), now.iter().sum());
+                        if (a - b).abs() > 1e-9 * a {
+                            return Err(format!("{c:?} mass drifted {a} -> {b}"));
+                        }
+                    } else if now != *old {
+                        return Err(format!("{c:?} row moved by a {class:?} fold"));
+                    }
+                }
+                for s in coord.strengths() {
+                    if !(s > 0.0 && s.is_finite()) {
+                        return Err(format!("bad blended strength {s}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Phase-disaggregated serving never changes the numbers: a trace served
+/// through an `ExecMode::Disaggregated` prefill/decode batcher pair —
+/// every request crossing the handoff seam — produces token streams
+/// bit-identical to a solo `Engine::generate` on the same weights (the
+/// blended-lease oracle). Only timing may differ.
+#[test]
+fn prop_disaggregated_handoff_streams_match_blended_oracle() {
+    use dynpar::coordinator::{ExecMode, Lease};
+    use dynpar::engine::Engine;
+    use dynpar::model::{ModelConfig, ModelWeights};
+    use dynpar::server::fleet::{DriftMonitor, EngineFactory};
+    use dynpar::server::protocol::Request;
+    use dynpar::server::testing::{run_fleet, TraceEvent};
+    use dynpar::server::BatcherOpts;
+    use dynpar::sim::xpu::XpuDispatch;
+    use std::sync::Arc;
+
+    prop::check_with(
+        "disaggregated_streams_identical",
+        PropConfig { iters: 6, seed: 0xD15A6 },
+        &mut |rng| {
+            let spec = presets::preset_by_name(
+                ["core_12900k", "ultra_125h"][rng.below(2) as usize],
+            )
+            .unwrap();
+            let cfg = ModelConfig::micro();
+            let weights = Arc::new(ModelWeights::random_init(&cfg, rng.next_u64()));
+            let factory: EngineFactory<SimExecutor> = {
+                let spec = spec.clone();
+                let cfg = cfg.clone();
+                let weights = Arc::clone(&weights);
+                Box::new(move |lease: &Lease, _dispatch: XpuDispatch| {
+                    let exec = lease.sim_executor(
+                        &spec,
+                        SimConfig { execute_real: true, ..SimConfig::noiseless() },
+                    );
+                    Engine::new(
+                        cfg.clone(),
+                        Arc::clone(&weights),
+                        exec,
+                        scheduler_by_name("dynamic").unwrap(),
+                        PerfConfig::default(),
+                    )
+                })
+            };
+            let mut coord = Coordinator::new(spec.clone(), AllocPolicy::Balanced);
+            coord.set_exec_mode(ExecMode::Disaggregated);
+            let n_req = 3 + rng.below(3) as usize;
+            let mut reqs = Vec::new();
+            let mut trace = vec![TraceEvent::Connect { at: 0.0, stream: 0 }];
+            for id in 0..n_req {
+                let plen = 1 + rng.below(8) as usize;
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.below(128) as u32).collect();
+                let req = Request {
+                    id: id as u64,
+                    prompt,
+                    max_new_tokens: 2 + rng.below(6) as usize,
+                };
+                trace.push(TraceEvent::arrive(rng.uniform(1e-6, 1e-3), 0, req.clone()));
+                reqs.push(req);
+            }
+            let rep = run_fleet(
+                coord,
+                &factory,
+                BatcherOpts {
+                    max_batch: 1 + rng.below(3) as usize,
+                    prefill_chunk: 1 + rng.below(5) as usize,
+                },
+                64,
+                DriftMonitor::disabled(),
+                trace,
+            );
+            if !rep.all_finished() {
+                return Err("not every request finished".into());
+            }
+            // every request must actually cross the prefill→decode seam
+            if rep.handoffs < reqs.len() {
+                return Err(format!("{} handoffs for {} requests", rep.handoffs, reqs.len()));
+            }
+            for r in &reqs {
+                let exec = SimExecutor::new(
+                    spec.clone(),
+                    SimConfig { execute_real: true, ..SimConfig::noiseless() },
+                );
+                let mut e = Engine::new(
+                    cfg.clone(),
+                    Arc::clone(&weights),
+                    exec,
+                    scheduler_by_name("dynamic").unwrap(),
+                    PerfConfig::default(),
+                );
+                let mut s = e.new_session();
+                let (expect, _) = e.generate(&mut s, &r.prompt, r.max_new_tokens);
+                if rep.tokens_of(r.id) != &expect[..] {
+                    return Err(format!("request {} diverged across the phase handoff", r.id));
                 }
             }
             Ok(())

@@ -6,7 +6,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
-use dynpar::coordinator::{AllocPolicy, Coordinator, Lease};
+use dynpar::coordinator::{AllocPolicy, Coordinator, ExecMode, Lease};
 use dynpar::cpu::presets;
 use dynpar::engine::Engine;
 use dynpar::model::{ModelConfig, ModelWeights};
@@ -243,6 +243,59 @@ fn malformed_lines_do_not_kill_the_connection() {
     }
     assert!(saw_done);
     handle.shutdown();
+}
+
+/// Start a dynamic server whose leases run phase-disaggregated: each
+/// lease becomes a prefill batcher on compute-strong cores plus a decode
+/// batcher on the bandwidth-rich rest, linked by the in-process handoff.
+fn start_disaggregated_server() -> ServerHandle {
+    let machine = presets::core_12900k();
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, 5));
+    let factory = {
+        let machine = machine.clone();
+        move |lease: &Lease, _dispatch: XpuDispatch| {
+            let exec = lease.sim_executor(
+                &machine,
+                SimConfig { execute_real: true, ..SimConfig::noiseless() },
+            );
+            Engine::new(
+                cfg.clone(),
+                Arc::clone(&weights),
+                exec,
+                Box::new(DynamicScheduler),
+                PerfConfig::default(),
+            )
+        }
+    };
+    let mut coord = Coordinator::new(machine, AllocPolicy::Balanced);
+    coord.set_exec_mode(ExecMode::Disaggregated);
+    serve_dynamic("127.0.0.1:0", coord, factory, ServerOpts::default()).unwrap()
+}
+
+#[test]
+fn disaggregated_server_hands_off_and_matches_static_tokens() {
+    // the prefill batcher parks the finished prompt, the decode batcher
+    // adopts the session through the handoff buffer and streams it — the
+    // tokens must match the classic single-engine server bit for bit
+    let disagg = start_disaggregated_server();
+    let single = start_server(2);
+    let get = |addr| {
+        roundtrip(addr, r#"{"id": 1, "prompt": [6, 2, 9], "max_new_tokens": 6}"#)
+            .iter()
+            .filter_map(|m| m.get("token").and_then(Json::as_i64))
+            .collect::<Vec<_>>()
+    };
+    let d = get(disagg.addr);
+    assert_eq!(d.len(), 6);
+    assert_eq!(d, get(single.addr));
+    // the request crossed the prefill→decode seam exactly once
+    let metrics = roundtrip(disagg.addr, r#"{"cmd":"metrics"}"#);
+    let m = metrics[0].get("metrics").unwrap();
+    assert!(m.get("handoffs").unwrap().as_i64().unwrap() >= 1, "{m:?}");
+    assert_eq!(m.get("requests").unwrap().as_i64(), Some(1));
+    disagg.shutdown();
+    single.shutdown();
 }
 
 #[test]

@@ -8,6 +8,7 @@ pub mod fig4;
 pub mod pr3;
 pub mod pr4;
 pub mod pr7;
+pub mod pr8;
 pub mod report;
 
 use crate::cpu::CpuSpec;

@@ -524,6 +524,13 @@ impl Coordinator {
         self.epoch
     }
 
+    /// The machine's full memory-bus bandwidth (GB/s) — the reference
+    /// every lease's `bus_share_gbps` is a proportional slice of, and the
+    /// denominator of the serving-side bandwidth-utilization export.
+    pub fn bus_reference_gbps(&self) -> f64 {
+        self.spec.bus_bw_gbps
+    }
+
     /// Current measured per-unit strengths **blended across kernel
     /// classes** (the mean over every observed class row; the seed row
     /// when nothing was observed yet): cores in global order, then one
@@ -1310,6 +1317,7 @@ mod tests {
                 per_core_secs: vec![Some(2.0), Some(1.0)],
                 wall_secs: 2.0,
                 units_done: vec![100, 100],
+                bytes: 0.0,
             };
             c.observe(&l0, KernelClass::GemvQ4, &res);
         }
@@ -1346,6 +1354,7 @@ mod tests {
                 per_core_secs: vec![Some(1.0), None, None, None],
                 wall_secs: 1.0,
                 units_done: vec![10, 0, 0, 0],
+                bytes: 0.0,
             },
         );
         assert!(!accepted);
@@ -1355,6 +1364,7 @@ mod tests {
             per_core_secs: vec![Some(1.0), Some(4.0)],
             wall_secs: 4.0,
             units_done: vec![100, 100],
+            bytes: 0.0,
         };
         assert!(!c.observe(&foreign, KernelClass::GemvQ4, &skewed));
         assert_eq!(c.strengths(), &before[..]);
@@ -1550,6 +1560,7 @@ mod tests {
             per_core_secs: vec![Some(1.0), Some(1.0), Some(1.0), Some(1.0), Some(0.5)],
             wall_secs: 1.0,
             units_done: vec![100, 100, 100, 100, 100],
+            bytes: 0.0,
         };
         for _ in 0..10 {
             let cur = c.lease(0).unwrap().clone();
@@ -1584,6 +1595,7 @@ mod tests {
         let res = RunResult {
             wall_secs: 1.0,
             units_done: vec![100; l0.n_cores()],
+            bytes: 0.0,
             per_core_secs: times,
         };
         for _ in 0..12 {
@@ -1610,6 +1622,7 @@ mod tests {
                 per_core_secs: vec![Some(bad), Some(1.0), Some(1.0), Some(1.0)],
                 wall_secs: 1.0,
                 units_done: vec![100, 100, 100, 100],
+                bytes: 0.0,
             };
             assert!(!c.observe(&l0, KernelClass::GemvQ4, &res), "accepted t={bad}");
             assert!(!c.observe_round(&l0, KernelClass::GemvQ4, (bad, 100), (1.0, 100)));
@@ -1631,6 +1644,7 @@ mod tests {
             per_core_secs: vec![Some(4.0), Some(1.0), Some(1.0), Some(1.0)],
             wall_secs: 4.0,
             units_done: vec![100, 100, 100, 100],
+            bytes: 0.0,
         };
         let gemv_before = c.class_strengths(KernelClass::GemvQ4);
         for _ in 0..15 {
@@ -1661,11 +1675,13 @@ mod tests {
                 .collect(),
             wall_secs: 2.0,
             units_done: vec![100; 16],
+            bytes: 0.0,
         };
         let gemv_res = RunResult {
             per_core_secs: vec![Some(1.0); 16],
             wall_secs: 1.0,
             units_done: vec![100; 16],
+            bytes: 0.0,
         };
         for _ in 0..15 {
             assert!(c.observe(&lease, KernelClass::GemmI8, &gemm_res));
@@ -1686,6 +1702,7 @@ mod tests {
             per_core_secs: vec![Some(1.0); dc.n_cores()],
             wall_secs: 1.0,
             units_done: vec![10; dc.n_cores()],
+            bytes: 0.0,
         };
         assert!(c.observe(&dc, KernelClass::GemvQ4, &sub_res));
         // bus shares are proportional and sum to the parent's

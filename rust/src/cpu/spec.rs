@@ -26,6 +26,18 @@ pub enum Isa {
 impl Isa {
     pub const ALL: [Isa; 4] = [Isa::Scalar, Isa::Avx2, Isa::AvxVnni, Isa::Stream];
 
+    /// Position in [`Isa::ALL`], as a const jump table — dense-table
+    /// indexing without a linear scan (see `perf::slot`).
+    #[inline]
+    pub const fn index(&self) -> usize {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Avx2 => 1,
+            Isa::AvxVnni => 2,
+            Isa::Stream => 3,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Isa::Scalar => "scalar",

@@ -5,6 +5,14 @@
 //!
 //! Generic over the executor, so the *same* engine runs on the real
 //! core-bound thread pool and on the simulated hybrid CPU.
+//!
+//! The host path is allocation-free at steady state: all activations,
+//! quantized rows, block sums, attention scores and dequant rows live in
+//! a persistent per-engine [`Scratch`] arena that grows to the model's
+//! working set once and is then only borrowed. Fused dispatch
+//! ([`EngineOpts::fused`]) additionally collapses QKV, gate/up and the
+//! per-position prefill attention into single scheduled kernels, cutting
+//! the dispatch count per decoded token from `8·L + 1` to `5·L + 1`.
 
 pub mod phantom;
 
@@ -16,7 +24,7 @@ use crate::kernels::{attention, cost, elementwise, gemv_q4, rope};
 use crate::metrics::PhaseMetrics;
 use crate::model::{argmax, ModelConfig, ModelWeights, Session};
 use crate::perf::PerfConfig;
-use crate::quant::{quantize_q8_dynamic, MatQ4};
+use crate::quant::{quantize_q8_dynamic_into, MatQ4, QuantizedRow};
 use crate::sched::Scheduler;
 
 /// Engine knobs.
@@ -28,11 +36,90 @@ pub struct EngineOpts {
     pub int_gemv: bool,
     /// partition grain (rows) for matmul kernels
     pub grain: usize,
+    /// fuse QKV / gate-up projections and batch prefill attention into
+    /// single scheduled kernels. Token streams are bit-identical either
+    /// way (each output row is computed by the same serial code in the
+    /// same accumulation order); only the dispatch count changes.
+    pub fused: bool,
 }
 
 impl Default for EngineOpts {
     fn default() -> Self {
-        EngineOpts { int_gemv: false, grain: 1 }
+        EngineOpts { int_gemv: false, grain: 1, fused: true }
+    }
+}
+
+/// Kernel-shared scratch: quantized activation row + per-block sums,
+/// computed once per GEMV on the leader instead of once per worker.
+#[derive(Default)]
+pub struct KernScratch {
+    xsums_f: Vec<f32>,
+    xq: QuantizedRow,
+    xsums_i: Vec<i32>,
+}
+
+/// Persistent per-engine scratch arena. Every buffer the forward pass
+/// needs is resized (never reallocated at steady state) and borrowed;
+/// worker-indexed slabs give each pool worker a private window so no
+/// kernel closure ever allocates.
+#[derive(Default)]
+pub struct Scratch {
+    // decode activations
+    x: Vec<f32>,
+    xa: Vec<f32>,
+    qkv: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    xf: Vec<f32>,
+    gateup: Vec<f32>,
+    act: Vec<f32>,
+    logits: Vec<f32>,
+    // kernel-shared
+    kern: KernScratch,
+    /// attention score slab: one `t_max` window per worker
+    score_slab: Vec<f32>,
+    /// qmatmul dequant slab: one `max(d, d_ff)` row window per worker
+    deq_slab: Vec<f32>,
+    // prefill chunk activations (sized to the largest chunk seen)
+    xs: Vec<f32>,
+    pxa: Vec<f32>,
+    pq: Vec<f32>,
+    pk: Vec<f32>,
+    pv: Vec<f32>,
+    pattn: Vec<f32>,
+    pproj: Vec<f32>,
+    pxf: Vec<f32>,
+    pgate: Vec<f32>,
+    pup: Vec<f32>,
+    pact: Vec<f32>,
+    /// transposed qmatmul output, `[N_stacked, S]`
+    out_t: Vec<f32>,
+}
+
+impl Scratch {
+    /// Total heap capacity held by the arena, in bytes — the leak/reset
+    /// invariant: steady-state inference must not grow this.
+    pub fn footprint_bytes(&self) -> usize {
+        let f32s = [
+            &self.x, &self.xa, &self.qkv, &self.attn, &self.proj, &self.xf, &self.gateup,
+            &self.act, &self.logits, &self.kern.xsums_f, &self.score_slab, &self.deq_slab,
+            &self.xs, &self.pxa, &self.pq, &self.pk, &self.pv, &self.pattn, &self.pproj,
+            &self.pxf, &self.pgate, &self.pup, &self.pact, &self.out_t,
+        ];
+        f32s.iter().map(|v| v.capacity() * 4).sum::<usize>()
+            + self.kern.xsums_i.capacity() * 4
+            + self.kern.xq.q.capacity()
+    }
+}
+
+/// Transpose segment `seg` (rows `seg·n .. (seg+1)·n`) of a stacked
+/// `[N_stacked, s]` qmatmul output into row-major `[s, n]`.
+fn transpose_seg(out_t: &[f32], n: usize, s: usize, seg: usize, dst: &mut [f32]) {
+    let base = seg * n * s;
+    for nn in 0..n {
+        for si in 0..s {
+            dst[si * n + nn] = out_t[base + nn * s + si];
+        }
     }
 }
 
@@ -43,6 +130,14 @@ pub struct Engine<E: Executor> {
     pub opts: EngineOpts,
     /// accumulated kernel time (virtual for sim executors, wall for host)
     pub kernel_secs: f64,
+    /// accumulated unique kernel memory traffic in bytes (mirrors
+    /// `kernel_secs`; together they give achieved GB/s)
+    pub bytes_moved: f64,
+    scratch: Scratch,
+    /// per-worker GEMV row-tile widths derived from the executor's core
+    /// classes (P=4, E=2, LPE=1)
+    tiles: Vec<usize>,
+    n_workers: usize,
 }
 
 impl<E: Executor> Engine<E> {
@@ -54,12 +149,18 @@ impl<E: Executor> Engine<E> {
         perf_cfg: PerfConfig,
     ) -> Engine<E> {
         cfg.validate().expect("invalid model config");
+        let tiles: Vec<usize> = exec.core_kinds().iter().map(|&k| gemv_q4::tile_for(k)).collect();
+        let n_workers = exec.n_workers();
         Engine {
             cfg,
             weights,
             rt: ParallelRuntime::new(exec, sched, perf_cfg),
             opts: EngineOpts::default(),
             kernel_secs: 0.0,
+            bytes_moved: 0.0,
+            scratch: Scratch::default(),
+            tiles,
+            n_workers,
         }
     }
 
@@ -67,209 +168,418 @@ impl<E: Executor> Engine<E> {
         Session::new(&self.cfg)
     }
 
+    /// Arena heap footprint (see [`Scratch::footprint_bytes`]).
+    pub fn scratch_footprint_bytes(&self) -> usize {
+        self.scratch.footprint_bytes()
+    }
+
     // ---- scheduled kernels ----
 
-    /// GEMV through the dynamic-parallel loop.
-    fn gemv(&mut self, w: &MatQ4, x: &[f32]) -> Vec<f32> {
-        let n = w.rows;
-        let mut y = vec![0.0f32; n];
-        let c = cost::gemv_q4_cost(w.cols, n);
-        let wall;
-        {
-            let shared = SharedSlice::new(&mut y);
+    /// GEMV over row-stacked matrices (all sharing `x`) through the
+    /// dynamic-parallel loop; `y` is the full stacked output. Block sums
+    /// (and on the int path the q8 row) are computed once here, not per
+    /// worker; workers run the core-class-tiled microkernel.
+    fn gemv_multi(&mut self, ws: &[&MatQ4], x: &[f32], y: &mut [f32], kern: &mut KernScratch) {
+        let k = ws[0].cols;
+        let n_total: usize = ws.iter().map(|w| w.rows).sum();
+        debug_assert_eq!(y.len(), n_total);
+        let c = cost::gemv_q4_cost(k, n_total);
+        let tiles = &self.tiles;
+        let (wall, bytes) = {
+            let shared = SharedSlice::new(y);
             if self.opts.int_gemv {
-                let xq = quantize_q8_dynamic(x);
-                let work = FnWork::new(c, self.opts.grain, move |_wk, r: Range<usize>| {
+                quantize_q8_dynamic_into(x, &mut kern.xq);
+                gemv_q4::block_sums_i32_into(&kern.xq.q, &mut kern.xsums_i);
+                let (xq, xscale, xsums) = (&kern.xq.q, kern.xq.scale, &kern.xsums_i);
+                let work = FnWork::new(c, self.opts.grain, move |wk, r: Range<usize>| {
                     // SAFETY: scheduler ranges are disjoint
                     let out = unsafe { shared.slice_mut(r.clone()) };
-                    gemv_q4::gemv_q8q4_rows_into(w, &xq, r, out);
+                    let tile = tiles.get(wk).copied().unwrap_or(1);
+                    gemv_q4::gemv_q8q4_multi_rows_pre(ws, xq, xscale, xsums, r, out, tile);
                 });
-                wall = self.rt.run(&work).wall_secs;
+                let res = self.rt.run(&work);
+                (res.wall_secs, res.bytes)
             } else {
-                let work = FnWork::new(c, self.opts.grain, move |_wk, r: Range<usize>| {
+                gemv_q4::block_sums_f32_into(x, &mut kern.xsums_f);
+                let xsums = &kern.xsums_f;
+                let work = FnWork::new(c, self.opts.grain, move |wk, r: Range<usize>| {
                     let out = unsafe { shared.slice_mut(r.clone()) };
-                    gemv_q4::gemv_q4_f32_rows_into(w, x, r, out);
+                    let tile = tiles.get(wk).copied().unwrap_or(1);
+                    gemv_q4::gemv_q4_f32_multi_rows_pre(ws, x, xsums, r, out, tile);
                 });
-                wall = self.rt.run(&work).wall_secs;
+                let res = self.rt.run(&work);
+                (res.wall_secs, res.bytes)
             }
-        }
+        };
         self.kernel_secs += wall;
-        y
+        self.bytes_moved += bytes;
     }
 
-    /// Prefill matmul (`x` is S×K) through the dynamic-parallel loop.
-    /// Returns row-major `[S, N]`.
-    fn qmatmul(&mut self, w: &MatQ4, x: &[f32], s: usize) -> Vec<f32> {
-        let n = w.rows;
-        let k = w.cols;
-        let mut out_t = vec![0.0f32; n * s]; // transposed: worker-contiguous
-        let c = cost::qmatmul_cost(s, k, n);
-        {
-            let shared = SharedSlice::new(&mut out_t);
-            let work = FnWork::new(c, self.opts.grain, move |_wk, r: Range<usize>| {
+    /// Prefill matmul over row-stacked matrices (`x` is S×K), transposed
+    /// output `[N_stacked, S]` into `out_t`. Dequant rows come from the
+    /// per-worker `deq_slab` windows — the kernel closure never allocates.
+    fn qmatmul_multi_t(
+        &mut self,
+        ws: &[&MatQ4],
+        x: &[f32],
+        s: usize,
+        out_t: &mut [f32],
+        deq_slab: &mut [f32],
+    ) {
+        let k = ws[0].cols;
+        let n_total: usize = ws.iter().map(|w| w.rows).sum();
+        debug_assert_eq!(out_t.len(), n_total * s);
+        let kw = deq_slab.len() / self.n_workers;
+        debug_assert!(kw >= k);
+        let c = cost::qmatmul_cost(s, k, n_total);
+        let (wall, bytes) = {
+            let shared = SharedSlice::new(out_t);
+            let slab = SharedSlice::new(deq_slab);
+            let work = FnWork::new(c, self.opts.grain, move |wk, r: Range<usize>| {
+                // SAFETY: ranges disjoint; slab windows disjoint per worker
                 let out = unsafe { shared.slice_mut(r.start * s..r.end * s) };
-                let mut scratch = vec![0.0f32; k];
-                gemv_q4::qmatmul_f32_rows_into_t(w, x, s, r, out, &mut scratch);
+                let scratch = unsafe { slab.slice_mut(wk * kw..wk * kw + k) };
+                gemv_q4::qmatmul_f32_multi_rows_into_t(ws, x, s, r, out, scratch);
             });
-            self.kernel_secs += self.rt.run(&work).wall_secs;
-        }
-        // transpose [N, S] → [S, N]
-        let mut out = vec![0.0f32; s * n];
-        for nn in 0..n {
-            for si in 0..s {
-                out[si * n + nn] = out_t[nn * s + si];
-            }
-        }
-        out
+            let res = self.rt.run(&work);
+            (res.wall_secs, res.bytes)
+        };
+        self.kernel_secs += wall;
+        self.bytes_moved += bytes;
     }
 
-    /// Decode attention through the dynamic-parallel loop (heads split).
-    fn attention(&mut self, cache: &attention::KvLayer, q: &[f32], pos: usize) -> Vec<f32> {
-        let (h, dh) = (cache.h, cache.dh);
-        let mut out = vec![0.0f32; h * dh];
-        let c = cost::attention_decode_cost(h, pos + 1, dh);
-        {
-            let shared = SharedSlice::new(&mut out);
-            let work = FnWork::new(c, 1, move |_wk, r: Range<usize>| {
-                let full = unsafe { shared.slice_mut(r.start * dh..r.end * dh) };
-                let mut scratch = Vec::new();
-                // compute heads r into the window (relative indexing)
-                for (hi, head) in r.enumerate() {
-                    let mut tmp = vec![0.0f32; cache.h * dh];
-                    attention::attention_decode_range(
-                        q,
-                        cache,
-                        pos,
-                        &mut tmp,
-                        &mut scratch,
-                        head..head + 1,
-                    );
-                    full[hi * dh..(hi + 1) * dh].copy_from_slice(&tmp[head * dh..(head + 1) * dh]);
-                }
+    /// Decode attention through the dynamic-parallel loop (heads split);
+    /// `out` is the full `[h, dh]` buffer, score rows come from the
+    /// per-worker `slab` windows.
+    fn attention_into(
+        &mut self,
+        cache: &attention::KvLayer,
+        q: &[f32],
+        pos: usize,
+        out: &mut [f32],
+        slab: &mut [f32],
+    ) {
+        let dh = cache.dh;
+        let t_cap = cache.t_max;
+        let t_len = pos + 1;
+        debug_assert!(slab.len() >= self.n_workers * t_cap);
+        let c = cost::attention_decode_cost(cache.h, t_len, dh);
+        let (wall, bytes) = {
+            let out_s = SharedSlice::new(out);
+            let slab_s = SharedSlice::new(slab);
+            let work = FnWork::new(c, 1, move |wk, r: Range<usize>| {
+                // SAFETY: head ranges disjoint; one slab window per worker
+                let win = unsafe { out_s.slice_mut(r.start * dh..r.end * dh) };
+                let scores = unsafe { slab_s.slice_mut(wk * t_cap..wk * t_cap + t_len) };
+                attention::attention_decode_rows_into(q, cache, pos, r, win, scores);
             });
-            self.kernel_secs += self.rt.run(&work).wall_secs;
-        }
-        out
+            let res = self.rt.run(&work);
+            (res.wall_secs, res.bytes)
+        };
+        self.kernel_secs += wall;
+        self.bytes_moved += bytes;
+    }
+
+    /// Batched prefill attention: one kernel for the whole `s`-row chunk,
+    /// parallel over `(position, head)` units.
+    fn attention_prefill_into(
+        &mut self,
+        cache: &attention::KvLayer,
+        q: &[f32],
+        pos0: usize,
+        s: usize,
+        out: &mut [f32],
+        slab: &mut [f32],
+    ) {
+        let (h, dh) = (cache.h, cache.dh);
+        let t_cap = cache.t_max;
+        let t_need = pos0 + s;
+        debug_assert!(slab.len() >= self.n_workers * t_cap);
+        let c = cost::attention_prefill_cost(s, h, pos0, dh);
+        let (wall, bytes) = {
+            let out_s = SharedSlice::new(out);
+            let slab_s = SharedSlice::new(slab);
+            let work = FnWork::new(c, 1, move |wk, r: Range<usize>| {
+                // SAFETY: unit ranges disjoint; one slab window per worker
+                let win = unsafe { out_s.slice_mut(r.start * dh..r.end * dh) };
+                let scores = unsafe { slab_s.slice_mut(wk * t_cap..wk * t_cap + t_need) };
+                attention::attention_prefill_units_into(q, cache, pos0, s, r, win, scores);
+            });
+            let res = self.rt.run(&work);
+            (res.wall_secs, res.bytes)
+        };
+        self.kernel_secs += wall;
+        self.bytes_moved += bytes;
     }
 
     // ---- model forward ----
 
-    /// One scheduled decode step — must produce exactly the logits of
-    /// [`crate::model::decode_step_serial`] when `int_gemv` is off.
-    pub fn decode_step(&mut self, session: &mut Session, token: u32) -> Vec<f32> {
+    fn decode_step_with(&mut self, session: &mut Session, token: u32, scr: &mut Scratch) {
         let weights = Arc::clone(&self.weights);
-        let cfg = self.cfg.clone();
-        let d = cfg.d_model;
-        let (h, dh) = (cfg.n_heads, cfg.head_dim());
+        let d = self.cfg.d_model;
+        let (h, dh) = (self.cfg.n_heads, self.cfg.head_dim());
+        let d_ff = self.cfg.d_ff;
+        let (eps, theta) = (self.cfg.rms_eps, self.cfg.rope_theta);
+        let t_max = self.cfg.t_max;
+        let vocab = weights.lm_head.rows;
         let pos = session.pos;
-        assert!(pos < cfg.t_max, "KV cache exhausted");
-        let mut x = weights.embed.row(token as usize).to_vec();
+        assert!(pos < t_max, "KV cache exhausted");
+
+        // grow-once arena shapes (no-ops at steady state)
+        scr.x.resize(d, 0.0);
+        scr.xa.resize(d, 0.0);
+        scr.qkv.resize(3 * d, 0.0);
+        scr.attn.resize(d, 0.0);
+        scr.proj.resize(d, 0.0);
+        scr.xf.resize(d, 0.0);
+        scr.gateup.resize(2 * d_ff, 0.0);
+        scr.act.resize(d_ff, 0.0);
+        scr.logits.resize(vocab, 0.0);
+        scr.score_slab.resize(self.n_workers * t_max, 0.0);
+
+        scr.x.copy_from_slice(weights.embed.row(token as usize));
+        let fused = self.opts.fused;
 
         for (li, layer) in weights.layers.iter().enumerate() {
-            let mut xa = vec![0.0f32; d];
-            elementwise::rmsnorm(&x, &layer.attn_norm, cfg.rms_eps, &mut xa);
-            let mut q = self.gemv(&layer.wq, &xa);
-            let mut k = self.gemv(&layer.wk, &xa);
-            let v = self.gemv(&layer.wv, &xa);
-            rope::rope_heads(&mut q, h, dh, pos as i32, cfg.rope_theta);
-            rope::rope_heads(&mut k, h, dh, pos as i32, cfg.rope_theta);
-            let cache = &mut session.kv[li];
-            for head in 0..h {
-                cache.write(
-                    head,
-                    pos,
-                    &k[head * dh..(head + 1) * dh],
-                    &v[head * dh..(head + 1) * dh],
+            elementwise::rmsnorm(&scr.x, &layer.attn_norm, eps, &mut scr.xa);
+            if fused {
+                self.gemv_multi(
+                    &[&layer.wq, &layer.wk, &layer.wv],
+                    &scr.xa,
+                    &mut scr.qkv,
+                    &mut scr.kern,
                 );
+            } else {
+                let (q, rest) = scr.qkv.split_at_mut(d);
+                let (kk, vv) = rest.split_at_mut(d);
+                self.gemv_multi(&[&layer.wq], &scr.xa, q, &mut scr.kern);
+                self.gemv_multi(&[&layer.wk], &scr.xa, kk, &mut scr.kern);
+                self.gemv_multi(&[&layer.wv], &scr.xa, vv, &mut scr.kern);
             }
-            let attn = self.attention(&session.kv[li], &q, pos);
-            let proj = self.gemv(&layer.wo, &attn);
-            elementwise::add_inplace(&mut x, &proj);
+            {
+                let (q, rest) = scr.qkv.split_at_mut(d);
+                let (kk, vv) = rest.split_at_mut(d);
+                rope::rope_heads(q, h, dh, pos as i32, theta);
+                rope::rope_heads(kk, h, dh, pos as i32, theta);
+                let cache = &mut session.kv[li];
+                for head in 0..h {
+                    cache.write(
+                        head,
+                        pos,
+                        &kk[head * dh..(head + 1) * dh],
+                        &vv[head * dh..(head + 1) * dh],
+                    );
+                }
+            }
+            self.attention_into(
+                &session.kv[li],
+                &scr.qkv[..d],
+                pos,
+                &mut scr.attn,
+                &mut scr.score_slab,
+            );
+            self.gemv_multi(&[&layer.wo], &scr.attn, &mut scr.proj, &mut scr.kern);
+            elementwise::add_inplace(&mut scr.x, &scr.proj);
 
-            let mut xf = vec![0.0f32; d];
-            elementwise::rmsnorm(&x, &layer.ffn_norm, cfg.rms_eps, &mut xf);
-            let gate = self.gemv(&layer.w1, &xf);
-            let up = self.gemv(&layer.w3, &xf);
-            let mut act = vec![0.0f32; cfg.d_ff];
-            elementwise::silu_mul(&gate, &up, &mut act);
-            let down = self.gemv(&layer.w2, &act);
-            elementwise::add_inplace(&mut x, &down);
+            elementwise::rmsnorm(&scr.x, &layer.ffn_norm, eps, &mut scr.xf);
+            if fused {
+                self.gemv_multi(&[&layer.w1, &layer.w3], &scr.xf, &mut scr.gateup, &mut scr.kern);
+            } else {
+                let (g, u) = scr.gateup.split_at_mut(d_ff);
+                self.gemv_multi(&[&layer.w1], &scr.xf, g, &mut scr.kern);
+                self.gemv_multi(&[&layer.w3], &scr.xf, u, &mut scr.kern);
+            }
+            {
+                let (g, u) = scr.gateup.split_at(d_ff);
+                elementwise::silu_mul(g, u, &mut scr.act);
+            }
+            self.gemv_multi(&[&layer.w2], &scr.act, &mut scr.proj, &mut scr.kern);
+            elementwise::add_inplace(&mut scr.x, &scr.proj);
         }
 
-        let mut xn = vec![0.0f32; d];
-        elementwise::rmsnorm(&x, &weights.final_norm, cfg.rms_eps, &mut xn);
+        elementwise::rmsnorm(&scr.x, &weights.final_norm, eps, &mut scr.xa);
         session.pos += 1;
-        self.gemv(&weights.lm_head, &xn)
+        self.gemv_multi(&[&weights.lm_head], &scr.xa, &mut scr.logits, &mut scr.kern);
     }
 
-    /// Scheduled prefill of a whole prompt chunk (any length ≤ capacity).
-    /// Returns the last token's logits.
-    pub fn prefill(&mut self, session: &mut Session, tokens: &[u32]) -> Vec<f32> {
+    /// One scheduled decode step into the arena — must produce exactly the
+    /// logits of [`crate::model::decode_step_serial`] when `int_gemv` is
+    /// off, fused or not. Returns a borrow of the arena's logits buffer;
+    /// steady-state calls perform zero heap allocations.
+    pub fn decode_step_in(&mut self, session: &mut Session, token: u32) -> &[f32] {
+        let mut scr = std::mem::take(&mut self.scratch);
+        self.decode_step_with(session, token, &mut scr);
+        self.scratch = scr;
+        &self.scratch.logits
+    }
+
+    /// Allocating convenience wrapper around [`Engine::decode_step_in`].
+    pub fn decode_step(&mut self, session: &mut Session, token: u32) -> Vec<f32> {
+        self.decode_step_in(session, token).to_vec()
+    }
+
+    fn prefill_with(&mut self, session: &mut Session, tokens: &[u32], scr: &mut Scratch) {
         let weights = Arc::clone(&self.weights);
-        let cfg = self.cfg.clone();
         let s = tokens.len();
         assert!(s > 0, "empty prompt");
-        assert!(session.pos + s <= cfg.t_max, "prompt exceeds KV capacity");
-        let d = cfg.d_model;
-        let (h, dh) = (cfg.n_heads, cfg.head_dim());
+        let d = self.cfg.d_model;
+        let (h, dh) = (self.cfg.n_heads, self.cfg.head_dim());
+        let d_ff = self.cfg.d_ff;
+        let (eps, theta) = (self.cfg.rms_eps, self.cfg.rope_theta);
+        let t_max = self.cfg.t_max;
+        assert!(session.pos + s <= t_max, "prompt exceeds KV capacity");
+        let vocab = weights.lm_head.rows;
         let pos0 = session.pos;
+        let fused = self.opts.fused;
 
-        let mut xs = vec![0.0f32; s * d];
+        scr.xs.resize(s * d, 0.0);
+        scr.pxa.resize(s * d, 0.0);
+        scr.pq.resize(s * d, 0.0);
+        scr.pk.resize(s * d, 0.0);
+        scr.pv.resize(s * d, 0.0);
+        scr.pattn.resize(s * d, 0.0);
+        scr.pproj.resize(s * d, 0.0);
+        scr.pxf.resize(s * d, 0.0);
+        scr.pgate.resize(s * d_ff, 0.0);
+        scr.pup.resize(s * d_ff, 0.0);
+        scr.pact.resize(s * d_ff, 0.0);
+        scr.out_t.resize(s * (3 * d).max(2 * d_ff), 0.0);
+        scr.deq_slab.resize(self.n_workers * d.max(d_ff), 0.0);
+        scr.score_slab.resize(self.n_workers * t_max, 0.0);
+        scr.xa.resize(d, 0.0);
+        scr.logits.resize(vocab, 0.0);
+
         for (si, &t) in tokens.iter().enumerate() {
-            xs[si * d..(si + 1) * d].copy_from_slice(weights.embed.row(t as usize));
+            scr.xs[si * d..(si + 1) * d].copy_from_slice(weights.embed.row(t as usize));
         }
 
         for (li, layer) in weights.layers.iter().enumerate() {
             // projections, batched over the chunk
-            let mut xa = vec![0.0f32; s * d];
             for si in 0..s {
-                let (src, dst) = (&xs[si * d..(si + 1) * d], &mut xa[si * d..(si + 1) * d]);
-                elementwise::rmsnorm(src, &layer.attn_norm, cfg.rms_eps, dst);
+                let (src, dst) =
+                    (&scr.xs[si * d..(si + 1) * d], &mut scr.pxa[si * d..(si + 1) * d]);
+                elementwise::rmsnorm(src, &layer.attn_norm, eps, dst);
             }
-            let mut q = self.qmatmul(&layer.wq, &xa, s);
-            let mut k = self.qmatmul(&layer.wk, &xa, s);
-            let v = self.qmatmul(&layer.wv, &xa, s);
+            if fused {
+                let (pxa, out_t) = (&scr.pxa, &mut scr.out_t[..3 * d * s]);
+                self.qmatmul_multi_t(
+                    &[&layer.wq, &layer.wk, &layer.wv],
+                    pxa,
+                    s,
+                    out_t,
+                    &mut scr.deq_slab,
+                );
+                transpose_seg(&scr.out_t, d, s, 0, &mut scr.pq);
+                transpose_seg(&scr.out_t, d, s, 1, &mut scr.pk);
+                transpose_seg(&scr.out_t, d, s, 2, &mut scr.pv);
+            } else {
+                for (w, dst) in [
+                    (&layer.wq, &mut scr.pq),
+                    (&layer.wk, &mut scr.pk),
+                    (&layer.wv, &mut scr.pv),
+                ] {
+                    let (pxa, out_t) = (&scr.pxa, &mut scr.out_t[..d * s]);
+                    self.qmatmul_multi_t(&[w], pxa, s, out_t, &mut scr.deq_slab);
+                    transpose_seg(&scr.out_t, d, s, 0, dst);
+                }
+            }
             for si in 0..s {
                 let p = (pos0 + si) as i32;
-                rope::rope_heads(&mut q[si * d..(si + 1) * d], h, dh, p, cfg.rope_theta);
-                rope::rope_heads(&mut k[si * d..(si + 1) * d], h, dh, p, cfg.rope_theta);
+                rope::rope_heads(&mut scr.pq[si * d..(si + 1) * d], h, dh, p, theta);
+                rope::rope_heads(&mut scr.pk[si * d..(si + 1) * d], h, dh, p, theta);
             }
             {
                 let cache = &mut session.kv[li];
                 for si in 0..s {
                     for head in 0..h {
                         let o = si * d + head * dh;
-                        cache.write(head, pos0 + si, &k[o..o + dh], &v[o..o + dh]);
+                        cache.write(
+                            head,
+                            pos0 + si,
+                            &scr.pk[o..o + dh],
+                            &scr.pv[o..o + dh],
+                        );
                     }
                 }
             }
-            // causal attention per chunk position (heads scheduled)
-            let mut attn = vec![0.0f32; s * d];
-            for si in 0..s {
-                let out =
-                    self.attention(&session.kv[li], &q[si * d..(si + 1) * d], pos0 + si);
-                attn[si * d..(si + 1) * d].copy_from_slice(&out);
+            if fused {
+                // causal attention for the whole chunk as one kernel
+                let (pq, pattn) = (&scr.pq, &mut scr.pattn);
+                self.attention_prefill_into(
+                    &session.kv[li],
+                    pq,
+                    pos0,
+                    s,
+                    pattn,
+                    &mut scr.score_slab,
+                );
+            } else {
+                // per chunk position (heads scheduled)
+                for si in 0..s {
+                    let (q_si, out_si) = (
+                        &scr.pq[si * d..(si + 1) * d],
+                        &mut scr.pattn[si * d..(si + 1) * d],
+                    );
+                    self.attention_into(
+                        &session.kv[li],
+                        q_si,
+                        pos0 + si,
+                        out_si,
+                        &mut scr.score_slab,
+                    );
+                }
             }
-            let proj = self.qmatmul(&layer.wo, &attn, s);
-            elementwise::add_inplace(&mut xs, &proj);
+            {
+                let (pattn, out_t) = (&scr.pattn, &mut scr.out_t[..d * s]);
+                self.qmatmul_multi_t(&[&layer.wo], pattn, s, out_t, &mut scr.deq_slab);
+            }
+            transpose_seg(&scr.out_t, d, s, 0, &mut scr.pproj);
+            elementwise::add_inplace(&mut scr.xs, &scr.pproj);
 
-            let mut xf = vec![0.0f32; s * d];
             for si in 0..s {
-                let (src, dst) = (&xs[si * d..(si + 1) * d], &mut xf[si * d..(si + 1) * d]);
-                elementwise::rmsnorm(src, &layer.ffn_norm, cfg.rms_eps, dst);
+                let (src, dst) =
+                    (&scr.xs[si * d..(si + 1) * d], &mut scr.pxf[si * d..(si + 1) * d]);
+                elementwise::rmsnorm(src, &layer.ffn_norm, eps, dst);
             }
-            let gate = self.qmatmul(&layer.w1, &xf, s);
-            let up = self.qmatmul(&layer.w3, &xf, s);
-            let mut act = vec![0.0f32; s * cfg.d_ff];
-            elementwise::silu_mul(&gate, &up, &mut act);
-            let down = self.qmatmul(&layer.w2, &act, s);
-            elementwise::add_inplace(&mut xs, &down);
+            if fused {
+                let (pxf, out_t) = (&scr.pxf, &mut scr.out_t[..2 * d_ff * s]);
+                self.qmatmul_multi_t(&[&layer.w1, &layer.w3], pxf, s, out_t, &mut scr.deq_slab);
+                transpose_seg(&scr.out_t, d_ff, s, 0, &mut scr.pgate);
+                transpose_seg(&scr.out_t, d_ff, s, 1, &mut scr.pup);
+            } else {
+                for (w, dst) in [(&layer.w1, &mut scr.pgate), (&layer.w3, &mut scr.pup)] {
+                    let (pxf, out_t) = (&scr.pxf, &mut scr.out_t[..d_ff * s]);
+                    self.qmatmul_multi_t(&[w], pxf, s, out_t, &mut scr.deq_slab);
+                    transpose_seg(&scr.out_t, d_ff, s, 0, dst);
+                }
+            }
+            elementwise::silu_mul(&scr.pgate, &scr.pup, &mut scr.pact);
+            {
+                let (pact, out_t) = (&scr.pact, &mut scr.out_t[..d * s]);
+                self.qmatmul_multi_t(&[&layer.w2], pact, s, out_t, &mut scr.deq_slab);
+            }
+            transpose_seg(&scr.out_t, d, s, 0, &mut scr.pproj);
+            elementwise::add_inplace(&mut scr.xs, &scr.pproj);
         }
 
         session.pos += s;
-        let mut xn = vec![0.0f32; d];
-        elementwise::rmsnorm(&xs[(s - 1) * d..], &weights.final_norm, cfg.rms_eps, &mut xn);
-        self.gemv(&weights.lm_head, &xn)
+        elementwise::rmsnorm(&scr.xs[(s - 1) * d..], &weights.final_norm, eps, &mut scr.xa);
+        self.gemv_multi(&[&weights.lm_head], &scr.xa, &mut scr.logits, &mut scr.kern);
+    }
+
+    /// Scheduled prefill of a whole prompt chunk (any length ≤ capacity)
+    /// into the arena. Returns a borrow of the last token's logits;
+    /// steady-state same-size chunks perform zero heap allocations.
+    pub fn prefill_in(&mut self, session: &mut Session, tokens: &[u32]) -> &[f32] {
+        let mut scr = std::mem::take(&mut self.scratch);
+        self.prefill_with(session, tokens, &mut scr);
+        self.scratch = scr;
+        &self.scratch.logits
+    }
+
+    /// Allocating convenience wrapper around [`Engine::prefill_in`].
+    pub fn prefill(&mut self, session: &mut Session, tokens: &[u32]) -> Vec<f32> {
+        self.prefill_in(session, tokens).to_vec()
     }
 
     /// Full generation: prefill the prompt, then greedy-decode `n_new`
@@ -286,19 +596,17 @@ impl<E: Executor> Engine<E> {
             ..Default::default()
         };
         let t0 = self.kernel_secs;
-        let logits = self.prefill(session, prompt);
+        let mut next = argmax(self.prefill_in(session, prompt));
         metrics.prefill_secs = self.kernel_secs - t0;
 
         let mut out = Vec::with_capacity(n_new);
-        let mut next = argmax(&logits);
         let t1 = self.kernel_secs;
         for _ in 0..n_new {
             if session.remaining_capacity(&self.cfg) == 0 {
                 break;
             }
             out.push(next);
-            let logits = self.decode_step(session, next);
-            next = argmax(&logits);
+            next = argmax(self.decode_step_in(session, next));
             metrics.decoded_tokens += 1;
         }
         metrics.decode_secs = self.kernel_secs - t1;
@@ -336,6 +644,40 @@ mod tests {
             let serial = decode_step_serial(&e.cfg.clone(), &e.weights.clone(), &mut s2, *t);
             assert_eq!(scheduled, serial, "step {i}");
         }
+    }
+
+    #[test]
+    fn unfused_decode_also_matches_serial_oracle_exactly() {
+        let mut e = sim_engine("ultra_125h");
+        e.opts.fused = false;
+        let mut s1 = e.new_session();
+        let mut s2 = e.new_session();
+        for t in [3u32, 9, 1, 7] {
+            let scheduled = e.decode_step(&mut s1, t);
+            let serial = decode_step_serial(&e.cfg.clone(), &e.weights.clone(), &mut s2, t);
+            assert_eq!(scheduled, serial);
+        }
+    }
+
+    #[test]
+    fn fused_and_unfused_paths_are_bit_identical() {
+        let mut ef = sim_engine("core_12900k");
+        let mut eu = sim_engine("core_12900k");
+        eu.opts.fused = false;
+        let mut sf = ef.new_session();
+        let mut su = eu.new_session();
+        let lf = ef.prefill(&mut sf, &[5, 2, 9, 14, 3]);
+        let lu = eu.prefill(&mut su, &[5, 2, 9, 14, 3]);
+        assert_eq!(lf, lu, "prefill logits");
+        for (k1, k2) in sf.kv.iter().zip(&su.kv) {
+            assert_eq!(k1.k, k2.k, "K caches");
+            assert_eq!(k1.v, k2.v, "V caches");
+        }
+        let (tf, _) = ef.generate(&mut sf, &[1, 2], 6);
+        let (tu, _) = eu.generate(&mut su, &[1, 2], 6);
+        assert_eq!(tf, tu, "token streams");
+        // fused dispatches fewer kernels → strictly less virtual time
+        assert!(ef.kernel_secs < eu.kernel_secs, "{} !< {}", ef.kernel_secs, eu.kernel_secs);
     }
 
     #[test]
@@ -432,5 +774,41 @@ mod tests {
             .unwrap();
         // P-cores must have learned a higher ratio than E-cores
         assert!(rel[0] > 1.2, "P-core ratio {rel:?}");
+    }
+
+    #[test]
+    fn bytes_moved_tracks_kernel_traffic() {
+        let mut e = sim_engine("ultra_125h");
+        assert_eq!(e.bytes_moved, 0.0);
+        let mut s = e.new_session();
+        e.decode_step(&mut s, 3);
+        // at least the Q4 weight bytes of one full forward pass
+        let cfg = &e.cfg;
+        let per_gemv = |k: usize, n: usize| (k / 2 + k / 32 * 2) as f64 * n as f64;
+        let d = cfg.d_model;
+        let mut floor = per_gemv(d, e.weights.lm_head.rows);
+        for _ in 0..cfg.n_layers {
+            floor += 4.0 * per_gemv(d, d) + 2.0 * per_gemv(d, cfg.d_ff) + per_gemv(cfg.d_ff, d);
+        }
+        assert!(e.bytes_moved >= floor, "{} < {floor}", e.bytes_moved);
+    }
+
+    #[test]
+    fn scratch_arena_does_not_leak_across_sessions() {
+        let mut e = sim_engine("ultra_125h");
+        // warm up: one prefill + decode round sizes every buffer
+        let mut s = e.new_session();
+        e.prefill_in(&mut s, &[1, 2, 3, 4]);
+        e.decode_step_in(&mut s, 5);
+        let warm = e.scratch_footprint_bytes();
+        assert!(warm > 0);
+        for seed in 0..4u32 {
+            let mut s = e.new_session();
+            e.prefill_in(&mut s, &[seed, seed + 1, 1, 2]);
+            for t in 0..6u32 {
+                e.decode_step_in(&mut s, t % 16);
+            }
+            assert_eq!(e.scratch_footprint_bytes(), warm, "arena grew on session {seed}");
+        }
     }
 }

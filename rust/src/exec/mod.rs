@@ -7,16 +7,16 @@
 pub mod shared;
 pub mod work;
 
-use crate::cpu::Isa;
+use crate::cpu::{CoreKind, Isa};
 use crate::kernels::{KernelClass, WorkCost};
 use crate::perf::{PerfConfig, PerfTable};
-use crate::sched::{DispatchPlan, Scheduler};
+use crate::sched::{DispatchPlan, Scheduler, SplitScratch};
 
 pub use shared::SharedSlice;
 pub use work::{FnWork, Work};
 
 /// Result of one parallel kernel execution.
-#[derive(Clone, Debug)]
+#[derive(Debug, Default)]
 pub struct RunResult {
     /// per-core busy time in seconds; `None` = did not participate
     pub per_core_secs: Vec<Option<f64>>,
@@ -24,6 +24,29 @@ pub struct RunResult {
     pub wall_secs: f64,
     /// units each core processed (for balance diagnostics)
     pub units_done: Vec<usize>,
+    /// bytes the kernel moved (from [`WorkCost`]) — the numerator of the
+    /// effective-bandwidth metric (`perf::bandwidth`)
+    pub bytes: f64,
+}
+
+// Manual Clone so `clone_from` reuses the destination's Vec capacities —
+// the serving loop's `capture_last` copy must not allocate per kernel.
+impl Clone for RunResult {
+    fn clone(&self) -> Self {
+        RunResult {
+            per_core_secs: self.per_core_secs.clone(),
+            wall_secs: self.wall_secs,
+            units_done: self.units_done.clone(),
+            bytes: self.bytes,
+        }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.per_core_secs.clone_from(&src.per_core_secs);
+        self.units_done.clone_from(&src.units_done);
+        self.wall_secs = src.wall_secs;
+        self.bytes = src.bytes;
+    }
 }
 
 impl RunResult {
@@ -48,6 +71,21 @@ pub trait Executor {
     fn n_workers(&self) -> usize;
     fn execute(&mut self, work: &dyn Work, plan: &DispatchPlan) -> RunResult;
 
+    /// Allocation-free execution: write the measurement into `out`, reusing
+    /// its buffers. The default delegates to [`Executor::execute`]
+    /// (allocating); host-path executors override it so steady-state token
+    /// rounds never touch the heap.
+    fn execute_into(&mut self, work: &dyn Work, plan: &DispatchPlan, out: &mut RunResult) {
+        *out = self.execute(work, plan);
+    }
+
+    /// Microarchitectural class of each worker, for core-class-tuned
+    /// microkernels (P/E/LPE tile selection). Executors without topology
+    /// knowledge report every worker as a P-core.
+    fn core_kinds(&self) -> Vec<CoreKind> {
+        vec![CoreKind::Performance; self.n_workers()]
+    }
+
     /// Start a synthetic background load stealing `fraction` of the given
     /// workers' cycles from now on. Simulated executors model it
     /// (deterministic drift scenarios — see `server::testing`); real-thread
@@ -69,6 +107,11 @@ pub struct ParallelRuntime<E: Executor> {
     /// kernel class of the captured `last_result` — observers fold the
     /// timing into that class's strength row
     pub last_class: Option<KernelClass>,
+    // persistent per-kernel buffers: after the first round at a given
+    // shape, `run` plans and executes without heap allocations
+    plan_buf: DispatchPlan,
+    split_scratch: SplitScratch,
+    result_buf: RunResult,
 }
 
 impl<E: Executor> ParallelRuntime<E> {
@@ -81,24 +124,39 @@ impl<E: Executor> ParallelRuntime<E> {
             capture_last: false,
             last_result: None,
             last_class: None,
+            plan_buf: DispatchPlan::Partitioned(Vec::new()),
+            split_scratch: SplitScratch::default(),
+            result_buf: RunResult::default(),
         }
     }
 
-    /// Run one kernel through the full dynamic loop.
-    pub fn run(&mut self, work: &dyn Work) -> RunResult {
+    /// Run one kernel through the full dynamic loop. The measurement is
+    /// borrowed from the runtime's reusable buffer — clone it to keep it
+    /// past the next kernel.
+    pub fn run(&mut self, work: &dyn Work) -> &RunResult {
         let cost = work.cost();
-        let ratios = self.table.ratios(cost.class, cost.isa).to_vec();
-        let plan = self.sched.plan(work.total_units(), work.grain(), &ratios);
-        let res = self.exec.execute(work, &plan);
+        let ratios = self.table.ratios(cost.class, cost.isa);
+        self.sched.plan_into(
+            work.total_units(),
+            work.grain(),
+            ratios,
+            &mut self.split_scratch,
+            &mut self.plan_buf,
+        );
+        self.exec.execute_into(work, &self.plan_buf, &mut self.result_buf);
+        self.result_buf.bytes = cost.total_bytes();
         // heterogeneous executors append per-device entries after the
         // per-core ones; the core table only consumes its own workers
-        let n = self.table.n_cores().min(res.per_core_secs.len());
-        self.table.update(cost.class, cost.isa, &res.per_core_secs[..n]);
+        let n = self.table.n_cores().min(self.result_buf.per_core_secs.len());
+        self.table.update(cost.class, cost.isa, &self.result_buf.per_core_secs[..n]);
         if self.capture_last {
-            self.last_result = Some(res.clone());
+            match &mut self.last_result {
+                Some(r) => r.clone_from(&self.result_buf),
+                None => self.last_result = Some(self.result_buf.clone()),
+            }
             self.last_class = Some(cost.class);
         }
-        res
+        &self.result_buf
     }
 
     /// Current relative ratios for a kernel (Fig. 4 observable).
@@ -172,7 +230,7 @@ mod tests {
                 .map(|(&u, &r)| if u > 0 { Some(u as f64 / r) } else { None })
                 .collect();
             let wall = times.iter().flatten().cloned().fold(0.0, f64::max);
-            RunResult { per_core_secs: times, wall_secs: wall, units_done: units }
+            RunResult { per_core_secs: times, wall_secs: wall, units_done: units, bytes: 0.0 }
         }
     }
 
@@ -247,6 +305,7 @@ mod tests {
             per_core_secs: vec![Some(1.0), Some(1.0), Some(2.0)],
             wall_secs: 2.0,
             units_done: vec![1, 1, 1],
+            bytes: 0.0,
         };
         assert!((r.imbalance() - 1.5).abs() < 1e-12);
     }

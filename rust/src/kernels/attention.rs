@@ -85,6 +85,97 @@ pub fn attention_decode_range(
     }
 }
 
+/// Window-relative, allocation-free decode attention: `out` is the
+/// `heads.len()·dh` window the caller's worker owns, and `scores` is a
+/// caller-provided slab window (≥ `pos+1` floats; one per worker in the
+/// engine's persistent arena). Per-head math is identical to
+/// [`attention_decode_range`], so results are bit-identical.
+pub fn attention_decode_rows_into(
+    q: &[f32],
+    cache: &KvLayer,
+    pos: usize,
+    heads: Range<usize>,
+    out: &mut [f32],
+    scores: &mut [f32],
+) {
+    let dh = cache.dh;
+    assert_eq!(q.len(), cache.h * dh);
+    assert_eq!(out.len(), heads.len() * dh);
+    assert!(pos < cache.t_max);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let t_len = pos + 1;
+    assert!(scores.len() >= t_len);
+    for (hi, head) in heads.enumerate() {
+        let qh = &q[head * dh..(head + 1) * dh];
+        for t in 0..t_len {
+            let kv = cache.k_at(head, t);
+            let mut dot = 0.0f32;
+            for (a, b) in qh.iter().zip(kv) {
+                dot += a * b;
+            }
+            scores[t] = dot * scale;
+        }
+        super::elementwise::softmax_inplace(&mut scores[..t_len]);
+        let oh = &mut out[hi * dh..(hi + 1) * dh];
+        oh.fill(0.0);
+        for t in 0..t_len {
+            let p = scores[t];
+            let vv = cache.v_at(head, t);
+            for (o, &v) in oh.iter_mut().zip(vv) {
+                *o += p * v;
+            }
+        }
+    }
+}
+
+/// Batched prefill attention: one kernel covers a whole chunk of `s` new
+/// positions instead of one dispatch per position. The parallel dimension
+/// is `(si, head)` flattened as `u = si·h + head`; unit `u` runs causal
+/// attention for chunk row `si` (cache position `pos0 + si`) and writes
+/// `out[(u − units.start)·dh ..]` — with `u` ordered si-major that is
+/// exactly the worker's window of the `[s, h·dh]` output. The KV cache
+/// must already hold all chunk positions. Per-head math matches
+/// [`attention_decode_range`] bit for bit.
+pub fn attention_prefill_units_into(
+    q: &[f32],
+    cache: &KvLayer,
+    pos0: usize,
+    s: usize,
+    units: Range<usize>,
+    out: &mut [f32],
+    scores: &mut [f32],
+) {
+    let (h, dh) = (cache.h, cache.dh);
+    assert_eq!(q.len(), s * h * dh);
+    assert_eq!(out.len(), units.len() * dh);
+    assert!(pos0 + s <= cache.t_max);
+    let scale = 1.0 / (dh as f32).sqrt();
+    assert!(scores.len() >= pos0 + s);
+    for (ui, u) in units.enumerate() {
+        let (si, head) = (u / h, u % h);
+        let t_len = pos0 + si + 1;
+        let qh = &q[u * dh..(u + 1) * dh];
+        for t in 0..t_len {
+            let kv = cache.k_at(head, t);
+            let mut dot = 0.0f32;
+            for (a, b) in qh.iter().zip(kv) {
+                dot += a * b;
+            }
+            scores[t] = dot * scale;
+        }
+        super::elementwise::softmax_inplace(&mut scores[..t_len]);
+        let oh = &mut out[ui * dh..(ui + 1) * dh];
+        oh.fill(0.0);
+        for t in 0..t_len {
+            let p = scores[t];
+            let vv = cache.v_at(head, t);
+            for (o, &v) in oh.iter_mut().zip(vv) {
+                *o += p * v;
+            }
+        }
+    }
+}
+
 /// Whole-kernel convenience wrapper.
 pub fn attention_decode(q: &[f32], cache: &KvLayer, pos: usize) -> Vec<f32> {
     let mut out = vec![0.0; cache.h * cache.dh];
@@ -173,6 +264,40 @@ mod tests {
         attention_decode_range(&q, &c, 11, &mut out, &mut scratch, 2..5);
         attention_decode_range(&q, &c, 11, &mut out, &mut scratch, 5..6);
         assert_eq!(out, whole);
+    }
+
+    #[test]
+    fn window_relative_rows_match_full_buffer_bitwise() {
+        let c = filled_cache(6, 12, 8, 11, 17);
+        let mut rng = Rng::new(18);
+        let mut q = vec![0.0f32; 6 * 8];
+        rng.fill_normal_f32(&mut q, 1.0);
+        let whole = attention_decode(&q, &c, 11);
+        let mut scores = vec![0.0f32; 12];
+        for (a, b) in [(0usize, 2usize), (2, 5), (5, 6)] {
+            let mut win = vec![0.0f32; (b - a) * 8];
+            attention_decode_rows_into(&q, &c, 11, a..b, &mut win, &mut scores);
+            assert_eq!(&win[..], &whole[a * 8..b * 8]);
+        }
+    }
+
+    #[test]
+    fn prefill_units_match_per_position_decode_bitwise() {
+        // chunk of s=3 rows starting at cache position 2
+        let (h, dh, s, pos0) = (4usize, 8usize, 3usize, 2usize);
+        let c = filled_cache(h, 16, dh, pos0 + s - 1, 19);
+        let mut rng = Rng::new(20);
+        let mut q = vec![0.0f32; s * h * dh];
+        rng.fill_normal_f32(&mut q, 1.0);
+        let mut scores = vec![0.0f32; pos0 + s];
+        // fused kernel, split at an awkward unit boundary inside a row
+        let mut fused = vec![0.0f32; s * h * dh];
+        attention_prefill_units_into(&q, &c, pos0, s, 0..5, &mut fused[..5 * dh], &mut scores);
+        attention_prefill_units_into(&q, &c, pos0, s, 5..s * h, &mut fused[5 * dh..], &mut scores);
+        for si in 0..s {
+            let want = attention_decode(&q[si * h * dh..(si + 1) * h * dh], &c, pos0 + si);
+            assert_eq!(&fused[si * h * dh..(si + 1) * h * dh], &want[..], "row {si}");
+        }
     }
 
     #[test]

@@ -34,6 +34,21 @@ impl KernelClass {
         KernelClass::Copy,
     ];
 
+    /// Position in [`KernelClass::ALL`], as a const jump table —
+    /// dense-table indexing without a linear scan (see `perf::slot`).
+    #[inline]
+    pub const fn index(&self) -> usize {
+        match self {
+            KernelClass::GemmI8 => 0,
+            KernelClass::GemvQ4 => 1,
+            KernelClass::Attention => 2,
+            KernelClass::Norm => 3,
+            KernelClass::Rope => 4,
+            KernelClass::Elementwise => 5,
+            KernelClass::Copy => 6,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             KernelClass::GemmI8 => "gemm_i8",
@@ -132,6 +147,17 @@ pub fn attention_decode_cost(h: usize, t: usize, dh: usize) -> WorkCost {
     let ops = 2.0 * (t * dh) as f64;
     let bytes = 2.0 * (t * dh * 4) as f64;
     WorkCost::new(KernelClass::Attention, h, ops, bytes)
+}
+
+/// Batched prefill attention over `s` new positions × `h` heads (one
+/// kernel per layer instead of one per position): unit `(si, head)`
+/// attends to `t0 + si + 1` cached positions, so ops/bytes per unit use
+/// the mean attended length across the chunk.
+pub fn attention_prefill_cost(s: usize, h: usize, t0: usize, dh: usize) -> WorkCost {
+    let t_mean = t0 as f64 + (s as f64 + 1.0) / 2.0;
+    let ops = 2.0 * t_mean * dh as f64;
+    let bytes = 2.0 * t_mean * (dh * 4) as f64;
+    WorkCost::new(KernelClass::Attention, s * h, ops, bytes)
 }
 
 /// Elementwise over `n` scalars (grain: 1 unit = 1 kiB chunk of f32s).

@@ -8,7 +8,20 @@
 
 use std::ops::Range;
 
+use crate::cpu::CoreKind;
 use crate::tensor::{MatI8, MatU8};
+
+/// Column-block width (B rows fed per pass over an A row) tuned per core
+/// class: P-cores carry 4 accumulator lanes comfortably, E-cores 2, and
+/// the low-power island degrades to the plain dot product. Accumulation
+/// is exact i32, so the block width never changes results.
+pub fn col_block_for(kind: CoreKind) -> usize {
+    match kind {
+        CoreKind::Performance => 4,
+        CoreKind::Efficiency => 2,
+        CoreKind::LowPower => 1,
+    }
+}
 
 /// Dot product of one u8 row with one i8 row (K elements), i32 accumulate.
 /// Unrolled by 4 to expose ILP; the autovectorizer maps this to pmaddubsw-
@@ -39,35 +52,68 @@ fn dot_u8i8(a: &[u8], b: &[i8]) -> i32 {
 /// A-row loads are amortized 4× (the register-blocking idea of the VNNI
 /// micro-kernel, expressed scalar).
 pub fn gemm_i8_range(a: &MatU8, bt: &MatI8, c: &mut [i32], n: usize, rows: Range<usize>) {
+    gemm_i8_range_blocked(a, bt, c, n, rows, 4);
+}
+
+/// [`gemm_i8_range`] with an explicit column-block width (see
+/// [`col_block_for`]). i32 sums are order-independent, so every width
+/// yields the identical C.
+pub fn gemm_i8_range_blocked(
+    a: &MatU8,
+    bt: &MatI8,
+    c: &mut [i32],
+    n: usize,
+    rows: Range<usize>,
+    col_block: usize,
+) {
     assert_eq!(a.cols, bt.cols, "K mismatch");
     assert_eq!(bt.rows, n, "N mismatch");
     assert_eq!(c.len(), a.rows * n, "C shape mismatch");
     let k = a.cols;
+    let cb = col_block.clamp(1, 4);
     for m in rows {
         let arow = a.row(m);
         let crow = &mut c[m * n..(m + 1) * n];
         let mut j = 0;
-        while j + 4 <= n {
-            let b0 = bt.row(j);
-            let b1 = bt.row(j + 1);
-            let b2 = bt.row(j + 2);
-            let b3 = bt.row(j + 3);
-            let mut acc0 = 0i32;
-            let mut acc1 = 0i32;
-            let mut acc2 = 0i32;
-            let mut acc3 = 0i32;
-            for p in 0..k {
-                let av = arow[p] as i32;
-                acc0 += av * b0[p] as i32;
-                acc1 += av * b1[p] as i32;
-                acc2 += av * b2[p] as i32;
-                acc3 += av * b3[p] as i32;
+        if cb >= 4 {
+            while j + 4 <= n {
+                let b0 = bt.row(j);
+                let b1 = bt.row(j + 1);
+                let b2 = bt.row(j + 2);
+                let b3 = bt.row(j + 3);
+                let mut acc0 = 0i32;
+                let mut acc1 = 0i32;
+                let mut acc2 = 0i32;
+                let mut acc3 = 0i32;
+                for p in 0..k {
+                    let av = arow[p] as i32;
+                    acc0 += av * b0[p] as i32;
+                    acc1 += av * b1[p] as i32;
+                    acc2 += av * b2[p] as i32;
+                    acc3 += av * b3[p] as i32;
+                }
+                crow[j] = acc0;
+                crow[j + 1] = acc1;
+                crow[j + 2] = acc2;
+                crow[j + 3] = acc3;
+                j += 4;
             }
-            crow[j] = acc0;
-            crow[j + 1] = acc1;
-            crow[j + 2] = acc2;
-            crow[j + 3] = acc3;
-            j += 4;
+        }
+        if cb >= 2 {
+            while j + 2 <= n {
+                let b0 = bt.row(j);
+                let b1 = bt.row(j + 1);
+                let mut acc0 = 0i32;
+                let mut acc1 = 0i32;
+                for p in 0..k {
+                    let av = arow[p] as i32;
+                    acc0 += av * b0[p] as i32;
+                    acc1 += av * b1[p] as i32;
+                }
+                crow[j] = acc0;
+                crow[j + 1] = acc1;
+                j += 2;
+            }
         }
         for (j, cv) in crow.iter_mut().enumerate().skip(j) {
             *cv = dot_u8i8(arow, bt.row(j));
@@ -139,6 +185,25 @@ mod tests {
         let a = rand_u8(3, 37, 5);
         let bt = rand_i8(4, 37, 6);
         assert_eq!(gemm_i8(&a, &bt), oracle(&a, &bt));
+    }
+
+    #[test]
+    fn every_col_block_width_matches_oracle() {
+        let a = rand_u8(7, 29, 9);
+        let bt = rand_i8(11, 29, 10); // n=11: ragged tail for every width
+        let want = oracle(&a, &bt);
+        for cb in [1usize, 2, 4, 9] {
+            let mut c = vec![0i32; 7 * 11];
+            gemm_i8_range_blocked(&a, &bt, &mut c, 11, 0..7, cb);
+            assert_eq!(c, want, "col_block={cb}");
+        }
+    }
+
+    #[test]
+    fn col_block_widths_follow_core_class() {
+        assert_eq!(col_block_for(CoreKind::Performance), 4);
+        assert_eq!(col_block_for(CoreKind::Efficiency), 2);
+        assert_eq!(col_block_for(CoreKind::LowPower), 1);
     }
 
     #[test]

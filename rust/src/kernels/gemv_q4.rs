@@ -10,13 +10,43 @@
 
 use std::ops::Range;
 
+use crate::cpu::CoreKind;
 use crate::quant::{BlockQ4_0, MatQ4, QuantizedRow, QK};
 
 /// Per-block sums of `x` — hoists the `(q − 8)` offset out of the inner
 /// loop: `Σ (q−8)·x = Σ q·x − 8·Σx`, with `Σx` shared by *all* weight rows.
 #[inline]
 fn block_sums_f32(x: &[f32]) -> Vec<f32> {
-    x.chunks_exact(QK).map(|c| c.iter().sum()).collect()
+    let mut out = Vec::new();
+    block_sums_f32_into(x, &mut out);
+    out
+}
+
+/// Allocation-free form of the block sums: the engine computes them once
+/// per kernel on the leader into a persistent buffer instead of once per
+/// worker into a fresh `Vec`.
+pub fn block_sums_f32_into(x: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(x.chunks_exact(QK).map(|c| c.iter().sum::<f32>()));
+}
+
+/// One Q4_0 block's contribution to a row dot product. Kept as the single
+/// shared inner kernel so every caller — scalar rows, tiled rows, fused
+/// multi-matrix rows — accumulates bit-identical per-row sums.
+#[inline]
+fn block_term_f32(b: &BlockQ4_0, xs: &[f32], xsum: f32) -> f32 {
+    let (xlo, xhi) = xs.split_at(QK / 2);
+    // two nibble banks as independent loops (see block_term_q8q4);
+    // the (q − 8) offset is folded into xsum
+    let mut lo = 0.0f32;
+    for (&byte, &xl) in b.qs.iter().zip(xlo) {
+        lo += (byte & 0x0F) as f32 * xl;
+    }
+    let mut hi = 0.0f32;
+    for (&byte, &xh) in b.qs.iter().zip(xhi) {
+        hi += (byte >> 4) as f32 * xh;
+    }
+    b.scale() * (lo + hi - 8.0 * xsum)
 }
 
 /// y[n] = Σ_k w[n,k] · x[k], f32 path, rows `rows` of `w`.
@@ -33,19 +63,7 @@ pub fn gemv_q4_f32_range(w: &MatQ4, x: &[f32], y: &mut [f32], rows: Range<usize>
 fn dot_row_f32(blocks: &[BlockQ4_0], x: &[f32], xsums: &[f32]) -> f32 {
     let mut acc = 0.0f32;
     for (bi, b) in blocks.iter().enumerate() {
-        let xs = &x[bi * QK..(bi + 1) * QK];
-        let (xlo, xhi) = xs.split_at(QK / 2);
-        // two nibble banks as independent loops (see dot_row_q8q4);
-        // the (q − 8) offset is folded into xsums
-        let mut lo = 0.0f32;
-        for (&byte, &xl) in b.qs.iter().zip(xlo) {
-            lo += (byte & 0x0F) as f32 * xl;
-        }
-        let mut hi = 0.0f32;
-        for (&byte, &xh) in b.qs.iter().zip(xhi) {
-            hi += (byte >> 4) as f32 * xh;
-        }
-        acc += b.scale() * (lo + hi - 8.0 * xsums[bi]);
+        acc += block_term_f32(b, &x[bi * QK..(bi + 1) * QK], xsums[bi]);
     }
     acc
 }
@@ -53,7 +71,31 @@ fn dot_row_f32(blocks: &[BlockQ4_0], x: &[f32], xsums: &[f32]) -> f32 {
 /// Per-block sums of the quantized activation (shared by all rows).
 #[inline]
 fn block_sums_i32(xq: &[i8]) -> Vec<i32> {
-    xq.chunks_exact(QK).map(|c| c.iter().map(|&v| v as i32).sum()).collect()
+    let mut out = Vec::new();
+    block_sums_i32_into(xq, &mut out);
+    out
+}
+
+/// Allocation-free integer block sums (see [`block_sums_f32_into`]).
+pub fn block_sums_i32_into(xq: &[i8], out: &mut Vec<i32>) {
+    out.clear();
+    out.extend(xq.chunks_exact(QK).map(|c| c.iter().map(|&v| v as i32).sum::<i32>()));
+}
+
+#[inline]
+fn block_term_q8q4(b: &BlockQ4_0, xs: &[i8], xsum: i32) -> f32 {
+    let (xlo, xhi) = xs.split_at(QK / 2);
+    // two independent single-bank loops — each autovectorizes to
+    // widening int8 multiplies (vpmaddubsw/vpdpbusd class)
+    let mut dlo = 0i32;
+    for (&byte, &xl) in b.qs.iter().zip(xlo) {
+        dlo += (byte & 0x0F) as i32 * xl as i32;
+    }
+    let mut dhi = 0i32;
+    for (&byte, &xh) in b.qs.iter().zip(xhi) {
+        dhi += (byte >> 4) as i32 * xh as i32;
+    }
+    b.scale() * (dlo + dhi - 8 * xsum) as f32
 }
 
 /// Integer path: y[n] = xscale · Σ_blocks d_b · Σ_j (q_j − 8) · xq_j.
@@ -70,21 +112,110 @@ pub fn gemv_q8q4_range(w: &MatQ4, xq: &QuantizedRow, y: &mut [f32], rows: Range<
 fn dot_row_q8q4(blocks: &[BlockQ4_0], xq: &[i8], xsums: &[i32]) -> f32 {
     let mut acc = 0.0f32;
     for (bi, b) in blocks.iter().enumerate() {
-        let xs = &xq[bi * QK..(bi + 1) * QK];
-        let (xlo, xhi) = xs.split_at(QK / 2);
-        // two independent single-bank loops — each autovectorizes to
-        // widening int8 multiplies (vpmaddubsw/vpdpbusd class)
-        let mut dlo = 0i32;
-        for (&byte, &xl) in b.qs.iter().zip(xlo) {
-            dlo += (byte & 0x0F) as i32 * xl as i32;
-        }
-        let mut dhi = 0i32;
-        for (&byte, &xh) in b.qs.iter().zip(xhi) {
-            dhi += (byte >> 4) as i32 * xh as i32;
-        }
-        acc += b.scale() * (dlo + dhi - 8 * xsums[bi]) as f32;
+        acc += block_term_q8q4(b, &xq[bi * QK..(bi + 1) * QK], xsums[bi]);
     }
     acc
+}
+
+// ---- core-class-tuned microkernels ----
+//
+// The register-blocking width that pays off differs per core class: wide
+// P-cores amortize one activation-block load over 4 weight rows, E-cores
+// over 2, and the low-power island runs the plain row-at-a-time loop.
+// Per-row accumulation order is untouched by the tile width (rows are
+// interleaved, each row still sums its blocks in ascending order through
+// [`block_term_f32`]), so any tile mix produces bit-identical outputs.
+
+/// GEMV row-tile width for a core class (see [`CoreKind`]).
+pub fn tile_for(kind: CoreKind) -> usize {
+    match kind {
+        CoreKind::Performance => 4,
+        CoreKind::Efficiency => 2,
+        CoreKind::LowPower => 1,
+    }
+}
+
+/// Fused multi-matrix GEMV, f32 path, with caller-precomputed block sums.
+/// The matrices are stacked row-wise (all sharing `x`): global row `g`
+/// resolves to row `g % seg` of `ws[g / seg]`, so one scheduled kernel
+/// covers e.g. the whole QKV projection. `out` is the `rows` window.
+pub fn gemv_q4_f32_multi_rows_pre(
+    ws: &[&MatQ4],
+    x: &[f32],
+    xsums: &[f32],
+    rows: Range<usize>,
+    out: &mut [f32],
+    tile: usize,
+) {
+    let seg = ws[0].rows;
+    let k = ws[0].cols;
+    debug_assert!(ws.iter().all(|w| w.rows == seg && w.cols == k), "stacked mats must agree");
+    assert_eq!(x.len(), k);
+    assert_eq!(out.len(), rows.len());
+    let nb = k / QK;
+    let tile = tile.clamp(1, 4);
+    let mut g = rows.start;
+    let mut o = 0usize;
+    while g < rows.end {
+        let span = tile.min(rows.end - g);
+        let mut rowq: [&[BlockQ4_0]; 4] = [&[]; 4];
+        for (i, rq) in rowq.iter_mut().enumerate().take(span) {
+            *rq = ws[(g + i) / seg].row((g + i) % seg);
+        }
+        let mut accs = [0.0f32; 4];
+        for bi in 0..nb {
+            let xs = &x[bi * QK..(bi + 1) * QK];
+            let xsum = xsums[bi];
+            for (i, acc) in accs.iter_mut().enumerate().take(span) {
+                *acc += block_term_f32(&rowq[i][bi], xs, xsum);
+            }
+        }
+        out[o..o + span].copy_from_slice(&accs[..span]);
+        g += span;
+        o += span;
+    }
+}
+
+/// Integer twin of [`gemv_q4_f32_multi_rows_pre`] (q8 activation codes +
+/// scale passed split so the caller's persistent buffers can be borrowed).
+pub fn gemv_q8q4_multi_rows_pre(
+    ws: &[&MatQ4],
+    xq: &[i8],
+    xscale: f32,
+    xsums: &[i32],
+    rows: Range<usize>,
+    out: &mut [f32],
+    tile: usize,
+) {
+    let seg = ws[0].rows;
+    let k = ws[0].cols;
+    debug_assert!(ws.iter().all(|w| w.rows == seg && w.cols == k), "stacked mats must agree");
+    assert_eq!(xq.len(), k);
+    assert_eq!(out.len(), rows.len());
+    let nb = k / QK;
+    let tile = tile.clamp(1, 4);
+    let mut g = rows.start;
+    let mut o = 0usize;
+    while g < rows.end {
+        let span = tile.min(rows.end - g);
+        let mut rowq: [&[BlockQ4_0]; 4] = [&[]; 4];
+        for (i, rq) in rowq.iter_mut().enumerate().take(span) {
+            *rq = ws[(g + i) / seg].row((g + i) % seg);
+        }
+        let mut accs = [0.0f32; 4];
+        for bi in 0..nb {
+            let xs = &xq[bi * QK..(bi + 1) * QK];
+            let xsum = xsums[bi];
+            for (i, acc) in accs.iter_mut().enumerate().take(span) {
+                *acc += block_term_q8q4(&rowq[i][bi], xs, xsum);
+            }
+        }
+        for i in 0..span {
+            out[o + i] = accs[i] * xscale;
+        }
+        g += span;
+        o += span;
+    }
 }
 
 /// Prefill matmul: out[s, n] = Σ_k x[s, k] · w[n, k] for rows `rows` of w.
@@ -152,6 +283,38 @@ pub fn qmatmul_f32_rows_into_t(
     assert!(scratch.len() >= k);
     for (ri, n) in rows.enumerate() {
         crate::quant::dequantize_row_q4_0(w.row(n), &mut scratch[..k]);
+        for si in 0..s {
+            let xrow = &x[si * k..(si + 1) * k];
+            let mut acc = 0.0f32;
+            for (a, b) in xrow.iter().zip(scratch[..k].iter()) {
+                acc += a * b;
+            }
+            out_t[ri * s + si] = acc;
+        }
+    }
+}
+
+/// Fused multi-matrix prefill matmul with transposed output: global row
+/// `g` resolves to row `g % seg` of `ws[g / seg]` (all matrices share the
+/// activation chunk `x`), so QKV or gate/up run as one scheduled kernel.
+/// Per-row math is identical to [`qmatmul_f32_rows_into_t`]. The dequant
+/// `scratch` is caller-owned (one persistent slab window per worker).
+pub fn qmatmul_f32_multi_rows_into_t(
+    ws: &[&MatQ4],
+    x: &[f32],
+    s: usize,
+    rows: Range<usize>,
+    out_t: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let seg = ws[0].rows;
+    let k = ws[0].cols;
+    debug_assert!(ws.iter().all(|w| w.rows == seg && w.cols == k), "stacked mats must agree");
+    assert_eq!(x.len(), s * k);
+    assert_eq!(out_t.len(), rows.len() * s);
+    assert!(scratch.len() >= k);
+    for (ri, g) in rows.enumerate() {
+        crate::quant::dequantize_row_q4_0(ws[g / seg].row(g % seg), &mut scratch[..k]);
         for si in 0..s {
             let xrow = &x[si * k..(si + 1) * k];
             let mut acc = 0.0f32;
@@ -278,5 +441,76 @@ mod tests {
         let (w, _, _) = setup(16, 32, 6);
         let y = gemv_q4_f32(&w, &vec![0.0; 32]);
         assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn tiled_pre_is_bit_identical_for_every_tile_width() {
+        // the core-class microkernel contract: tile width changes register
+        // blocking, never the per-row accumulation order
+        let (w, _, x) = setup(67, 128, 7); // odd row count → ragged last tile
+        let base = gemv_q4_f32(&w, &x);
+        let mut xsums = Vec::new();
+        block_sums_f32_into(&x, &mut xsums);
+        for tile in [1usize, 2, 3, 4, 9] {
+            let mut y = vec![0.0f32; 67];
+            gemv_q4_f32_multi_rows_pre(&[&w], &x, &xsums, 0..67, &mut y, tile);
+            assert_eq!(y, base, "tile={tile} diverged");
+        }
+    }
+
+    #[test]
+    fn tiled_pre_int_is_bit_identical_for_every_tile_width() {
+        let (w, _, x) = setup(50, 96, 8);
+        let xq = quantize_q8_dynamic(&x);
+        let base = gemv_q8q4(&w, &xq);
+        let mut xsums = Vec::new();
+        block_sums_i32_into(&xq.q, &mut xsums);
+        for tile in [1usize, 2, 4] {
+            let mut y = vec![0.0f32; 50];
+            gemv_q8q4_multi_rows_pre(&[&w], &xq.q, xq.scale, &xsums, 0..50, &mut y, tile);
+            assert_eq!(y, base, "tile={tile} diverged");
+        }
+    }
+
+    #[test]
+    fn fused_multi_matches_separate_gemvs_bitwise() {
+        let (wa, _, x) = setup(64, 128, 9);
+        let wb = MatQ4::quantize(&randn_mat(64, 128, 10).data, 64, 128);
+        let wc = MatQ4::quantize(&randn_mat(64, 128, 11).data, 64, 128);
+        let mut xsums = Vec::new();
+        block_sums_f32_into(&x, &mut xsums);
+        let mut fused = vec![0.0f32; 3 * 64];
+        // split across an awkward boundary straddling two matrices
+        gemv_q4_f32_multi_rows_pre(&[&wa, &wb, &wc], &x, &xsums, 0..70, &mut fused[..70], 4);
+        gemv_q4_f32_multi_rows_pre(&[&wa, &wb, &wc], &x, &xsums, 70..192, &mut fused[70..], 2);
+        let mut want = gemv_q4_f32(&wa, &x);
+        want.extend(gemv_q4_f32(&wb, &x));
+        want.extend(gemv_q4_f32(&wc, &x));
+        assert_eq!(fused, want);
+    }
+
+    #[test]
+    fn fused_multi_qmatmul_matches_separate_bitwise() {
+        let (wa, _, _) = setup(48, 64, 12);
+        let wb = MatQ4::quantize(&randn_mat(48, 64, 13).data, 48, 64);
+        let s = 3;
+        let mut rng = Rng::new(77);
+        let mut x = vec![0.0f32; s * 64];
+        rng.fill_normal_f32(&mut x, 1.0);
+        let mut scratch = vec![0.0f32; 64];
+        let mut fused_t = vec![0.0f32; 96 * s];
+        qmatmul_f32_multi_rows_into_t(&[&wa, &wb], &x, s, 0..96, &mut fused_t, &mut scratch);
+        for (m, w) in [&wa, &wb].into_iter().enumerate() {
+            let mut sep_t = vec![0.0f32; 48 * s];
+            qmatmul_f32_rows_into_t(w, &x, s, 0..48, &mut sep_t, &mut scratch);
+            assert_eq!(&fused_t[m * 48 * s..(m + 1) * 48 * s], &sep_t[..]);
+        }
+    }
+
+    #[test]
+    fn tile_widths_follow_core_class() {
+        assert_eq!(tile_for(CoreKind::Performance), 4);
+        assert_eq!(tile_for(CoreKind::Efficiency), 2);
+        assert_eq!(tile_for(CoreKind::LowPower), 1);
     }
 }

@@ -51,23 +51,9 @@ impl PhaseMetrics {
     }
 }
 
-/// Achieved bandwidth (GB/s) given bytes moved in `secs`.
-pub fn bandwidth_gbps(bytes: f64, secs: f64) -> f64 {
-    if secs > 0.0 {
-        bytes / secs / 1e9
-    } else {
-        0.0
-    }
-}
-
-/// Utilization of a reference bandwidth (the paper's ">90% of MLC").
-pub fn bandwidth_utilization(achieved_gbps: f64, reference_gbps: f64) -> f64 {
-    if reference_gbps > 0.0 {
-        achieved_gbps / reference_gbps
-    } else {
-        0.0
-    }
-}
+// Bandwidth math lives with the meter in `perf::bandwidth`; re-exported
+// here so serving-side callers keep their `metrics::` paths.
+pub use crate::perf::bandwidth::{bandwidth_gbps, bandwidth_utilization};
 
 /// How many samples a [`LatencyHistogram`] retains for its summary — a
 /// sliding window, so a server recording one sample per scheduler round
@@ -139,6 +125,13 @@ pub struct ServingMetrics {
     /// prefill→decode session migrations between the two batchers of a
     /// phase-disaggregated lease (`ExecMode::Disaggregated`)
     pub handoffs: u64,
+    /// unique kernel memory traffic across all engines (bytes)
+    pub bytes_moved: f64,
+    /// busy kernel seconds the bytes were moved in
+    pub kernel_secs: f64,
+    /// reference bus bandwidth for the utilization export (the machine's
+    /// full bus, or the lease-share sum); 0 = unknown, no export
+    pub bus_reference_gbps: f64,
     pub prefill: LatencyHistogram,
     pub decode_per_token: LatencyHistogram,
     pub ttft: LatencyHistogram,
@@ -167,6 +160,18 @@ impl ServingMetrics {
             ("drift_rebalances", Json::num(self.drift_rebalances as f64)),
             ("handoffs", Json::num(self.handoffs as f64)),
         ];
+        if self.kernel_secs > 0.0 {
+            let achieved = bandwidth_gbps(self.bytes_moved, self.kernel_secs);
+            fields.push(("bytes_moved", Json::num(self.bytes_moved)));
+            fields.push(("kernel_secs", Json::num(self.kernel_secs)));
+            fields.push(("achieved_gbps", Json::num(achieved)));
+            if self.bus_reference_gbps > 0.0 {
+                fields.push((
+                    "bandwidth_utilization",
+                    Json::num(bandwidth_utilization(achieved, self.bus_reference_gbps)),
+                ));
+            }
+        }
         if let Some(s) = self.prefill.summary() {
             fields.push(("prefill_p50_secs", Json::num(s.p50)));
         }
@@ -260,6 +265,22 @@ mod tests {
         // empty histograms stay out of the export
         let empty = ServingMetrics::default().to_json(1, 0);
         assert!(empty.get("ttft_p50_secs").is_none());
+    }
+
+    #[test]
+    fn bandwidth_exports_when_kernel_time_recorded() {
+        let mut sm = ServingMetrics::default();
+        // nothing recorded → no bandwidth fields at all
+        assert!(sm.to_json(1, 0).get("achieved_gbps").is_none());
+        sm.bytes_moved = 34e9;
+        sm.kernel_secs = 1.0;
+        let j = sm.to_json(1, 0);
+        assert_eq!(j.get("achieved_gbps").unwrap().as_f64(), Some(34.0));
+        // utilization only with a known reference bus
+        assert!(j.get("bandwidth_utilization").is_none());
+        sm.bus_reference_gbps = 68.0;
+        let j = sm.to_json(1, 0);
+        assert_eq!(j.get("bandwidth_utilization").unwrap().as_f64(), Some(0.5));
     }
 
     #[test]

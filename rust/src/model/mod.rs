@@ -41,23 +41,65 @@ impl Session {
     }
 }
 
+/// Where a pool's KV slot lives relative to the memory bus: the compute
+/// lease's stream it is pinned under and the slice of that lease's bus
+/// share its decode traffic can count on. Kept as plain ids/numbers so the
+/// model layer stays independent of the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlotPlacement {
+    /// coordinator stream id the owning lease serves
+    pub stream: u64,
+    /// even split of the lease's `bus_share_gbps` across the pool's slots —
+    /// the per-slot bandwidth budget a saturated batch leaves each request
+    pub bus_share_gbps: f64,
+}
+
 /// Fixed-capacity KV-slot allocator: sessions (with their per-layer KV
 /// buffers) are leased to requests and returned on retirement, so a
 /// continuously-batching engine reuses at most `capacity` slots instead of
 /// reallocating KV caches per request. Retired slots are always reused
-/// before a fresh slot is allocated.
+/// before a fresh slot is allocated. Pools built from a compute lease
+/// ([`SessionPool::with_lease`]) additionally record bus-aware slot
+/// placement for bandwidth accounting.
 #[derive(Debug)]
 pub struct SessionPool {
     cfg: ModelConfig,
     free: Vec<Session>,
     allocated: usize,
     capacity: usize,
+    /// lease placement shared by every slot (`None` for standalone pools)
+    placement: Option<SlotPlacement>,
 }
 
 impl SessionPool {
     pub fn new(cfg: &ModelConfig, capacity: usize) -> SessionPool {
         assert!(capacity > 0, "empty session pool");
-        SessionPool { cfg: cfg.clone(), free: Vec::new(), allocated: 0, capacity }
+        SessionPool { cfg: cfg.clone(), free: Vec::new(), allocated: 0, capacity, placement: None }
+    }
+
+    /// Pool whose slots are placed under a compute lease: each of the
+    /// `capacity` KV slots is budgeted an even share of the lease's bus
+    /// allocation, so per-request bandwidth expectations follow the lease.
+    pub fn with_lease(
+        cfg: &ModelConfig,
+        capacity: usize,
+        stream: u64,
+        bus_share_gbps: f64,
+    ) -> SessionPool {
+        let mut pool = SessionPool::new(cfg, capacity);
+        pool.placement =
+            Some(SlotPlacement { stream, bus_share_gbps: bus_share_gbps / capacity as f64 });
+        pool
+    }
+
+    /// Placement of slot `slot`: `Some` for in-range slots of a leased
+    /// pool, `None` for standalone pools and foreign (`usize::MAX`) slots.
+    pub fn placement_of(&self, slot: usize) -> Option<SlotPlacement> {
+        if slot < self.capacity {
+            self.placement
+        } else {
+            None
+        }
     }
 
     pub fn capacity(&self) -> usize {
@@ -340,6 +382,22 @@ mod tests {
         assert_eq!(cont, oracle_cont);
         adopter.release(s);
         assert_eq!(adopter.allocated(), 1);
+    }
+
+    #[test]
+    fn leased_pool_places_slots_bus_aware() {
+        let cfg = ModelConfig::micro();
+        let pool = SessionPool::with_lease(&cfg, 4, 7, 34.0);
+        for slot in 0..4 {
+            let p = pool.placement_of(slot).unwrap();
+            assert_eq!(p.stream, 7);
+            assert!((p.bus_share_gbps - 8.5).abs() < 1e-12);
+        }
+        // out-of-range and foreign slots have no placement
+        assert_eq!(pool.placement_of(4), None);
+        assert_eq!(pool.placement_of(usize::MAX), None);
+        // standalone pools never report one
+        assert_eq!(SessionPool::new(&cfg, 4).placement_of(0), None);
     }
 
     #[test]

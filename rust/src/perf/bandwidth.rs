@@ -1,0 +1,80 @@
+//! Effective-bandwidth accounting — how close the host path gets to the
+//! paper's ">90% of memory bandwidth" headline.
+//!
+//! Every kernel's unique memory traffic is already priced by its
+//! [`crate::kernels::WorkCost`] (`bytes_per_unit`); the runtime stamps the
+//! total onto each [`crate::exec::RunResult`]. A [`BandwidthMeter`]
+//! accumulates those bytes against busy kernel seconds and reports
+//! achieved GB/s plus a utilization ratio against a reference bandwidth —
+//! a lease's `bus_share_gbps`, or the machine's full bus.
+
+/// Running bytes-over-busy-time accumulator. `GB` here is 1e9 bytes,
+/// matching `CpuSpec::bus_bw_gbps` and `Lease::bus_share_gbps`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BandwidthMeter {
+    /// bytes of unique kernel memory traffic accumulated
+    pub bytes: f64,
+    /// busy kernel seconds the bytes were moved in
+    pub secs: f64,
+}
+
+impl BandwidthMeter {
+    /// Fold in one measurement (a kernel, a token round, a whole run).
+    pub fn record(&mut self, bytes: f64, secs: f64) {
+        self.bytes += bytes;
+        self.secs += secs;
+    }
+
+    /// Achieved effective bandwidth in GB/s (0 while nothing is recorded).
+    pub fn achieved_gbps(&self) -> f64 {
+        bandwidth_gbps(self.bytes, self.secs)
+    }
+
+    /// Fraction of `reference_gbps` achieved, clamped to finite inputs.
+    pub fn utilization(&self, reference_gbps: f64) -> f64 {
+        bandwidth_utilization(self.achieved_gbps(), reference_gbps)
+    }
+}
+
+/// bytes / secs in GB/s; 0 for empty or degenerate intervals.
+pub fn bandwidth_gbps(bytes: f64, secs: f64) -> f64 {
+    if secs > 0.0 && bytes >= 0.0 {
+        bytes / secs / 1e9
+    } else {
+        0.0
+    }
+}
+
+/// achieved / reference, 0 when the reference is degenerate.
+pub fn bandwidth_utilization(achieved_gbps: f64, reference_gbps: f64) -> f64 {
+    if reference_gbps > 0.0 && achieved_gbps.is_finite() {
+        achieved_gbps / reference_gbps
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_accumulates_and_reports() {
+        let mut m = BandwidthMeter::default();
+        assert_eq!(m.achieved_gbps(), 0.0);
+        assert_eq!(m.utilization(68.0), 0.0);
+        m.record(34e9, 1.0);
+        m.record(34e9, 1.0);
+        assert!((m.achieved_gbps() - 34.0).abs() < 1e-9);
+        assert!((m.utilization(68.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_zero_not_nan() {
+        let m = BandwidthMeter { bytes: 1e9, secs: 0.0 };
+        assert_eq!(m.achieved_gbps(), 0.0);
+        assert_eq!(bandwidth_utilization(10.0, 0.0), 0.0);
+        assert_eq!(bandwidth_utilization(f64::INFINITY, 68.0), 0.0);
+        assert_eq!(bandwidth_gbps(-1.0, 1.0), 0.0);
+    }
+}

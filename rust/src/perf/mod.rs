@@ -12,19 +12,22 @@
 //! *relative* ratios, which are all eq. 3 consumes). The filter is
 //! `pr = α·pr + (1−α)·pr'` with constant gain α (paper uses α = 0.3).
 
+pub mod bandwidth;
+
 use crate::cpu::Isa;
 use crate::kernels::KernelClass;
 
 /// dense row index for the (class, isa) key — the table sits on the
-/// per-kernel hot path, so lookups must not hash
+/// per-kernel hot path, so the lookup is a pair of const jump tables
+/// instead of linear scans over the `ALL` arrays
 #[inline]
-fn slot(class: KernelClass, isa: Isa) -> usize {
-    let c = KernelClass::ALL.iter().position(|&k| k == class).unwrap();
-    let i = Isa::ALL.iter().position(|&k| k == isa).unwrap();
-    c * Isa::ALL.len() + i
+const fn slot(class: KernelClass, isa: Isa) -> usize {
+    class.index() * Isa::ALL.len() + isa.index()
 }
 
-const N_SLOTS: usize = 7 * 4; // KernelClass::ALL × Isa::ALL
+/// sized from the enums, so adding a kernel class or ISA grows the table
+/// instead of silently corrupting the dense indexing
+const N_SLOTS: usize = KernelClass::ALL.len() * Isa::ALL.len();
 
 /// Configuration of the runtime's ratio table.
 #[derive(Clone, Copy, Debug)]
@@ -158,6 +161,20 @@ mod tests {
 
     const C: KernelClass = KernelClass::GemmI8;
     const I: Isa = Isa::AvxVnni;
+
+    #[test]
+    fn const_slot_matches_position_scan() {
+        // the const jump tables must agree with the ALL-array ordering the
+        // old linear scans used — and `rows()` still decodes by position
+        for (c, class) in KernelClass::ALL.iter().enumerate() {
+            assert_eq!(class.index(), c, "{class:?}");
+            for (i, isa) in Isa::ALL.iter().enumerate() {
+                assert_eq!(isa.index(), i, "{isa:?}");
+                assert_eq!(slot(*class, *isa), c * Isa::ALL.len() + i);
+            }
+        }
+        assert_eq!(N_SLOTS, KernelClass::ALL.len() * Isa::ALL.len());
+    }
 
     fn table(n: usize, alpha: f64) -> PerfTable {
         PerfTable::new(n, PerfConfig { alpha, init_ratio: 1.0 })

@@ -25,13 +25,33 @@ struct WorkRef(*const (dyn Work + 'static));
 unsafe impl Send for WorkRef {}
 unsafe impl Sync for WorkRef {}
 
-#[derive(Clone)]
+/// Same smuggling for the caller's [`DispatchPlan`]: workers read the plan
+/// in place instead of cloning its range vector per job — publishing a job
+/// is allocation-free. Soundness contract is identical to [`WorkRef`].
+#[derive(Clone, Copy)]
+struct PlanRef(*const DispatchPlan);
+unsafe impl Send for PlanRef {}
+unsafe impl Sync for PlanRef {}
+
+#[derive(Clone, Copy)]
 struct Job {
     work: WorkRef,
-    plan: DispatchPlan,
+    plan: PlanRef,
     total: usize,
-    /// shared claim cursor for chunked/guided plans
-    cursor: Arc<AtomicUsize>,
+}
+
+impl Job {
+    /// SAFETY: the leader keeps the plan alive until all workers check in.
+    fn plan(&self) -> &DispatchPlan {
+        unsafe { &*self.plan.0 }
+    }
+
+    fn plan_workers(&self) -> usize {
+        match self.plan() {
+            DispatchPlan::Partitioned(rs) => rs.len(),
+            _ => 0, // guided uses this only as a divisor hint; see claim_guided
+        }
+    }
 }
 
 struct PoolState {
@@ -47,6 +67,8 @@ struct PoolShared {
     state: Mutex<PoolState>,
     go: Condvar,
     finished: Condvar,
+    /// shared claim cursor for chunked/guided plans, reset per job
+    cursor: AtomicUsize,
 }
 
 /// The host thread-pool executor.
@@ -84,6 +106,7 @@ impl HostPool {
             }),
             go: Condvar::new(),
             finished: Condvar::new(),
+            cursor: AtomicUsize::new(0),
         });
         let pin_results = Arc::new(Mutex::new(vec![0usize; n]));
         let mut handles = Vec::with_capacity(n);
@@ -127,14 +150,14 @@ fn worker_loop(worker: usize, shared: &PoolShared) {
                 return;
             }
             seen_epoch = st.epoch;
-            st.job.clone().expect("epoch bumped without a job")
+            st.job.expect("epoch bumped without a job")
         };
 
         let t0 = Instant::now();
         let mut units_done = 0usize;
         // SAFETY: leader keeps the Work alive until all workers check in.
         let work: &dyn Work = unsafe { &*job.work.0 };
-        match &job.plan {
+        match job.plan() {
             DispatchPlan::Partitioned(ranges) => {
                 let r = ranges.get(worker).cloned().unwrap_or(0..0);
                 if !r.is_empty() {
@@ -144,7 +167,7 @@ fn worker_loop(worker: usize, shared: &PoolShared) {
             }
             DispatchPlan::Chunked { chunk } => {
                 loop {
-                    let start = job.cursor.fetch_add(*chunk, Ordering::Relaxed);
+                    let start = shared.cursor.fetch_add(*chunk, Ordering::Relaxed);
                     if start >= job.total {
                         break;
                     }
@@ -154,7 +177,8 @@ fn worker_loop(worker: usize, shared: &PoolShared) {
                 }
             }
             DispatchPlan::Guided { min_chunk } => loop {
-                let claimed = claim_guided(&job.cursor, job.total, *min_chunk, job.plan_workers());
+                let claimed =
+                    claim_guided(&shared.cursor, job.total, *min_chunk, job.plan_workers());
                 match claimed {
                     None => break,
                     Some(r) => {
@@ -172,15 +196,6 @@ fn worker_loop(worker: usize, shared: &PoolShared) {
         st.done += 1;
         if st.done == st.times.len() {
             shared.finished.notify_one();
-        }
-    }
-}
-
-impl Job {
-    fn plan_workers(&self) -> usize {
-        match &self.plan {
-            DispatchPlan::Partitioned(rs) => rs.len(),
-            _ => 0, // guided uses this only as a divisor hint; see claim_guided
         }
     }
 }
@@ -214,38 +229,45 @@ impl Executor for HostPool {
     }
 
     fn execute(&mut self, work: &dyn Work, plan: &DispatchPlan) -> RunResult {
+        let mut out = RunResult::default();
+        self.execute_into(work, plan, &mut out);
+        out
+    }
+
+    /// Allocation-free dispatch: the job smuggles borrowed pointers to the
+    /// caller's `Work` and `DispatchPlan`, and the result vectors in `out`
+    /// are refilled in place once their capacity is warm.
+    fn execute_into(&mut self, work: &dyn Work, plan: &DispatchPlan, out: &mut RunResult) {
         let total = work.total_units();
-        // SAFETY: we erase the lifetime; this function joins the epoch
-        // before returning, so workers never outlive the borrow.
+        // SAFETY: we erase the lifetimes; this function joins the epoch
+        // before returning, so workers never outlive either borrow.
         let work_ref = WorkRef(unsafe {
             std::mem::transmute::<*const (dyn Work + '_), *const (dyn Work + 'static)>(
                 work as *const dyn Work,
             )
         });
+        let plan_ref = PlanRef(plan as *const DispatchPlan);
         let t0 = Instant::now();
         {
             let mut st = self.shared.state.lock().unwrap();
-            st.job = Some(Job {
-                work: work_ref,
-                plan: plan.clone(),
-                total,
-                cursor: Arc::new(AtomicUsize::new(0)),
-            });
+            self.shared.cursor.store(0, Ordering::Relaxed);
+            st.job = Some(Job { work: work_ref, plan: plan_ref, total });
             st.done = 0;
             st.times.iter_mut().for_each(|t| *t = None);
             st.units.iter_mut().for_each(|u| *u = 0);
             st.epoch += 1;
             self.shared.go.notify_all();
         }
-        let (times, units) = {
-            let mut st = self.shared.state.lock().unwrap();
-            while st.done < self.n {
-                st = self.shared.finished.wait(st).unwrap();
-            }
-            st.job = None;
-            (st.times.clone(), st.units.clone())
-        };
-        RunResult { per_core_secs: times, wall_secs: t0.elapsed().as_secs_f64(), units_done: units }
+        let mut st = self.shared.state.lock().unwrap();
+        while st.done < self.n {
+            st = self.shared.finished.wait(st).unwrap();
+        }
+        st.job = None;
+        out.per_core_secs.clone_from(&st.times);
+        out.units_done.clone_from(&st.units);
+        drop(st);
+        out.wall_secs = t0.elapsed().as_secs_f64();
+        out.bytes = 0.0;
     }
 }
 

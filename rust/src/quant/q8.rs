@@ -6,7 +6,7 @@
 //! use `round_ties_even` for cross-language parity.
 
 /// A dynamically-quantized activation row.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct QuantizedRow {
     pub q: Vec<i8>,
     pub scale: f32,
@@ -14,14 +14,21 @@ pub struct QuantizedRow {
 
 /// Quantize one activation row.
 pub fn quantize_q8_dynamic(x: &[f32]) -> QuantizedRow {
+    let mut out = QuantizedRow::default();
+    quantize_q8_dynamic_into(x, &mut out);
+    out
+}
+
+/// Allocation-free quantization into a persistent row: identical codes and
+/// scale to [`quantize_q8_dynamic`], but `out.q`'s capacity is reused so
+/// the decode hot loop never touches the allocator after warm-up.
+pub fn quantize_q8_dynamic_into(x: &[f32], out: &mut QuantizedRow) {
     let amax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
     let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
     let inv = 1.0 / scale;
-    let q = x
-        .iter()
-        .map(|&v| (v * inv).round_ties_even().clamp(-127.0, 127.0) as i8)
-        .collect();
-    QuantizedRow { q, scale }
+    out.scale = scale;
+    out.q.clear();
+    out.q.extend(x.iter().map(|&v| (v * inv).round_ties_even().clamp(-127.0, 127.0) as i8));
 }
 
 impl QuantizedRow {
@@ -74,6 +81,24 @@ mod tests {
         assert_eq!(qr.q[1], 0);
         assert_eq!(qr.q[2], 2);
         assert_eq!(qr.q[3], 0);
+    }
+
+    #[test]
+    fn into_variant_matches_and_reuses_capacity() {
+        let mut rng = Rng::new(9);
+        let mut x = vec![0.0f32; 192];
+        rng.fill_normal_f32(&mut x, 2.0);
+        let want = quantize_q8_dynamic(&x);
+        let mut row = QuantizedRow::default();
+        quantize_q8_dynamic_into(&x, &mut row);
+        assert_eq!(row.q, want.q);
+        assert_eq!(row.scale, want.scale);
+        let cap = row.q.capacity();
+        let ptr = row.q.as_ptr();
+        quantize_q8_dynamic_into(&x, &mut row);
+        assert_eq!(row.q, want.q);
+        assert_eq!(row.q.capacity(), cap);
+        assert_eq!(row.q.as_ptr(), ptr, "steady-state requantize must not reallocate");
     }
 
     #[test]

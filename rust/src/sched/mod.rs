@@ -11,7 +11,9 @@ pub mod partition;
 
 use std::ops::Range;
 
-pub use partition::{largest_remainder_split, proportional_split};
+pub use partition::{
+    largest_remainder_split, proportional_split, proportional_split_into, SplitScratch,
+};
 
 /// How a kernel's parallel dimension is dispatched to cores.
 #[derive(Clone, Debug, PartialEq)]
@@ -42,6 +44,38 @@ pub trait Scheduler: Send + Sync {
     /// possible) over `ratios.len()` cores with the given performance
     /// ratios.
     fn plan(&self, total: usize, grain: usize, ratios: &[f64]) -> DispatchPlan;
+
+    /// Allocation-free planning: write the plan into `out`, reusing its
+    /// buffers and `scratch`. The default delegates to [`Scheduler::plan`]
+    /// (allocating); the hot-path schedulers override it so steady-state
+    /// token rounds plan without touching the heap.
+    fn plan_into(
+        &self,
+        total: usize,
+        grain: usize,
+        ratios: &[f64],
+        scratch: &mut SplitScratch,
+        out: &mut DispatchPlan,
+    ) {
+        let _ = scratch;
+        *out = self.plan(total, grain, ratios);
+    }
+}
+
+/// Shared override body for the partitioning schedulers: reuse `out`'s
+/// range vector when it is already a `Partitioned` plan.
+fn plan_partitioned_into(
+    total: usize,
+    grain: usize,
+    weights: &[f64],
+    scratch: &mut SplitScratch,
+    out: &mut DispatchPlan,
+) {
+    if !matches!(out, DispatchPlan::Partitioned(_)) {
+        *out = DispatchPlan::Partitioned(Vec::new());
+    }
+    let DispatchPlan::Partitioned(ranges) = out else { unreachable!() };
+    proportional_split_into(total, grain, weights, scratch, ranges);
 }
 
 /// The paper's dynamic proportional scheduler (eq. 3):
@@ -58,6 +92,17 @@ impl Scheduler for DynamicScheduler {
     fn plan(&self, total: usize, grain: usize, ratios: &[f64]) -> DispatchPlan {
         DispatchPlan::Partitioned(proportional_split(total, grain, ratios))
     }
+
+    fn plan_into(
+        &self,
+        total: usize,
+        grain: usize,
+        ratios: &[f64],
+        scratch: &mut SplitScratch,
+        out: &mut DispatchPlan,
+    ) {
+        plan_partitioned_into(total, grain, ratios, scratch, out);
+    }
 }
 
 /// OpenMP `schedule(static)` analog: equal shares regardless of ratios.
@@ -72,6 +117,19 @@ impl Scheduler for StaticEven {
     fn plan(&self, total: usize, grain: usize, ratios: &[f64]) -> DispatchPlan {
         let flat = vec![1.0; ratios.len()];
         DispatchPlan::Partitioned(proportional_split(total, grain, &flat))
+    }
+
+    fn plan_into(
+        &self,
+        total: usize,
+        grain: usize,
+        ratios: &[f64],
+        scratch: &mut SplitScratch,
+        out: &mut DispatchPlan,
+    ) {
+        let flat = scratch.take_flat(ratios.len());
+        plan_partitioned_into(total, grain, &flat, scratch, out);
+        scratch.restore_flat(flat);
     }
 }
 
@@ -198,6 +256,22 @@ mod tests {
             }
         } else {
             panic!()
+        }
+    }
+
+    #[test]
+    fn plan_into_matches_plan_for_all_schedulers() {
+        // the allocation-free path must be plan-for-plan identical to the
+        // allocating one, including buffer reuse across differing shapes
+        let mut scratch = SplitScratch::default();
+        let ratios = [2.0, 1.0, 4.5, 1.0];
+        for name in SCHEDULER_NAMES {
+            let s = scheduler_by_name(name).unwrap();
+            let mut out = DispatchPlan::Chunked { chunk: 1 };
+            for total in [0usize, 7, 100, 4096] {
+                s.plan_into(total, 8, &ratios, &mut scratch, &mut out);
+                assert_eq!(out, s.plan(total, 8, &ratios), "{name} total={total}");
+            }
         }
     }
 

@@ -6,56 +6,107 @@
 
 use std::ops::Range;
 
+/// Reusable working buffers for the `_into` split variants: after warm-up
+/// (first call at a given worker count) a split performs no allocations.
+#[derive(Debug, Default)]
+pub struct SplitScratch {
+    counts: Vec<usize>,
+    fracs: Vec<(f64, usize)>,
+    flat: Vec<f64>,
+}
+
+impl SplitScratch {
+    /// Borrow an all-ones weight vector of length `n` (grow-only buffer) —
+    /// lets equal-share schedulers plan without allocating. The buffer is
+    /// moved out and restored by the caller so it can coexist with a
+    /// mutable borrow of the rest of the scratch.
+    pub fn take_flat(&mut self, n: usize) -> Vec<f64> {
+        self.flat.resize(n, 1.0);
+        std::mem::take(&mut self.flat)
+    }
+
+    /// Return the buffer from [`SplitScratch::take_flat`].
+    pub fn restore_flat(&mut self, flat: Vec<f64>) {
+        self.flat = flat;
+    }
+}
+
 /// Split `total` units into consecutive ranges proportional to `weights`,
 /// aligned to `grain` (every boundary except the final `total` is a grain
 /// multiple). Zero-weight workers receive empty ranges.
 pub fn proportional_split(total: usize, grain: usize, weights: &[f64]) -> Vec<Range<usize>> {
+    let mut out = Vec::with_capacity(weights.len());
+    proportional_split_into(total, grain, weights, &mut SplitScratch::default(), &mut out);
+    out
+}
+
+/// Allocation-free core of [`proportional_split`]: writes the ranges into
+/// `out` (cleared first), using `scratch` for the remainder bookkeeping.
+pub fn proportional_split_into(
+    total: usize,
+    grain: usize,
+    weights: &[f64],
+    scratch: &mut SplitScratch,
+    out: &mut Vec<Range<usize>>,
+) {
     assert!(!weights.is_empty(), "no workers");
     let grain = grain.max(1);
     // number of grain-units (the last one may be partial)
     let units = total.div_ceil(grain);
-    let counts = largest_remainder_split(units, weights);
-    let mut out = Vec::with_capacity(weights.len());
+    largest_remainder_split_into(units, weights, scratch);
+    out.clear();
     let mut cursor_units = 0usize;
-    for &c in &counts {
+    for &c in &scratch.counts {
         let start = (cursor_units * grain).min(total);
         let end = ((cursor_units + c) * grain).min(total);
         out.push(start..end);
         cursor_units += c;
     }
-    out
 }
 
 /// Allocate `units` integer slots proportionally to `weights` (largest-
 /// remainder / Hamilton method). Guarantees the counts sum to `units`.
 pub fn largest_remainder_split(units: usize, weights: &[f64]) -> Vec<usize> {
+    let mut scratch = SplitScratch::default();
+    largest_remainder_split_into(units, weights, &mut scratch);
+    scratch.counts
+}
+
+/// Allocation-free core of [`largest_remainder_split`]: the result lands in
+/// `scratch.counts`. Identical arithmetic and tie-breaking to the
+/// allocating version (the sort comparator is a deterministic total order
+/// over distinct indices, so `sort_unstable_by` yields the same order).
+fn largest_remainder_split_into(units: usize, weights: &[f64], scratch: &mut SplitScratch) {
     let n = weights.len();
     let wsum: f64 = weights.iter().map(|w| w.max(0.0)).sum();
-    if wsum <= 0.0 {
-        // degenerate: treat as flat
-        return largest_remainder_split(units, &vec![1.0; n]);
-    }
-    let mut counts = vec![0usize; n];
-    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(n);
+    scratch.counts.clear();
+    scratch.counts.resize(n, 0);
+    scratch.fracs.clear();
     let mut assigned = 0usize;
     for (i, &w) in weights.iter().enumerate() {
-        let exact = units as f64 * w.max(0.0) / wsum;
+        // degenerate all-zero weights fall back to a flat split
+        let exact = if wsum <= 0.0 {
+            units as f64 / n as f64
+        } else {
+            units as f64 * w.max(0.0) / wsum
+        };
         let floor = exact.floor() as usize;
-        counts[i] = floor;
+        scratch.counts[i] = floor;
         assigned += floor;
-        fracs.push((exact - floor as f64, i));
+        scratch.fracs.push((exact - floor as f64, i));
     }
     // distribute the remainder to the largest fractional parts;
     // ties break toward the lower index (deterministic)
     let mut rem = units - assigned;
-    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    scratch
+        .fracs
+        .sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
     let mut k = 0;
     while rem > 0 {
-        counts[fracs[k % fracs.len()].1] += 1;
+        scratch.counts[scratch.fracs[k % n].1] += 1;
         rem -= 1;
         k += 1;
     }
-    counts
 }
 
 #[cfg(test)]

@@ -132,6 +132,8 @@ pub struct StepReport {
     pub decoded_tokens: usize,
     /// kernel seconds this round added to the engine clock
     pub kernel_secs: f64,
+    /// kernel memory traffic this round added to the engine's byte meter
+    pub bytes: f64,
 }
 
 /// Persistent per-lease scheduler: the continuous-batching replacement for
@@ -173,7 +175,13 @@ impl<E: Executor> LeaseBatcher<E> {
         // the serving layer reads per-round measurements (coordinator
         // strength observations), so keep them on this engine
         engine.rt.capture_last = true;
-        let pool = SessionPool::new(&engine.cfg, opts.max_batch.max(1));
+        let cap = opts.max_batch.max(1);
+        // leased batchers place KV slots bus-aware: each slot records its
+        // stream and proportional share of the lease's bus allocation
+        let pool = match &lease {
+            Some(l) => SessionPool::with_lease(&engine.cfg, cap, l.stream, l.bus_share_gbps),
+            None => SessionPool::new(&engine.cfg, cap),
+        };
         LeaseBatcher {
             engine,
             lease,
@@ -341,6 +349,7 @@ impl<E: Executor> LeaseBatcher<E> {
         let mut report = StepReport::default();
         let chunk = self.opts.prefill_chunk.max(1);
         let round_start = self.engine.kernel_secs;
+        let bytes_start = self.engine.bytes_moved;
 
         {
             let LeaseBatcher { engine, active, role, .. } = self;
@@ -359,11 +368,14 @@ impl<E: Executor> LeaseBatcher<E> {
                     // ---- prefill quantum: one bounded chunk ----
                     let end = (a.prefilled + chunk).min(prompt_len);
                     let t0 = engine.kernel_secs;
-                    let logits = engine.prefill(&mut a.session, &a.req.prompt[a.prefilled..end]);
+                    // `prefill_in` lends the engine's scratch logits, so
+                    // take the argmax before touching the clock again
+                    let next =
+                        argmax(engine.prefill_in(&mut a.session, &a.req.prompt[a.prefilled..end]));
                     a.metrics.prefill_secs += engine.kernel_secs - t0;
                     a.prefilled = end;
                     if a.prefilled == prompt_len {
-                        a.next = argmax(&logits);
+                        a.next = next;
                     }
                 } else if a.produced < a.req.max_new_tokens
                     && a.session.remaining_capacity(&engine.cfg) > 0
@@ -381,9 +393,9 @@ impl<E: Executor> LeaseBatcher<E> {
                         }
                     }
                     let t0 = engine.kernel_secs;
-                    let logits = engine.decode_step(&mut a.session, a.next);
+                    let next = argmax(engine.decode_step_in(&mut a.session, a.next));
                     a.metrics.decode_secs += engine.kernel_secs - t0;
-                    a.next = argmax(&logits);
+                    a.next = next;
                     a.produced += 1;
                     a.metrics.decoded_tokens += 1;
                     report.decoded_tokens += 1;
@@ -419,6 +431,7 @@ impl<E: Executor> LeaseBatcher<E> {
         }
 
         report.kernel_secs = self.engine.kernel_secs - round_start;
+        report.bytes = self.engine.bytes_moved - bytes_start;
         report
     }
 }
@@ -609,6 +622,26 @@ mod tests {
         }
         run_until_idle(&mut dc);
         assert_eq!(drain_tokens(&rx), expect, "handoff broke the token stream");
+    }
+
+    #[test]
+    fn step_reports_round_bandwidth_bytes() {
+        let mut b = LeaseBatcher::new(
+            test_engine(5),
+            None,
+            BatcherOpts { max_batch: 2, prefill_chunk: 4 },
+        );
+        let (p, _rx) = pending(1, &[1, 2, 3], 3);
+        b.admit(p).map_err(|_| ()).unwrap();
+        let rep = b.step();
+        assert!(rep.bytes > 0.0, "prefill round moved no bytes");
+        assert!(rep.kernel_secs > 0.0);
+        let mut total = rep.bytes;
+        while !b.is_idle() {
+            total += b.step().bytes;
+        }
+        // per-round deltas tile the engine's lifetime byte meter exactly
+        assert_eq!(total, b.engine.bytes_moved);
     }
 
     #[test]

@@ -330,6 +330,7 @@ mod tests {
                 .collect(),
             wall_secs: 1.0,
             units_done: vec![100; l0.n_cores()],
+            bytes: 0.0,
         };
         for _ in 0..2 {
             assert!(coord.observe(&l0, crate::kernels::KernelClass::GemvQ4, &res));

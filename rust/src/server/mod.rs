@@ -395,7 +395,7 @@ fn supervise<E: Executor + Send + 'static>(
 
         // membership (or learned drift) → coordinator: either path bumps
         // the epoch and re-issues every lease
-        let mut batchers = {
+        let (bus_reference, mut batchers) = {
             let mut c = lock(&coord);
             if drift {
                 c.rebalance();
@@ -411,7 +411,7 @@ fn supervise<E: Executor + Send + 'static>(
             }
             let batchers = fleet::build_batchers(&c, &factory, opts);
             shared.epoch.store(c.epoch(), Ordering::SeqCst);
-            batchers
+            (c.bus_reference_gbps(), batchers)
         };
         for a in fleet::distribute(carried, &mut batchers) {
             // nobody left to serve the migrated stream: answer its client
@@ -422,6 +422,7 @@ fn supervise<E: Executor + Send + 'static>(
         {
             let mut m = lock(&shared.metrics);
             m.rebuilds += 1;
+            m.bus_reference_gbps = bus_reference;
             if drift {
                 m.drift_rebalances += 1;
             }
@@ -611,7 +612,7 @@ fn run_batcher<E: Executor>(
             }
         }
 
-        if !report.ttft_wall.is_empty() || !report.retired.is_empty() {
+        if !report.ttft_wall.is_empty() || !report.retired.is_empty() || report.kernel_secs > 0.0 {
             let mut m = lock(&shared.metrics);
             for d in &report.ttft_wall {
                 m.ttft.record(d.as_secs_f64());
@@ -619,6 +620,10 @@ fn run_batcher<E: Executor>(
             for r in &report.retired {
                 m.record_request(&r.metrics);
             }
+            // bandwidth accounting: every non-empty round contributes its
+            // kernel traffic to the fleet-wide achieved-GB/s export
+            m.bytes_moved += report.bytes;
+            m.kernel_secs += report.kernel_secs;
         }
 
         // fold this round's measurement into the coordinator's strength

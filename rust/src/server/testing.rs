@@ -22,6 +22,7 @@ use std::sync::mpsc;
 use crate::coordinator::{Coordinator, Lease, StreamId};
 use crate::exec::{Executor, RunResult};
 use crate::kernels::KernelClass;
+use crate::perf::bandwidth::{bandwidth_gbps, bandwidth_utilization};
 use crate::sim::xpu::XpuDispatch;
 use crate::util::rng::Rng;
 
@@ -150,6 +151,37 @@ pub struct HarnessReport {
     /// prefill→decode sessions moved between the batchers of an
     /// [`crate::coordinator::ExecMode::Disaggregated`] phase pair
     pub handoffs: usize,
+    /// kernel memory traffic per stream (0 for unleased batchers),
+    /// accumulated across every round and surviving fleet rebuilds
+    pub bandwidth: BTreeMap<StreamId, BandwidthUse>,
+}
+
+/// Accumulated kernel bandwidth of one stream's batcher(s).
+#[derive(Clone, Debug, Default)]
+pub struct BandwidthUse {
+    /// unique kernel memory traffic (bytes)
+    pub bytes: f64,
+    /// busy kernel seconds the bytes were moved in
+    pub kernel_secs: f64,
+    /// the stream's lease bus allocation when last observed (GB/s);
+    /// 0 = unleased, no utilization defined
+    pub bus_share_gbps: f64,
+}
+
+impl BandwidthUse {
+    pub fn achieved_gbps(&self) -> f64 {
+        bandwidth_gbps(self.bytes, self.kernel_secs)
+    }
+
+    /// Achieved bandwidth as a fraction of the lease's bus share (0 when
+    /// the stream is unleased).
+    pub fn utilization(&self) -> f64 {
+        if self.bus_share_gbps > 0.0 {
+            bandwidth_utilization(self.achieved_gbps(), self.bus_share_gbps)
+        } else {
+            0.0
+        }
+    }
 }
 
 impl HarnessReport {
@@ -213,7 +245,13 @@ fn enqueue(
     }
 }
 
-fn absorb(report: &mut HarnessReport, step: &StepReport, idle_offset: f64) {
+fn absorb(
+    report: &mut HarnessReport,
+    step: &StepReport,
+    idle_offset: f64,
+    stream: StreamId,
+    bus_share_gbps: f64,
+) {
     for (id, t) in &step.first_tokens {
         if let Some(rec) = report.requests.get_mut(id) {
             rec.first_token_at = Some(idle_offset + *t);
@@ -225,6 +263,18 @@ fn absorb(report: &mut HarnessReport, step: &StepReport, idle_offset: f64) {
         }
         report.total_decoded += r.metrics.decoded_tokens;
     }
+    if step.kernel_secs > 0.0 || step.bytes > 0.0 {
+        let bw = report.bandwidth.entry(stream).or_default();
+        bw.bytes += step.bytes;
+        bw.kernel_secs += step.kernel_secs;
+        bw.bus_share_gbps = bus_share_gbps;
+    }
+}
+
+/// `(stream, bus_share)` key a batcher's rounds are accounted under —
+/// stream 0 with no bus reference for unleased batchers.
+fn bandwidth_key<E: Executor>(b: &LeaseBatcher<E>) -> (StreamId, f64) {
+    b.lease.as_ref().map_or((0, 0.0), |l| (l.stream, l.bus_share_gbps))
 }
 
 fn finalize(report: &mut HarnessReport, rxs: &BTreeMap<u64, mpsc::Receiver<Event>>) {
@@ -313,7 +363,8 @@ pub fn run_single<E: Executor>(
             }
         }
         let step = batcher.step();
-        absorb(&mut report, &step, idle_offset);
+        let (stream, bus) = bandwidth_key(&batcher);
+        absorb(&mut report, &step, idle_offset, stream, bus);
     }
     finalize(&mut report, &rxs);
     report
@@ -476,7 +527,8 @@ pub fn run_fleet<E: Executor>(
             }
         }
         let step = batchers[i].step();
-        absorb(&mut report, &step, offsets[i]);
+        let (stream, bus) = bandwidth_key(&batchers[i]);
+        absorb(&mut report, &step, offsets[i], stream, bus);
         // live measurement → strength table (current lease, current epoch)
         if let Some((stream, is_dev)) = pair_side(&batchers[i]) {
             // async pair: park this side's round and fold both sides into
@@ -821,6 +873,21 @@ mod tests {
         let b = LeaseBatcher::new(engine(3), None, BatcherOpts::default());
         let script = vec![TraceEvent::arrive(f64::NAN, 0, req(1, &[1], 1))];
         let _ = run_single(b, AdmitMode::Continuous, 16, script);
+    }
+
+    #[test]
+    fn harness_reports_per_stream_bandwidth() {
+        let b = LeaseBatcher::new(engine(5), None, BatcherOpts::default());
+        let script = vec![TraceEvent::arrive(0.0, 0, req(1, &[1, 2, 3], 4))];
+        let rep = run_single(b, AdmitMode::Continuous, 16, script);
+        assert!(rep.all_finished());
+        let bw = rep.bandwidth.get(&0).expect("unleased batcher accounts under stream 0");
+        assert!(bw.bytes > 0.0, "no kernel traffic recorded");
+        assert!(bw.kernel_secs > 0.0);
+        assert!(bw.achieved_gbps() > 0.0);
+        // unleased: no bus reference, so utilization is undefined (0)
+        assert_eq!(bw.bus_share_gbps, 0.0);
+        assert_eq!(bw.utilization(), 0.0);
     }
 
     #[test]

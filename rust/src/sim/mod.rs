@@ -347,6 +347,7 @@ impl HybridSim {
                 .collect(),
             wall_secs: wall,
             units_done: cores.iter().map(|c| c.units_done).collect(),
+            bytes: 0.0,
         }
     }
 }
@@ -365,6 +366,10 @@ impl SimExecutor {
 impl Executor for SimExecutor {
     fn n_workers(&self) -> usize {
         self.sim.spec.n_cores()
+    }
+
+    fn core_kinds(&self) -> Vec<crate::cpu::CoreKind> {
+        self.sim.spec.cores.iter().map(|c| c.kind).collect()
     }
 
     fn execute(&mut self, work: &dyn Work, plan: &DispatchPlan) -> RunResult {

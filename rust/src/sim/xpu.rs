@@ -387,7 +387,7 @@ impl XpuExecutor {
         }
         // the lease's virtual clock advances by the device wall
         self.xpu.cpu.now += wall;
-        RunResult { per_core_secs, wall_secs: wall, units_done }
+        RunResult { per_core_secs, wall_secs: wall, units_done, bytes: 0.0 }
     }
 }
 
@@ -435,6 +435,7 @@ impl Executor for XpuExecutor {
                 per_core_secs: vec![None; n_cores],
                 wall_secs: 0.0,
                 units_done: vec![0; n_cores],
+                bytes: 0.0,
             }
         };
 
@@ -467,7 +468,7 @@ impl Executor for XpuExecutor {
             per_core_secs.push(if units > 0 { Some(device_secs[i + 1]) } else { None });
             units_done.push(units);
         }
-        RunResult { per_core_secs, wall_secs: wall, units_done }
+        RunResult { per_core_secs, wall_secs: wall, units_done, bytes: 0.0 }
     }
 
     fn inject_background(&mut self, workers: &[usize], fraction: f64) {

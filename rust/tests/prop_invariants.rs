@@ -339,6 +339,7 @@ fn prop_coordinator_rebalance_stable_under_random_observations() {
                     wall_secs: per_core_secs.iter().flatten().cloned().fold(0.0, f64::max),
                     per_core_secs,
                     units_done,
+                    bytes: 0.0,
                 };
                 let class = [KernelClass::GemmI8, KernelClass::GemvQ4, KernelClass::Attention]
                     [rng.below(3) as usize];
@@ -432,6 +433,7 @@ fn prop_hetero_leases_stay_disjoint_covering_with_single_owner_accels() {
                                 .collect(),
                             wall_secs: 1.0,
                             units_done: (0..nu).map(|_| rng.below(10_000) as usize).collect(),
+                            bytes: 0.0,
                         };
                         coord.observe(&lease, KernelClass::GemvQ4, &res);
                     }
@@ -851,6 +853,7 @@ fn prop_class_rows_fold_mass_preserving_and_independent() {
                     per_core_secs: (0..nw).map(|_| Some(rng.uniform(1e-6, 1.0))).collect(),
                     wall_secs: 1.0,
                     units_done: (0..nw).map(|_| 1 + rng.below(10_000) as usize).collect(),
+                    bytes: 0.0,
                 };
                 let before: Vec<Vec<f64>> =
                     classes.iter().map(|&c| coord.class_strengths(c)).collect();
@@ -1000,6 +1003,124 @@ fn prop_virtual_time_is_monotone_and_additive() {
                     return Err(format!("time went backwards {prev} → {}", sim.now));
                 }
                 prev = sim.now;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random valid model config (QK-aligned dims, even head_dim) for the
+/// engine bit-identity properties below.
+fn rand_model_cfg(rng: &mut dynpar::util::rng::Rng) -> dynpar::model::ModelConfig {
+    use dynpar::model::ModelConfig;
+    let n_heads = [1usize, 2, 4][rng.below(3) as usize];
+    ModelConfig {
+        name: "prop".into(),
+        vocab: 32 * (2 + rng.below(3) as usize),
+        d_model: 32 * n_heads,
+        n_layers: 1 + rng.below(2) as usize,
+        n_heads,
+        d_ff: 32 * (2 + rng.below(4) as usize),
+        t_max: 24,
+        prefill_len: 4,
+        rope_theta: 10000.0,
+        rms_eps: 1e-5,
+    }
+}
+
+#[test]
+fn prop_fused_and_unfused_engines_are_bit_identical() {
+    // the fused QKV / gate-up / batched-attention dispatch path must give
+    // the same bits as the one-kernel-per-matrix path for ANY config:
+    // fusion only stacks row spaces, never reorders per-row accumulation
+    use dynpar::engine::Engine;
+    use dynpar::model::ModelWeights;
+    use std::sync::Arc;
+    prop::check_with(
+        "fused_bit_identical",
+        PropConfig { iters: 12, seed: 0xFE11 },
+        &mut |rng| {
+            let cfg = rand_model_cfg(rng);
+            cfg.validate()?;
+            let weights = Arc::new(ModelWeights::random_init(&cfg, 100 + rng.below(1000)));
+            let preset = ["core_12900k", "ultra_125h"][rng.below(2) as usize];
+            let mut mk = |fused: bool| {
+                let exec = SimExecutor::new(
+                    presets::preset_by_name(preset).unwrap(),
+                    SimConfig { execute_real: true, ..SimConfig::noiseless() },
+                );
+                let mut e = Engine::new(
+                    cfg.clone(),
+                    Arc::clone(&weights),
+                    exec,
+                    scheduler_by_name("dynamic").unwrap(),
+                    PerfConfig::default(),
+                );
+                e.opts.fused = fused;
+                e
+            };
+            let mut ef = mk(true);
+            let mut eu = mk(false);
+            let prompt: Vec<u32> =
+                (0..1 + rng.below(6)).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+            let mut sf = ef.new_session();
+            let mut su = eu.new_session();
+            let lf = ef.prefill(&mut sf, &prompt);
+            let lu = eu.prefill(&mut su, &prompt);
+            if lf != lu {
+                return Err("prefill logits diverge".into());
+            }
+            for (a, b) in sf.kv.iter().zip(&su.kv) {
+                if a.k != b.k || a.v != b.v {
+                    return Err("KV caches diverge after prefill".into());
+                }
+            }
+            let (tf, _) = ef.generate(&mut sf, &[1, 0], 4);
+            let (tu, _) = eu.generate(&mut su, &[1, 0], 4);
+            if tf != tu {
+                return Err(format!("token streams diverge: {tf:?} vs {tu:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_arena_decode_matches_serial_oracle_bitwise() {
+    // the allocation-free scratch-arena decode (fused or not, any random
+    // config) must reproduce the single-threaded reference bit for bit
+    use dynpar::engine::Engine;
+    use dynpar::model::{decode_step_serial, ModelWeights, Session};
+    use std::sync::Arc;
+    prop::check_with(
+        "arena_decode_vs_serial",
+        PropConfig { iters: 12, seed: 0xA3EA },
+        &mut |rng| {
+            let cfg = rand_model_cfg(rng);
+            cfg.validate()?;
+            let weights = Arc::new(ModelWeights::random_init(&cfg, 500 + rng.below(1000)));
+            let preset = ["core_12900k", "ultra_125h"][rng.below(2) as usize];
+            let exec = SimExecutor::new(
+                presets::preset_by_name(preset).unwrap(),
+                SimConfig { execute_real: true, ..SimConfig::noiseless() },
+            );
+            let mut e = Engine::new(
+                cfg.clone(),
+                Arc::clone(&weights),
+                exec,
+                scheduler_by_name("dynamic").unwrap(),
+                PerfConfig::default(),
+            );
+            e.opts.fused = rng.below(2) == 0;
+            let mut s1 = e.new_session();
+            let mut s2 = Session::new(&cfg);
+            for step in 0..4 {
+                let t = rng.below(cfg.vocab as u64) as u32;
+                let scheduled = e.decode_step(&mut s1, t);
+                let serial = decode_step_serial(&cfg, &weights, &mut s2, t);
+                if scheduled != serial {
+                    return Err(format!("step {step}: scheduled decode != serial oracle"));
+                }
             }
             Ok(())
         },

@@ -1,0 +1,190 @@
+//! Shared scaffolding for the PR-series perf trajectories: every
+//! `pr*.rs` bench builds the same three things — a frozen arrival trace,
+//! an engine factory over some simulated machine, and a JSON "side" of
+//! tok/s + TTFT + makespan — and diverges only in the machine, the model
+//! and the knob under test. The builders live here so the protocol (seeded
+//! weights, `DynamicScheduler`, default `PerfConfig`, queue depth 64,
+//! drain asserts) cannot drift apart between benches.
+
+use std::sync::Arc;
+
+use crate::coordinator::{Coordinator, Lease};
+use crate::cpu::CpuSpec;
+use crate::engine::Engine;
+use crate::exec::Executor;
+use crate::model::{ModelConfig, ModelWeights};
+use crate::perf::PerfConfig;
+use crate::sched::DynamicScheduler;
+use crate::server::fleet::{DriftMonitor, EngineFactory};
+use crate::server::protocol::Request;
+use crate::server::testing::{run_fleet, HarnessReport, TraceEvent};
+use crate::server::BatcherOpts;
+use crate::sim::xpu::{AcceleratorSpec, XpuDispatch, XpuExecutor};
+use crate::sim::{SimConfig, SimExecutor};
+use crate::util::json::Json;
+
+/// Admission-queue depth every PR bench serves with.
+pub const QUEUE_DEPTH: usize = 64;
+
+/// The PR benches' fixed model shape: 2 transformer layers, 128-position
+/// KV, standard RoPE/rmsnorm constants. Only the dimensions under test
+/// vary per bench.
+pub fn bench_model(
+    name: &str,
+    vocab: usize,
+    d_model: usize,
+    n_heads: usize,
+    d_ff: usize,
+    prefill_len: usize,
+) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        vocab,
+        d_model,
+        n_layers: 2,
+        n_heads,
+        d_ff,
+        t_max: 128,
+        prefill_len,
+        rope_theta: 10000.0,
+        rms_eps: 1e-5,
+    }
+}
+
+/// One engine over `exec` with the bench protocol's fixed scheduler and
+/// perf config.
+pub fn bench_engine<E: Executor>(
+    cfg: &ModelConfig,
+    weights: &Arc<ModelWeights>,
+    exec: E,
+) -> Engine<E> {
+    Engine::new(
+        cfg.clone(),
+        Arc::clone(weights),
+        exec,
+        Box::new(DynamicScheduler),
+        PerfConfig::default(),
+    )
+}
+
+/// Cores-only engine factory: every lease gets a sim engine over its core
+/// subset of `machine`, with the fused-dispatch arena path on or off.
+pub fn sim_factory(
+    machine: CpuSpec,
+    cfg: ModelConfig,
+    seed: u64,
+    sim: SimConfig,
+    fused: bool,
+) -> EngineFactory<SimExecutor> {
+    let weights = Arc::new(ModelWeights::random_init(&cfg, seed));
+    Box::new(move |lease: &Lease, _dispatch: XpuDispatch| {
+        let mut e = bench_engine(&cfg, &weights, lease.sim_executor(&machine, sim.clone()));
+        e.opts.fused = fused;
+        e
+    })
+}
+
+/// Heterogeneous engine factory: cores plus accelerators. With
+/// `per_dispatch` the lease materializes the dispatch-specific executor
+/// (`xpu_executor_mode`) so an async-batch pair gets its CpuOnly /
+/// DeviceOnly halves; without it every engine sees the full split.
+pub fn xpu_factory(
+    machine: CpuSpec,
+    accels: Vec<AcceleratorSpec>,
+    cfg: ModelConfig,
+    seed: u64,
+    sim: SimConfig,
+    per_dispatch: bool,
+) -> EngineFactory<XpuExecutor> {
+    let weights = Arc::new(ModelWeights::random_init(&cfg, seed));
+    Box::new(move |lease: &Lease, dispatch: XpuDispatch| {
+        let exec = if per_dispatch {
+            lease.xpu_executor_mode(&machine, &accels, sim.clone(), dispatch)
+        } else {
+            lease.xpu_executor(&machine, &accels, sim.clone())
+        };
+        bench_engine(&cfg, &weights, exec)
+    })
+}
+
+/// Frozen arrival script: `n_streams` stream connects at t = 0, then the
+/// requests arrive round-robin across the streams at `1 µs + i * gap`.
+pub fn streamed_trace(n_streams: u64, gap: f64, reqs: Vec<Request>) -> Vec<TraceEvent> {
+    let mut t: Vec<TraceEvent> =
+        (0..n_streams).map(|s| TraceEvent::Connect { at: 0.0, stream: s }).collect();
+    for (i, req) in reqs.into_iter().enumerate() {
+        t.push(TraceEvent::arrive(1.0e-6 + i as f64 * gap, i as u64 % n_streams, req));
+    }
+    t
+}
+
+/// Serve one frozen trace through the deterministic harness with the
+/// bench protocol's queue depth, asserting the trace fully drained.
+pub fn serve(
+    coord: Coordinator,
+    factory: &EngineFactory<SimExecutor>,
+    opts: BatcherOpts,
+    monitor: DriftMonitor,
+    trace: Vec<TraceEvent>,
+) -> HarnessReport {
+    let rep = run_fleet(coord, factory, opts, QUEUE_DEPTH, monitor, trace);
+    assert!(rep.all_finished(), "bench trace did not drain");
+    rep
+}
+
+/// [`serve`] for heterogeneous (cores + accelerator) factories.
+pub fn serve_xpu(
+    coord: Coordinator,
+    factory: &EngineFactory<XpuExecutor>,
+    opts: BatcherOpts,
+    monitor: DriftMonitor,
+    trace: Vec<TraceEvent>,
+) -> HarnessReport {
+    let rep = run_fleet(coord, factory, opts, QUEUE_DEPTH, monitor, trace);
+    assert!(rep.all_finished(), "bench trace did not drain");
+    rep
+}
+
+/// The JSON fields every bench reports per scenario side. Callers extend
+/// the vector with bench-specific fields before wrapping it in an object.
+pub fn side_fields(rep: &HarnessReport) -> Vec<(&'static str, Json)> {
+    vec![
+        ("tok_s", Json::num(rep.throughput())),
+        ("mean_ttft_us", Json::num(rep.mean_ttft() * 1e6)),
+        ("makespan_s", Json::num(rep.makespan)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streamed_trace_connects_then_round_robins() {
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request { id: i, prompt: vec![1, 2], max_new_tokens: 1 })
+            .collect();
+        let t = streamed_trace(2, 1.0e-4, reqs);
+        assert_eq!(t.len(), 6);
+        assert!(matches!(t[0], TraceEvent::Connect { stream: 0, .. }));
+        assert!(matches!(t[1], TraceEvent::Connect { stream: 1, .. }));
+        match (&t[2], &t[5]) {
+            (
+                TraceEvent::Arrive { stream: s0, at: a0, .. },
+                TraceEvent::Arrive { stream: s3, at: a3, .. },
+            ) => {
+                assert_eq!((*s0, *s3), (0, 1));
+                assert!(a3 > a0, "arrivals must be spaced by the gap");
+            }
+            other => panic!("expected arrivals, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bench_model_pins_the_shared_shape() {
+        let m = bench_model("t", 512, 256, 4, 512, 24);
+        assert_eq!((m.n_layers, m.t_max), (2, 128));
+        assert_eq!(m.prefill_len, 24);
+        assert_eq!(m.d_model, 256);
+    }
+}

@@ -2,6 +2,7 @@
 //! the `dynpar bench` CLI. One module per figure of the paper; see the
 //! experiment index in DESIGN.md.
 
+pub mod common;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
@@ -9,6 +10,7 @@ pub mod pr3;
 pub mod pr4;
 pub mod pr7;
 pub mod pr8;
+pub mod pr9;
 pub mod report;
 
 use crate::cpu::CpuSpec;

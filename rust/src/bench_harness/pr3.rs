@@ -13,23 +13,22 @@
 //!
 //! `dynpar bench pr3 [--out BENCH_pr3.json]` renders the JSON trajectory.
 
-use std::sync::Arc;
-
-use crate::coordinator::{bus_share, AllocPolicy, Coordinator, Lease, XpuAffinity};
+use crate::coordinator::{bus_share, AllocPolicy, Coordinator, XpuAffinity};
 use crate::cpu::{presets, CpuSpec};
-use crate::engine::Engine;
 use crate::exec::{Executor, ParallelRuntime, PhantomWork};
 use crate::kernels::cost;
-use crate::model::{ModelConfig, ModelWeights};
+use crate::model::ModelConfig;
 use crate::perf::PerfConfig;
 use crate::sched::DynamicScheduler;
-use crate::server::fleet::{DriftMonitor, EngineFactory};
+use crate::server::fleet::DriftMonitor;
 use crate::server::protocol::Request;
-use crate::server::testing::{run_fleet, TraceEvent};
+use crate::server::testing::TraceEvent;
 use crate::server::BatcherOpts;
-use crate::sim::xpu::{AcceleratorSpec, XpuDispatch, XpuExecutor};
+use crate::sim::xpu::AcceleratorSpec;
 use crate::sim::{SimConfig, SimExecutor};
 use crate::util::json::Json;
+
+use super::common;
 
 const WEIGHTS_SEED: u64 = 11;
 
@@ -39,40 +38,16 @@ fn machine() -> (CpuSpec, Vec<AcceleratorSpec>) {
     (ultra.subset(&p_cores, bus_share(&ultra, &p_cores)), vec![AcceleratorSpec::npu()])
 }
 
-fn factory(machine: CpuSpec, accels: Vec<AcceleratorSpec>) -> EngineFactory<XpuExecutor> {
-    let cfg = ModelConfig::micro();
-    let weights = Arc::new(ModelWeights::random_init(&cfg, WEIGHTS_SEED));
-    Box::new(move |lease: &Lease, _dispatch: XpuDispatch| {
-        let exec = lease.xpu_executor(
-            &machine,
-            &accels,
-            SimConfig { execute_real: true, ..SimConfig::noiseless() },
-        );
-        Engine::new(
-            cfg.clone(),
-            Arc::clone(&weights),
-            exec,
-            Box::new(DynamicScheduler),
-            PerfConfig::default(),
-        )
-    })
-}
-
 /// Frozen arrival script: 16 requests over two streams.
 fn trace() -> Vec<TraceEvent> {
-    let mut t = vec![
-        TraceEvent::Connect { at: 0.0, stream: 0 },
-        TraceEvent::Connect { at: 0.0, stream: 1 },
-    ];
-    for i in 0..16u64 {
-        let req = Request {
+    let reqs = (0..16u64)
+        .map(|i| Request {
             id: i,
             prompt: vec![1 + i as u32 * 5, 9, 4, 7, 2],
             max_new_tokens: 16,
-        };
-        t.push(TraceEvent::arrive(1.0e-6 + i as f64 * 2.0e-4, i % 2, req));
-    }
-    t
+        })
+        .collect();
+    common::streamed_trace(2, 2.0e-4, reqs)
 }
 
 /// (aggregate tok/s, mean TTFT µs) for one affinity choice.
@@ -84,15 +59,21 @@ fn serve_scenario(affinity: XpuAffinity) -> (f64, f64) {
         AllocPolicy::Balanced,
         affinity,
     );
-    let rep = run_fleet(
+    let factory = common::xpu_factory(
+        spec,
+        accels,
+        ModelConfig::micro(),
+        WEIGHTS_SEED,
+        SimConfig { execute_real: true, ..SimConfig::noiseless() },
+        false,
+    );
+    let rep = common::serve_xpu(
         coord,
-        &factory(spec, accels),
+        &factory,
         BatcherOpts { max_batch: 4, prefill_chunk: 4 },
-        64,
         DriftMonitor::disabled(),
         trace(),
     );
-    assert!(rep.all_finished(), "bench trace did not drain");
     (rep.throughput(), rep.mean_ttft() * 1e6)
 }
 

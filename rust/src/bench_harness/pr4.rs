@@ -24,21 +24,18 @@
 //!
 //! `dynpar bench pr4 [--out BENCH_pr4.json]` renders the JSON trajectory.
 
-use std::sync::Arc;
-
-use crate::coordinator::{bus_share, AllocPolicy, Coordinator, ExecMode, Lease, XpuAffinity};
+use crate::coordinator::{bus_share, AllocPolicy, Coordinator, ExecMode, XpuAffinity};
 use crate::cpu::{presets, CpuSpec};
-use crate::engine::Engine;
-use crate::model::{ModelConfig, ModelWeights};
-use crate::perf::PerfConfig;
-use crate::sched::DynamicScheduler;
-use crate::server::fleet::{DriftMonitor, EngineFactory};
+use crate::model::ModelConfig;
+use crate::server::fleet::DriftMonitor;
 use crate::server::protocol::Request;
-use crate::server::testing::{run_fleet, HarnessReport, TraceEvent};
+use crate::server::testing::{HarnessReport, TraceEvent};
 use crate::server::BatcherOpts;
-use crate::sim::xpu::{AcceleratorSpec, XpuDispatch, XpuExecutor};
+use crate::sim::xpu::AcceleratorSpec;
 use crate::sim::SimConfig;
 use crate::util::json::Json;
+
+use super::common;
 
 const WEIGHTS_SEED: u64 = 17;
 const N_REQ: u64 = 24;
@@ -65,45 +62,15 @@ fn machine() -> (CpuSpec, Vec<AcceleratorSpec>) {
 /// enough that the NPU's launch overhead amortizes, small enough that the
 /// cost-model-only run (`execute_real: false`) stays fast.
 fn model() -> ModelConfig {
-    ModelConfig {
-        name: "pr4".into(),
-        vocab: 2048,
-        d_model: 2048,
-        n_layers: 2,
-        n_heads: 16,
-        d_ff: 2048,
-        t_max: 128,
-        prefill_len: 8,
-        rope_theta: 10000.0,
-        rms_eps: 1e-5,
-    }
-}
-
-fn factory(machine: CpuSpec, accels: Vec<AcceleratorSpec>) -> EngineFactory<XpuExecutor> {
-    let cfg = model();
-    let weights = Arc::new(ModelWeights::random_init(&cfg, WEIGHTS_SEED));
-    Box::new(move |lease: &Lease, dispatch: XpuDispatch| {
-        // timing comes from the cost model alone: the trace decodes
-        // ~2300 tokens of a d_model-2048 model, real matmuls would
-        // dominate bench wall-clock without changing any timing
-        let exec = lease.xpu_executor_mode(&machine, &accels, SimConfig::noiseless(), dispatch);
-        Engine::new(
-            cfg.clone(),
-            Arc::clone(&weights),
-            exec,
-            Box::new(DynamicScheduler),
-            PerfConfig::default(),
-        )
-    })
+    common::bench_model("pr4", 2048, 2048, 16, 2048, 8)
 }
 
 /// Frozen arrival script: one stream, 24 near-simultaneous requests —
 /// 8-token prompts (one prefill chunk) then 96 decode rounds each, enough
 /// rounds that the online ratio's convergence transient washes out.
 fn trace() -> Vec<TraceEvent> {
-    let mut t = vec![TraceEvent::Connect { at: 0.0, stream: 0 }];
-    for i in 0..N_REQ {
-        let req = Request {
+    let reqs = (0..N_REQ)
+        .map(|i| Request {
             id: i,
             prompt: vec![
                 1 + (i as u32 * 7) % 2000,
@@ -116,10 +83,9 @@ fn trace() -> Vec<TraceEvent> {
                 (i as u32 * 3) % 2000,
             ],
             max_new_tokens: MAX_NEW,
-        };
-        t.push(TraceEvent::arrive(1.0e-6 + i as f64 * 2.0e-4, 0, req));
-    }
-    t
+        })
+        .collect();
+    common::streamed_trace(1, 2.0e-4, reqs)
 }
 
 /// Serve the frozen trace under one execution mode.
@@ -132,15 +98,18 @@ fn scenario(mode: ExecMode) -> HarnessReport {
         XpuAffinity::Floating,
     );
     coord.set_exec_mode(mode);
-    let rep = run_fleet(
+    // timing comes from the cost model alone: the trace decodes ~2300
+    // tokens of a d_model-2048 model, real matmuls would dominate bench
+    // wall-clock without changing any timing
+    let factory =
+        common::xpu_factory(spec, accels, model(), WEIGHTS_SEED, SimConfig::noiseless(), true);
+    let rep = common::serve_xpu(
         coord,
-        &factory(spec, accels),
+        &factory,
         BatcherOpts { max_batch: 4, prefill_chunk: 8 },
-        64,
         DriftMonitor::disabled(),
         trace(),
     );
-    assert!(rep.all_finished(), "bench trace did not drain");
     assert_eq!(rep.total_decoded, N_REQ as usize * MAX_NEW, "tokens went missing");
     rep
 }
@@ -151,13 +120,7 @@ pub fn run() -> Json {
     let async_ = scenario(ExecMode::AsyncBatch);
     let speedup = async_.throughput() / intra.throughput();
     let r_final = async_.split_ratios.first().copied().unwrap_or(f64::NAN);
-    let side = |rep: &HarnessReport| {
-        Json::obj(vec![
-            ("tok_s", Json::num(rep.throughput())),
-            ("mean_ttft_us", Json::num(rep.mean_ttft() * 1e6)),
-            ("makespan_s", Json::num(rep.makespan)),
-        ])
-    };
+    let side = |rep: &HarnessReport| Json::obj(common::side_fields(rep));
     Json::obj(vec![
         ("bench", Json::str("pr4")),
         ("machine", Json::str("ultra_125h[2LPE,bw*50] + npu[bw*50]")),

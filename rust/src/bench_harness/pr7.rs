@@ -25,21 +25,17 @@
 //!
 //! `dynpar bench pr7 [--out BENCH_pr7.json]` renders the JSON trajectory.
 
-use std::sync::Arc;
-
-use crate::coordinator::{AllocPolicy, Coordinator, ExecMode, Lease};
+use crate::coordinator::{AllocPolicy, Coordinator, ExecMode};
 use crate::cpu::presets;
-use crate::engine::Engine;
-use crate::model::{ModelConfig, ModelWeights};
-use crate::perf::PerfConfig;
-use crate::sched::DynamicScheduler;
-use crate::server::fleet::{DriftMonitor, EngineFactory};
+use crate::model::ModelConfig;
+use crate::server::fleet::DriftMonitor;
 use crate::server::protocol::Request;
-use crate::server::testing::{run_fleet, HarnessReport, TraceEvent};
+use crate::server::testing::{HarnessReport, TraceEvent};
 use crate::server::BatcherOpts;
-use crate::sim::xpu::XpuDispatch;
-use crate::sim::{SimConfig, SimExecutor};
+use crate::sim::SimConfig;
 use crate::util::json::Json;
+
+use super::common;
 
 const WEIGHTS_SEED: u64 = 23;
 const N_REQ: u64 = 24;
@@ -52,36 +48,7 @@ const CHUNK: usize = 24;
 /// phase-overlap regime), large enough that the partitioned kernels still
 /// exercise the hybrid P/E split.
 fn model() -> ModelConfig {
-    ModelConfig {
-        name: "pr7".into(),
-        vocab: 512,
-        d_model: 256,
-        n_layers: 2,
-        n_heads: 4,
-        d_ff: 512,
-        t_max: 128,
-        prefill_len: CHUNK,
-        rope_theta: 10000.0,
-        rms_eps: 1e-5,
-    }
-}
-
-fn factory(machine: crate::cpu::CpuSpec) -> EngineFactory<SimExecutor> {
-    let cfg = model();
-    let weights = Arc::new(ModelWeights::random_init(&cfg, WEIGHTS_SEED));
-    Box::new(move |lease: &Lease, _dispatch: XpuDispatch| {
-        // cost-model timing only: the trace moves ~2700 prompt tokens and
-        // 384 decode tokens; real matmuls would dominate bench wall-clock
-        // without changing any virtual timestamp
-        let exec = lease.sim_executor(&machine, SimConfig::noiseless());
-        Engine::new(
-            cfg.clone(),
-            Arc::clone(&weights),
-            exec,
-            Box::new(DynamicScheduler),
-            PerfConfig::default(),
-        )
-    })
+    common::bench_model("pr7", 512, 256, 4, 512, CHUNK)
 }
 
 /// Frozen arrival script: one stream, 24 near-simultaneous long-prompt
@@ -89,14 +56,14 @@ fn factory(machine: crate::cpu::CpuSpec) -> EngineFactory<SimExecutor> {
 /// each, so prefill and decode carry comparable total work and the phase
 /// pipeline stays full for ~6 cohorts.
 fn trace() -> Vec<TraceEvent> {
-    let mut t = vec![TraceEvent::Connect { at: 0.0, stream: 0 }];
-    for i in 0..N_REQ {
-        let prompt: Vec<u32> =
-            (0..PROMPT_LEN as u32).map(|k| 1 + (i as u32 * 7 + k * 13) % 500).collect();
-        let req = Request { id: i, prompt, max_new_tokens: MAX_NEW };
-        t.push(TraceEvent::arrive(1.0e-6 + i as f64 * 1.0e-4, 0, req));
-    }
-    t
+    let reqs = (0..N_REQ)
+        .map(|i| {
+            let prompt: Vec<u32> =
+                (0..PROMPT_LEN as u32).map(|k| 1 + (i as u32 * 7 + k * 13) % 500).collect();
+            Request { id: i, prompt, max_new_tokens: MAX_NEW }
+        })
+        .collect();
+    common::streamed_trace(1, 1.0e-4, reqs)
 }
 
 /// Serve the frozen trace under one execution mode.
@@ -104,15 +71,18 @@ fn scenario(mode: ExecMode) -> HarnessReport {
     let spec = presets::core_12900k();
     let mut coord = Coordinator::new(spec.clone(), AllocPolicy::Balanced);
     coord.set_exec_mode(mode);
-    let rep = run_fleet(
+    // cost-model timing only: the trace moves ~2700 prompt tokens and
+    // 384 decode tokens; real matmuls would dominate bench wall-clock
+    // without changing any virtual timestamp
+    let factory =
+        common::sim_factory(spec, model(), WEIGHTS_SEED, SimConfig::noiseless(), false);
+    let rep = common::serve(
         coord,
-        &factory(spec),
+        &factory,
         BatcherOpts { max_batch: 4, prefill_chunk: CHUNK },
-        64,
         DriftMonitor::disabled(),
         trace(),
     );
-    assert!(rep.all_finished(), "bench trace did not drain");
     assert_eq!(rep.total_decoded, N_REQ as usize * MAX_NEW, "tokens went missing");
     rep
 }
@@ -124,12 +94,9 @@ pub fn run() -> Json {
     let speedup = disagg.throughput() / blended.throughput();
     let ttft_ratio = blended.mean_ttft() / disagg.mean_ttft();
     let side = |rep: &HarnessReport| {
-        Json::obj(vec![
-            ("tok_s", Json::num(rep.throughput())),
-            ("mean_ttft_us", Json::num(rep.mean_ttft() * 1e6)),
-            ("makespan_s", Json::num(rep.makespan)),
-            ("handoffs", Json::num(rep.handoffs as f64)),
-        ])
+        let mut fields = common::side_fields(rep);
+        fields.push(("handoffs", Json::num(rep.handoffs as f64)));
+        Json::obj(fields)
     };
     Json::obj(vec![
         ("bench", Json::str("pr7")),

@@ -24,21 +24,17 @@
 //!
 //! `dynpar bench pr8 [--out BENCH_pr8.json]` renders the JSON report.
 
-use std::sync::Arc;
-
-use crate::coordinator::{AllocPolicy, Coordinator, ExecMode, Lease};
+use crate::coordinator::{AllocPolicy, Coordinator, ExecMode};
 use crate::cpu::presets;
-use crate::engine::Engine;
-use crate::model::{ModelConfig, ModelWeights};
-use crate::perf::PerfConfig;
-use crate::sched::DynamicScheduler;
-use crate::server::fleet::{DriftMonitor, EngineFactory};
+use crate::model::ModelConfig;
+use crate::server::fleet::DriftMonitor;
 use crate::server::protocol::Request;
-use crate::server::testing::{run_fleet, BandwidthUse, HarnessReport, TraceEvent};
+use crate::server::testing::{BandwidthUse, HarnessReport, TraceEvent};
 use crate::server::BatcherOpts;
-use crate::sim::xpu::XpuDispatch;
-use crate::sim::{SimConfig, SimExecutor};
+use crate::sim::SimConfig;
 use crate::util::json::Json;
+
+use super::common;
 
 const WEIGHTS_SEED: u64 = 23;
 const N_REQ: u64 = 24;
@@ -50,50 +46,20 @@ const CHUNK: usize = 24;
 /// 2 µs/kernel dispatch overhead is a real fraction of every round —
 /// exactly the regime the fused path targets.
 fn model() -> ModelConfig {
-    ModelConfig {
-        name: "pr8".into(),
-        vocab: 512,
-        d_model: 256,
-        n_layers: 2,
-        n_heads: 4,
-        d_ff: 512,
-        t_max: 128,
-        prefill_len: CHUNK,
-        rope_theta: 10000.0,
-        rms_eps: 1e-5,
-    }
-}
-
-fn factory(machine: crate::cpu::CpuSpec, fused: bool) -> EngineFactory<SimExecutor> {
-    let cfg = model();
-    let weights = Arc::new(ModelWeights::random_init(&cfg, WEIGHTS_SEED));
-    Box::new(move |lease: &Lease, _dispatch: XpuDispatch| {
-        // cost-model timing only: real matmuls would dominate bench
-        // wall-clock without changing any virtual timestamp
-        let exec = lease.sim_executor(&machine, SimConfig::noiseless());
-        let mut e = Engine::new(
-            cfg.clone(),
-            Arc::clone(&weights),
-            exec,
-            Box::new(DynamicScheduler),
-            PerfConfig::default(),
-        );
-        e.opts.fused = fused;
-        e
-    })
+    common::bench_model("pr8", 512, 256, 4, 512, CHUNK)
 }
 
 /// Frozen arrival script — identical to the PR-7 trace so the two benches
 /// stay comparable across PRs.
 fn trace() -> Vec<TraceEvent> {
-    let mut t = vec![TraceEvent::Connect { at: 0.0, stream: 0 }];
-    for i in 0..N_REQ {
-        let prompt: Vec<u32> =
-            (0..PROMPT_LEN as u32).map(|k| 1 + (i as u32 * 7 + k * 13) % 500).collect();
-        let req = Request { id: i, prompt, max_new_tokens: MAX_NEW };
-        t.push(TraceEvent::arrive(1.0e-6 + i as f64 * 1.0e-4, 0, req));
-    }
-    t
+    let reqs = (0..N_REQ)
+        .map(|i| {
+            let prompt: Vec<u32> =
+                (0..PROMPT_LEN as u32).map(|k| 1 + (i as u32 * 7 + k * 13) % 500).collect();
+            Request { id: i, prompt, max_new_tokens: MAX_NEW }
+        })
+        .collect();
+    common::streamed_trace(1, 1.0e-4, reqs)
 }
 
 /// Serve the frozen trace with the fused path on or off.
@@ -101,15 +67,17 @@ fn scenario(fused: bool) -> HarnessReport {
     let spec = presets::core_12900k();
     let mut coord = Coordinator::new(spec.clone(), AllocPolicy::Balanced);
     coord.set_exec_mode(ExecMode::IntraKernel);
-    let rep = run_fleet(
+    // cost-model timing only: real matmuls would dominate bench
+    // wall-clock without changing any virtual timestamp
+    let factory =
+        common::sim_factory(spec, model(), WEIGHTS_SEED, SimConfig::noiseless(), fused);
+    let rep = common::serve(
         coord,
-        &factory(spec, fused),
+        &factory,
         BatcherOpts { max_batch: 4, prefill_chunk: CHUNK },
-        64,
         DriftMonitor::disabled(),
         trace(),
     );
-    assert!(rep.all_finished(), "bench trace did not drain");
     assert_eq!(rep.total_decoded, N_REQ as usize * MAX_NEW, "tokens went missing");
     rep
 }
@@ -125,16 +93,13 @@ pub fn run() -> Json {
     let speedup = fused.throughput() / unfused.throughput();
     let side = |rep: &HarnessReport| {
         let bw = bandwidth_of(rep);
-        Json::obj(vec![
-            ("tok_s", Json::num(rep.throughput())),
-            ("mean_ttft_us", Json::num(rep.mean_ttft() * 1e6)),
-            ("makespan_s", Json::num(rep.makespan)),
-            ("bytes_moved", Json::num(bw.bytes)),
-            ("kernel_secs", Json::num(bw.kernel_secs)),
-            ("achieved_gbps", Json::num(bw.achieved_gbps())),
-            ("bus_share_gbps", Json::num(bw.bus_share_gbps)),
-            ("bandwidth_utilization", Json::num(bw.utilization())),
-        ])
+        let mut fields = common::side_fields(rep);
+        fields.push(("bytes_moved", Json::num(bw.bytes)));
+        fields.push(("kernel_secs", Json::num(bw.kernel_secs)));
+        fields.push(("achieved_gbps", Json::num(bw.achieved_gbps())));
+        fields.push(("bus_share_gbps", Json::num(bw.bus_share_gbps)));
+        fields.push(("bandwidth_utilization", Json::num(bw.utilization())));
+        Json::obj(fields)
     };
     Json::obj(vec![
         ("bench", Json::str("pr8")),

@@ -1,0 +1,643 @@
+//! Virtual-time cluster harness: N simulated machines behind one admission
+//! plane, no sockets, bit-for-bit deterministic.
+//!
+//! [`run_cluster`] is `server::testing::run_fleet` one level up: every
+//! machine runs its own batcher fleet on its own virtual clocks, the driver
+//! always advances the globally smallest working clock, and one shared
+//! [`AdmissionQueue`] feeds all machines — the cluster admission plane.
+//! `Connect` events place streams through [`ClusterCoordinator::admit`]
+//! (balanced partition over learned machine strengths), served rounds fold
+//! per-machine token rates into the cluster strength table, and the
+//! [`DriftMonitor`] watches cluster skew: a whole-machine degrade
+//! ([`TraceEvent::DegradeMachine`]) triggers [`ClusterCoordinator::replace`]
+//! mid-trace, with in-flight sessions migrating bit-identically through the
+//! same `take_actives`/`distribute` machinery fleet rebuilds already use —
+//! except that *cross-machine* moves charge their KV bytes against the
+//! interconnect: the destination machine's clocks restart only after the
+//! inbound transfer lands.
+//!
+//! Limits: machines run their leases blended or phase-disaggregated;
+//! `ExecMode::AsyncBatch` pairs are not deficit-routed at cluster scope
+//! (admission falls back to work-conserving first-fit), so benchmarks for
+//! that mode should stay on the single-machine harness.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::mpsc;
+
+use crate::coordinator::{Lease, StreamId};
+use crate::exec::{Executor, RunResult};
+use crate::kernels::KernelClass;
+use crate::metrics::{MachineRollup, ServingMetrics};
+use crate::server::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending, PhaseRole};
+use crate::server::fleet::{self, DriftMonitor, EngineFactory};
+use crate::server::queue::AdmissionQueue;
+use crate::server::testing::{self, HarnessReport, TraceEvent};
+
+use super::{machine_capability, ClusterCoordinator, MachineId};
+
+/// Served rounds a machine's rate window accumulates before it is folded
+/// into the cluster strength table (smooths per-round jitter the same way
+/// the coordinator's per-core EWMA smooths per-kernel jitter).
+const OBS_ROUNDS: usize = 4;
+
+/// One machine's accumulating tokens/kernel-seconds since the last cluster
+/// observation fold.
+#[derive(Clone, Copy, Default)]
+struct RateWindow {
+    tokens: usize,
+    secs: f64,
+    rounds: usize,
+}
+
+impl RateWindow {
+    fn ready(&self) -> bool {
+        self.rounds >= OBS_ROUNDS && self.secs > 0.0 && self.tokens > 0
+    }
+
+    fn rate(&self) -> f64 {
+        self.tokens as f64 / self.secs
+    }
+
+    fn reset(&mut self) {
+        *self = RateWindow::default();
+    }
+}
+
+/// Everything the cluster harness observed about one machine.
+#[derive(Clone, Debug, Default)]
+pub struct MachineUse {
+    /// decode tokens this machine served
+    pub tokens: usize,
+    /// busy kernel seconds across all its batchers and rebuilds
+    pub kernel_secs: f64,
+    /// scheduler rounds stepped on this machine
+    pub rounds: usize,
+    /// KV bytes that migrations *into* this machine moved over the fabric
+    pub interconnect_bytes: f64,
+    /// the machine's capability score (full-contention GB/s)
+    pub capability_gbps: f64,
+}
+
+/// Aggregate outcome of a cluster run: the familiar per-request
+/// [`HarnessReport`] plus the cluster-level picture.
+pub struct ClusterReport {
+    pub base: HarnessReport,
+    pub machines: Vec<MachineUse>,
+    /// `replace()` calls that actually moved streams
+    pub replacements: u64,
+    /// sessions carried across machines by those re-placements
+    pub migrated_sessions: usize,
+    /// total KV bytes charged against the interconnect
+    pub interconnect_bytes: f64,
+    /// cluster skew measured at each drift trigger that moved streams
+    pub cluster_skew_at_trigger: Vec<f64>,
+    /// cluster-level observations folded over the run
+    pub cluster_observations: u64,
+    pub final_skew: f64,
+    pub final_strengths: Vec<f64>,
+    /// where every still-connected stream lived when the run ended
+    pub final_placements: BTreeMap<StreamId, MachineId>,
+}
+
+impl ClusterReport {
+    pub fn throughput(&self) -> f64 {
+        self.base.throughput()
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        self.base.mean_ttft()
+    }
+
+    pub fn all_finished(&self) -> bool {
+        self.base.all_finished()
+    }
+
+    pub fn tokens_of(&self, id: u64) -> &[u32] {
+        self.base.tokens_of(id)
+    }
+
+    /// The cluster-level [`ServingMetrics`] export: the classic serving
+    /// counters plus per-machine rollups, cluster skew and interconnect
+    /// traffic (the satellite the harness report shows the fleet through).
+    pub fn serving_metrics(&self) -> ServingMetrics {
+        let makespan = self.base.makespan;
+        let mut bytes_moved = 0.0;
+        let mut kernel_secs = 0.0;
+        for bw in self.base.bandwidth.values() {
+            bytes_moved += bw.bytes;
+            kernel_secs += bw.kernel_secs;
+        }
+        let machines = self
+            .machines
+            .iter()
+            .enumerate()
+            .map(|(m, u)| MachineRollup {
+                machine: m,
+                tokens: u.tokens as u64,
+                kernel_secs: u.kernel_secs,
+                tok_s: if makespan > 0.0 { u.tokens as f64 / makespan } else { 0.0 },
+                interconnect_bytes: u.interconnect_bytes,
+            })
+            .collect();
+        let mut sm = ServingMetrics {
+            requests: self.base.requests.len() as u64,
+            tokens: self.base.total_decoded as u64,
+            rejected: self.base.rejected.len() as u64,
+            rebuilds: self.base.rebuilds as u64,
+            drift_rebalances: self.base.drift_rebalances as u64,
+            handoffs: self.base.handoffs as u64,
+            bytes_moved,
+            kernel_secs,
+            bus_reference_gbps: self.machines.iter().map(|u| u.capability_gbps).sum(),
+            machines,
+            cluster_skew: self.final_skew,
+            replacements: self.replacements,
+            interconnect_bytes: self.interconnect_bytes,
+            ..Default::default()
+        };
+        for r in self.base.requests.values() {
+            if let Some(t) = r.ttft() {
+                sm.ttft.record(t);
+            }
+        }
+        for &d in &self.base.queue_depth_samples {
+            sm.queue_depth.record(d as f64);
+        }
+        sm
+    }
+}
+
+/// Drive a cluster end-to-end in virtual time. `factories` builds each
+/// machine's engines (index-aligned with the cluster's machines — machines
+/// may simulate entirely different CPUs); the shared `trace` scripts
+/// arrivals, stream membership and degrades; `monitor` gates cluster-level
+/// re-placement exactly like the per-machine drift monitor gates
+/// `rebalance()`.
+pub fn run_cluster<E: Executor>(
+    mut cluster: ClusterCoordinator,
+    factories: &[EngineFactory<E>],
+    opts: BatcherOpts,
+    queue_depth: usize,
+    mut monitor: DriftMonitor,
+    mut trace: Vec<TraceEvent>,
+) -> ClusterReport {
+    let n = cluster.n_machines();
+    assert_eq!(factories.len(), n, "one engine factory per machine");
+    testing::validate_trace(&trace);
+    trace.sort_by(|a, b| a.at().total_cmp(&b.at()));
+    let mut report = HarnessReport::default();
+    let mut batchers: Vec<Vec<LeaseBatcher<E>>> = (0..n).map(|_| Vec::new()).collect();
+    let mut offsets: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut degraded: Vec<Vec<(Vec<usize>, f64)>> = vec![Vec::new(); n];
+    let mut windows: Vec<RateWindow> = vec![RateWindow::default(); n];
+    let mut usage: Vec<MachineUse> = vec![MachineUse::default(); n];
+    for (m, u) in usage.iter_mut().enumerate() {
+        u.capability_gbps = machine_capability(cluster.machine(MachineId(m)));
+    }
+    let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(queue_depth);
+    let mut rxs: BTreeMap<u64, mpsc::Receiver<crate::server::protocol::Event>> = BTreeMap::new();
+    let mut migrated_sessions = 0usize;
+    let mut interconnect_bytes = 0.0f64;
+    let mut skew_at_trigger: Vec<f64> = Vec::new();
+    let mut cursor = 0usize;
+    let mut guard = 0u64;
+    loop {
+        guard += 1;
+        assert!(guard < 5_000_000, "cluster harness runaway");
+        for m in 0..n {
+            testing::drain_handoffs(&mut batchers[m], &mut offsets[m], &mut report);
+        }
+        let next_at = if cursor < trace.len() { Some(trace[cursor].at()) } else { None };
+        // working batcher with the globally smallest virtual clock
+        let mut pick: Option<(usize, usize, f64)> = None;
+        for m in 0..n {
+            for i in 0..batchers[m].len() {
+                let b = &batchers[m][i];
+                let clock = offsets[m][i] + b.engine.kernel_secs;
+                let parked = b.role() == PhaseRole::Prefill && b.n_prefilled() == b.n_active();
+                let works = (!b.is_idle() && !parked)
+                    || (!queue.is_empty() && b.role() != PhaseRole::Decode && b.has_capacity());
+                if works && pick.is_none_or(|(_, _, c)| clock < c) {
+                    pick = Some((m, i, clock));
+                }
+            }
+        }
+        let do_event = match (pick, next_at) {
+            (None, None) => break,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            (Some((_, _, clock)), Some(t)) => clock > t,
+        };
+        if do_event {
+            let t = next_at.unwrap();
+            // idle clocks across the whole cluster catch up to the event
+            for m in 0..n {
+                for i in 0..batchers[m].len() {
+                    let clock = offsets[m][i] + batchers[m][i].engine.kernel_secs;
+                    if clock < t {
+                        offsets[m][i] = t - batchers[m][i].engine.kernel_secs;
+                    }
+                }
+            }
+            let mut touched: BTreeSet<usize> = BTreeSet::new();
+            while cursor < trace.len() && trace[cursor].at() <= t + 1e-12 {
+                let ev = trace[cursor].clone();
+                cursor += 1;
+                match ev {
+                    TraceEvent::Arrive { at, req, .. } => {
+                        testing::enqueue(&mut queue, &mut rxs, &mut report, at, req)
+                    }
+                    TraceEvent::Connect { stream, .. } => {
+                        let MachineId(m) = cluster.admit(stream);
+                        touched.insert(m);
+                    }
+                    TraceEvent::Disconnect { stream, .. } => {
+                        if let Some(MachineId(m)) = cluster.placement_of(stream) {
+                            cluster.finish(stream);
+                            touched.insert(m);
+                        }
+                    }
+                    // core-scoped degrade: by convention machine 0's cores
+                    TraceEvent::Degrade { cores, fraction, .. } => {
+                        testing::apply_degradation(&mut batchers[0], &cores, fraction);
+                        degraded[0].push((cores, fraction));
+                    }
+                    TraceEvent::DegradeMachine { machine, fraction, .. } => {
+                        let cores: Vec<usize> =
+                            (0..cluster.machine(MachineId(machine)).machine().n_cores()).collect();
+                        testing::apply_degradation(&mut batchers[machine], &cores, fraction);
+                        degraded[machine].push((cores, fraction));
+                    }
+                }
+            }
+            // membership rebuilds stay machine-local: carried sessions
+            // redistribute within their machine (no interconnect charge)
+            for &m in &touched {
+                let (stale, carried) = strip_machine(&mut batchers[m]);
+                let carried_m: Vec<ActiveRequest> =
+                    carried.into_iter().map(|(_, _, a)| a).collect();
+                rebuild_machine(
+                    &cluster,
+                    m,
+                    &factories[m],
+                    opts,
+                    &mut batchers[m],
+                    &mut offsets[m],
+                    carried_m,
+                    &degraded[m],
+                    t,
+                    &mut report,
+                );
+                replay_stale(&mut cluster, m, &stale, &mut report);
+            }
+            continue;
+        }
+
+        let (m, i, mut clock) = pick.unwrap();
+        report.queue_depth_samples.push(queue.len());
+        let was_idle = batchers[m][i].is_idle();
+        while batchers[m][i].role() != PhaseRole::Decode && batchers[m][i].has_capacity() {
+            let Some(p) = queue.pop() else { break };
+            let id = p.req.id;
+            let before = batchers[m][i].admitted();
+            match batchers[m][i].admit(p) {
+                Ok(()) => {
+                    // a batcher that sat idle starts this request at its
+                    // arrival instant, not at the stale idle clock
+                    if batchers[m][i].admitted() > before && was_idle {
+                        if let Some(rec) = report.requests.get(&id) {
+                            if clock < rec.arrived_at {
+                                clock = rec.arrived_at;
+                                offsets[m][i] = clock - batchers[m][i].engine.kernel_secs;
+                            }
+                        }
+                    }
+                    if let Some(rec) = report.requests.get_mut(&id) {
+                        rec.admitted_at = Some(clock);
+                    }
+                }
+                Err(p) => {
+                    queue.push_front(p);
+                    break;
+                }
+            }
+        }
+        let step = batchers[m][i].step();
+        let (stream, bus) = testing::bandwidth_key(&batchers[m][i]);
+        testing::absorb(&mut report, &step, offsets[m][i], stream, bus);
+        usage[m].tokens += step.decoded_tokens;
+        usage[m].kernel_secs += step.kernel_secs;
+        usage[m].rounds += 1;
+        // machine-local strength learning, exactly like run_fleet
+        if let (Some(lease), Some(res), Some(class)) = (
+            batchers[m][i].lease.clone(),
+            batchers[m][i].engine.rt.last_result.clone(),
+            batchers[m][i].engine.rt.last_class,
+        ) {
+            if cluster.machine_mut(MachineId(m)).observe(&lease, class, &res) {
+                report.observations_accepted += 1;
+            }
+        }
+        // cluster-level strength learning: fold windowed per-machine token
+        // rates once ≥2 machines have a full window (a relative signal)
+        if step.decoded_tokens > 0 && step.kernel_secs > 0.0 {
+            let w = &mut windows[m];
+            w.tokens += step.decoded_tokens;
+            w.secs += step.kernel_secs;
+            w.rounds += 1;
+            let ready: Vec<usize> = (0..n).filter(|&k| windows[k].ready()).collect();
+            if ready.len() >= 2 {
+                let rates: Vec<(MachineId, f64)> =
+                    ready.iter().map(|&k| (MachineId(k), windows[k].rate())).collect();
+                if cluster.observe(&rates) {
+                    for &k in &ready {
+                        windows[k].reset();
+                    }
+                }
+            }
+        }
+        // the cluster-drift check a fleet supervisor would run between
+        // events: skew past threshold → re-place and migrate sessions
+        let drift = monitor.check_drift_with(
+            cluster.epoch(),
+            cluster.observations(),
+            cluster.machines_in_use(),
+            || cluster.skew(),
+        );
+        if let Some(skew) = drift {
+            let moves = cluster.replace();
+            if moves.is_empty() {
+                continue; // epoch bumped: the cooldown restarts
+            }
+            // rebuild at the cluster's latest clock — a machine running
+            // ahead must not have its timeline rewound
+            let mut now = clock;
+            for k in 0..n {
+                for j in 0..batchers[k].len() {
+                    now = now.max(offsets[k][j] + batchers[k][j].engine.kernel_secs);
+                }
+            }
+            let affected: BTreeSet<usize> =
+                moves.iter().flat_map(|mv| [mv.from.0, mv.to.0]).collect();
+            let mut stale: Vec<(usize, Lease, KernelClass, RunResult)> = Vec::new();
+            let mut carried: Vec<(usize, Option<StreamId>, f64, ActiveRequest)> = Vec::new();
+            for &k in &affected {
+                let (s, c) = strip_machine(&mut batchers[k]);
+                stale.extend(s.into_iter().map(|(l, cl, r)| (k, l, cl, r)));
+                carried.extend(c.into_iter().map(|(st, kv, a)| (k, st, kv, a)));
+            }
+            // interconnect-cost-aware routing: each session follows its
+            // stream's new placement; cross-machine moves charge KV bytes
+            let mut inbound = vec![0.0f64; n];
+            let mut groups: BTreeMap<usize, Vec<ActiveRequest>> = BTreeMap::new();
+            for (src, stream, kv, a) in carried {
+                let dest = stream
+                    .and_then(|s| cluster.placement_of(s))
+                    .map_or(src, |MachineId(d)| d);
+                if dest != src {
+                    migrated_sessions += 1;
+                    interconnect_bytes += kv;
+                    inbound[dest] += kv;
+                    usage[dest].interconnect_bytes += kv;
+                }
+                groups.entry(dest).or_default().push(a);
+            }
+            for &k in &affected {
+                let carried_k = groups.remove(&k).unwrap_or_default();
+                // the destination resumes once its inbound KV landed
+                let restart = now + cluster.interconnect().transfer_secs(inbound[k]);
+                rebuild_machine(
+                    &cluster,
+                    k,
+                    &factories[k],
+                    opts,
+                    &mut batchers[k],
+                    &mut offsets[k],
+                    carried_k,
+                    &degraded[k],
+                    restart,
+                    &mut report,
+                );
+            }
+            debug_assert!(groups.is_empty(), "session routed to an untouched machine");
+            for (k, l, cl, r) in &stale {
+                replay_stale_one(&mut cluster, *k, l, *cl, r, &mut report);
+            }
+            report.drift_rebalances += 1;
+            skew_at_trigger.push(skew);
+        }
+    }
+    for m in 0..n {
+        let coord = cluster.machine(MachineId(m));
+        for l in coord.leases() {
+            if !l.accels().is_empty() {
+                report.split_ratios.push(coord.split_ratio(l));
+            }
+        }
+    }
+    report.skew_at_trigger = skew_at_trigger.clone();
+    testing::finalize(&mut report, &rxs);
+    ClusterReport {
+        base: report,
+        machines: usage,
+        replacements: cluster.replacements(),
+        migrated_sessions,
+        interconnect_bytes,
+        cluster_skew_at_trigger: skew_at_trigger,
+        cluster_observations: cluster.observations(),
+        final_skew: cluster.skew(),
+        final_strengths: cluster.strengths().to_vec(),
+        final_placements: cluster.placements().collect(),
+    }
+}
+
+/// Tear one machine's fleet down for a rebuild: collect the in-flight
+/// measurements (for the stale-replay fence) and the active requests,
+/// each tagged with its stream and KV footprint (the bytes a cross-machine
+/// migration would move).
+type StaleObs = (Lease, KernelClass, RunResult);
+type CarriedSession = (Option<StreamId>, f64, ActiveRequest);
+
+fn strip_machine<E: Executor>(
+    batchers: &mut [LeaseBatcher<E>],
+) -> (Vec<StaleObs>, Vec<CarriedSession>) {
+    let mut stale = Vec::new();
+    let mut carried = Vec::new();
+    for b in batchers.iter_mut() {
+        if let (Some(l), Some(c), Some(r)) =
+            (b.lease.clone(), b.engine.rt.last_class, b.engine.rt.last_result.clone())
+        {
+            stale.push((l, c, r));
+        }
+        let stream = b.lease.as_ref().map(|l| l.stream);
+        let cfg = b.engine.cfg.clone();
+        for a in b.take_actives() {
+            let kv = a.kv_bytes(&cfg);
+            carried.push((stream, kv, a));
+        }
+    }
+    (stale, carried)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rebuild_machine<E: Executor>(
+    cluster: &ClusterCoordinator,
+    m: usize,
+    factory: &EngineFactory<E>,
+    opts: BatcherOpts,
+    batchers: &mut Vec<LeaseBatcher<E>>,
+    offsets: &mut Vec<f64>,
+    carried: Vec<ActiveRequest>,
+    degraded: &[(Vec<usize>, f64)],
+    now: f64,
+    report: &mut HarnessReport,
+) {
+    let coord = cluster.machine(MachineId(m));
+    let mut fresh = fleet::build_batchers(coord, factory, opts);
+    for a in fleet::distribute(carried, &mut fresh) {
+        a.reject("no serving capacity, retry");
+    }
+    for (cores, fraction) in degraded {
+        testing::apply_degradation(&mut fresh, cores, *fraction);
+    }
+    *offsets = fresh.iter().map(|b| now - b.engine.kernel_secs).collect();
+    *batchers = fresh;
+    report.rebuilds += 1;
+    report.epochs_seen.push(cluster.epoch());
+    report.lease_sets.push(coord.leases().cloned().collect());
+}
+
+fn replay_stale(
+    cluster: &mut ClusterCoordinator,
+    m: usize,
+    stale: &[StaleObs],
+    report: &mut HarnessReport,
+) {
+    for (l, c, r) in stale {
+        replay_stale_one(cluster, m, l, *c, r, report);
+    }
+}
+
+fn replay_stale_one(
+    cluster: &mut ClusterCoordinator,
+    m: usize,
+    lease: &Lease,
+    class: KernelClass,
+    res: &RunResult,
+    report: &mut HarnessReport,
+) {
+    if cluster.machine_mut(MachineId(m)).observe(lease, class, res) {
+        report.stale_observations_accepted += 1;
+    } else {
+        report.stale_observations_dropped += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{InterconnectSpec, MachineSpec};
+    use crate::cpu::presets;
+    use crate::engine::Engine;
+    use crate::model::{ModelConfig, ModelWeights};
+    use crate::perf::PerfConfig;
+    use crate::sched::DynamicScheduler;
+    use crate::server::protocol::Request;
+    use crate::sim::{SimConfig, SimExecutor};
+    use std::sync::Arc;
+
+    fn factory(machine: crate::cpu::CpuSpec, seed: u64) -> EngineFactory<SimExecutor> {
+        let cfg = ModelConfig::micro();
+        let weights = Arc::new(ModelWeights::random_init(&cfg, seed));
+        Box::new(move |lease, _dispatch| {
+            let sim = SimConfig { execute_real: true, ..SimConfig::noiseless() };
+            let exec = lease.sim_executor(&machine, sim);
+            Engine::new(
+                cfg.clone(),
+                Arc::clone(&weights),
+                exec,
+                Box::new(DynamicScheduler),
+                PerfConfig::default(),
+            )
+        })
+    }
+
+    fn req(id: u64, prompt: &[u32], max_new: usize) -> Request {
+        Request { id, prompt: prompt.to_vec(), max_new_tokens: max_new }
+    }
+
+    fn two_machine_cluster() -> (ClusterCoordinator, Vec<EngineFactory<SimExecutor>>) {
+        let specs = [
+            MachineSpec::cores_only(presets::core_12900k()),
+            MachineSpec::cores_only(presets::homogeneous(12)),
+        ];
+        let cluster = ClusterCoordinator::new(&specs, InterconnectSpec::default());
+        let factories =
+            vec![factory(presets::core_12900k(), 5), factory(presets::homogeneous(12), 5)];
+        (cluster, factories)
+    }
+
+    #[test]
+    fn cluster_serves_across_machines_deterministically() {
+        let run = || {
+            let (cluster, factories) = two_machine_cluster();
+            let mut trace = vec![
+                TraceEvent::Connect { at: 0.0, stream: 0 },
+                TraceEvent::Connect { at: 0.0, stream: 1 },
+            ];
+            for id in 0..6u64 {
+                trace.push(TraceEvent::arrive(1e-6 + id as f64 * 1e-4, 0, req(id, &[1, 2, 3], 4)));
+            }
+            run_cluster(
+                cluster,
+                &factories,
+                BatcherOpts::default(),
+                64,
+                DriftMonitor::disabled(),
+                trace,
+            )
+        };
+        let a = run();
+        assert!(a.all_finished(), "unserved requests");
+        assert_eq!(a.base.total_decoded, 24);
+        // both machines held a stream and served tokens
+        assert!(a.machines.iter().filter(|u| u.tokens > 0).count() >= 2, "one machine idle");
+        // no drift monitor → no migrations, no interconnect traffic
+        assert_eq!(a.migrated_sessions, 0);
+        assert_eq!(a.interconnect_bytes, 0.0);
+        let b = run();
+        for id in 0..6u64 {
+            assert_eq!(a.tokens_of(id), b.tokens_of(id), "non-deterministic stream {id}");
+        }
+        assert_eq!(a.base.makespan, b.base.makespan);
+    }
+
+    #[test]
+    fn serving_metrics_rollup_exports_cluster_fields() {
+        let (cluster, factories) = two_machine_cluster();
+        let trace = vec![
+            TraceEvent::Connect { at: 0.0, stream: 0 },
+            TraceEvent::Connect { at: 0.0, stream: 1 },
+            TraceEvent::arrive(1e-6, 0, req(1, &[1, 2], 3)),
+            TraceEvent::arrive(2e-6, 0, req(2, &[3, 4], 3)),
+        ];
+        let rep = run_cluster(
+            cluster,
+            &factories,
+            BatcherOpts::default(),
+            16,
+            DriftMonitor::disabled(),
+            trace,
+        );
+        assert!(rep.all_finished());
+        let sm = rep.serving_metrics();
+        assert_eq!(sm.machines.len(), 2);
+        assert_eq!(sm.tokens, 6);
+        assert_eq!(sm.replacements, 0);
+        let j = sm.to_json(2, 1);
+        let machines = j.get("machines").expect("cluster export missing");
+        assert_eq!(machines.as_array().map(|a| a.len()), Some(2));
+        assert!(j.get("cluster_skew").is_some());
+        assert!(j.get("interconnect_bytes").is_some());
+    }
+}

@@ -1,0 +1,530 @@
+//! Cluster tier: a hierarchical coordinator over many simulated machines
+//! behind one admission plane.
+//!
+//! The per-machine [`Coordinator`] owns *compute units* (cores and
+//! accelerators) and leases subsets to streams; this module adds the next
+//! level of the same hierarchy — a [`ClusterCoordinator`] owns *machines*
+//! (each wrapping its own `Coordinator`, possibly with different
+//! [`CpuSpec`]s and accelerators) and places streams across them:
+//!
+//! * **Static placement** — [`ClusterCoordinator::admit`] runs the balanced
+//!   k-way partitioner ([`partition`]) over per-machine capability scores
+//!   with epsilon slack, so a new stream lands on the machine whose
+//!   normalized fill stays lowest.
+//! * **Strength learning** — [`ClusterCoordinator::observe`] folds served
+//!   per-machine token rates into per-machine strengths with the same
+//!   mass-preserving eq.-2 EWMA the coordinator uses per core: the total
+//!   strength mass of the participating machines is conserved, so strengths
+//!   stay mutually comparable while their *ratios* track live throughput.
+//! * **Drift response** — [`ClusterCoordinator::skew`] measures how far
+//!   machines' learned strengths have drifted from their capability seeds
+//!   (a whole-machine degrade shows up here); past a threshold the serving
+//!   loop calls [`ClusterCoordinator::replace`], which re-partitions and
+//!   returns the net [`Migration`]s. Sessions migrate bit-identically
+//!   through the existing fleet handoff machinery; *cross-machine* moves
+//!   charge KV-transfer bytes over the [`InterconnectSpec`], while
+//!   in-machine moves stay free — mirroring how leases already carry
+//!   `bus_share_gbps` within a machine.
+//!
+//! The whole tier is simulation-only and deterministic: no sockets, no
+//! threads — the virtual-time harness in [`harness`] drives N machines on
+//! concurrent virtual clocks exactly like `server::testing::run_fleet`
+//! drives N leases.
+
+pub mod harness;
+pub mod partition;
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::{AllocPolicy, Coordinator, StreamId, XpuAffinity};
+use crate::cpu::CpuSpec;
+use crate::sim::bw::{full_contention_throughput, Contender};
+use crate::sim::xpu::AcceleratorSpec;
+
+use partition::{place_one, repartition};
+
+/// Identifies one machine of the cluster — the coordinate *above*
+/// [`crate::coordinator::ComputeUnit`] in the placement hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct MachineId(pub usize);
+
+impl std::fmt::Display for MachineId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "m{}", self.0)
+    }
+}
+
+/// Blueprint for one cluster machine: its CPU, its accelerators and the
+/// lease policy its coordinator runs with. Machines in one cluster may
+/// differ in all of these — the cluster is heterogeneous one level above
+/// the CPUs already being hybrid.
+#[derive(Clone, Debug)]
+pub struct MachineSpec {
+    pub cpu: CpuSpec,
+    pub accels: Vec<AcceleratorSpec>,
+    pub policy: AllocPolicy,
+    pub affinity: XpuAffinity,
+}
+
+impl MachineSpec {
+    /// A cores-only machine with the default balanced lease policy.
+    pub fn cores_only(cpu: CpuSpec) -> MachineSpec {
+        MachineSpec {
+            cpu,
+            accels: Vec::new(),
+            policy: AllocPolicy::Balanced,
+            affinity: XpuAffinity::None,
+        }
+    }
+
+    pub fn with_accelerators(cpu: CpuSpec, accels: Vec<AcceleratorSpec>) -> MachineSpec {
+        MachineSpec {
+            cpu,
+            accels,
+            policy: AllocPolicy::Balanced,
+            affinity: XpuAffinity::Floating,
+        }
+    }
+
+    fn build(&self) -> Coordinator {
+        if self.accels.is_empty() {
+            Coordinator::new(self.cpu.clone(), self.policy)
+        } else {
+            Coordinator::with_accelerators(
+                self.cpu.clone(),
+                self.accels.clone(),
+                self.policy,
+                self.affinity,
+            )
+        }
+    }
+}
+
+/// The inter-machine interconnect cost model. Within a machine, session
+/// moves are free (KV stays in the same address space); across machines,
+/// the session's KV cache must cross this link, so a migration charges
+/// `bytes / (gbps · 1e9)` seconds of transfer delay before the destination
+/// can serve the stream.
+#[derive(Clone, Copy, Debug)]
+pub struct InterconnectSpec {
+    /// link bandwidth between any machine pair (GB/s); a flat fabric
+    pub gbps: f64,
+}
+
+impl Default for InterconnectSpec {
+    /// A 200 Gb/s-class datacenter fabric: 25 GB/s usable per link.
+    fn default() -> InterconnectSpec {
+        InterconnectSpec { gbps: 25.0 }
+    }
+}
+
+impl InterconnectSpec {
+    pub fn transfer_secs(&self, bytes: f64) -> f64 {
+        if self.gbps > 0.0 && bytes > 0.0 {
+            bytes / (self.gbps * 1e9)
+        } else {
+            0.0
+        }
+    }
+
+    /// Cost of moving one session between machines: free within a machine,
+    /// a KV transfer over the link otherwise.
+    pub fn migration_cost_secs(&self, from: MachineId, to: MachineId, kv_bytes: f64) -> f64 {
+        if from == to {
+            0.0
+        } else {
+            self.transfer_secs(kv_bytes)
+        }
+    }
+}
+
+/// A machine's capability score: its full-contention memory throughput —
+/// every core (and accelerator) waterfilled against the bus. Decode serving
+/// is bandwidth-bound (the paper's regime), so the *bus* a machine can
+/// actually sustain, not its peak compute, is what predicts its healthy
+/// token rate; seeding cluster strengths from this keeps the learned
+/// strength/seed ratios near 1.0 until something genuinely degrades.
+pub fn machine_capability(coord: &Coordinator) -> f64 {
+    let mut contenders: Vec<Contender> = coord
+        .machine()
+        .cores
+        .iter()
+        .map(|c| Contender { weight: c.mem_weight, cap: c.mem_bw_gbps })
+        .collect();
+    for a in coord.accelerators() {
+        contenders.push(Contender { weight: a.mem_weight, cap: a.mem_bw_gbps });
+    }
+    full_contention_throughput(&contenders, coord.machine().bus_bw_gbps)
+}
+
+/// One corrective session move decided by [`ClusterCoordinator::replace`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Migration {
+    pub stream: StreamId,
+    pub from: MachineId,
+    pub to: MachineId,
+}
+
+/// The cluster admission plane: owns N machine coordinators, places
+/// streams across them, learns per-machine strengths from served traffic
+/// and re-places when a machine drifts. The API mirrors the per-machine
+/// [`Coordinator`] one level up: `admit`/`finish`/`observe`, an `epoch`
+/// that bumps on every placement change, and a skew measure for the drift
+/// monitor.
+pub struct ClusterCoordinator {
+    machines: Vec<Coordinator>,
+    interconnect: InterconnectSpec,
+    /// slack band of the balanced partitioner (placement stickiness)
+    pub epsilon: f64,
+    /// EWMA gain of the strength fold (same default as `PerfConfig`)
+    pub alpha: f64,
+    /// capability scores at construction — the strength seeds
+    seed: Vec<f64>,
+    /// learned per-machine strengths (starts at `seed`)
+    strength: Vec<f64>,
+    placements: BTreeMap<StreamId, usize>,
+    epoch: u64,
+    observations: u64,
+    replacements: u64,
+}
+
+impl ClusterCoordinator {
+    pub fn new(specs: &[MachineSpec], interconnect: InterconnectSpec) -> ClusterCoordinator {
+        assert!(!specs.is_empty(), "a cluster needs at least one machine");
+        let machines: Vec<Coordinator> = specs.iter().map(|s| s.build()).collect();
+        let seed: Vec<f64> = machines.iter().map(machine_capability).collect();
+        assert!(
+            seed.iter().any(|&c| c > 0.0),
+            "cluster has no machine with positive capability"
+        );
+        ClusterCoordinator {
+            machines,
+            interconnect,
+            epsilon: 0.05,
+            alpha: 0.3,
+            strength: seed.clone(),
+            seed,
+            placements: BTreeMap::new(),
+            epoch: 1,
+            observations: 0,
+            replacements: 0,
+        }
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.machines.len()
+    }
+
+    pub fn machine(&self, id: MachineId) -> &Coordinator {
+        &self.machines[id.0]
+    }
+
+    pub fn machine_mut(&mut self, id: MachineId) -> &mut Coordinator {
+        &mut self.machines[id.0]
+    }
+
+    pub fn interconnect(&self) -> &InterconnectSpec {
+        &self.interconnect
+    }
+
+    /// Cluster placement epoch: bumps on every `admit`/`finish`/`replace`,
+    /// so drift cooldowns and stale-observation fencing work exactly like
+    /// the per-machine coordinator's epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Accepted cluster-level observations (rate folds) so far.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// How many times `replace()` actually moved streams.
+    pub fn replacements(&self) -> u64 {
+        self.replacements
+    }
+
+    /// Learned per-machine strengths (capability units, mass-preserved).
+    pub fn strengths(&self) -> &[f64] {
+        &self.strength
+    }
+
+    /// Capability seeds the strengths started from.
+    pub fn seeds(&self) -> &[f64] {
+        &self.seed
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.placements.len()
+    }
+
+    pub fn placement_of(&self, stream: StreamId) -> Option<MachineId> {
+        self.placements.get(&stream).map(|&m| MachineId(m))
+    }
+
+    /// Snapshot of the current stream → machine placement.
+    pub fn placements(&self) -> impl Iterator<Item = (StreamId, MachineId)> + '_ {
+        self.placements.iter().map(|(&s, &m)| (s, MachineId(m)))
+    }
+
+    /// Machines currently holding at least one stream.
+    pub fn machines_in_use(&self) -> usize {
+        let mut used = vec![false; self.machines.len()];
+        for &m in self.placements.values() {
+            used[m] = true;
+        }
+        used.iter().filter(|&&u| u).count()
+    }
+
+    /// Admit a stream: balanced k-way placement over learned strengths
+    /// (epsilon-sticky), then the chosen machine's coordinator admits it
+    /// and re-partitions its units. Returns where the stream landed.
+    pub fn admit(&mut self, stream: StreamId) -> MachineId {
+        assert!(
+            !self.placements.contains_key(&stream),
+            "stream {stream} already admitted to the cluster"
+        );
+        let mut load = vec![0.0; self.machines.len()];
+        for &m in self.placements.values() {
+            load[m] += 1.0;
+        }
+        // fill targets proportional to strength: only ratios matter to
+        // `place_one`, so strengths serve directly as targets
+        let m = place_one(&load, 1.0, &self.strength, self.epsilon);
+        self.machines[m].admit(stream);
+        self.placements.insert(stream, m);
+        self.epoch += 1;
+        MachineId(m)
+    }
+
+    /// A stream departed: release it on its machine.
+    pub fn finish(&mut self, stream: StreamId) {
+        if let Some(m) = self.placements.remove(&stream) {
+            self.machines[m].finish(stream);
+            self.epoch += 1;
+        }
+    }
+
+    /// Fold one round of served per-machine token rates (tokens/s) into
+    /// the strengths with the mass-preserving eq.-2 EWMA: the participating
+    /// machines' strength mass is conserved, each machine's share moves
+    /// toward its share of the observed rates. Needs ≥ 2 distinct
+    /// machines with finite positive rates to be a *relative* signal;
+    /// returns whether the observation was folded.
+    pub fn observe(&mut self, rates: &[(MachineId, f64)]) -> bool {
+        let mut seen = vec![false; self.machines.len()];
+        let mut parts: Vec<(usize, f64)> = Vec::with_capacity(rates.len());
+        for &(MachineId(m), r) in rates {
+            if m >= self.machines.len() || !r.is_finite() || r <= 0.0 || seen[m] {
+                return false;
+            }
+            seen[m] = true;
+            parts.push((m, r));
+        }
+        if parts.len() < 2 {
+            return false;
+        }
+        let mass: f64 = parts.iter().map(|&(m, _)| self.strength[m]).sum();
+        let rate_sum: f64 = parts.iter().map(|&(_, r)| r).sum();
+        if mass <= 0.0 || rate_sum <= 0.0 {
+            return false;
+        }
+        let scale = mass / rate_sum;
+        for &(m, r) in &parts {
+            self.strength[m] = self.alpha * self.strength[m] + (1.0 - self.alpha) * r * scale;
+        }
+        self.observations += 1;
+        true
+    }
+
+    /// Cluster-level skew: over machines that hold streams, how far the
+    /// learned strength has drifted from the capability seed — the ratio of
+    /// the largest to the smallest `strength/seed`. A healthy cluster sits
+    /// near 1.0 whatever its heterogeneity (seeds absorb capability
+    /// differences); a whole-machine degrade pushes it up. Returns 1.0
+    /// with fewer than two machines in use.
+    pub fn skew(&self) -> f64 {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut n = 0;
+        for m in 0..self.machines.len() {
+            if self.seed[m] <= 0.0 || !self.placements.values().any(|&p| p == m) {
+                continue;
+            }
+            let ratio = self.strength[m] / self.seed[m];
+            lo = lo.min(ratio);
+            hi = hi.max(ratio);
+            n += 1;
+        }
+        if n < 2 || lo <= 0.0 {
+            1.0
+        } else {
+            hi / lo
+        }
+    }
+
+    /// Re-place streams under the current learned strengths. Always bumps
+    /// the epoch (restarting drift cooldowns even when nothing moves); on
+    /// actual moves the machines' coordinators transfer the streams and
+    /// the returned [`Migration`]s tell the serving layer which sessions
+    /// to carry — cross-machine ones paying the interconnect KV transfer.
+    /// The partitioner's hysteresis keeps this conservative: near-balanced
+    /// clusters yield no moves, so sessions prefer staying in-machine
+    /// unless a machine's strength genuinely collapsed or recovered.
+    pub fn replace(&mut self) -> Vec<Migration> {
+        self.epoch += 1;
+        let items: Vec<StreamId> = self.placements.keys().copied().collect();
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let current: Vec<usize> = items.iter().map(|s| self.placements[s]).collect();
+        let weights = vec![1.0; items.len()];
+        let moves = repartition(&current, &weights, &self.strength, self.epsilon);
+        let mut migrations = Vec::with_capacity(moves.len());
+        for mv in moves {
+            let stream = items[mv.item];
+            self.machines[mv.from].finish(stream);
+            self.machines[mv.to].admit(stream);
+            self.placements.insert(stream, mv.to);
+            migrations.push(Migration {
+                stream,
+                from: MachineId(mv.from),
+                to: MachineId(mv.to),
+            });
+        }
+        if !migrations.is_empty() {
+            self.replacements += 1;
+        }
+        migrations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::presets;
+
+    fn two_identical() -> ClusterCoordinator {
+        let spec = MachineSpec::cores_only(presets::core_12900k());
+        ClusterCoordinator::new(&[spec.clone(), spec], InterconnectSpec::default())
+    }
+
+    #[test]
+    fn admit_spreads_streams_by_capability() {
+        let mut cluster = two_identical();
+        let a = cluster.admit(0);
+        let b = cluster.admit(1);
+        assert_ne!(a, b, "identical machines must each take one stream");
+        assert_eq!(cluster.n_streams(), 2);
+        assert_eq!(cluster.machine(a).n_streams(), 1);
+        assert_eq!(cluster.machine(b).n_streams(), 1);
+        assert_eq!(cluster.machines_in_use(), 2);
+    }
+
+    #[test]
+    fn capability_seeds_reflect_bus_not_core_count() {
+        // homogeneous_16 has more cores but capability tracks sustainable
+        // bus throughput, so seeds differ by bus, not by core count
+        let specs = [
+            MachineSpec::cores_only(presets::core_12900k()),
+            MachineSpec::cores_only(presets::homogeneous(12)),
+        ];
+        let cluster = ClusterCoordinator::new(&specs, InterconnectSpec::default());
+        let seeds = cluster.seeds();
+        assert!((seeds[0] - 68.0).abs() < 1e-6, "12900k seed {}", seeds[0]);
+        assert!((seeds[1] - 80.0).abs() < 1e-6, "homogeneous seed {}", seeds[1]);
+    }
+
+    #[test]
+    fn observe_preserves_strength_mass_and_moves_ratios() {
+        let mut cluster = two_identical();
+        cluster.admit(0);
+        cluster.admit(1);
+        let before: f64 = cluster.strengths().iter().sum();
+        // machine 1 serves twice the rate of machine 0
+        assert!(cluster.observe(&[(MachineId(0), 1000.0), (MachineId(1), 2000.0)]));
+        let after: f64 = cluster.strengths().iter().sum();
+        assert!((before - after).abs() < 1e-9, "mass not preserved: {before} -> {after}");
+        assert!(cluster.strengths()[1] > cluster.strengths()[0]);
+        assert_eq!(cluster.observations(), 1);
+        // invalid observations are refused
+        assert!(!cluster.observe(&[(MachineId(0), 1000.0)]), "single participant");
+        assert!(!cluster.observe(&[(MachineId(0), f64::NAN), (MachineId(1), 1.0)]));
+        assert!(!cluster.observe(&[(MachineId(0), 1.0), (MachineId(0), 2.0)]), "dup machine");
+    }
+
+    #[test]
+    fn skew_stays_flat_for_proportional_rates_and_rises_on_degrade() {
+        let specs = [
+            MachineSpec::cores_only(presets::core_12900k()), // seed 68
+            MachineSpec::cores_only(presets::homogeneous(12)), // seed 80
+        ];
+        let mut cluster = ClusterCoordinator::new(&specs, InterconnectSpec::default());
+        cluster.admit(0);
+        cluster.admit(1);
+        // healthy: rates proportional to capability → skew stays ~1
+        for _ in 0..8 {
+            assert!(cluster.observe(&[(MachineId(0), 6800.0), (MachineId(1), 8000.0)]));
+        }
+        assert!(cluster.skew() < 1.01, "healthy skew {}", cluster.skew());
+        // machine 0 collapses to 1/8 its healthy rate → skew blows past 1.5
+        for _ in 0..8 {
+            assert!(cluster.observe(&[(MachineId(0), 850.0), (MachineId(1), 8000.0)]));
+        }
+        assert!(cluster.skew() > 1.5, "degraded skew {}", cluster.skew());
+    }
+
+    #[test]
+    fn replace_prefers_in_machine_when_capabilities_are_close() {
+        // the interconnect makes cross-machine moves expensive, so the
+        // epsilon hysteresis must yield zero migrations while learned
+        // strengths sit within the slack band of each other
+        let mut cluster = two_identical();
+        for s in 0..4u64 {
+            cluster.admit(s);
+        }
+        // drift strengths ~3% apart — inside the 5% epsilon band
+        for _ in 0..6 {
+            assert!(cluster.observe(&[(MachineId(0), 1000.0), (MachineId(1), 1030.0)]));
+        }
+        let epoch = cluster.epoch();
+        let moves = cluster.replace();
+        assert!(moves.is_empty(), "near-tied machines churned sessions: {moves:?}");
+        assert_eq!(cluster.replacements(), 0);
+        // the epoch still bumps so drift cooldowns restart
+        assert_eq!(cluster.epoch(), epoch + 1);
+    }
+
+    #[test]
+    fn replace_drains_a_collapsed_machine_and_reports_migrations() {
+        let mut cluster = two_identical();
+        for s in 0..4u64 {
+            cluster.admit(s);
+        }
+        // machine 0 collapses to ~6% of its healthy rate
+        for _ in 0..12 {
+            assert!(cluster.observe(&[(MachineId(0), 60.0), (MachineId(1), 1000.0)]));
+        }
+        let moves = cluster.replace();
+        assert!(!moves.is_empty(), "collapsed machine kept its streams");
+        assert_eq!(cluster.replacements(), 1);
+        for mv in &moves {
+            assert_eq!(mv.from, MachineId(0));
+            assert_eq!(mv.to, MachineId(1));
+            assert_eq!(cluster.placement_of(mv.stream), Some(MachineId(1)));
+            // the machine coordinators transferred the stream
+            assert!(cluster.machine(MachineId(1)).lease(mv.stream).is_some());
+            assert!(cluster.machine(MachineId(0)).lease(mv.stream).is_none());
+        }
+    }
+
+    #[test]
+    fn interconnect_charges_cross_machine_only() {
+        let net = InterconnectSpec { gbps: 25.0 };
+        let kv = 12.5e9; // 12.5 GB of KV
+        assert_eq!(net.migration_cost_secs(MachineId(0), MachineId(0), kv), 0.0);
+        let cross = net.migration_cost_secs(MachineId(0), MachineId(1), kv);
+        assert!((cross - 0.5).abs() < 1e-12, "cross-machine transfer {cross}");
+        assert_eq!(net.transfer_secs(0.0), 0.0);
+    }
+}

@@ -1,0 +1,277 @@
+//! Balanced k-way placement with epsilon slack — the cluster tier's static
+//! partitioner.
+//!
+//! Machines are buckets with heterogeneous *capability* scores; streams are
+//! items with weights. The partitioner fills buckets greedily in LPT order
+//! (heaviest item first) by normalized fill `load / target`, where each
+//! machine's target is its capability share of the total weight. An epsilon
+//! slack band makes placement *sticky*: among destinations within `(1+ε)` of
+//! the best fill-after, the lowest-indexed machine wins, so near-tied
+//! capabilities don't cause churn between equivalent machines.
+//!
+//! [`repartition`] reuses the same fill criterion to move already-placed
+//! items when capabilities change (a machine degrades or recovers). Moves are
+//! accepted only under a strict-improvement hysteresis — the destination's
+//! fill after the move must beat the source's fill before it by more than the
+//! epsilon band — which both prevents oscillation between near-equal machines
+//! and still fully drains a collapsed (zero- or near-zero-capability)
+//! machine. Cross-machine moves are expensive (KV transfer over the
+//! interconnect), so "no move" must always be the default for healthy
+//! clusters; the property tests in `rust/tests/prop_invariants.rs` pin the
+//! balance bound and the exactly-once guarantee.
+
+/// One corrective move produced by [`repartition`]: item `item` relocates
+/// from machine `from` to machine `to`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Move {
+    pub item: usize,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// Per-machine fill targets: each machine's capability share of the total
+/// item weight. Zero-capability machines get target 0 and are never placed
+/// onto. Panics if no machine has positive capability.
+fn targets(total_weight: f64, capability: &[f64]) -> Vec<f64> {
+    let cap_sum: f64 = capability.iter().filter(|c| **c > 0.0).sum();
+    assert!(cap_sum > 0.0, "cluster has no machine with positive capability");
+    capability
+        .iter()
+        .map(|&c| if c > 0.0 { total_weight * c / cap_sum } else { 0.0 })
+        .collect()
+}
+
+/// Pick a destination for one item of weight `w` given current per-machine
+/// `load`s and fill `target`s: the machine minimizing fill-after
+/// `(load + w) / target`, with ties (within `(1 + epsilon)` of the best)
+/// broken toward the lowest index. Zero-target machines are never eligible.
+pub fn place_one(load: &[f64], w: f64, target: &[f64], epsilon: f64) -> usize {
+    debug_assert_eq!(load.len(), target.len());
+    let fill_after = |m: usize| -> f64 {
+        if target[m] > 0.0 {
+            (load[m] + w) / target[m]
+        } else {
+            f64::INFINITY
+        }
+    };
+    let best = (0..load.len()).map(fill_after).fold(f64::INFINITY, f64::min);
+    assert!(best.is_finite(), "no machine with positive capability to place onto");
+    // lowest index within the slack band of the best fill-after
+    (0..load.len())
+        .find(|&m| fill_after(m) <= best * (1.0 + epsilon))
+        .expect("slack band always contains the argmin")
+}
+
+/// Balanced k-way partition of `weights` over machines with `capability`
+/// scores. Returns one machine index per item. Items are placed in LPT order
+/// (heaviest first, stable by index) so large items land while buckets are
+/// still empty; each lands on the machine with the least normalized fill
+/// after placement, epsilon-sticky toward low indices.
+///
+/// Guarantees (property-tested):
+/// * every item is assigned exactly once to a valid machine index;
+/// * no item lands on a zero-capability machine;
+/// * pairwise balance: for any machines `a`, `b` with positive targets,
+///   `fill_a <= (1 + epsilon) * (fill_b + max_w / target_b)` — each bucket is
+///   within one item (plus the slack band) of every other.
+pub fn partition(weights: &[f64], capability: &[f64], epsilon: f64) -> Vec<usize> {
+    let total: f64 = weights.iter().sum();
+    let target = targets(total.max(f64::MIN_POSITIVE), capability);
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        weights[b].partial_cmp(&weights[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut load = vec![0.0; capability.len()];
+    let mut assignment = vec![usize::MAX; weights.len()];
+    for &i in &order {
+        let m = place_one(&load, weights[i], &target, epsilon);
+        load[m] += weights[i];
+        assignment[i] = m;
+    }
+    assignment
+}
+
+/// Corrective re-placement after capabilities changed. Takes the `current`
+/// assignment and produces the net set of [`Move`]s that restore balance
+/// under the *new* `capability` scores.
+///
+/// Two phases:
+/// 1. **Forced evictions** — items on machines whose capability dropped to
+///    zero (or below) must move; each goes to the current argmin fill-after.
+/// 2. **Improvement loop** — repeatedly take the machine with the highest
+///    normalized fill, try to move its lightest item to the machine with the
+///    lowest fill-after, and accept only if the destination's fill after the
+///    move is strictly below the source's fill before it divided by
+///    `(1 + epsilon)`. The hysteresis means near-balanced clusters produce
+///    *zero* moves (in-machine stability when capabilities are close), while
+///    a collapsed machine — whose fill diverges — always drains.
+///
+/// Termination: every accepted move strictly lowers the maximum fill or, at
+/// equal maxima, lexicographically lowers the sorted fill vector; an
+/// iteration guard bounds pathological float cases. Moves are compressed to
+/// net effect (an item bouncing `A -> B -> C` reports one `A -> C` move; a
+/// round trip reports nothing).
+pub fn repartition(
+    current: &[usize],
+    weights: &[f64],
+    capability: &[f64],
+    epsilon: f64,
+) -> Vec<Move> {
+    assert_eq!(current.len(), weights.len());
+    let total: f64 = weights.iter().sum();
+    let target = targets(total.max(f64::MIN_POSITIVE), capability);
+    let mut placed = current.to_vec();
+    let mut load = vec![0.0; capability.len()];
+    for (i, &m) in placed.iter().enumerate() {
+        assert!(m < capability.len(), "item {i} placed on unknown machine {m}");
+        load[m] += weights[i];
+    }
+
+    let fill = |load: &[f64], m: usize| -> f64 {
+        if target[m] > 0.0 {
+            load[m] / target[m]
+        } else if load[m] > 0.0 {
+            f64::INFINITY
+        } else {
+            0.0
+        }
+    };
+
+    // phase 1: forced evictions off zero-capability machines
+    for i in 0..placed.len() {
+        if target[placed[i]] <= 0.0 {
+            let from = placed[i];
+            let to = place_one(&load, weights[i], &target, epsilon);
+            load[from] -= weights[i];
+            load[to] += weights[i];
+            placed[i] = to;
+        }
+    }
+
+    // phase 2: hysteresis improvement loop
+    let guard = 4 * placed.len().max(1) * capability.len().max(1);
+    for _ in 0..guard {
+        let src = match (0..capability.len())
+            .filter(|&m| load[m] > 0.0)
+            .max_by(|&a, &b| fill(&load, a).partial_cmp(&fill(&load, b)).unwrap())
+        {
+            Some(m) => m,
+            None => break,
+        };
+        // lightest item on the most-loaded machine is the cheapest probe
+        let item = match (0..placed.len()).filter(|&i| placed[i] == src).min_by(|&a, &b| {
+            weights[a].partial_cmp(&weights[b]).unwrap_or(std::cmp::Ordering::Equal)
+        }) {
+            Some(i) => i,
+            None => break,
+        };
+        let w = weights[item];
+        let mut probe = load.clone();
+        probe[src] -= w;
+        let dst = place_one(&probe, w, &target, 0.0);
+        if dst == src {
+            break;
+        }
+        let fill_before = fill(&load, src);
+        let dst_after = (probe[dst] + w) / target[dst];
+        if dst_after >= fill_before / (1.0 + epsilon) {
+            break; // no strict improvement — the cluster is balanced enough
+        }
+        load[src] -= w;
+        load[dst] += w;
+        placed[item] = dst;
+    }
+
+    // net moves only: compare final placement to the original
+    (0..placed.len())
+        .filter(|&i| placed[i] != current[i])
+        .map(|i| Move { item: i, from: current[i], to: placed[i] })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(assign: &[usize], weights: &[f64], k: usize) -> Vec<f64> {
+        let mut l = vec![0.0; k];
+        for (i, &m) in assign.iter().enumerate() {
+            l[m] += weights[i];
+        }
+        l
+    }
+
+    #[test]
+    fn partition_balances_equal_machines() {
+        let w = vec![1.0; 8];
+        let cap = vec![10.0; 4];
+        let a = partition(&w, &cap, 0.05);
+        assert_eq!(loads(&a, &w, 4), vec![2.0; 4]);
+    }
+
+    #[test]
+    fn partition_is_capability_proportional() {
+        let w = vec![1.0; 12];
+        let cap = vec![10.0, 20.0, 30.0];
+        let a = partition(&w, &cap, 0.05);
+        assert_eq!(loads(&a, &w, 3), vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn partition_skips_zero_capability() {
+        let w = vec![1.0, 1.0, 1.0];
+        let cap = vec![0.0, 5.0, 0.0];
+        let a = partition(&w, &cap, 0.05);
+        assert!(a.iter().all(|&m| m == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "no machine with positive capability")]
+    fn partition_rejects_dead_cluster() {
+        partition(&[1.0], &[0.0, 0.0], 0.05);
+    }
+
+    #[test]
+    fn repartition_is_stable_when_capabilities_are_close() {
+        // two machines 5% apart in capability, balanced placement: the
+        // hysteresis must produce zero moves (in-machine preference).
+        let w = vec![1.0; 4];
+        let cap = vec![10.0, 10.5];
+        let current = vec![0, 0, 1, 1];
+        let moves = repartition(&current, &w, &cap, 0.05);
+        assert!(moves.is_empty(), "near-tied capabilities must not churn: {moves:?}");
+    }
+
+    #[test]
+    fn repartition_drains_collapsed_machine() {
+        // machine 0 collapses to near-zero capability: its streams must
+        // drain to the healthy machines, none may remain.
+        let w = vec![1.0; 8];
+        let cap = vec![0.08, 1.0, 1.0, 1.0];
+        let current = vec![0, 0, 1, 1, 2, 2, 3, 3];
+        let moves = repartition(&current, &w, &cap, 0.05);
+        assert!(!moves.is_empty());
+        let mut placed = current.clone();
+        for mv in &moves {
+            assert_eq!(placed[mv.item], mv.from);
+            placed[mv.item] = mv.to;
+        }
+        assert!(placed.iter().all(|&m| m != 0), "collapsed machine kept streams: {placed:?}");
+    }
+
+    #[test]
+    fn repartition_forces_eviction_off_zero_capability() {
+        let w = vec![2.0, 1.0];
+        let cap = vec![0.0, 1.0];
+        let moves = repartition(&[0, 1], &w, &cap, 0.05);
+        assert_eq!(moves, vec![Move { item: 0, from: 0, to: 1 }]);
+    }
+
+    #[test]
+    fn repartition_reports_net_moves_only() {
+        // already balanced — identical capabilities, equal loads — no moves.
+        let w = vec![1.0; 6];
+        let cap = vec![1.0, 1.0, 1.0];
+        assert!(repartition(&[0, 0, 1, 1, 2, 2], &w, &cap, 0.05).is_empty());
+    }
+}

@@ -31,6 +31,7 @@ pub mod sched;
 pub mod pool;
 pub mod exec;
 pub mod coordinator;
+pub mod cluster;
 pub mod sim;
 pub mod quant;
 pub mod tensor;

@@ -106,6 +106,34 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-machine rollup for the cluster tier: one machine's share of the
+/// served workload plus the interconnect bytes that migrated *into* it.
+/// Exported inside [`ServingMetrics::to_json`] under `"machines"` when the
+/// metrics came from a cluster run.
+#[derive(Clone, Debug, Default)]
+pub struct MachineRollup {
+    pub machine: usize,
+    pub tokens: u64,
+    /// busy kernel seconds on this machine
+    pub kernel_secs: f64,
+    /// decode throughput over the run's makespan (tokens / wall seconds)
+    pub tok_s: f64,
+    /// KV bytes migrated into this machine over the interconnect
+    pub interconnect_bytes: f64,
+}
+
+impl MachineRollup {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("machine", Json::num(self.machine as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("kernel_secs", Json::num(self.kernel_secs)),
+            ("tok_s", Json::num(self.tok_s)),
+            ("interconnect_bytes", Json::num(self.interconnect_bytes)),
+        ])
+    }
+}
+
 /// Aggregate serving-side metrics, exported on the wire by the server's
 /// `{"cmd":"metrics"}` command. Next to the classic request/token counters
 /// it tracks the two observables continuous batching is judged by:
@@ -132,6 +160,15 @@ pub struct ServingMetrics {
     /// reference bus bandwidth for the utilization export (the machine's
     /// full bus, or the lease-share sum); 0 = unknown, no export
     pub bus_reference_gbps: f64,
+    /// cluster tier only: per-machine rollups (empty for single-machine
+    /// runs, which keeps the JSON export unchanged for them)
+    pub machines: Vec<MachineRollup>,
+    /// cluster tier only: final strength skew across machines
+    pub cluster_skew: f64,
+    /// cluster tier only: re-placements triggered by machine-level drift
+    pub replacements: u64,
+    /// cluster tier only: total KV bytes migrated across the interconnect
+    pub interconnect_bytes: f64,
     pub prefill: LatencyHistogram,
     pub decode_per_token: LatencyHistogram,
     pub ttft: LatencyHistogram,
@@ -171,6 +208,12 @@ impl ServingMetrics {
                     Json::num(bandwidth_utilization(achieved, self.bus_reference_gbps)),
                 ));
             }
+        }
+        if !self.machines.is_empty() {
+            fields.push(("cluster_skew", Json::num(self.cluster_skew)));
+            fields.push(("replacements", Json::num(self.replacements as f64)));
+            fields.push(("interconnect_bytes", Json::num(self.interconnect_bytes)));
+            fields.push(("machines", Json::arr(self.machines.iter().map(|r| r.to_json()))));
         }
         if let Some(s) = self.prefill.summary() {
             fields.push(("prefill_p50_secs", Json::num(s.p50)));
@@ -281,6 +324,39 @@ mod tests {
         sm.bus_reference_gbps = 68.0;
         let j = sm.to_json(1, 0);
         assert_eq!(j.get("bandwidth_utilization").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn machine_rollups_export_only_for_cluster_runs() {
+        let mut sm = ServingMetrics::default();
+        // single-machine metrics: no cluster fields at all
+        assert!(sm.to_json(1, 0).get("machines").is_none());
+        assert!(sm.to_json(1, 0).get("cluster_skew").is_none());
+        let m0 = MachineRollup {
+            machine: 0,
+            tokens: 12,
+            kernel_secs: 0.5,
+            tok_s: 24.0,
+            ..Default::default()
+        };
+        let m1 = MachineRollup {
+            machine: 1,
+            tokens: 6,
+            interconnect_bytes: 4096.0,
+            ..Default::default()
+        };
+        sm.machines = vec![m0, m1];
+        sm.cluster_skew = 1.25;
+        sm.replacements = 1;
+        sm.interconnect_bytes = 4096.0;
+        let j = sm.to_json(2, 3);
+        assert_eq!(j.get("cluster_skew").unwrap().as_f64(), Some(1.25));
+        assert_eq!(j.get("replacements").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("interconnect_bytes").unwrap().as_f64(), Some(4096.0));
+        let machines = j.get("machines").unwrap().as_array().unwrap();
+        assert_eq!(machines.len(), 2);
+        assert_eq!(machines[0].get("tok_s").unwrap().as_f64(), Some(24.0));
+        assert_eq!(machines[1].get("interconnect_bytes").unwrap().as_f64(), Some(4096.0));
     }
 
     #[test]

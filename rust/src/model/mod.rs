@@ -52,6 +52,12 @@ pub struct SlotPlacement {
     /// even split of the lease's `bus_share_gbps` across the pool's slots —
     /// the per-slot bandwidth budget a saturated batch leaves each request
     pub bus_share_gbps: f64,
+    /// bandwidth of the link the KV cache sits behind when it is *not*
+    /// local to the compute lease (a far NUMA node or another socket).
+    /// `0.0` means local — remote reads cost nothing extra. When positive,
+    /// the serving layer charges decode-attention KV reads against this
+    /// link instead of treating placement as free.
+    pub remote_bw_gbps: f64,
 }
 
 /// Fixed-capacity KV-slot allocator: sessions (with their per-layer KV
@@ -87,9 +93,21 @@ impl SessionPool {
         bus_share_gbps: f64,
     ) -> SessionPool {
         let mut pool = SessionPool::new(cfg, capacity);
-        pool.placement =
-            Some(SlotPlacement { stream, bus_share_gbps: bus_share_gbps / capacity as f64 });
+        pool.placement = Some(SlotPlacement {
+            stream,
+            bus_share_gbps: bus_share_gbps / capacity as f64,
+            remote_bw_gbps: 0.0,
+        });
         pool
+    }
+
+    /// Mark every slot of a leased pool as remote: KV reads cross a link
+    /// of `gbps` bandwidth. Panics on standalone pools — placement is a
+    /// lease-level property.
+    pub fn set_remote_kv(&mut self, gbps: f64) {
+        assert!(gbps > 0.0, "remote link needs positive bandwidth");
+        let p = self.placement.as_mut().expect("standalone pools have no placement to move");
+        p.remote_bw_gbps = gbps;
     }
 
     /// Placement of slot `slot`: `Some` for in-range slots of a leased
@@ -387,12 +405,16 @@ mod tests {
     #[test]
     fn leased_pool_places_slots_bus_aware() {
         let cfg = ModelConfig::micro();
-        let pool = SessionPool::with_lease(&cfg, 4, 7, 34.0);
+        let mut pool = SessionPool::with_lease(&cfg, 4, 7, 34.0);
         for slot in 0..4 {
             let p = pool.placement_of(slot).unwrap();
             assert_eq!(p.stream, 7);
             assert!((p.bus_share_gbps - 8.5).abs() < 1e-12);
+            // placement is local until told otherwise
+            assert_eq!(p.remote_bw_gbps, 0.0);
         }
+        pool.set_remote_kv(12.0);
+        assert_eq!(pool.placement_of(0).unwrap().remote_bw_gbps, 12.0);
         // out-of-range and foreign slots have no placement
         assert_eq!(pool.placement_of(4), None);
         assert_eq!(pool.placement_of(usize::MAX), None);

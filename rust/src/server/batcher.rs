@@ -107,6 +107,13 @@ impl ActiveRequest {
     pub fn reject(self, msg: &str) {
         let _ = self.tx.send(Event::Error { id: self.req.id, msg: msg.into() });
     }
+
+    /// Bytes of KV state this session carries — what a cross-machine
+    /// migration must ship over the interconnect: K and V, `n_layers`
+    /// deep, `d_model` wide, f32, for every position written so far.
+    pub fn kv_bytes(&self, cfg: &crate::model::ModelConfig) -> f64 {
+        (2 * cfg.n_layers * cfg.d_model * 4 * self.session.pos) as f64
+    }
 }
 
 /// A retired request, reported to the caller for metrics.
@@ -198,6 +205,15 @@ impl<E: Executor> LeaseBatcher<E> {
     /// [`PhaseRole`]).
     pub fn with_role(mut self, role: PhaseRole) -> LeaseBatcher<E> {
         self.role = role;
+        self
+    }
+
+    /// Builder: this batcher's KV slots live across a NUMA/remote link of
+    /// `gbps` bandwidth — every decode round charges its attention KV
+    /// reads against that link on top of kernel time (leased batchers
+    /// only; see [`SessionPool::set_remote_kv`]).
+    pub fn with_remote_kv(mut self, gbps: f64) -> LeaseBatcher<E> {
+        self.pool.set_remote_kv(gbps);
         self
     }
 
@@ -350,6 +366,9 @@ impl<E: Executor> LeaseBatcher<E> {
         let chunk = self.opts.prefill_chunk.max(1);
         let round_start = self.engine.kernel_secs;
         let bytes_start = self.engine.bytes_moved;
+        // remote-placed KV pools charge decode attention reads against the
+        // far link (0.0 = local placement, reads are free)
+        let remote_gbps = self.pool.placement_of(0).map_or(0.0, |p| p.remote_bw_gbps);
 
         {
             let LeaseBatcher { engine, active, role, .. } = self;
@@ -394,6 +413,14 @@ impl<E: Executor> LeaseBatcher<E> {
                     }
                     let t0 = engine.kernel_secs;
                     let next = argmax(engine.decode_step_in(&mut a.session, a.next));
+                    if remote_gbps > 0.0 {
+                        // attention read K and V for every cached position
+                        // over the remote link; the transfer rides on top
+                        // of the kernel clock and lands in decode latency
+                        let read = (2 * engine.cfg.n_layers * engine.cfg.d_model * 4
+                            * a.session.pos) as f64;
+                        engine.kernel_secs += read / (remote_gbps * 1e9);
+                    }
                     a.metrics.decode_secs += engine.kernel_secs - t0;
                     a.next = next;
                     a.produced += 1;
@@ -454,6 +481,22 @@ mod tests {
             SimConfig { execute_real: true, ..SimConfig::noiseless() },
         );
         Engine::new(cfg, weights, exec, Box::new(DynamicScheduler), PerfConfig::default())
+    }
+
+    /// A batcher over a real coordinator lease (the leased pool records
+    /// bus-aware placement, which the remote-KV cost model hangs off).
+    fn leased_batcher(seed: u64) -> LeaseBatcher<SimExecutor> {
+        use crate::coordinator::{AllocPolicy, Coordinator};
+        let spec = presets::ultra_125h();
+        let mut coord = Coordinator::new(spec.clone(), AllocPolicy::Balanced);
+        let lease = coord.admit(0);
+        let cfg = ModelConfig::micro();
+        let weights = Arc::new(ModelWeights::random_init(&cfg, seed));
+        let sim = SimConfig { execute_real: true, ..SimConfig::noiseless() };
+        let exec = lease.sim_executor(&spec, sim);
+        let engine =
+            Engine::new(cfg, weights, exec, Box::new(DynamicScheduler), PerfConfig::default());
+        LeaseBatcher::new(engine, Some(lease), BatcherOpts { max_batch: 2, prefill_chunk: 4 })
     }
 
     fn pending(id: u64, prompt: &[u32], max_new: usize) -> (Pending, mpsc::Receiver<Event>) {
@@ -662,5 +705,42 @@ mod tests {
         assert!(dead, "abandoned request not retired as dead");
         assert!(b.is_idle());
         assert_eq!(b.pool().idle(), 1, "dead request's slot reclaimed");
+    }
+
+    #[test]
+    fn local_kv_placement_beats_remote_on_decode() {
+        let run = |remote: Option<f64>| {
+            let mut b = leased_batcher(21);
+            if let Some(gbps) = remote {
+                b = b.with_remote_kv(gbps);
+            }
+            let (p, rx) = pending(1, &[5, 6, 7, 8], 6);
+            b.admit(p).map_err(|_| ()).unwrap();
+            run_until_idle(&mut b);
+            (drain_tokens(&rx), b.engine.kernel_secs)
+        };
+        let (local_tokens, local_secs) = run(None);
+        // the same request with its KV behind a 2 GB/s far link
+        let (remote_tokens, remote_secs) = run(Some(2.0));
+        // placement changes timing, never the generated stream
+        assert_eq!(local_tokens, remote_tokens);
+        assert!(
+            remote_secs > local_secs,
+            "remote KV reads must cost decode time: {remote_secs} vs {local_secs}"
+        );
+    }
+
+    #[test]
+    fn kv_bytes_grow_with_the_cursor() {
+        let cfg = ModelConfig::micro();
+        let mut b = LeaseBatcher::new(test_engine(4), None, BatcherOpts::default());
+        let (p, _rx) = pending(1, &[1, 2], 4);
+        b.admit(p).map_err(|_| ()).unwrap();
+        assert_eq!(b.active[0].kv_bytes(&cfg), 0.0, "nothing cached before prefill");
+        b.step();
+        let after_prefill = b.active[0].kv_bytes(&cfg);
+        assert!(after_prefill > 0.0);
+        b.step();
+        assert!(b.active[0].kv_bytes(&cfg) > after_prefill, "decode extends the KV footprint");
     }
 }

@@ -79,14 +79,32 @@ impl DriftMonitor {
     /// cooldown automatically), recording the returned skew if it keeps
     /// trigger observability (the skew is measured exactly once here).
     pub fn check_drift(&mut self, coord: &Coordinator) -> Option<f64> {
-        if coord.epoch() != self.last_epoch {
-            self.last_epoch = coord.epoch();
-            self.obs_at_epoch = coord.observations();
+        self.check_drift_with(coord.epoch(), coord.observations(), coord.n_streams(), || {
+            coord.strength_skew()
+        })
+    }
+
+    /// Generalized drift check for callers that aren't a single
+    /// [`Coordinator`] — the cluster tier feeds its own epoch /
+    /// observation counters, participant count, and skew measure here so
+    /// machine-level drift reuses the exact same cooldown semantics as
+    /// core-level drift. `skew` is only evaluated once the epoch and
+    /// cooldown gates pass.
+    pub fn check_drift_with(
+        &mut self,
+        epoch: u64,
+        observations: u64,
+        participants: usize,
+        skew: impl FnOnce() -> f64,
+    ) -> Option<f64> {
+        if epoch != self.last_epoch {
+            self.last_epoch = epoch;
+            self.obs_at_epoch = observations;
         }
-        if coord.n_streams() < 2 || coord.observations() - self.obs_at_epoch < self.cooldown {
+        if participants < 2 || observations - self.obs_at_epoch < self.cooldown {
             return None;
         }
-        let skew = coord.strength_skew();
+        let skew = skew();
         (skew > self.threshold).then_some(skew)
     }
 }

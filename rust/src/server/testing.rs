@@ -56,6 +56,13 @@ pub enum TraceEvent {
     /// whichever lease holds each core after every rebuild; in single mode
     /// they are the engine's worker indices.
     Degrade { at: f64, cores: Vec<usize>, fraction: f64 },
+    /// a *whole machine* degrades: every core of cluster machine `machine`
+    /// loses `fraction` of its cycles from `at` on (the cluster harness's
+    /// machine-scoped trace event — see `cluster::harness::run_cluster`).
+    /// Single/fleet runs treat it as a whole-machine `Degrade` when
+    /// `machine` is 0 (they drive exactly one machine) and ignore it
+    /// otherwise.
+    DegradeMachine { at: f64, machine: usize, fraction: f64 },
 }
 
 impl TraceEvent {
@@ -64,7 +71,8 @@ impl TraceEvent {
             TraceEvent::Connect { at, .. }
             | TraceEvent::Arrive { at, .. }
             | TraceEvent::Disconnect { at, .. }
-            | TraceEvent::Degrade { at, .. } => *at,
+            | TraceEvent::Degrade { at, .. }
+            | TraceEvent::DegradeMachine { at, .. } => *at,
         }
     }
 
@@ -215,7 +223,7 @@ impl HarnessReport {
 /// A script with a NaN/∞ event time has no defined delivery order — fail
 /// at trace construction with a pointed message instead of letting a sort
 /// comparator panic (or worse, silently misorder) deep in the run.
-fn validate_trace(trace: &[TraceEvent]) {
+pub(crate) fn validate_trace(trace: &[TraceEvent]) {
     for (i, ev) in trace.iter().enumerate() {
         assert!(
             ev.at().is_finite(),
@@ -226,7 +234,7 @@ fn validate_trace(trace: &[TraceEvent]) {
     }
 }
 
-fn enqueue(
+pub(crate) fn enqueue(
     queue: &mut AdmissionQueue<Pending>,
     rxs: &mut BTreeMap<u64, mpsc::Receiver<Event>>,
     report: &mut HarnessReport,
@@ -245,7 +253,7 @@ fn enqueue(
     }
 }
 
-fn absorb(
+pub(crate) fn absorb(
     report: &mut HarnessReport,
     step: &StepReport,
     idle_offset: f64,
@@ -273,11 +281,11 @@ fn absorb(
 
 /// `(stream, bus_share)` key a batcher's rounds are accounted under —
 /// stream 0 with no bus reference for unleased batchers.
-fn bandwidth_key<E: Executor>(b: &LeaseBatcher<E>) -> (StreamId, f64) {
+pub(crate) fn bandwidth_key<E: Executor>(b: &LeaseBatcher<E>) -> (StreamId, f64) {
     b.lease.as_ref().map_or((0, 0.0), |l| (l.stream, l.bus_share_gbps))
 }
 
-fn finalize(report: &mut HarnessReport, rxs: &BTreeMap<u64, mpsc::Receiver<Event>>) {
+pub(crate) fn finalize(report: &mut HarnessReport, rxs: &BTreeMap<u64, mpsc::Receiver<Event>>) {
     for (id, rx) in rxs {
         let Some(rec) = report.requests.get_mut(id) else { continue };
         for ev in rx.try_iter() {
@@ -328,6 +336,12 @@ pub fn run_single<E: Executor>(
                 }
                 TraceEvent::Degrade { cores, fraction, .. } => {
                     batcher.engine.rt.exec.inject_background(&cores, fraction);
+                }
+                TraceEvent::DegradeMachine { machine, fraction, .. } => {
+                    if machine == 0 {
+                        let all: Vec<usize> = (0..batcher.engine.rt.exec.n_workers()).collect();
+                        batcher.engine.rt.exec.inject_background(&all, fraction);
+                    }
                 }
                 TraceEvent::Connect { .. } | TraceEvent::Disconnect { .. } => {}
             }
@@ -464,6 +478,13 @@ pub fn run_fleet<E: Executor>(
                     TraceEvent::Degrade { cores, fraction, .. } => {
                         apply_degradation(&mut batchers, &cores, fraction);
                         degraded.push((cores, fraction));
+                    }
+                    TraceEvent::DegradeMachine { machine, fraction, .. } => {
+                        if machine == 0 {
+                            let cores: Vec<usize> = (0..coord.machine().n_cores()).collect();
+                            apply_degradation(&mut batchers, &cores, fraction);
+                            degraded.push((cores, fraction));
+                        }
                     }
                 }
             }
@@ -647,7 +668,7 @@ fn pair_may_admit<E: Executor>(
 /// is synced forward to the prefill clock first — a session cannot be
 /// decoded before the instant its prefill finished — which is exactly the
 /// queueing delay a physical handoff would incur.
-fn drain_handoffs<E: Executor>(
+pub(crate) fn drain_handoffs<E: Executor>(
     batchers: &mut [LeaseBatcher<E>],
     offsets: &mut [f64],
     report: &mut HarnessReport,
@@ -689,7 +710,7 @@ enum FleetChange {
 /// Re-start the scripted background loads on a (possibly fresh) fleet:
 /// each degraded physical core is mapped through its current lease to the
 /// lease-local worker and injected into that engine's executor.
-fn apply_degradation<E: Executor>(
+pub(crate) fn apply_degradation<E: Executor>(
     batchers: &mut [LeaseBatcher<E>],
     cores: &[usize],
     fraction: f64,

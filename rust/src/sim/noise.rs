@@ -71,12 +71,14 @@ impl NoiseState {
     }
 
     /// Effective multiplier of core `i` at virtual time `now`
-    /// (OU noise × background-load steals).
+    /// (OU noise × background-load steals). Each load is floored at 1%
+    /// remaining so a core can collapse (the cluster tier's whole-machine
+    /// degrade scenario is a 99% steal) but never fully stall.
     pub fn efficiency(&self, i: usize, now: f64) -> f64 {
         let mut e = self.eff[i];
         for b in &self.cfg.background {
             if b.core == i && now >= b.start && now < b.end {
-                e *= (1.0 - b.fraction).max(0.05);
+                e *= (1.0 - b.fraction).max(0.01);
             }
         }
         e

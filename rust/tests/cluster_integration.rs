@@ -1,0 +1,191 @@
+//! Acceptance tier for the cluster tier, driven entirely through the
+//! deterministic cluster harness (`dynpar::cluster::harness`): scripted
+//! virtual-time arrivals over N simulated machines behind one admission
+//! plane — no sockets, no wall-clock sleeps, bit-for-bit reproducible.
+//!
+//! * A whole-machine degrade mid-trace must be detected from timing alone:
+//!   cluster-level skew crosses the threshold, `replace()` drains the
+//!   dying machine, in-flight sessions migrate across the interconnect
+//!   (charged in KV bytes), and every token stream stays bit-identical to
+//!   the same trace served without the disturbance — and to a solo
+//!   `Engine::generate` oracle.
+//! * Re-placement must actually buy time back: the monitored run's
+//!   makespan beats riding out the degrade with the monitor disabled.
+
+use std::sync::Arc;
+
+use dynpar::cluster::harness::{run_cluster, ClusterReport};
+use dynpar::cluster::{ClusterCoordinator, InterconnectSpec, MachineId, MachineSpec};
+use dynpar::cpu::{presets, CpuSpec};
+use dynpar::engine::Engine;
+use dynpar::model::{ModelConfig, ModelWeights};
+use dynpar::perf::PerfConfig;
+use dynpar::sched::DynamicScheduler;
+use dynpar::server::fleet::{DriftMonitor, EngineFactory};
+use dynpar::server::protocol::Request;
+use dynpar::server::testing::TraceEvent;
+use dynpar::server::BatcherOpts;
+use dynpar::sim::{SimConfig, SimExecutor};
+
+const WEIGHTS_SEED: u64 = 41;
+const N_STREAMS: u64 = 4;
+const DEGRADE_AT: f64 = 2.0e-5;
+const TAIL_AT: f64 = 2.5e-5;
+
+/// Memory bandwidth scaled far out of the way so round time tracks core
+/// speed — a *compute* theft (the background load) must show up in the
+/// learned rates, and the micro model's ns-scale kernels would otherwise
+/// hide it behind dispatch overhead (zeroed here for the same reason).
+fn compute_bound_machine() -> CpuSpec {
+    let mut spec = presets::core_12900k();
+    spec.name = "core_12900k_cb".into();
+    for c in spec.cores.iter_mut() {
+        c.mem_bw_gbps *= 50.0;
+    }
+    spec.bus_bw_gbps *= 50.0;
+    spec
+}
+
+fn sim() -> SimConfig {
+    SimConfig {
+        execute_real: true,
+        dispatch_overhead_secs: 0.0,
+        chunk_claim_overhead_secs: 0.0,
+        ..SimConfig::noiseless()
+    }
+}
+
+fn factory(machine: CpuSpec) -> EngineFactory<SimExecutor> {
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, WEIGHTS_SEED));
+    Box::new(move |lease, _dispatch| {
+        let exec = lease.sim_executor(&machine, sim());
+        Engine::new(
+            cfg.clone(),
+            Arc::clone(&weights),
+            exec,
+            Box::new(DynamicScheduler),
+            PerfConfig::default(),
+        )
+    })
+}
+
+/// Two identical compute-bound machines: equal capability seeds keep the
+/// healthy cluster's skew at 1.0, so any threshold crossing is the
+/// injected degrade and nothing else.
+fn two_machines() -> (ClusterCoordinator, Vec<EngineFactory<SimExecutor>>) {
+    let cpu = compute_bound_machine();
+    let specs = [
+        MachineSpec::cores_only(cpu.clone()),
+        MachineSpec::cores_only(cpu.clone()),
+    ];
+    let cluster = ClusterCoordinator::new(&specs, InterconnectSpec::default());
+    (cluster, vec![factory(cpu.clone()), factory(cpu)])
+}
+
+fn req(id: u64, max_new: usize) -> Request {
+    Request {
+        id,
+        prompt: vec![(id as u32) * 3 + 1, 7, 2, 9],
+        max_new_tokens: max_new,
+    }
+}
+
+/// Four streams; a warm-up wave converges the learned per-machine
+/// strengths, then machine 0 loses 90% of every core and a heavy wave
+/// lands on all streams.
+fn degrade_trace(degrade: bool) -> Vec<TraceEvent> {
+    let mut trace: Vec<TraceEvent> =
+        (0..N_STREAMS).map(|s| TraceEvent::Connect { at: 0.0, stream: s }).collect();
+    for id in 0..8u64 {
+        trace.push(TraceEvent::arrive(1.0e-6, id % N_STREAMS, req(id, 8)));
+    }
+    if degrade {
+        trace.push(TraceEvent::DegradeMachine { at: DEGRADE_AT, machine: 0, fraction: 0.9 });
+    }
+    for id in 8..20u64 {
+        trace.push(TraceEvent::arrive(TAIL_AT, id % N_STREAMS, req(id, 24)));
+    }
+    trace
+}
+
+fn serve(monitor: DriftMonitor, degrade: bool) -> ClusterReport {
+    let (cluster, factories) = two_machines();
+    run_cluster(
+        cluster,
+        &factories,
+        BatcherOpts { max_batch: 4, prefill_chunk: 4 },
+        64,
+        monitor,
+        degrade_trace(degrade),
+    )
+}
+
+#[test]
+fn machine_degrade_triggers_replacement_with_bit_identical_streams() {
+    let replaced = serve(DriftMonitor::new(1.5, 8), true);
+    let stuck = serve(DriftMonitor::disabled(), true);
+    let undisturbed = serve(DriftMonitor::disabled(), false);
+
+    // the monitor fired from the serving loop with the measured skew past
+    // the threshold, and the re-placement actually moved sessions across
+    // the interconnect (within-machine moves would be free)
+    assert_eq!(replaced.replacements, 1, "skews {:?}", replaced.cluster_skew_at_trigger);
+    assert!(
+        replaced.cluster_skew_at_trigger[0] > 1.5,
+        "skew {:?}",
+        replaced.cluster_skew_at_trigger
+    );
+    assert!(replaced.migrated_sessions >= 1, "no in-flight session migrated");
+    assert!(replaced.interconnect_bytes > 0.0, "cross-machine migration was free");
+    assert_eq!(stuck.replacements, 0);
+    assert_eq!(undisturbed.replacements, 0);
+
+    // every stream of all three runs is bit-identical: migration across
+    // machines never changes a token
+    assert!(replaced.all_finished() && stuck.all_finished() && undisturbed.all_finished());
+    for id in 0..20u64 {
+        assert!(!replaced.tokens_of(id).is_empty(), "request {id} produced nothing");
+        assert_eq!(replaced.tokens_of(id), undisturbed.tokens_of(id), "request {id}");
+        assert_eq!(stuck.tokens_of(id), undisturbed.tokens_of(id), "request {id}");
+    }
+
+    // ...and matches a solo oracle run outside the cluster entirely
+    let cfg = ModelConfig::micro();
+    let weights = Arc::new(ModelWeights::random_init(&cfg, WEIGHTS_SEED));
+    let exec = SimExecutor::new(compute_bound_machine(), sim());
+    let mut oracle =
+        Engine::new(cfg, weights, exec, Box::new(DynamicScheduler), PerfConfig::default());
+    for id in [0u64, 9, 19] {
+        let r = req(id, if id < 8 { 8 } else { 24 });
+        let mut s = oracle.new_session();
+        let (expect, _) = oracle.generate(&mut s, &r.prompt, r.max_new_tokens);
+        assert_eq!(replaced.tokens_of(id), &expect[..], "request {id} vs solo oracle");
+    }
+
+    // re-placement must buy wall time back vs riding out the degrade
+    assert!(
+        replaced.base.makespan < stuck.base.makespan,
+        "re-placement did not recover: {} vs {}",
+        replaced.base.makespan,
+        stuck.base.makespan
+    );
+
+    // the dying machine drained: every stream now lives on machine 1
+    for s in 0..N_STREAMS {
+        let cluster_placement = replaced.final_placements.get(&s).copied();
+        assert_eq!(cluster_placement, Some(MachineId(1)), "stream {s} stayed on the dead machine");
+    }
+}
+
+#[test]
+fn cluster_runs_are_deterministic_across_invocations() {
+    let a = serve(DriftMonitor::new(1.5, 8), true);
+    let b = serve(DriftMonitor::new(1.5, 8), true);
+    assert_eq!(a.base.makespan, b.base.makespan, "virtual time diverged between runs");
+    assert_eq!(a.replacements, b.replacements);
+    assert_eq!(a.interconnect_bytes, b.interconnect_bytes);
+    for id in 0..20u64 {
+        assert_eq!(a.tokens_of(id), b.tokens_of(id), "request {id}");
+    }
+}

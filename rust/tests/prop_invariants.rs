@@ -1126,3 +1126,112 @@ fn prop_arena_decode_matches_serial_oracle_bitwise() {
         },
     );
 }
+
+#[test]
+fn prop_cluster_partition_is_balanced_exactly_once_and_capability_safe() {
+    // the cluster tier's balanced k-way partition: every stream assigned
+    // exactly once, never onto a zero-capability machine, and pairwise
+    // balance within the epsilon slack band of one item
+    use dynpar::cluster::partition::partition;
+    prop::check_with(
+        "cluster_partition_invariants",
+        PropConfig { iters: 60, seed: 0xC1A5 },
+        &mut |rng| {
+            let n_machines = (2 + rng.below(7)) as usize;
+            let n_items = (1 + rng.below(40)) as usize;
+            let epsilon = rng.uniform(0.0, 0.25);
+            let weights: Vec<f64> = (0..n_items).map(|_| rng.uniform(0.1, 4.0)).collect();
+            let capability: Vec<f64> = (0..n_machines)
+                .map(|_| if rng.below(5) == 0 { 0.0 } else { rng.uniform(0.2, 3.0) })
+                .collect();
+            if capability.iter().all(|&c| c <= 0.0) {
+                return Ok(()); // dead cluster: partition() panics by contract
+            }
+            let assign = partition(&weights, &capability, epsilon);
+            if assign.len() != weights.len() {
+                return Err("an item went missing from the assignment".into());
+            }
+            let mut load = vec![0.0; n_machines];
+            for (i, &m) in assign.iter().enumerate() {
+                if m >= n_machines {
+                    return Err(format!("item {i} placed on unknown machine {m}"));
+                }
+                if capability[m] <= 0.0 {
+                    return Err(format!("item {i} placed on zero-capability machine {m}"));
+                }
+                load[m] += weights[i];
+            }
+            // pairwise balance: each bucket within one item (plus slack)
+            // of every other, measured in normalized fill
+            let total: f64 = weights.iter().sum();
+            let cap_sum: f64 = capability.iter().filter(|c| **c > 0.0).sum();
+            let max_w = weights.iter().cloned().fold(0.0, f64::max);
+            let target =
+                |m: usize| -> f64 { total.max(f64::MIN_POSITIVE) * capability[m] / cap_sum };
+            for a in 0..n_machines {
+                for b in 0..n_machines {
+                    if capability[a] <= 0.0 || capability[b] <= 0.0 {
+                        continue;
+                    }
+                    let fill_a = load[a] / target(a);
+                    let fill_b = load[b] / target(b);
+                    let bound = (1.0 + epsilon) * (fill_b + max_w / target(b)) + 1e-9;
+                    if fill_a > bound {
+                        return Err(format!(
+                            "machine {a} fill {fill_a:.4} exceeds bound {bound:.4} vs {b}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cluster_repartition_moves_are_applicable_and_drain_dead_machines() {
+    // repartition() after a capability change: the reported moves apply
+    // cleanly (each names the item's true source), leave no item on a
+    // dead machine, and an already-balanced cluster reports zero moves
+    use dynpar::cluster::partition::{partition, repartition};
+    prop::check_with(
+        "cluster_repartition_invariants",
+        PropConfig { iters: 60, seed: 0xD317 },
+        &mut |rng| {
+            let n_machines = (2 + rng.below(5)) as usize;
+            let n_items = (2 + rng.below(24)) as usize;
+            let epsilon = 0.05;
+            let weights: Vec<f64> = (0..n_items).map(|_| rng.uniform(0.2, 2.0)).collect();
+            let before: Vec<f64> = (0..n_machines).map(|_| rng.uniform(0.5, 2.0)).collect();
+            let current = partition(&weights, &before, epsilon);
+            // capabilities drift; some machines may die outright
+            let after: Vec<f64> = before
+                .iter()
+                .map(|&c| if rng.below(4) == 0 { 0.0 } else { c * rng.uniform(0.05, 2.0) })
+                .collect();
+            if after.iter().all(|&c| c <= 0.0) {
+                return Ok(());
+            }
+            let moves = repartition(&current, &weights, &after, epsilon);
+            let mut placed = current.clone();
+            for mv in &moves {
+                if placed[mv.item] != mv.from {
+                    return Err(format!("move {mv:?} does not match the item's source"));
+                }
+                if after[mv.to] <= 0.0 {
+                    return Err(format!("move {mv:?} targets a dead machine"));
+                }
+                placed[mv.item] = mv.to;
+            }
+            if placed.iter().any(|&m| after[m] <= 0.0) {
+                return Err("an item remained on a dead machine".into());
+            }
+            // no drift at all => the hysteresis must report zero moves
+            let stable = repartition(&current, &weights, &before, epsilon);
+            if !stable.is_empty() {
+                return Err(format!("unchanged capabilities produced moves: {stable:?}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -11,6 +11,7 @@ pub mod pr4;
 pub mod pr7;
 pub mod pr8;
 pub mod pr9;
+pub mod pr10;
 pub mod report;
 
 use crate::cpu::CpuSpec;

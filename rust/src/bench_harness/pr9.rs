@@ -30,10 +30,10 @@ use crate::cluster::harness::{run_cluster, ClusterReport};
 use crate::cluster::{ClusterCoordinator, InterconnectSpec, MachineSpec};
 use crate::cpu::{presets, CpuSpec};
 use crate::model::ModelConfig;
+use crate::router::ServingPolicy;
 use crate::server::fleet::DriftMonitor;
 use crate::server::protocol::Request;
 use crate::server::testing::TraceEvent;
-use crate::server::BatcherOpts;
 use crate::sim::SimConfig;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -109,14 +109,14 @@ fn scenario(k: usize, monitor: DriftMonitor, degrade: bool) -> ClusterReport {
             fraction: DEGRADE_FRACTION,
         });
     }
-    let rep = run_cluster(
-        cluster,
-        &factories,
-        BatcherOpts { max_batch: 4, prefill_chunk: CHUNK },
-        common::QUEUE_DEPTH,
-        monitor,
-        t,
-    );
+    let policy = ServingPolicy::builder()
+        .max_batch(4)
+        .prefill_chunk(CHUNK)
+        .queue_depth(common::QUEUE_DEPTH)
+        .drift(monitor.threshold, monitor.cooldown)
+        .build()
+        .expect("bench policy validates");
+    let rep = run_cluster(cluster, &factories, &policy, t);
     assert!(rep.all_finished(), "bench trace did not drain");
     rep
 }

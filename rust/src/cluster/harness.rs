@@ -1,14 +1,17 @@
 //! Virtual-time cluster harness: N simulated machines behind one admission
 //! plane, no sockets, bit-for-bit deterministic.
 //!
-//! [`run_cluster`] is `server::testing::run_fleet` one level up: every
+//! [`run_cluster`] is `server::testing::run_trace` one level up: every
 //! machine runs its own batcher fleet on its own virtual clocks, the driver
 //! always advances the globally smallest working clock, and one shared
-//! [`AdmissionQueue`] feeds all machines — the cluster admission plane.
-//! `Connect` events place streams through [`ClusterCoordinator::admit`]
+//! priority-classed [`ClassedQueue`] feeds all machines — the cluster
+//! admission plane, configured by the same [`ServingPolicy`] the
+//! single-machine harness and the live server take. The trace vocabulary is
+//! the shared [`crate::server::trace`] core, so one trace drives either
+//! tier. `Connect` events place streams through [`ClusterCoordinator::admit`]
 //! (balanced partition over learned machine strengths), served rounds fold
 //! per-machine token rates into the cluster strength table, and the
-//! [`DriftMonitor`] watches cluster skew: a whole-machine degrade
+//! [`crate::server::fleet::DriftMonitor`] watches cluster skew: a whole-machine degrade
 //! ([`TraceEvent::DegradeMachine`]) triggers [`ClusterCoordinator::replace`]
 //! mid-trace, with in-flight sessions migrating bit-identically through the
 //! same `take_actives`/`distribute` machinery fleet rebuilds already use —
@@ -28,10 +31,12 @@ use crate::coordinator::{Lease, StreamId};
 use crate::exec::{Executor, RunResult};
 use crate::kernels::KernelClass;
 use crate::metrics::{MachineRollup, ServingMetrics};
+use crate::router::ServingPolicy;
 use crate::server::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending, PhaseRole};
-use crate::server::fleet::{self, DriftMonitor, EngineFactory};
-use crate::server::queue::AdmissionQueue;
-use crate::server::testing::{self, HarnessReport, TraceEvent};
+use crate::server::fleet::{self, EngineFactory};
+use crate::server::queue::ClassedQueue;
+use crate::server::testing::{self, HarnessReport};
+use crate::server::trace::TraceEvent;
 
 use super::{machine_capability, ClusterCoordinator, MachineId};
 
@@ -170,19 +175,23 @@ impl ClusterReport {
 /// Drive a cluster end-to-end in virtual time. `factories` builds each
 /// machine's engines (index-aligned with the cluster's machines — machines
 /// may simulate entirely different CPUs); the shared `trace` scripts
-/// arrivals, stream membership and degrades; `monitor` gates cluster-level
-/// re-placement exactly like the per-machine drift monitor gates
-/// `rebalance()`.
+/// arrivals, stream membership and degrades; the [`ServingPolicy`] carries
+/// the batcher shape, the classed admission-queue bound and the drift
+/// thresholds that gate cluster-level re-placement exactly like the
+/// per-machine drift monitor gates `rebalance()`. Priority classes apply at
+/// the admission plane (strict-priority dequeue, shed-lowest-first
+/// eviction); the SLO predictor and the live strategy router stay
+/// single-machine concerns (`run_trace` / `serve_dynamic`).
 pub fn run_cluster<E: Executor>(
     mut cluster: ClusterCoordinator,
     factories: &[EngineFactory<E>],
-    opts: BatcherOpts,
-    queue_depth: usize,
-    mut monitor: DriftMonitor,
+    policy: &ServingPolicy,
     mut trace: Vec<TraceEvent>,
 ) -> ClusterReport {
     let n = cluster.n_machines();
     assert_eq!(factories.len(), n, "one engine factory per machine");
+    let opts: BatcherOpts = policy.batcher_opts();
+    let mut monitor = policy.drift_monitor();
     testing::validate_trace(&trace);
     trace.sort_by(|a, b| a.at().total_cmp(&b.at()));
     let mut report = HarnessReport::default();
@@ -194,7 +203,8 @@ pub fn run_cluster<E: Executor>(
     for (m, u) in usage.iter_mut().enumerate() {
         u.capability_gbps = machine_capability(cluster.machine(MachineId(m)));
     }
-    let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(queue_depth);
+    let mut queue: ClassedQueue<Pending> =
+        ClassedQueue::new(policy.n_classes(), policy.queue_depth);
     let mut rxs: BTreeMap<u64, mpsc::Receiver<crate::server::protocol::Event>> = BTreeMap::new();
     let mut migrated_sessions = 0usize;
     let mut interconnect_bytes = 0.0f64;
@@ -244,8 +254,8 @@ pub fn run_cluster<E: Executor>(
                 let ev = trace[cursor].clone();
                 cursor += 1;
                 match ev {
-                    TraceEvent::Arrive { at, req, .. } => {
-                        testing::enqueue(&mut queue, &mut rxs, &mut report, at, req)
+                    TraceEvent::Arrive { at, req, class, .. } => {
+                        testing::enqueue(&mut queue, &mut rxs, &mut report, at, req, class)
                     }
                     TraceEvent::Connect { stream, .. } => {
                         let MachineId(m) = cluster.admit(stream);
@@ -297,11 +307,14 @@ pub fn run_cluster<E: Executor>(
         report.queue_depth_samples.push(queue.len());
         let was_idle = batchers[m][i].is_idle();
         while batchers[m][i].role() != PhaseRole::Decode && batchers[m][i].has_capacity() {
-            let Some(p) = queue.pop() else { break };
+            let Some((class, p)) = queue.pop() else { break };
             let id = p.req.id;
             let before = batchers[m][i].admitted();
             match batchers[m][i].admit(p) {
                 Ok(()) => {
+                    if batchers[m][i].admitted() > before {
+                        report.admit_order.push((id, class));
+                    }
                     // a batcher that sat idle starts this request at its
                     // arrival instant, not at the stale idle clock
                     if batchers[m][i].admitted() > before && was_idle {
@@ -317,7 +330,7 @@ pub fn run_cluster<E: Executor>(
                     }
                 }
                 Err(p) => {
-                    queue.push_front(p);
+                    queue.push_front(class, p);
                     break;
                 }
             }
@@ -588,14 +601,12 @@ mod tests {
             for id in 0..6u64 {
                 trace.push(TraceEvent::arrive(1e-6 + id as f64 * 1e-4, 0, req(id, &[1, 2, 3], 4)));
             }
-            run_cluster(
-                cluster,
-                &factories,
-                BatcherOpts::default(),
-                64,
-                DriftMonitor::disabled(),
-                trace,
-            )
+            let policy = ServingPolicy::builder()
+                .queue_depth(64)
+                .drift(f64::INFINITY, 0)
+                .build()
+                .unwrap();
+            run_cluster(cluster, &factories, &policy, trace)
         };
         let a = run();
         assert!(a.all_finished(), "unserved requests");
@@ -621,14 +632,12 @@ mod tests {
             TraceEvent::arrive(1e-6, 0, req(1, &[1, 2], 3)),
             TraceEvent::arrive(2e-6, 0, req(2, &[3, 4], 3)),
         ];
-        let rep = run_cluster(
-            cluster,
-            &factories,
-            BatcherOpts::default(),
-            16,
-            DriftMonitor::disabled(),
-            trace,
-        );
+        let policy = ServingPolicy::builder()
+            .queue_depth(16)
+            .drift(f64::INFINITY, 0)
+            .build()
+            .unwrap();
+        let rep = run_cluster(cluster, &factories, &policy, trace);
         assert!(rep.all_finished());
         let sm = rep.serving_metrics();
         assert_eq!(sm.machines.len(), 2);

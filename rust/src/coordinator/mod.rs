@@ -136,6 +136,21 @@ pub enum ExecMode {
     Disaggregated,
 }
 
+/// One complete serving strategy the router can put the fleet on: the
+/// coordinator-side execution mode plus the batcher shape that mode is
+/// served with. [`Coordinator::strategy_candidates`] enumerates the
+/// strategies valid for a machine; [`Coordinator::apply_strategy`]
+/// switches live leases onto one (epoch bump → fleet rebuild → bit-identical
+/// session migration, the same path a membership change takes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Strategy {
+    pub mode: ExecMode,
+    /// batch slots per batcher under this strategy
+    pub max_batch: usize,
+    /// prefill chunk (tokens) under this strategy
+    pub prefill_chunk: usize,
+}
+
 /// The memory-bus bandwidth (GB/s) the given cores can claim for
 /// themselves: proportional to their waterfilled allocation when every core
 /// of the machine streams flat out. Leasing *all* cores returns the full
@@ -512,6 +527,36 @@ impl Coordinator {
                 self.assign();
             }
         }
+    }
+
+    /// Every [`Strategy`] this machine can serve with at the given batcher
+    /// shape, in preference order for decode-heavy traffic: the blended
+    /// intra-kernel split always works; `AsyncBatch` needs at least one
+    /// leasable accelerator to run the parallel-batch pair;
+    /// `Disaggregated` needs ≥ 2 cores to split a phase pair from
+    /// (with fewer, [`Coordinator::phase_leases`] returns `None` and the
+    /// mode silently degenerates to a blended lease).
+    pub fn strategy_candidates(&self, max_batch: usize, prefill_chunk: usize) -> Vec<Strategy> {
+        let mut out = vec![Strategy { mode: ExecMode::IntraKernel, max_batch, prefill_chunk }];
+        if !self.accels.is_empty() && self.affinity != XpuAffinity::None {
+            out.push(Strategy { mode: ExecMode::AsyncBatch, max_batch, prefill_chunk });
+        }
+        if self.spec.n_cores() >= 2 {
+            out.push(Strategy { mode: ExecMode::Disaggregated, max_batch, prefill_chunk });
+        }
+        out
+    }
+
+    /// Put the coordinator on the given strategy. A mode change re-issues
+    /// every live lease (epoch bump via [`Coordinator::set_exec_mode`]) so
+    /// the serving layer's rebuild-and-migrate machinery moves every
+    /// in-flight session bit-identically; returns whether the mode actually
+    /// changed. The strategy's batcher shape is the *caller's* side of the
+    /// switch — the coordinator only owns lease issuance.
+    pub fn apply_strategy(&mut self, strategy: &Strategy) -> bool {
+        let changed = self.exec_mode != strategy.mode;
+        self.set_exec_mode(strategy.mode);
+        changed
     }
 
     pub fn n_streams(&self) -> usize {

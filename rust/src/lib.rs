@@ -38,6 +38,7 @@ pub mod tensor;
 pub mod kernels;
 pub mod model;
 pub mod engine;
+pub mod router;
 pub mod runtime;
 pub mod server;
 pub mod metrics;

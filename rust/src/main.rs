@@ -32,6 +32,7 @@ const USAGE: &str = "usage: dynpar <presets|mlc|bench|trace|infer|serve|ablate> 
   dynpar bench pr7 [--out BENCH_pr7.json]     disaggregated prefill/decode vs blended lease
   dynpar bench pr8 [--out BENCH_pr8.json]     fused-dispatch arena path vs per-matrix baseline
   dynpar bench pr9 [--out BENCH_pr9.json]     cluster tier: throughput vs machine count + recovery
+  dynpar bench pr10 [--out BENCH_pr10.json]   SLO-aware strategy router vs every static config
   dynpar trace [--preset ultra_125h] [--alpha 0.3] [--init 5] [--prompt N] [--decode N] [--out file.csv]
   dynpar infer [--model tiny|micro] [--backend native|pjrt|both] [--preset X] [--sched dynamic] [--new N]
   dynpar serve [--addr 127.0.0.1:7878] [--model micro] [--preset X] [--max-batch 4]
@@ -163,6 +164,17 @@ fn cmd_bench(args: &Args) {
             Some(path) => {
                 std::fs::write(path, format!("{}\n", j.dump())).expect("write pr9 report");
                 eprintln!("wrote PR-9 report to {path}");
+            }
+            None => println!("{}", j.dump()),
+        }
+        return;
+    }
+    if which == "pr10" {
+        let j = dynpar::bench_harness::pr10::run();
+        match args.opt("out") {
+            Some(path) => {
+                std::fs::write(path, format!("{}\n", j.dump())).expect("write pr10 report");
+                eprintln!("wrote PR-10 report to {path}");
             }
             None => println!("{}", j.dump()),
         }

@@ -145,6 +145,14 @@ pub struct ServingMetrics {
     pub tokens: u64,
     /// requests refused by the bounded admission queue
     pub rejected: u64,
+    /// requests shed by SLO-aware admission: bounced by the predicted-wait
+    /// gate or evicted from a saturated queue to seat a higher-priority
+    /// arrival (disjoint from `rejected`, which counts plain saturation)
+    pub shed_requests: u64,
+    /// live strategy switches taken by the router (each one is a fleet
+    /// rebuild with bit-identical session migration), a subset of
+    /// `rebuilds`
+    pub strategy_switches: u64,
     /// engine-fleet rebuilds (dynamic lease membership epoch changes)
     pub rebuilds: u64,
     /// rebuilds triggered by the drift monitor (learned-strength skew →
@@ -197,6 +205,14 @@ impl ServingMetrics {
             ("drift_rebalances", Json::num(self.drift_rebalances as f64)),
             ("handoffs", Json::num(self.handoffs as f64)),
         ];
+        // SLO/router observables appear once the features are exercised,
+        // keeping the export unchanged for single-class, router-off runs
+        if self.shed_requests > 0 {
+            fields.push(("shed_requests", Json::num(self.shed_requests as f64)));
+        }
+        if self.strategy_switches > 0 {
+            fields.push(("strategy_switches", Json::num(self.strategy_switches as f64)));
+        }
         if self.kernel_secs > 0.0 {
             let achieved = bandwidth_gbps(self.bytes_moved, self.kernel_secs);
             fields.push(("bytes_moved", Json::num(self.bytes_moved)));
@@ -357,6 +373,19 @@ mod tests {
         assert_eq!(machines.len(), 2);
         assert_eq!(machines[0].get("tok_s").unwrap().as_f64(), Some(24.0));
         assert_eq!(machines[1].get("interconnect_bytes").unwrap().as_f64(), Some(4096.0));
+    }
+
+    #[test]
+    fn slo_and_router_counters_export_only_when_exercised() {
+        let mut sm = ServingMetrics::default();
+        // single-class, router-off runs keep the legacy export shape
+        assert!(sm.to_json(1, 0).get("shed_requests").is_none());
+        assert!(sm.to_json(1, 0).get("strategy_switches").is_none());
+        sm.shed_requests = 4;
+        sm.strategy_switches = 2;
+        let j = sm.to_json(1, 0);
+        assert_eq!(j.get("shed_requests").unwrap().as_i64(), Some(4));
+        assert_eq!(j.get("strategy_switches").unwrap().as_i64(), Some(2));
     }
 
     #[test]

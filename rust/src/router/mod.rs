@@ -1,0 +1,36 @@
+//! SLO-aware adaptive strategy routing behind one [`ServingPolicy`].
+//!
+//! The repo's serving strategies — the blended intra-kernel split, the
+//! async CPU/XPU parallel-batch pair, phase-disaggregated prefill/decode —
+//! were each frozen per run while the metrics that tell them apart (TTFT,
+//! queue depth, learned skew, tok/s, bus utilization) streamed by unused.
+//! This module is the layer that chooses between them live:
+//!
+//! * [`ServingPolicy`] — the one config every serving entry point accepts
+//!   (`serve_dynamic`, `server::testing::run_trace`,
+//!   `cluster::harness::run_cluster`), built with
+//!   [`ServingPolicy::builder`], validated by [`ServingPolicy::validate`],
+//!   convertible from the legacy `ServerOpts` for compatibility.
+//! * [`StrategyRouter`] — watches the arrival mix and switches the fleet's
+//!   [`crate::coordinator::Strategy`] with Schmitt-trigger hysteresis and a
+//!   switch cooldown (the anti-flap gates generalized from
+//!   `DriftMonitor`); every switch rides the epoch-bump rebuild path, so
+//!   in-flight sessions migrate bit-identically.
+//! * [`SloGate`] + [`ClassPolicy`] — priority-classed admission with
+//!   per-class TTFT targets: a deterministic capacity predictor sheds
+//!   low-priority work first when the backlog already spells an SLO miss.
+//!
+//! Decision table (signal → strategy) — see README "Strategy router":
+//!
+//! | window prefill share | learned device share | strategy |
+//! |---|---|---|
+//! | ≥ `enter_prefill_share` | any | `Disaggregated` phase pair |
+//! | ≤ `exit_prefill_share` | inside `async_share_band` | `AsyncBatch` pair |
+//! | ≤ `exit_prefill_share` | outside band / cores-only | `IntraKernel` blend |
+//! | in between (dead zone) | any | hold current (no flap) |
+
+mod policy;
+mod strategy;
+
+pub use policy::{ClassPolicy, RouterConfig, ServingPolicy, ServingPolicyBuilder};
+pub use strategy::{SloGate, StrategyRouter};

@@ -1,0 +1,419 @@
+//! The unified serving configuration: [`ServingPolicy`] and its builder.
+
+use crate::coordinator::ExecMode;
+use crate::server::batcher::BatcherOpts;
+use crate::server::fleet::DriftMonitor;
+use crate::server::queue::AdmissionPolicy;
+use crate::server::ServerOpts;
+
+/// Admission policy of one priority class (0 = highest priority).
+#[derive(Clone, Debug)]
+pub struct ClassPolicy {
+    /// human-readable label for reports and metrics exports
+    pub name: String,
+    /// time-to-first-token target in seconds; `f64::INFINITY` = no SLO
+    pub ttft_target: f64,
+    /// whether the SLO-aware admission gate may shed this class's arrivals
+    /// under predicted overload (class 0 is conventionally not sheddable)
+    pub sheddable: bool,
+}
+
+impl Default for ClassPolicy {
+    fn default() -> ClassPolicy {
+        ClassPolicy { name: "default".into(), ttft_target: f64::INFINITY, sheddable: false }
+    }
+}
+
+/// Knobs of the live [`crate::router::StrategyRouter`]. All thresholds act
+/// on the *arrival-window prefill share*: over the last `window` arrivals,
+/// the fraction of offered tokens that are prompt (prefill) tokens rather
+/// than requested decode tokens — near 1.0 for long-prompt bursts, near
+/// 0.0 for decode-heavy chat.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// arrivals in the sliding decision window (also the minimum number of
+    /// arrivals before the router makes its first decision)
+    pub window: usize,
+    /// prefill share at or above which the router enters the
+    /// prefill-optimized strategy ([`ExecMode::Disaggregated`])
+    pub enter_prefill_share: f64,
+    /// prefill share at or below which the router leaves it again; the gap
+    /// to `enter_prefill_share` is the Schmitt-trigger dead zone that
+    /// keeps the router from flapping on a mixed tail
+    pub exit_prefill_share: f64,
+    /// minimum seconds between strategy switches (the hysteresis cooldown
+    /// generalized from [`DriftMonitor`]'s observation cooldown)
+    pub cooldown_secs: f64,
+    /// learned device share band (`Coordinator::split_ratio`) inside which
+    /// a decode-heavy mix runs [`ExecMode::AsyncBatch`] instead of the
+    /// blended split — the XPU is pulling enough weight to deserve whole
+    /// token rounds, but not so much that the cores are passengers
+    pub async_share_band: (f64, f64),
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            window: 12,
+            enter_prefill_share: 0.6,
+            exit_prefill_share: 0.35,
+            cooldown_secs: 0.0,
+            async_share_band: (0.35, 0.65),
+        }
+    }
+}
+
+/// One config for the whole serving surface.
+///
+/// Everything `serve_dynamic`, `server::testing::run_trace` and
+/// `cluster::harness::run_cluster` need to know rides in here: batcher
+/// shape, admission queue depth and overflow policy, drift thresholds, an
+/// optional static [`ExecMode`] override, the priority classes of the
+/// admission plane, and the optional [`RouterConfig`] that turns the live
+/// strategy router on.
+///
+/// Build it with [`ServingPolicy::builder`] — the builder validates — or
+/// convert a legacy [`ServerOpts`] via `From` (kept so existing call sites
+/// compile unchanged; that path deliberately bypasses
+/// [`ServingPolicy::validate`], e.g. for intentionally closed zero-depth
+/// queues in overload tests). Direct struct construction is deprecated in
+/// favour of the builder and may lose field-by-field compatibility in a
+/// future change.
+#[derive(Clone, Debug)]
+pub struct ServingPolicy {
+    /// batch slots per batcher
+    pub max_batch: usize,
+    /// prompt tokens prefilled per scheduler round and request
+    pub prefill_chunk: usize,
+    /// shared admission queue bound across all priority classes
+    pub queue_depth: usize,
+    /// what to do with an arrival that finds the queue full
+    pub on_full: AdmissionPolicy,
+    /// learned-strength skew that triggers a live rebalance
+    /// (`f64::INFINITY` disables the monitor)
+    pub drift_threshold: f64,
+    /// accepted observations required between drift rebalances
+    pub drift_cooldown: u64,
+    /// static execution mode the fleet starts on (`None` = coordinator
+    /// default, or the router's choice once it has a window)
+    pub mode: Option<ExecMode>,
+    /// priority classes, index 0 = highest priority; never empty
+    pub classes: Vec<ClassPolicy>,
+    /// `Some` turns the live strategy router on
+    pub router: Option<RouterConfig>,
+}
+
+impl ServingPolicy {
+    pub fn builder() -> ServingPolicyBuilder {
+        ServingPolicyBuilder { policy: ServingPolicy::base() }
+    }
+
+    fn base() -> ServingPolicy {
+        let o = ServerOpts::default();
+        ServingPolicy {
+            max_batch: o.max_batch,
+            prefill_chunk: o.prefill_chunk,
+            queue_depth: o.queue_depth,
+            on_full: o.on_full,
+            drift_threshold: o.drift_threshold,
+            drift_cooldown: o.drift_cooldown,
+            mode: None,
+            classes: vec![ClassPolicy::default()],
+            router: None,
+        }
+    }
+
+    /// The legacy knob set, unvalidated — the `From<ServerOpts>` /
+    /// `run_fleet` compatibility path.
+    pub(crate) fn from_server_parts(
+        max_batch: usize,
+        prefill_chunk: usize,
+        queue_depth: usize,
+        on_full: AdmissionPolicy,
+        drift_threshold: f64,
+        drift_cooldown: u64,
+    ) -> ServingPolicy {
+        ServingPolicy {
+            max_batch,
+            prefill_chunk,
+            queue_depth,
+            on_full,
+            drift_threshold,
+            drift_cooldown,
+            ..ServingPolicy::base()
+        }
+    }
+
+    /// The batcher shape this policy starts the fleet on.
+    pub fn batcher_opts(&self) -> BatcherOpts {
+        BatcherOpts { max_batch: self.max_batch, prefill_chunk: self.prefill_chunk }
+    }
+
+    /// A fresh drift monitor on this policy's thresholds.
+    pub fn drift_monitor(&self) -> DriftMonitor {
+        DriftMonitor::new(self.drift_threshold, self.drift_cooldown)
+    }
+
+    /// Number of priority classes (≥ 1 even on a default policy).
+    pub fn n_classes(&self) -> usize {
+        self.classes.len().max(1)
+    }
+
+    /// Reject every NaN / zero / negative knob with a descriptive error.
+    /// The builder calls this on `build()`; policies converted from
+    /// [`ServerOpts`] bypass it for backwards compatibility.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_batch == 0 {
+            return Err("max_batch must be >= 1 (a zero-slot batcher can never admit)".into());
+        }
+        if self.prefill_chunk == 0 {
+            return Err("prefill_chunk must be >= 1 token per round".into());
+        }
+        if self.queue_depth == 0 {
+            return Err(
+                "queue_depth must be >= 1 (use ServerOpts directly for an \
+                 intentionally closed queue)"
+                    .into(),
+            );
+        }
+        if self.drift_threshold.is_nan() || self.drift_threshold < 1.0 {
+            return Err(format!(
+                "drift_threshold {} invalid: skew is a max/min ratio, so the threshold \
+                 must be >= 1.0 (f64::INFINITY disables the monitor)",
+                self.drift_threshold
+            ));
+        }
+        if self.classes.is_empty() {
+            return Err("at least one priority class is required".into());
+        }
+        for (i, c) in self.classes.iter().enumerate() {
+            if c.ttft_target.is_nan() || c.ttft_target <= 0.0 {
+                return Err(format!(
+                    "class {i} ({}) ttft_target {} invalid: must be positive seconds \
+                     (f64::INFINITY = no SLO)",
+                    c.name, c.ttft_target
+                ));
+            }
+        }
+        if let Some(r) = &self.router {
+            if r.window == 0 {
+                return Err("router window must be >= 1 arrival".into());
+            }
+            for (label, v) in
+                [("enter_prefill_share", r.enter_prefill_share), ("exit_prefill_share", r.exit_prefill_share)]
+            {
+                if !v.is_finite() || v <= 0.0 || v >= 1.0 {
+                    return Err(format!(
+                        "router {label} {v} invalid: prefill shares are fractions in (0, 1)"
+                    ));
+                }
+            }
+            if r.exit_prefill_share >= r.enter_prefill_share {
+                return Err(format!(
+                    "router exit_prefill_share {} must sit strictly below \
+                     enter_prefill_share {} — the gap is the anti-flap dead zone",
+                    r.exit_prefill_share, r.enter_prefill_share
+                ));
+            }
+            if r.cooldown_secs.is_nan() || r.cooldown_secs < 0.0 {
+                return Err(format!(
+                    "router cooldown_secs {} invalid: must be >= 0 seconds",
+                    r.cooldown_secs
+                ));
+            }
+            let (lo, hi) = r.async_share_band;
+            if !(lo.is_finite() && hi.is_finite() && 0.0 <= lo && lo < hi && hi <= 1.0) {
+                return Err(format!(
+                    "router async_share_band ({lo}, {hi}) invalid: need 0 <= lo < hi <= 1"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for ServingPolicy {
+    fn default() -> ServingPolicy {
+        ServingPolicy::base()
+    }
+}
+
+/// Legacy compatibility: the flat `ServerOpts` knob set maps onto a
+/// single-class, router-off policy. Unvalidated by design — existing tests
+/// (e.g. zero-depth queue saturation) rely on out-of-band values.
+impl From<ServerOpts> for ServingPolicy {
+    fn from(o: ServerOpts) -> ServingPolicy {
+        ServingPolicy::from_server_parts(
+            o.max_batch,
+            o.prefill_chunk,
+            o.queue_depth,
+            o.on_full,
+            o.drift_threshold,
+            o.drift_cooldown,
+        )
+    }
+}
+
+/// Fluent constructor for [`ServingPolicy`]; `build()` validates.
+#[derive(Clone, Debug)]
+pub struct ServingPolicyBuilder {
+    policy: ServingPolicy,
+}
+
+impl ServingPolicyBuilder {
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.policy.max_batch = n;
+        self
+    }
+
+    pub fn prefill_chunk(mut self, tokens: usize) -> Self {
+        self.policy.prefill_chunk = tokens;
+        self
+    }
+
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.policy.queue_depth = depth;
+        self
+    }
+
+    pub fn on_full(mut self, policy: AdmissionPolicy) -> Self {
+        self.policy.on_full = policy;
+        self
+    }
+
+    /// Drift-monitor thresholds (`f64::INFINITY` threshold disables).
+    pub fn drift(mut self, threshold: f64, cooldown: u64) -> Self {
+        self.policy.drift_threshold = threshold;
+        self.policy.drift_cooldown = cooldown;
+        self
+    }
+
+    /// Static execution mode the fleet starts on.
+    pub fn mode(mut self, mode: ExecMode) -> Self {
+        self.policy.mode = Some(mode);
+        self
+    }
+
+    /// Append a priority class (classes are indexed in call order after
+    /// the implicit class 0 default — use [`Self::slo`] to retarget it).
+    pub fn class(mut self, name: &str, ttft_target: f64, sheddable: bool) -> Self {
+        self.policy.classes.push(ClassPolicy { name: name.into(), ttft_target, sheddable });
+        self
+    }
+
+    /// Set the TTFT target (seconds) of priority class `class`, growing
+    /// the class table with sheddable defaults as needed.
+    pub fn slo(mut self, class: usize, ttft_target: f64) -> Self {
+        while self.policy.classes.len() <= class {
+            let i = self.policy.classes.len();
+            self.policy.classes.push(ClassPolicy {
+                name: format!("class{i}"),
+                ttft_target: f64::INFINITY,
+                sheddable: i > 0,
+            });
+        }
+        self.policy.classes[class].ttft_target = ttft_target;
+        self
+    }
+
+    /// Turn the live strategy router on.
+    pub fn router(mut self, cfg: RouterConfig) -> Self {
+        self.policy.router = Some(cfg);
+        self
+    }
+
+    pub fn build(self) -> Result<ServingPolicy, String> {
+        self.policy.validate()?;
+        Ok(self.policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_rejects(b: ServingPolicyBuilder, needle: &str) {
+        let err = b.build().expect_err("policy must be rejected");
+        assert!(err.contains(needle), "error {err:?} does not mention {needle:?}");
+    }
+
+    #[test]
+    fn builder_defaults_validate() {
+        let p = ServingPolicy::builder().build().unwrap();
+        assert_eq!(p.max_batch, ServerOpts::default().max_batch);
+        assert_eq!(p.n_classes(), 1);
+        assert!(p.router.is_none());
+    }
+
+    #[test]
+    fn zero_max_batch_is_rejected() {
+        assert_rejects(ServingPolicy::builder().max_batch(0), "max_batch");
+    }
+
+    #[test]
+    fn zero_prefill_chunk_is_rejected() {
+        assert_rejects(ServingPolicy::builder().prefill_chunk(0), "prefill_chunk");
+    }
+
+    #[test]
+    fn zero_queue_depth_is_rejected() {
+        assert_rejects(ServingPolicy::builder().queue_depth(0), "queue_depth");
+    }
+
+    #[test]
+    fn nan_and_sub_unity_drift_thresholds_are_rejected() {
+        assert_rejects(ServingPolicy::builder().drift(f64::NAN, 4), "drift_threshold");
+        assert_rejects(ServingPolicy::builder().drift(0.5, 4), "drift_threshold");
+        // INFINITY is the documented disable sentinel, not an error
+        assert!(ServingPolicy::builder().drift(f64::INFINITY, 0).build().is_ok());
+    }
+
+    #[test]
+    fn non_positive_slo_targets_are_rejected() {
+        assert_rejects(ServingPolicy::builder().slo(0, f64::NAN), "ttft_target");
+        assert_rejects(ServingPolicy::builder().slo(1, 0.0), "ttft_target");
+        assert_rejects(ServingPolicy::builder().slo(0, -2.0), "ttft_target");
+    }
+
+    #[test]
+    fn router_threshold_shapes_are_rejected() {
+        let cfg = |f: fn(&mut RouterConfig)| {
+            let mut c = RouterConfig::default();
+            f(&mut c);
+            ServingPolicy::builder().router(c)
+        };
+        assert_rejects(cfg(|c| c.window = 0), "window");
+        assert_rejects(cfg(|c| c.enter_prefill_share = f64::NAN), "enter_prefill_share");
+        assert_rejects(cfg(|c| c.exit_prefill_share = 0.0), "exit_prefill_share");
+        // inverted hysteresis gap: flap-prone, rejected
+        assert_rejects(
+            cfg(|c| {
+                c.enter_prefill_share = 0.3;
+                c.exit_prefill_share = 0.5;
+            }),
+            "dead zone",
+        );
+        assert_rejects(cfg(|c| c.cooldown_secs = -1.0), "cooldown_secs");
+        assert_rejects(cfg(|c| c.async_share_band = (0.7, 0.2)), "async_share_band");
+    }
+
+    #[test]
+    fn slo_builder_grows_class_table() {
+        let p = ServingPolicy::builder().slo(2, 0.5).build().unwrap();
+        assert_eq!(p.n_classes(), 3);
+        assert!(p.classes[0].ttft_target.is_infinite());
+        assert!(!p.classes[0].sheddable, "class 0 defaults to protected");
+        assert!(p.classes[1].sheddable);
+        assert_eq!(p.classes[2].ttft_target, 0.5);
+    }
+
+    #[test]
+    fn server_opts_convert_without_validation() {
+        // the saturation tests run a zero-depth queue on purpose — the
+        // legacy conversion must keep working
+        let p: ServingPolicy = ServerOpts { queue_depth: 0, ..ServerOpts::default() }.into();
+        assert_eq!(p.queue_depth, 0);
+        assert!(p.validate().is_err());
+        assert_eq!(p.n_classes(), 1);
+    }
+}

@@ -1,0 +1,300 @@
+//! The live strategy router and the SLO admission predictor.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::{ExecMode, Strategy};
+
+use super::policy::{RouterConfig, ServingPolicy};
+
+/// Watches the offered load and switches the fleet between the serving
+/// strategies the machine supports.
+///
+/// The only signal a decision needs is already in the arrival stream: the
+/// *prefill share* of the last [`RouterConfig::window`] arrivals (prompt
+/// tokens over prompt + requested decode tokens). Long-prompt bursts push
+/// it toward 1 → phase-disaggregated serving, where prefill and decode
+/// stop degrading each other. Decode-heavy chat pulls it toward 0 → the
+/// blended intra-kernel split (or, on a hetero lease whose learned device
+/// share sits inside [`RouterConfig::async_share_band`], the async
+/// parallel-batch pair that gives the XPU whole token rounds).
+///
+/// Two gates generalized from `DriftMonitor` keep it from flapping: a
+/// Schmitt-trigger dead zone between the enter/exit thresholds (inside it
+/// the router holds its current strategy) and a cooldown of
+/// [`RouterConfig::cooldown_secs`] between switches. Every switch is an
+/// epoch bump — the fleet rebuild migrates in-flight sessions
+/// bit-identically, so flipping strategy never perturbs a token stream.
+#[derive(Clone, Debug)]
+pub struct StrategyRouter {
+    cfg: RouterConfig,
+    /// decode-heavy strategy (blended intra-kernel split)
+    chat: Strategy,
+    /// prefill-burst strategy (phase-disaggregated pair)
+    burst: Strategy,
+    /// async parallel-batch strategy, when the machine has a leasable XPU
+    hetero: Option<Strategy>,
+    window: VecDeque<(usize, usize)>,
+    current: Strategy,
+    last_switch_at: f64,
+    /// every switch taken: (virtual seconds, strategy switched to)
+    pub switches: Vec<(f64, Strategy)>,
+}
+
+impl StrategyRouter {
+    /// A router over the machine's strategy candidates (see
+    /// `Coordinator::strategy_candidates`), or `None` when the policy has
+    /// no [`RouterConfig`]. The fleet starts on the policy's static mode
+    /// if set, else the decode-heavy chat strategy.
+    pub fn from_policy(policy: &ServingPolicy, candidates: &[Strategy]) -> Option<StrategyRouter> {
+        let cfg = policy.router?;
+        let find = |m: ExecMode| candidates.iter().find(|s| s.mode == m).copied();
+        let chat = find(ExecMode::IntraKernel)?;
+        let burst = find(ExecMode::Disaggregated).unwrap_or(chat);
+        let hetero = find(ExecMode::AsyncBatch);
+        let current = policy
+            .mode
+            .and_then(find)
+            .unwrap_or(if policy.mode == Some(ExecMode::Disaggregated) { burst } else { chat });
+        Some(StrategyRouter {
+            cfg,
+            chat,
+            burst,
+            hetero,
+            window: VecDeque::with_capacity(cfg.window + 1),
+            current,
+            last_switch_at: f64::NEG_INFINITY,
+            switches: Vec::new(),
+        })
+    }
+
+    /// Feed one arrival into the decision window (shed arrivals count too:
+    /// the router reasons about *offered* load, not admitted load).
+    pub fn note_arrival(&mut self, prompt_tokens: usize, decode_tokens: usize) {
+        self.window.push_back((prompt_tokens, decode_tokens));
+        while self.window.len() > self.cfg.window {
+            self.window.pop_front();
+        }
+    }
+
+    /// Prompt-token fraction of the offered tokens in the current window.
+    pub fn prefill_share(&self) -> f64 {
+        let (p, d) = self
+            .window
+            .iter()
+            .fold((0usize, 0usize), |(p, d), &(pp, dd)| (p + pp, d + dd));
+        if p + d == 0 {
+            0.0
+        } else {
+            p as f64 / (p + d) as f64
+        }
+    }
+
+    pub fn current(&self) -> Strategy {
+        self.current
+    }
+
+    /// Decide at virtual time `now` whether to switch, given the learned
+    /// device share of the fleet's hetero lease (if any). Returns the
+    /// strategy to rebuild onto, or `None` to hold — because the window is
+    /// not full yet, the cooldown has not elapsed, the share sits in the
+    /// hysteresis dead zone, or the target equals the current strategy.
+    pub fn decide(&mut self, now: f64, device_share: Option<f64>) -> Option<Strategy> {
+        if self.window.len() < self.cfg.window {
+            return None;
+        }
+        if now - self.last_switch_at < self.cfg.cooldown_secs {
+            return None;
+        }
+        let share = self.prefill_share();
+        let target = if share >= self.cfg.enter_prefill_share {
+            self.burst
+        } else if share <= self.cfg.exit_prefill_share {
+            let (lo, hi) = self.cfg.async_share_band;
+            match (self.hetero, device_share) {
+                (Some(h), Some(r)) if r >= lo && r <= hi => h,
+                _ => self.chat,
+            }
+        } else {
+            return None; // dead zone: hold the current strategy
+        };
+        if target == self.current {
+            return None;
+        }
+        self.current = target;
+        self.last_switch_at = now;
+        self.switches.push((now, target));
+        Some(target)
+    }
+}
+
+/// Deterministic capacity predictor behind SLO-aware admission.
+///
+/// Tracks serving capacity as an EWMA of decode tokens per kernel second
+/// (the same mass-preserving α=0.3 blend the coordinator's strength table
+/// uses) and predicts the queue-drain delay an arrival would see. A
+/// sheddable arrival is bounced when the predicted delay already exceeds
+/// the tightest TTFT target of any *higher-priority* class — low-priority
+/// work is rejected first, before it can queue ahead of work with an SLO.
+#[derive(Clone, Debug)]
+pub struct SloGate {
+    rate: f64,
+    alpha: f64,
+}
+
+impl Default for SloGate {
+    fn default() -> SloGate {
+        SloGate::new()
+    }
+}
+
+impl SloGate {
+    pub fn new() -> SloGate {
+        SloGate { rate: 0.0, alpha: 0.3 }
+    }
+
+    /// Fold one scheduler round into the learned service rate.
+    pub fn observe(&mut self, decoded_tokens: usize, kernel_secs: f64) {
+        if decoded_tokens == 0 || !(kernel_secs > 0.0) {
+            return;
+        }
+        let inst = decoded_tokens as f64 / kernel_secs;
+        self.rate = if self.rate > 0.0 { self.alpha * inst + (1.0 - self.alpha) * self.rate } else { inst };
+    }
+
+    /// Learned decode capacity (tokens/s); 0 until the first observation.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Seconds the given backlog (tokens queued ahead) takes to drain at
+    /// the learned rate — 0 while the rate is unknown (never shed blind).
+    pub fn predicted_wait(&self, backlog_tokens: f64) -> f64 {
+        if self.rate > 0.0 {
+            backlog_tokens / self.rate
+        } else {
+            0.0
+        }
+    }
+
+    /// Whether an arrival of `class` should be shed given the queued
+    /// backlog. Only sheddable classes are ever shed, and only to protect
+    /// a finite TTFT target of a strictly higher-priority class.
+    pub fn should_shed(&self, policy: &ServingPolicy, class: usize, backlog_tokens: f64) -> bool {
+        if !policy.classes.get(class).is_some_and(|c| c.sheddable) {
+            return false;
+        }
+        let protected = policy.classes[..class.min(policy.classes.len())]
+            .iter()
+            .map(|c| c.ttft_target)
+            .fold(f64::INFINITY, f64::min);
+        protected.is_finite() && self.predicted_wait(backlog_tokens) > protected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(cfg: RouterConfig) -> StrategyRouter {
+        let policy = ServingPolicy::builder().router(cfg).build().unwrap();
+        let b = |mode| Strategy { mode, max_batch: 4, prefill_chunk: 16 };
+        StrategyRouter::from_policy(
+            &policy,
+            &[b(ExecMode::IntraKernel), b(ExecMode::AsyncBatch), b(ExecMode::Disaggregated)],
+        )
+        .unwrap()
+    }
+
+    fn small_cfg() -> RouterConfig {
+        RouterConfig { window: 4, cooldown_secs: 1.0, ..RouterConfig::default() }
+    }
+
+    #[test]
+    fn holds_until_window_fills_then_switches_on_burst() {
+        let mut r = router(small_cfg());
+        assert_eq!(r.current().mode, ExecMode::IntraKernel);
+        for _ in 0..3 {
+            r.note_arrival(512, 4);
+            assert!(r.decide(0.0, None).is_none(), "window not full yet");
+        }
+        r.note_arrival(512, 4);
+        let s = r.decide(0.0, None).expect("burst window must switch");
+        assert_eq!(s.mode, ExecMode::Disaggregated);
+        assert_eq!(r.switches.len(), 1);
+    }
+
+    #[test]
+    fn dead_zone_and_cooldown_prevent_flapping() {
+        let mut r = router(small_cfg());
+        for _ in 0..4 {
+            r.note_arrival(512, 4);
+        }
+        assert!(r.decide(0.0, None).is_some());
+        // mixed tail lands in the dead zone: share ~0.5 → hold
+        for _ in 0..4 {
+            r.note_arrival(8, 8);
+        }
+        assert!(r.decide(10.0, None).is_none());
+        assert_eq!(r.current().mode, ExecMode::Disaggregated);
+        // clearly decode-heavy, but inside the cooldown → still held
+        for _ in 0..4 {
+            r.note_arrival(2, 64);
+        }
+        assert!(r.decide(10.5, None).is_none(), "cooldown must gate");
+        // past the cooldown the exit threshold finally fires
+        let s = r.decide(11.5, None).expect("decode-heavy window must exit");
+        assert_eq!(s.mode, ExecMode::IntraKernel);
+        // repeating the same window never re-switches
+        assert!(r.decide(20.0, None).is_none());
+    }
+
+    #[test]
+    fn decode_heavy_with_learned_device_share_picks_async_batch() {
+        let mut r = router(small_cfg());
+        for _ in 0..4 {
+            r.note_arrival(2, 64);
+        }
+        // share outside the async band → stay on the blended split
+        assert!(r.decide(0.0, Some(0.9)).is_none());
+        for _ in 0..4 {
+            r.note_arrival(512, 4);
+        }
+        assert_eq!(r.decide(2.0, Some(0.9)).unwrap().mode, ExecMode::Disaggregated);
+        for _ in 0..4 {
+            r.note_arrival(2, 64);
+        }
+        // XPU pulling its weight → the decode-heavy exit lands on AsyncBatch
+        assert_eq!(r.decide(4.0, Some(0.5)).unwrap().mode, ExecMode::AsyncBatch);
+    }
+
+    #[test]
+    fn slo_gate_sheds_only_sheddable_classes_under_predicted_overload() {
+        let policy = ServingPolicy::builder()
+            .slo(0, 0.5)
+            .class("batch", f64::INFINITY, true)
+            .build()
+            .unwrap();
+        let mut g = SloGate::new();
+        // unknown rate: never shed blind
+        assert!(!g.should_shed(&policy, 1, 1e9));
+        g.observe(100, 1.0); // 100 tok/s
+        assert!((g.rate() - 100.0).abs() < 1e-9);
+        // 10 queued tokens → 0.1 s wait, under the 0.5 s target
+        assert!(!g.should_shed(&policy, 1, 10.0));
+        // 100 queued tokens → 1 s predicted wait: shed the batch class...
+        assert!(g.should_shed(&policy, 1, 100.0));
+        // ...but never the protected class 0
+        assert!(!g.should_shed(&policy, 0, 100.0));
+    }
+
+    #[test]
+    fn slo_gate_rate_is_an_ewma() {
+        let mut g = SloGate::new();
+        g.observe(100, 1.0);
+        g.observe(200, 1.0);
+        assert!((g.rate() - (0.3 * 200.0 + 0.7 * 100.0)).abs() < 1e-9);
+        g.observe(0, 1.0); // empty rounds leave the estimate alone
+        g.observe(10, 0.0);
+        assert!((g.rate() - 130.0).abs() < 1e-9);
+    }
+}

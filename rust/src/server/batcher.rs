@@ -65,16 +65,24 @@ pub enum PhaseRole {
 }
 
 /// A queued request: parsed body, the channel its events stream back on,
-/// and (for the TCP path) its wall-clock enqueue instant for TTFT.
+/// its admission priority class (0 = highest; see
+/// [`crate::router::ClassPolicy`]), and (for the TCP path) its wall-clock
+/// enqueue instant for TTFT.
 pub struct Pending {
     pub req: Request,
     pub tx: mpsc::Sender<Event>,
+    pub class: usize,
     pub enqueued: Option<Instant>,
 }
 
 impl Pending {
     pub fn new(req: Request, tx: mpsc::Sender<Event>) -> Pending {
-        Pending { req, tx, enqueued: None }
+        Pending { req, tx, class: 0, enqueued: None }
+    }
+
+    /// Same as [`Pending::new`] with an explicit priority class.
+    pub fn with_class(req: Request, tx: mpsc::Sender<Event>, class: usize) -> Pending {
+        Pending { req, tx, class, enqueued: None }
     }
 }
 

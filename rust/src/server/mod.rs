@@ -50,12 +50,21 @@
 //!   exactly as on a membership change. The caller supplies the
 //!   coordinator, so heterogeneous machines (cores + accelerators, see
 //!   [`crate::coordinator::XpuAffinity`]) serve through the same loop.
+//!
+//! All three front-ends take an `impl Into<`[`ServingPolicy`]`>` — the
+//! unified serving config from [`crate::router`]. A legacy [`ServerOpts`]
+//! converts losslessly (single class, router off); a policy built with
+//! [`ServingPolicy::builder`] adds priority classes with per-class TTFT
+//! targets (SLO-aware shedding: low-priority work is bounced first) and,
+//! under [`serve_dynamic`], the live [`StrategyRouter`]
+//! that re-plans the serving strategy from the offered load.
 
 pub mod batcher;
 pub mod fleet;
 pub mod protocol;
 pub mod queue;
 pub mod testing;
+pub mod trace;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -63,18 +72,19 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{Coordinator, Lease, StreamId};
+use crate::coordinator::{Coordinator, Lease, Strategy, StreamId};
 use crate::engine::Engine;
 use crate::exec::Executor;
 use crate::kernels::KernelClass;
 use crate::metrics::ServingMetrics;
+use crate::router::{ServingPolicy, SloGate, StrategyRouter};
 use crate::sim::xpu::XpuDispatch;
 use crate::util::json::Json;
 
 pub use batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending, PhaseRole};
-pub use queue::{AdmissionPolicy, AdmissionQueue};
+pub use queue::{AdmissionPolicy, AdmissionQueue, ClassedQueue};
 
-use protocol::ClientMessage;
+use protocol::{ClientMessage, Event};
 
 /// Poison-recovering lock: the shared state guarded by the server's
 /// mutexes (queue, metrics, coordinator, pair stats) is valid after any
@@ -133,6 +143,19 @@ impl ServerOpts {
 enum ConnEvent {
     Connect(StreamId),
     Disconnect(StreamId),
+}
+
+/// What woke the supervisor. Every variant runs the same
+/// retire → coordinator-update → rebuild → migrate sequence; only the
+/// coordinator update differs.
+enum Wake {
+    /// live-connection membership changed (admit/finish streams)
+    Membership(Vec<ConnEvent>),
+    /// the drift monitor fired → `rebalance()`
+    Drift,
+    /// the strategy router decided a different serving strategy fits the
+    /// offered load → `apply_strategy()`
+    Switch(Strategy),
 }
 
 /// Shared state of one `ExecMode::AsyncBatch` batcher pair: lifetime
@@ -206,7 +229,7 @@ impl PhaseState {
 }
 
 struct Shared {
-    queue: Mutex<AdmissionQueue<Pending>>,
+    queue: Mutex<ClassedQueue<Pending>>,
     /// engine workers wait here for queued work
     work: Condvar,
     /// blocked submitters (AdmissionPolicy::Block) wait here for space
@@ -218,13 +241,22 @@ struct Shared {
     epoch: AtomicU64,
     /// bumped by the supervisor to retire worker threads on fleet rebuild
     generation: AtomicU64,
-    on_full: AdmissionPolicy,
+    /// the full serving policy: overflow behavior, priority classes, SLO
+    /// targets and (for `serve_dynamic`) the router knobs
+    policy: ServingPolicy,
+    /// learned decode capacity behind the SLO admission gate
+    slo: Mutex<SloGate>,
+    /// live strategy router; `Some` only under `serve_dynamic` with
+    /// [`ServingPolicy::router`] set
+    router: Mutex<Option<StrategyRouter>>,
+    /// server start — the origin of the router's switch timeline
+    started: Instant,
 }
 
 impl Shared {
-    fn new(opts: ServerOpts, n_engines: usize) -> Shared {
+    fn new(policy: ServingPolicy, n_engines: usize) -> Shared {
         Shared {
-            queue: Mutex::new(AdmissionQueue::new(opts.queue_depth)),
+            queue: Mutex::new(ClassedQueue::new(policy.n_classes(), policy.queue_depth)),
             work: Condvar::new(),
             space: Condvar::new(),
             shutdown: AtomicBool::new(false),
@@ -232,7 +264,10 @@ impl Shared {
             n_engines: AtomicUsize::new(n_engines),
             epoch: AtomicU64::new(0),
             generation: AtomicU64::new(0),
-            on_full: opts.on_full,
+            slo: Mutex::new(SloGate::new()),
+            router: Mutex::new(None),
+            started: Instant::now(),
+            policy,
         }
     }
 }
@@ -282,7 +317,7 @@ pub fn serve_multi<E: Executor + Send + 'static>(
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     let bound = listener.local_addr()?;
-    let shared = Arc::new(Shared::new(opts, engines.len()));
+    let shared = Arc::new(Shared::new(opts.into(), engines.len()));
 
     let mut threads = Vec::new();
     for engine in engines {
@@ -306,21 +341,35 @@ pub fn serve_multi<E: Executor + Send + 'static>(
 /// [`Coordinator`], so a heterogeneous machine (cores + accelerators) and
 /// its placement affinity are its choice; between membership events the
 /// supervisor watches learned-strength drift and rebalances live (see
-/// [`ServerOpts::drift_threshold`]).
-pub fn serve_dynamic<E, F>(
+/// [`ServingPolicy::drift_threshold`]).
+///
+/// Accepts anything convertible into a [`ServingPolicy`] — a legacy
+/// [`ServerOpts`] keeps working unchanged, while a policy built with
+/// [`ServingPolicy::builder`] additionally brings priority classes,
+/// SLO-aware shedding and (with [`ServingPolicy::router`] set) the live
+/// [`StrategyRouter`] that re-plans the fleet's serving strategy from the
+/// offered load.
+pub fn serve_dynamic<E, F, P>(
     addr: &str,
-    coord: Coordinator,
+    mut coord: Coordinator,
     factory: F,
-    opts: ServerOpts,
+    policy: P,
 ) -> std::io::Result<ServerHandle>
 where
     E: Executor + Send + 'static,
     F: Fn(&Lease, XpuDispatch) -> Engine<E> + Send + 'static,
+    P: Into<ServingPolicy>,
 {
+    let policy: ServingPolicy = policy.into();
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     let bound = listener.local_addr()?;
-    let shared = Arc::new(Shared::new(opts, 0));
+    if let Some(mode) = policy.mode {
+        coord.set_exec_mode(mode);
+    }
+    let candidates = coord.strategy_candidates(policy.max_batch, policy.prefill_chunk);
+    let shared = Arc::new(Shared::new(policy.clone(), 0));
+    *lock(&shared.router) = StrategyRouter::from_policy(&policy, &candidates);
     let coord = Arc::new(Mutex::new(coord));
     let (ev_tx, ev_rx) = mpsc::channel::<ConnEvent>();
 
@@ -329,8 +378,8 @@ where
         let shared2 = Arc::clone(&shared);
         let coord2 = Arc::clone(&coord);
         let factory: fleet::EngineFactory<E> = Box::new(factory);
-        let batcher_opts = opts.batcher();
-        let monitor = opts.drift_monitor();
+        let batcher_opts = policy.batcher_opts();
+        let monitor = policy.drift_monitor();
         threads.push(std::thread::spawn(move || {
             supervise(shared2, coord2, factory, batcher_opts, monitor, ev_rx);
         }));
@@ -344,37 +393,54 @@ where
 /// collects their in-flight requests, applies admit/finish to the
 /// coordinator, rebuilds one batcher per non-empty lease and migrates the
 /// carried requests onto the new fleet. Idle ticks consult the
-/// [`fleet::DriftMonitor`]: past-threshold strength skew triggers the same
-/// retire→`rebalance()`→rebuild→migrate sequence with no membership
-/// change — `rebalance()` firing from the live server, not from a test.
+/// [`StrategyRouter`] (if the policy turned it on) and then the
+/// [`fleet::DriftMonitor`]: a router switch or past-threshold strength
+/// skew triggers the same retire→update→rebuild→migrate sequence with no
+/// membership change, so a strategy flip migrates in-flight sessions
+/// bit-identically — exactly as a membership rebuild does.
 fn supervise<E: Executor + Send + 'static>(
     shared: Arc<Shared>,
     coord: Arc<Mutex<Coordinator>>,
     factory: fleet::EngineFactory<E>,
-    opts: BatcherOpts,
+    mut opts: BatcherOpts,
     mut monitor: fleet::DriftMonitor,
     events: mpsc::Receiver<ConnEvent>,
 ) {
     let mut workers: Vec<std::thread::JoinHandle<Vec<ActiveRequest>>> = Vec::new();
     loop {
-        // an empty change set means a drift-triggered rebalance rebuild
-        let changes = match events.recv_timeout(Duration::from_millis(50)) {
+        let wake = match events.recv_timeout(Duration::from_millis(50)) {
             Ok(first) => {
                 // coalesce a burst of membership changes into one rebuild
                 let mut changes = vec![first];
                 while let Ok(ev) = events.try_recv() {
                     changes.push(ev);
                 }
-                changes
+                Wake::Membership(changes)
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     break;
                 }
-                if monitor.check_drift(&lock(&coord)).is_none() {
-                    continue;
+                // router first: a strategy decision is deliberate (window
+                // full, outside the dead zone, past the cooldown) while a
+                // drift rebalance is corrective — don't let the corrective
+                // path pre-empt the deliberate one
+                let switch = {
+                    let mut r = lock(&shared.router);
+                    r.as_mut().and_then(|router| {
+                        let c = lock(&coord);
+                        let share = c
+                            .leases()
+                            .find(|l| !l.accels().is_empty())
+                            .map(|l| c.split_ratio(l));
+                        router.decide(shared.started.elapsed().as_secs_f64(), share)
+                    })
+                };
+                match switch {
+                    Some(s) => Wake::Switch(s),
+                    None if monitor.check_drift(&lock(&coord)).is_some() => Wake::Drift,
+                    None => continue,
                 }
-                Vec::new()
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 // the accept loop (and every handler) is gone; treat it as
@@ -383,7 +449,8 @@ fn supervise<E: Executor + Send + 'static>(
                 break;
             }
         };
-        let drift = changes.is_empty();
+        let drift = matches!(wake, Wake::Drift);
+        let switched = matches!(wake, Wake::Switch(_));
 
         // retire the current fleet; workers hand back their live requests
         shared.generation.fetch_add(1, Ordering::SeqCst);
@@ -393,19 +460,24 @@ fn supervise<E: Executor + Send + 'static>(
             carried.extend(w.join().unwrap_or_default());
         }
 
-        // membership (or learned drift) → coordinator: either path bumps
-        // the epoch and re-issues every lease
+        // membership, learned drift or a strategy switch → coordinator:
+        // every path bumps the epoch and re-issues every lease
         let (bus_reference, mut batchers) = {
             let mut c = lock(&coord);
-            if drift {
-                c.rebalance();
-            } else {
-                for ev in changes {
-                    match ev {
-                        ConnEvent::Connect(s) => {
-                            let _ = c.admit(s);
+            match wake {
+                Wake::Drift => c.rebalance(),
+                Wake::Switch(s) => {
+                    opts = BatcherOpts { max_batch: s.max_batch, prefill_chunk: s.prefill_chunk };
+                    c.apply_strategy(&s);
+                }
+                Wake::Membership(changes) => {
+                    for ev in changes {
+                        match ev {
+                            ConnEvent::Connect(s) => {
+                                let _ = c.admit(s);
+                            }
+                            ConnEvent::Disconnect(s) => c.finish(s),
                         }
-                        ConnEvent::Disconnect(s) => c.finish(s),
                     }
                 }
             }
@@ -425,6 +497,9 @@ fn supervise<E: Executor + Send + 'static>(
             m.bus_reference_gbps = bus_reference;
             if drift {
                 m.drift_rebalances += 1;
+            }
+            if switched {
+                m.strategy_switches += 1;
             }
         }
         // one shared PairState per async-batch lease (its two batchers
@@ -562,11 +637,11 @@ fn run_batcher<E: Executor>(
                         break; // the twin is owed this request
                     }
                 }
-                let Some(p) = q.pop() else { break };
+                let Some((class, p)) = q.pop() else { break };
                 shared.space.notify_all();
                 let before = b.admitted();
                 if let Err(p) = b.admit(p) {
-                    q.push_front(p);
+                    q.push_front(class, p);
                     break;
                 }
                 if b.admitted() > before {
@@ -610,6 +685,11 @@ fn run_batcher<E: Executor>(
                 lock(&ph.handoff).extend(moved);
                 shared.work.notify_all();
             }
+        }
+
+        // feed the SLO gate's capacity EWMA from every productive round
+        if report.decoded_tokens > 0 && report.kernel_secs > 0.0 {
+            lock(&shared.slo).observe(report.decoded_tokens, report.kernel_secs);
         }
 
         if !report.ttft_wall.is_empty() || !report.retired.is_empty() || report.kernel_secs > 0.0 {
@@ -660,30 +740,66 @@ fn run_batcher<E: Executor>(
     }
 }
 
-/// Submit a request to the bounded queue, honoring the overflow policy.
-fn submit(shared: &Arc<Shared>, pending: Pending) -> Result<(), Pending> {
+/// Protocol error for an arrival bounced by the SLO admission gate.
+const SHED_PREDICTED: &str = "shed: predicted SLO violation, low-priority load dropped";
+/// Protocol error for a queued request evicted to seat a higher-priority
+/// arrival at a saturated queue.
+const SHED_PREEMPTED: &str = "shed: preempted by higher-priority arrival";
+
+/// Submit a request to the bounded classed queue, honoring the SLO
+/// admission gate and the overflow policy. `Err` hands the request back
+/// with the protocol error message the client should see.
+fn submit(shared: &Arc<Shared>, pending: Pending) -> Result<(), (Pending, &'static str)> {
     let mut pending = pending;
     let mut q = lock(&shared.queue);
+    // SLO-aware shed: a sheddable class whose predicted queue-drain delay
+    // already busts a higher-priority TTFT target is bounced up front,
+    // before it can queue ahead of work with an SLO
+    let backlog: f64 = q
+        .iter()
+        .map(|(_, p)| (p.req.prompt.len() + p.req.max_new_tokens) as f64)
+        .sum();
+    if lock(&shared.slo).should_shed(&shared.policy, pending.class, backlog) {
+        return Err((pending, SHED_PREDICTED));
+    }
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
-            return Err(pending);
+            return Err((pending, "server shutting down"));
         }
-        match q.try_push(pending) {
+        match q.try_push(pending.class, pending) {
             Ok(()) => {
                 shared.work.notify_all();
                 return Ok(());
             }
-            Err(p) => match shared.on_full {
-                AdmissionPolicy::Reject => return Err(p),
-                AdmissionPolicy::Block => {
-                    pending = p;
-                    let (qq, _) = shared
-                        .space
-                        .wait_timeout(q, Duration::from_millis(50))
-                        .unwrap_or_else(PoisonError::into_inner);
-                    q = qq;
+            Err(p) => {
+                // a saturated queue makes room for a higher-priority
+                // arrival by shedding the newest lowest-priority request
+                if let Some((_, victim)) = q.evict_lower(p.class) {
+                    let _ = victim.tx.send(Event::Error {
+                        id: victim.req.id,
+                        msg: SHED_PREEMPTED.into(),
+                    });
+                    lock(&shared.metrics).shed_requests += 1;
+                    return match q.try_push(p.class, p) {
+                        Ok(()) => {
+                            shared.work.notify_all();
+                            Ok(())
+                        }
+                        Err(p) => Err((p, "admission queue full")),
+                    };
                 }
-            },
+                match shared.policy.on_full {
+                    AdmissionPolicy::Reject => return Err((p, "admission queue full")),
+                    AdmissionPolicy::Block => {
+                        pending = p;
+                        let (qq, _) = shared
+                            .space
+                            .wait_timeout(q, Duration::from_millis(50))
+                            .unwrap_or_else(PoisonError::into_inner);
+                        q = qq;
+                    }
+                }
+            }
         }
     }
 }
@@ -780,7 +896,7 @@ fn client_loop(
                 );
                 writeln!(writer, "{}", Json::obj(vec![("metrics", snap)]).dump())?;
             }
-            Ok(ClientMessage::Generate(req)) => {
+            Ok(ClientMessage::Generate { req, class }) => {
                 // a connection becomes a coordinator stream on its first
                 // request — metrics-only probes never grow the lease set
                 if let Some(ev) = events {
@@ -790,8 +906,13 @@ fn client_loop(
                     }
                 }
                 let id = req.id;
+                // every offered arrival feeds the router's decision window
+                // — shed or admitted, the router reasons about offered load
+                if let Some(r) = lock(&shared.router).as_mut() {
+                    r.note_arrival(req.prompt.len(), req.max_new_tokens);
+                }
                 let (tx, rx) = mpsc::channel();
-                let pending = Pending { req, tx, enqueued: Some(Instant::now()) };
+                let pending = Pending { req, tx, class, enqueued: Some(Instant::now()) };
                 match submit(shared, pending) {
                     Ok(()) => {
                         // stream responses for this request until done/error
@@ -803,14 +924,20 @@ fn client_loop(
                             }
                         }
                     }
-                    Err(_) => {
+                    Err((_, reason)) => {
                         // distinguish backpressure from a shutdown race —
-                        // only real queue saturation counts as a rejection
+                        // only real saturation/shedding counts against the
+                        // admission metrics
                         let msg = if shared.shutdown.load(Ordering::SeqCst) {
                             "server shutting down"
                         } else {
-                            lock(&shared.metrics).rejected += 1;
-                            "admission queue full"
+                            let mut m = lock(&shared.metrics);
+                            if reason.starts_with("shed") {
+                                m.shed_requests += 1;
+                            } else {
+                                m.rejected += 1;
+                            }
+                            reason
                         };
                         writeln!(writer, "{}", protocol::error_line(id, msg))?;
                     }

@@ -1,8 +1,11 @@
 //! JSON-lines wire protocol of the serving front-end.
 //!
 //! Client → server, one JSON object per line:
-//!   {"id": 7, "prompt": [1,2,3], "max_new_tokens": 8}
+//!   {"id": 7, "prompt": [1,2,3], "max_new_tokens": 8, "class": 1}
 //!   {"cmd": "metrics"}
+//!
+//! `class` is the optional admission priority class (0 = highest priority,
+//! the default — see [`crate::router::ClassPolicy`]).
 //! Server → client:
 //!   {"id": 7, "token": 42}                              (streamed)
 //!   {"id": 7, "done": true, "prefill_secs": …, "decode_secs": …,
@@ -24,7 +27,9 @@ pub struct Request {
 /// Client line → request or control command.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClientMessage {
-    Generate(Request),
+    /// a generation request plus its admission priority class (0 =
+    /// highest; absent on the wire → 0)
+    Generate { req: Request, class: usize },
     Metrics,
 }
 
@@ -48,7 +53,8 @@ pub fn parse_client_line(line: &str) -> Result<ClientMessage, String> {
         return Err("empty prompt".into());
     }
     let max_new_tokens = v.get("max_new_tokens").and_then(Json::as_usize).unwrap_or(16);
-    Ok(ClientMessage::Generate(Request { id, prompt, max_new_tokens }))
+    let class = v.get("class").and_then(Json::as_usize).unwrap_or(0);
+    Ok(ClientMessage::Generate { req: Request { id, prompt, max_new_tokens }, class })
 }
 
 /// A typed server→client message. The serving core (batcher/fleet)
@@ -113,17 +119,30 @@ mod tests {
         let msg = parse_client_line(r#"{"id": 3, "prompt": [1, 2], "max_new_tokens": 4}"#).unwrap();
         assert_eq!(
             msg,
-            ClientMessage::Generate(Request { id: 3, prompt: vec![1, 2], max_new_tokens: 4 })
+            ClientMessage::Generate {
+                req: Request { id: 3, prompt: vec![1, 2], max_new_tokens: 4 },
+                class: 0
+            }
         );
     }
 
     #[test]
+    fn parses_priority_class() {
+        let msg =
+            parse_client_line(r#"{"id": 3, "prompt": [1], "class": 2}"#).unwrap();
+        let ClientMessage::Generate { class, .. } = msg else { panic!() };
+        assert_eq!(class, 2);
+    }
+
+    #[test]
     fn default_max_tokens() {
-        let ClientMessage::Generate(r) = parse_client_line(r#"{"id":1,"prompt":[5]}"#).unwrap()
+        let ClientMessage::Generate { req: r, class } =
+            parse_client_line(r#"{"id":1,"prompt":[5]}"#).unwrap()
         else {
             panic!()
         };
         assert_eq!(r.max_new_tokens, 16);
+        assert_eq!(class, 0, "absent class defaults to highest priority");
     }
 
     #[test]

@@ -70,6 +70,111 @@ impl<T> AdmissionQueue<T> {
     }
 }
 
+/// Priority-classed admission queue: one FIFO lane per class, one shared
+/// depth bound across all lanes.
+///
+/// Class 0 is the highest priority. [`ClassedQueue::pop`] always serves the
+/// highest-priority non-empty lane; within a lane order is strictly FIFO
+/// (the property `prop_classed_queue_is_fifo_per_class` tests). When the
+/// shared bound is hit, [`ClassedQueue::evict_lower`] lets the server shed
+/// the *newest lowest-priority* queued item to make room for a
+/// higher-priority arrival — low-priority work is rejected first, exactly
+/// the SLO-aware admission order `ServingPolicy` documents.
+///
+/// With a single class this reduces bit-for-bit to [`AdmissionQueue`]:
+/// same bound, same FIFO order, no eviction possible.
+#[derive(Debug)]
+pub struct ClassedQueue<T> {
+    lanes: Vec<VecDeque<T>>,
+    depth: usize,
+}
+
+impl<T> ClassedQueue<T> {
+    /// `n_classes` FIFO lanes sharing one `depth` bound. At least one lane
+    /// always exists.
+    pub fn new(n_classes: usize, depth: usize) -> ClassedQueue<T> {
+        let n = n_classes.max(1);
+        ClassedQueue { lanes: (0..n).map(|_| VecDeque::new()).collect(), depth }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn len_of(&self, class: usize) -> usize {
+        self.lanes.get(class).map_or(0, |l| l.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|l| l.is_empty())
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len() >= self.depth
+    }
+
+    /// Enqueue at the tail of the class's lane; hands the item back instead
+    /// of growing past the shared depth bound. An out-of-range class clamps
+    /// to the lowest-priority lane.
+    pub fn try_push(&mut self, class: usize, item: T) -> Result<(), T> {
+        if self.is_full() {
+            return Err(item);
+        }
+        let lane = class.min(self.lanes.len() - 1);
+        self.lanes[lane].push_back(item);
+        Ok(())
+    }
+
+    /// Requeue at the head of the class's lane — used when a popped request
+    /// could not be admitted after all (batch refilled first). Deliberately
+    /// ignores the depth bound: the item was already accounted for when
+    /// first pushed.
+    pub fn push_front(&mut self, class: usize, item: T) {
+        let lane = class.min(self.lanes.len() - 1);
+        self.lanes[lane].push_front(item);
+    }
+
+    /// Dequeue from the highest-priority non-empty lane (FIFO within it),
+    /// returning the item with its class.
+    pub fn pop(&mut self) -> Option<(usize, T)> {
+        for (class, lane) in self.lanes.iter_mut().enumerate() {
+            if let Some(item) = lane.pop_front() {
+                return Some((class, item));
+            }
+        }
+        None
+    }
+
+    /// Drop the *newest* item of the lowest-priority non-empty lane whose
+    /// class is strictly lower priority (greater index) than `class`,
+    /// returning it so the caller can answer its client. This is the
+    /// shed-low-priority-first rule: a saturated queue makes room for a
+    /// higher-priority arrival by bouncing the most recent low-priority
+    /// request, never one of equal or higher priority.
+    pub fn evict_lower(&mut self, class: usize) -> Option<(usize, T)> {
+        for lane in (class + 1..self.lanes.len()).rev() {
+            if let Some(item) = self.lanes[lane].pop_back() {
+                return Some((lane, item));
+            }
+        }
+        None
+    }
+
+    /// Queued items from highest to lowest priority, FIFO within a class —
+    /// exactly the order [`ClassedQueue::pop`] would drain them.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &T)> {
+        self.lanes.iter().enumerate().flat_map(|(c, lane)| lane.iter().map(move |i| (c, i)))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,5 +211,60 @@ mod tests {
         let mut q: AdmissionQueue<u8> = AdmissionQueue::new(0);
         assert!(q.is_full() && q.is_empty());
         assert_eq!(q.try_push(7), Err(7));
+    }
+
+    #[test]
+    fn classed_queue_single_class_reduces_to_fifo() {
+        // one class must behave bit-for-bit like AdmissionQueue: same
+        // bound, same order, nothing to evict
+        let mut q: ClassedQueue<i32> = ClassedQueue::new(1, 2);
+        assert!(q.try_push(0, 1).is_ok());
+        assert!(q.try_push(0, 2).is_ok());
+        assert!(q.is_full());
+        assert_eq!(q.try_push(0, 3), Err(3));
+        assert!(q.evict_lower(0).is_none());
+        let head = q.pop().unwrap();
+        assert_eq!(head, (0, 1));
+        q.push_front(0, head.1);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, i)| i)).collect();
+        assert_eq!(order, vec![1, 2]);
+    }
+
+    #[test]
+    fn classed_queue_serves_strict_priority_fifo_within_class() {
+        let mut q: ClassedQueue<i32> = ClassedQueue::new(3, 8);
+        q.try_push(2, 20).unwrap();
+        q.try_push(0, 1).unwrap();
+        q.try_push(1, 10).unwrap();
+        q.try_push(0, 2).unwrap();
+        q.try_push(2, 21).unwrap();
+        let order: Vec<(usize, i32)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(0, 1), (0, 2), (1, 10), (2, 20), (2, 21)]);
+    }
+
+    #[test]
+    fn classed_queue_evicts_newest_lowest_priority_first() {
+        let mut q: ClassedQueue<i32> = ClassedQueue::new(3, 3);
+        q.try_push(1, 10).unwrap();
+        q.try_push(2, 20).unwrap();
+        q.try_push(2, 21).unwrap();
+        assert!(q.is_full());
+        // a class-0 arrival evicts the newest class-2 item, not class 1
+        assert_eq!(q.evict_lower(0), Some((2, 21)));
+        q.try_push(0, 1).unwrap();
+        // class-1 arrival may only evict class 2
+        assert_eq!(q.evict_lower(1), Some((2, 20)));
+        // nothing lower-priority than class 2 remains
+        assert!(q.evict_lower(2).is_none());
+        let order: Vec<(usize, i32)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(0, 1), (1, 10)]);
+    }
+
+    #[test]
+    fn classed_queue_out_of_range_class_clamps_to_lowest() {
+        let mut q: ClassedQueue<i32> = ClassedQueue::new(2, 4);
+        q.try_push(9, 99).unwrap();
+        assert_eq!(q.len_of(1), 1);
+        assert_eq!(q.pop(), Some((1, 99)));
     }
 }

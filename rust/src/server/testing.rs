@@ -10,6 +10,15 @@
 //! no wall-clock sleeps, bit-for-bit reproducible: this is the standard
 //! way to test serving features (see `rust/tests/serving_harness.rs`).
 //!
+//! The full-policy entry point is [`run_trace`]: it takes a
+//! [`ServingPolicy`] and drives everything the live `serve_dynamic`
+//! supervisor would — priority-classed admission with SLO shedding, the
+//! live [`StrategyRouter`] switching [`crate::coordinator::Strategy`]
+//! mid-trace (every switch a bit-identical session migration), and the
+//! drift monitor. [`run_fleet`] is the legacy knob-level wrapper kept for
+//! existing tests: a single-class, router-off policy behaves exactly like
+//! the pre-policy harness.
+//!
 //! Virtual time: each lease's clock is its engine's accumulated kernel
 //! seconds plus an idle offset (jumped forward when the lease sits waiting
 //! for arrivals). Leases run concurrently — the driver always advances the
@@ -19,17 +28,21 @@
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 
-use crate::coordinator::{Coordinator, Lease, StreamId};
+use crate::coordinator::{Coordinator, Lease, Strategy, StreamId};
 use crate::exec::{Executor, RunResult};
 use crate::kernels::KernelClass;
 use crate::perf::bandwidth::{bandwidth_gbps, bandwidth_utilization};
+use crate::router::{ServingPolicy, SloGate, StrategyRouter};
 use crate::sim::xpu::XpuDispatch;
-use crate::util::rng::Rng;
+use crate::util::stats::Summary;
 
 use super::batcher::{ActiveRequest, BatcherOpts, LeaseBatcher, Pending, PhaseRole, StepReport};
 use super::fleet::{self, DriftMonitor, EngineFactory};
 use super::protocol::{Event, Request};
-use super::queue::AdmissionQueue;
+use super::queue::ClassedQueue;
+
+pub use super::trace::{poisson_arrivals, TraceEvent};
+pub(crate) use super::trace::validate_trace;
 
 /// When queued requests may enter a batch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,64 +54,12 @@ pub enum AdmitMode {
     RunToCompletion,
 }
 
-/// One scripted client action at a virtual-time instant (seconds).
-#[derive(Clone, Debug)]
-pub enum TraceEvent {
-    /// a stream's connection opens (fleet mode: `Coordinator::admit`)
-    Connect { at: f64, stream: StreamId },
-    /// a request arrives (single mode: `stream` is ignored)
-    Arrive { at: f64, stream: StreamId, req: Request },
-    /// a stream's connection closes (fleet mode: `Coordinator::finish`)
-    Disconnect { at: f64, stream: StreamId },
-    /// a background process shows up and steals `fraction` of the given
-    /// cores' cycles from `at` on. The load follows the *physical* core:
-    /// in fleet mode `cores` are machine-global ids, re-applied to
-    /// whichever lease holds each core after every rebuild; in single mode
-    /// they are the engine's worker indices.
-    Degrade { at: f64, cores: Vec<usize>, fraction: f64 },
-    /// a *whole machine* degrades: every core of cluster machine `machine`
-    /// loses `fraction` of its cycles from `at` on (the cluster harness's
-    /// machine-scoped trace event — see `cluster::harness::run_cluster`).
-    /// Single/fleet runs treat it as a whole-machine `Degrade` when
-    /// `machine` is 0 (they drive exactly one machine) and ignore it
-    /// otherwise.
-    DegradeMachine { at: f64, machine: usize, fraction: f64 },
-}
-
-impl TraceEvent {
-    pub fn at(&self) -> f64 {
-        match self {
-            TraceEvent::Connect { at, .. }
-            | TraceEvent::Arrive { at, .. }
-            | TraceEvent::Disconnect { at, .. }
-            | TraceEvent::Degrade { at, .. }
-            | TraceEvent::DegradeMachine { at, .. } => *at,
-        }
-    }
-
-    /// Convenience constructor for arrival events.
-    pub fn arrive(at: f64, stream: StreamId, req: Request) -> TraceEvent {
-        TraceEvent::Arrive { at, stream, req }
-    }
-}
-
-/// Exponential inter-arrival instants (a Poisson process) from the repo's
-/// deterministic RNG — seeded, replayable arrival scripts.
-pub fn poisson_arrivals(seed: u64, n: usize, mean_gap: f64) -> Vec<f64> {
-    let mut rng = Rng::new(seed);
-    let mut t = 0.0;
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        t += -(1.0 - rng.f64()).ln() * mean_gap;
-        out.push(t);
-    }
-    out
-}
-
 /// Everything the harness observed about one request.
 #[derive(Clone, Debug)]
 pub struct RequestRecord {
     pub id: u64,
+    /// admission priority class the request arrived with (0 = highest)
+    pub class: usize,
     pub arrived_at: f64,
     pub admitted_at: Option<f64>,
     pub first_token_at: Option<f64>,
@@ -108,9 +69,10 @@ pub struct RequestRecord {
 }
 
 impl RequestRecord {
-    fn new(id: u64, arrived_at: f64) -> RequestRecord {
+    fn new(id: u64, arrived_at: f64, class: usize) -> RequestRecord {
         RequestRecord {
             id,
+            class,
             arrived_at,
             admitted_at: None,
             first_token_at: None,
@@ -137,6 +99,13 @@ pub struct HarnessReport {
     pub queue_depth_samples: Vec<usize>,
     /// ids bounced by the bounded admission queue
     pub rejected: Vec<u64>,
+    /// ids dropped by SLO-aware admission — predicted-overload sheds and
+    /// queue-full preemptions of low-priority work (disjoint from
+    /// `rejected`)
+    pub shed: Vec<u64>,
+    /// `(request id, class)` in successful admission order — the
+    /// FIFO-per-class invariant's witness
+    pub admit_order: Vec<(u64, usize)>,
     // ---- fleet mode ----
     /// coordinator epoch after each rebuild
     pub epochs_seen: Vec<u64>,
@@ -147,6 +116,9 @@ pub struct HarnessReport {
     /// with the strength skew observed at each trigger
     pub drift_rebalances: usize,
     pub skew_at_trigger: Vec<f64>,
+    /// strategy switches the live router took: `(virtual seconds,
+    /// strategy switched to)` — each one is also a rebuild
+    pub strategy_switches: Vec<(f64, Strategy)>,
     /// live measurements folded into the coordinator's strength table
     pub observations_accepted: usize,
     /// pre-rebuild measurements replayed after the epoch change — dropped
@@ -218,39 +190,89 @@ impl HarnessReport {
     pub fn all_finished(&self) -> bool {
         self.requests.values().all(|r| r.finished_at.is_some() || r.error.is_some())
     }
-}
 
-/// A script with a NaN/∞ event time has no defined delivery order — fail
-/// at trace construction with a pointed message instead of letting a sort
-/// comparator panic (or worse, silently misorder) deep in the run.
-pub(crate) fn validate_trace(trace: &[TraceEvent]) {
-    for (i, ev) in trace.iter().enumerate() {
-        assert!(
-            ev.at().is_finite(),
-            "trace event {i} has a non-finite time ({}): fix the script — \
-             event times must be finite seconds",
-            ev.at()
-        );
+    /// TTFT distribution (p50/p95/p99…) over every served request; `None`
+    /// when nothing streamed a first token.
+    pub fn ttft_summary(&self) -> Option<Summary> {
+        let t: Vec<f64> = self.requests.values().filter_map(|r| r.ttft()).collect();
+        if t.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&t))
+        }
+    }
+
+    /// TTFT distribution of one priority class.
+    pub fn ttft_summary_class(&self, class: usize) -> Option<Summary> {
+        let t: Vec<f64> =
+            self.requests.values().filter(|r| r.class == class).filter_map(|r| r.ttft()).collect();
+        if t.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&t))
+        }
+    }
+
+    /// Served requests of `class` whose TTFT exceeded `target` seconds.
+    /// Shed/rejected requests are not violations — they were answered
+    /// immediately instead of silently blowing the target.
+    pub fn slo_violations(&self, class: usize, target: f64) -> usize {
+        self.requests
+            .values()
+            .filter(|r| r.class == class)
+            .filter_map(|r| r.ttft())
+            .filter(|&t| t > target)
+            .count()
+    }
+
+    /// Priority classes of the shed requests (for "low-priority work is
+    /// shed first" assertions).
+    pub fn shed_classes(&self) -> Vec<usize> {
+        self.shed.iter().filter_map(|id| self.requests.get(id).map(|r| r.class)).collect()
     }
 }
 
 pub(crate) fn enqueue(
-    queue: &mut AdmissionQueue<Pending>,
+    queue: &mut ClassedQueue<Pending>,
     rxs: &mut BTreeMap<u64, mpsc::Receiver<Event>>,
     report: &mut HarnessReport,
     at: f64,
     req: Request,
+    class: usize,
 ) {
     let id = req.id;
     let (tx, rx) = mpsc::channel();
     rxs.insert(id, rx);
-    report.requests.insert(id, RequestRecord::new(id, at));
-    if queue.try_push(Pending::new(req, tx)).is_err() {
+    report.requests.insert(id, RequestRecord::new(id, at, class));
+    if let Err(p) = queue.try_push(class, Pending::with_class(req, tx, class)) {
+        // a saturated queue makes room for a higher-priority arrival by
+        // shedding the newest lowest-priority queued request
+        if let Some((_, victim)) = queue.evict_lower(class) {
+            let vid = victim.req.id;
+            report.shed.push(vid);
+            if let Some(rec) = report.requests.get_mut(&vid) {
+                rec.error = Some("shed: preempted by higher-priority arrival".into());
+            }
+            queue
+                .try_push(class, p)
+                .unwrap_or_else(|_| unreachable!("eviction freed a slot"));
+            return;
+        }
         report.rejected.push(id);
         if let Some(rec) = report.requests.get_mut(&id) {
             rec.error = Some("admission queue full".into());
         }
     }
+}
+
+/// Record an arrival the SLO admission gate dropped on the floor: the
+/// client is answered immediately (error record), nothing is queued.
+fn shed_arrival(report: &mut HarnessReport, at: f64, req: Request, class: usize) {
+    let id = req.id;
+    let mut rec = RequestRecord::new(id, at, class);
+    rec.error = Some("shed: predicted SLO violation, low-priority load dropped".into());
+    report.requests.insert(id, rec);
+    report.shed.push(id);
 }
 
 pub(crate) fn absorb(
@@ -317,7 +339,7 @@ pub fn run_single<E: Executor>(
     validate_trace(&script);
     script.sort_by(|a, b| a.at().total_cmp(&b.at()));
     let mut report = HarnessReport::default();
-    let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(queue_depth);
+    let mut queue: ClassedQueue<Pending> = ClassedQueue::new(1, queue_depth);
     let mut rxs: BTreeMap<u64, mpsc::Receiver<Event>> = BTreeMap::new();
     let mut idle_offset = 0.0f64;
     let mut cursor = 0usize;
@@ -331,8 +353,8 @@ pub fn run_single<E: Executor>(
             let ev = script[cursor].clone();
             cursor += 1;
             match ev {
-                TraceEvent::Arrive { at, req, .. } => {
-                    enqueue(&mut queue, &mut rxs, &mut report, at, req);
+                TraceEvent::Arrive { at, req, class, .. } => {
+                    enqueue(&mut queue, &mut rxs, &mut report, at, req, class);
                 }
                 TraceEvent::Degrade { cores, fraction, .. } => {
                     batcher.engine.rt.exec.inject_background(&cores, fraction);
@@ -361,16 +383,21 @@ pub fn run_single<E: Executor>(
         };
         if may_admit {
             while batcher.has_capacity() {
-                let Some(p) = queue.pop() else { break };
+                let Some((_, p)) = queue.pop() else { break };
                 let id = p.req.id;
+                let class = p.class;
+                let before = batcher.admitted();
                 match batcher.admit(p) {
                     Ok(()) => {
+                        if batcher.admitted() > before {
+                            report.admit_order.push((id, class));
+                        }
                         if let Some(rec) = report.requests.get_mut(&id) {
                             rec.admitted_at = Some(now);
                         }
                     }
                     Err(p) => {
-                        queue.push_front(p);
+                        queue.push_front(class, p);
                         break;
                     }
                 }
@@ -384,34 +411,69 @@ pub fn run_single<E: Executor>(
     report
 }
 
-/// Drive a dynamic fleet end-to-end: `Connect`/`Disconnect` trace events
-/// admit/finish coordinator streams (epoch bump → fleet rebuild, in-flight
-/// sessions migrating), `Arrive` events feed the shared admission queue,
-/// `Degrade` events start background loads on physical cores (re-applied
-/// to whichever lease holds each core after every rebuild). The caller
-/// builds the [`Coordinator`] — cores-only or heterogeneous — and passes
-/// the [`DriftMonitor`] the production supervisor would run with
-/// ([`DriftMonitor::disabled`] for membership-only scenarios): after each
-/// accepted observation the monitor is consulted exactly like
-/// `serve_dynamic`'s idle tick, and a past-threshold skew triggers the
-/// live `rebalance()` + rebuild + migration sequence. After every rebuild,
-/// each batcher's pre-rebuild measurement is replayed against the
-/// coordinator — exactly the in-flight-observation race a live server
-/// has — and counted as dropped/accepted in the report.
+/// Legacy knob-level fleet harness, kept so existing tests and benches
+/// compile and measure unchanged: wraps the passed knobs into a
+/// single-class, router-off [`ServingPolicy`] and runs [`run_trace`] —
+/// which then behaves exactly like the pre-policy harness.
 pub fn run_fleet<E: Executor>(
-    mut coord: Coordinator,
+    coord: Coordinator,
     factory: &EngineFactory<E>,
     opts: BatcherOpts,
     queue_depth: usize,
-    mut monitor: DriftMonitor,
+    monitor: DriftMonitor,
+    trace: Vec<TraceEvent>,
+) -> HarnessReport {
+    let policy = ServingPolicy::from_server_parts(
+        opts.max_batch,
+        opts.prefill_chunk,
+        queue_depth,
+        super::queue::AdmissionPolicy::Reject,
+        monitor.threshold,
+        monitor.cooldown,
+    );
+    run_trace(coord, factory, &policy, trace)
+}
+
+/// Drive a dynamic fleet end-to-end under one [`ServingPolicy`]:
+/// `Connect`/`Disconnect` trace events admit/finish coordinator streams
+/// (epoch bump → fleet rebuild, in-flight sessions migrating), `Arrive`
+/// events feed the priority-classed admission queue — through the policy's
+/// [`SloGate`], which sheds low-priority arrivals when the learned service
+/// rate predicts a higher-priority SLO miss — and `Degrade` events start
+/// background loads on physical cores (re-applied to whichever lease holds
+/// each core after every rebuild). The caller builds the [`Coordinator`] —
+/// cores-only or heterogeneous; the policy's drift thresholds are consulted
+/// exactly like `serve_dynamic`'s idle tick, and a past-threshold skew
+/// triggers the live `rebalance()` + rebuild + migration sequence.
+///
+/// With [`ServingPolicy::router`] set, a [`StrategyRouter`] watches the
+/// arrival mix and switches the fleet's [`Strategy`] live: each switch is
+/// an `apply_strategy` epoch bump riding the same rebuild path a
+/// membership change takes, so every in-flight session migrates
+/// bit-identically (property-tested against the static-config oracle).
+/// After every rebuild, each batcher's pre-rebuild measurement is replayed
+/// against the coordinator — exactly the in-flight-observation race a live
+/// server has — and counted as dropped/accepted in the report.
+pub fn run_trace<E: Executor>(
+    mut coord: Coordinator,
+    factory: &EngineFactory<E>,
+    policy: &ServingPolicy,
     mut trace: Vec<TraceEvent>,
 ) -> HarnessReport {
     validate_trace(&trace);
     trace.sort_by(|a, b| a.at().total_cmp(&b.at()));
+    if let Some(mode) = policy.mode {
+        coord.set_exec_mode(mode);
+    }
+    let mut opts = policy.batcher_opts();
+    let mut monitor = policy.drift_monitor();
+    let candidates = coord.strategy_candidates(opts.max_batch, opts.prefill_chunk);
+    let mut router = StrategyRouter::from_policy(policy, &candidates);
+    let mut slo = SloGate::new();
     let mut report = HarnessReport::default();
     let mut batchers: Vec<LeaseBatcher<E>> = Vec::new();
     let mut offsets: Vec<f64> = Vec::new();
-    let mut queue: AdmissionQueue<Pending> = AdmissionQueue::new(queue_depth);
+    let mut queue: ClassedQueue<Pending> = ClassedQueue::new(policy.n_classes(), policy.queue_depth);
     let mut rxs: BTreeMap<u64, mpsc::Receiver<Event>> = BTreeMap::new();
     // background loads by physical core — they outlive any one fleet
     let mut degraded: Vec<(Vec<usize>, f64)> = Vec::new();
@@ -470,8 +532,21 @@ pub fn run_fleet<E: Executor>(
                 let ev = trace[cursor].clone();
                 cursor += 1;
                 match ev {
-                    TraceEvent::Arrive { at, req, .. } => {
-                        enqueue(&mut queue, &mut rxs, &mut report, at, req)
+                    TraceEvent::Arrive { at, req, class, .. } => {
+                        // the router reasons about *offered* load, so shed
+                        // arrivals count toward its decision window too
+                        if let Some(r) = router.as_mut() {
+                            r.note_arrival(req.prompt.len(), req.max_new_tokens);
+                        }
+                        let backlog: f64 = queue
+                            .iter()
+                            .map(|(_, p)| (p.req.prompt.len() + p.req.max_new_tokens) as f64)
+                            .sum();
+                        if slo.should_shed(policy, class, backlog) {
+                            shed_arrival(&mut report, at, req, class);
+                        } else {
+                            enqueue(&mut queue, &mut rxs, &mut report, at, req, class);
+                        }
                     }
                     TraceEvent::Connect { stream, .. } => connects.push(stream),
                     TraceEvent::Disconnect { stream, .. } => disconnects.push(stream),
@@ -506,18 +581,51 @@ pub fn run_fleet<E: Executor>(
         }
 
         let (i, mut clock) = pick.unwrap();
+        // the router's decision point — the same place the live supervisor
+        // ticks: between rounds, before the next batch is admitted, so a
+        // switch never runs fresh work under the outgoing strategy
+        if let Some(r) = router.as_mut() {
+            let device_share = coord
+                .leases()
+                .find(|l| !l.accels().is_empty())
+                .map(|l| coord.split_ratio(l));
+            if let Some(strat) = r.decide(clock, device_share) {
+                opts = BatcherOpts { max_batch: strat.max_batch, prefill_chunk: strat.prefill_chunk };
+                // rebuild at the fleet's latest clock: a lease running
+                // ahead must not have its timeline rewound by the switch
+                let now = (0..batchers.len())
+                    .map(|j| offsets[j] + batchers[j].engine.kernel_secs)
+                    .fold(clock, f64::max);
+                rebuild(
+                    &mut coord,
+                    factory,
+                    opts,
+                    &mut batchers,
+                    &mut offsets,
+                    FleetChange::Strategy(strat),
+                    &degraded,
+                    now,
+                    &mut report,
+                );
+                pairs.clear();
+                report.strategy_switches.push((now, strat));
+                continue;
+            }
+        }
         report.queue_depth_samples.push(queue.len());
         let was_idle = batchers[i].is_idle();
         while batchers[i].role() != PhaseRole::Decode
             && batchers[i].has_capacity()
             && pair_may_admit(&batchers, &pairs, &coord, i)
         {
-            let Some(p) = queue.pop() else { break };
+            let Some((_, p)) = queue.pop() else { break };
             let id = p.req.id;
+            let class = p.class;
             let before = batchers[i].admitted();
             match batchers[i].admit(p) {
                 Ok(()) => {
                     if batchers[i].admitted() > before {
+                        report.admit_order.push((id, class));
                         if let Some((stream, is_dev)) = pair_side(&batchers[i]) {
                             let slot = pairs.entry(stream).or_default();
                             if is_dev {
@@ -542,7 +650,7 @@ pub fn run_fleet<E: Executor>(
                     }
                 }
                 Err(p) => {
-                    queue.push_front(p);
+                    queue.push_front(class, p);
                     break;
                 }
             }
@@ -550,6 +658,7 @@ pub fn run_fleet<E: Executor>(
         let step = batchers[i].step();
         let (stream, bus) = bandwidth_key(&batchers[i]);
         absorb(&mut report, &step, offsets[i], stream, bus);
+        slo.observe(step.decoded_tokens, step.kernel_secs);
         // live measurement → strength table (current lease, current epoch)
         if let Some((stream, is_dev)) = pair_side(&batchers[i]) {
             // async pair: park this side's round and fold both sides into
@@ -705,6 +814,9 @@ pub(crate) fn drain_handoffs<E: Executor>(
 enum FleetChange {
     Membership { connects: Vec<StreamId>, disconnects: Vec<StreamId> },
     Rebalance,
+    /// a router switch: `Coordinator::apply_strategy` re-issues every
+    /// live lease under the new mode (epoch bump)
+    Strategy(Strategy),
 }
 
 /// Re-start the scripted background loads on a (possibly fresh) fleet:
@@ -760,6 +872,9 @@ fn rebuild<E: Executor>(
             }
         }
         FleetChange::Rebalance => coord.rebalance(),
+        FleetChange::Strategy(s) => {
+            coord.apply_strategy(&s);
+        }
     }
     let mut fresh = fleet::build_batchers(coord, factory, opts);
     for a in fleet::distribute(carried, &mut fresh) {
@@ -830,6 +945,8 @@ mod tests {
         assert!(r2.ttft().unwrap() < 0.01, "ttft {:?}", r2.ttft());
         assert_eq!(rep.total_decoded, 6);
         assert!(rep.makespan > 0.5);
+        // both admissions are on record, in order, in the default class
+        assert_eq!(rep.admit_order, vec![(1, 0), (2, 0)]);
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! Shared scripted-trace vocabulary for every serving harness tier.
+//!
+//! The single-machine harness (`server::testing`) and the cluster harness
+//! (`cluster::harness`) grew separate trace dialects — `Degrade` spoke
+//! lease-local core ids, `DegradeMachine` spoke whole machines, and the
+//! arrival/connect events were re-declared per tier. This module is the one
+//! event core both tiers consume, so a router scenario scripted once can be
+//! replayed unchanged at either tier: single/fleet runs interpret
+//! [`TraceEvent::DegradeMachine`] as machine 0 and ignore other machines,
+//! the cluster harness interprets [`TraceEvent::Degrade`] as machine-global
+//! core ids on machine 0.
+//!
+//! Arrivals carry a *priority class* (0 = highest). Legacy scripts built
+//! through [`TraceEvent::arrive`] get class 0; multi-tenant scripts use
+//! [`TraceEvent::arrive_class`] and the per-class admission queues of
+//! [`crate::router::ServingPolicy`].
+
+use crate::coordinator::StreamId;
+use crate::util::rng::Rng;
+
+use super::protocol::Request;
+
+/// One scripted client action at a virtual-time instant (seconds).
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    /// a stream's connection opens (fleet mode: `Coordinator::admit`)
+    Connect { at: f64, stream: StreamId },
+    /// a request arrives (single mode: `stream` is ignored); `class` is the
+    /// admission priority class, 0 = highest priority
+    Arrive { at: f64, stream: StreamId, req: Request, class: usize },
+    /// a stream's connection closes (fleet mode: `Coordinator::finish`)
+    Disconnect { at: f64, stream: StreamId },
+    /// a background process shows up and steals `fraction` of the given
+    /// cores' cycles from `at` on. The load follows the *physical* core:
+    /// in fleet mode `cores` are machine-global ids, re-applied to
+    /// whichever lease holds each core after every rebuild; in single mode
+    /// they are the engine's worker indices.
+    Degrade { at: f64, cores: Vec<usize>, fraction: f64 },
+    /// a *whole machine* degrades: every core of cluster machine `machine`
+    /// loses `fraction` of its cycles from `at` on (the cluster harness's
+    /// machine-scoped trace event — see `cluster::harness::run_cluster`).
+    /// Single/fleet runs treat it as a whole-machine `Degrade` when
+    /// `machine` is 0 (they drive exactly one machine) and ignore it
+    /// otherwise.
+    DegradeMachine { at: f64, machine: usize, fraction: f64 },
+}
+
+impl TraceEvent {
+    pub fn at(&self) -> f64 {
+        match self {
+            TraceEvent::Connect { at, .. }
+            | TraceEvent::Arrive { at, .. }
+            | TraceEvent::Disconnect { at, .. }
+            | TraceEvent::Degrade { at, .. }
+            | TraceEvent::DegradeMachine { at, .. } => *at,
+        }
+    }
+
+    /// Convenience constructor for arrival events (priority class 0).
+    pub fn arrive(at: f64, stream: StreamId, req: Request) -> TraceEvent {
+        TraceEvent::Arrive { at, stream, req, class: 0 }
+    }
+
+    /// Arrival with an explicit priority class (0 = highest priority).
+    pub fn arrive_class(at: f64, stream: StreamId, req: Request, class: usize) -> TraceEvent {
+        TraceEvent::Arrive { at, stream, req, class }
+    }
+
+    /// The arrival's priority class (0 for every non-arrival event).
+    pub fn class(&self) -> usize {
+        match self {
+            TraceEvent::Arrive { class, .. } => *class,
+            _ => 0,
+        }
+    }
+}
+
+/// Exponential inter-arrival instants (a Poisson process) from the repo's
+/// deterministic RNG — seeded, replayable arrival scripts.
+pub fn poisson_arrivals(seed: u64, n: usize, mean_gap: f64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += -(1.0 - rng.f64()).ln() * mean_gap;
+        out.push(t);
+    }
+    out
+}
+
+/// A script with a NaN/∞ event time has no defined delivery order — fail
+/// at trace construction with a pointed message instead of letting a sort
+/// comparator panic (or worse, silently misorder) deep in the run.
+pub(crate) fn validate_trace(trace: &[TraceEvent]) {
+    for (i, ev) in trace.iter().enumerate() {
+        assert!(
+            ev.at().is_finite(),
+            "trace event {i} has a non-finite time ({}): fix the script — \
+             event times must be finite seconds",
+            ev.at()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request { id, prompt: vec![1], max_new_tokens: 1 }
+    }
+
+    #[test]
+    fn arrive_defaults_to_class_zero() {
+        let ev = TraceEvent::arrive(1.0, 3, req(7));
+        assert_eq!(ev.class(), 0);
+        assert_eq!(ev.at(), 1.0);
+        let ev = TraceEvent::arrive_class(2.0, 3, req(8), 2);
+        assert_eq!(ev.class(), 2);
+        // non-arrival events have no class
+        assert_eq!(TraceEvent::Connect { at: 0.0, stream: 1 }.class(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn validate_rejects_non_finite_times() {
+        validate_trace(&[TraceEvent::arrive(f64::INFINITY, 0, req(1))]);
+    }
+}

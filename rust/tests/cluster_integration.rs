@@ -21,10 +21,10 @@ use dynpar::engine::Engine;
 use dynpar::model::{ModelConfig, ModelWeights};
 use dynpar::perf::PerfConfig;
 use dynpar::sched::DynamicScheduler;
+use dynpar::router::ServingPolicy;
 use dynpar::server::fleet::{DriftMonitor, EngineFactory};
 use dynpar::server::protocol::Request;
 use dynpar::server::testing::TraceEvent;
-use dynpar::server::BatcherOpts;
 use dynpar::sim::{SimConfig, SimExecutor};
 
 const WEIGHTS_SEED: u64 = 41;
@@ -111,14 +111,14 @@ fn degrade_trace(degrade: bool) -> Vec<TraceEvent> {
 
 fn serve(monitor: DriftMonitor, degrade: bool) -> ClusterReport {
     let (cluster, factories) = two_machines();
-    run_cluster(
-        cluster,
-        &factories,
-        BatcherOpts { max_batch: 4, prefill_chunk: 4 },
-        64,
-        monitor,
-        degrade_trace(degrade),
-    )
+    let policy = ServingPolicy::builder()
+        .max_batch(4)
+        .prefill_chunk(4)
+        .queue_depth(64)
+        .drift(monitor.threshold, monitor.cooldown)
+        .build()
+        .expect("test policy validates");
+    run_cluster(cluster, &factories, &policy, degrade_trace(degrade))
 }
 
 #[test]

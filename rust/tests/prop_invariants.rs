@@ -1188,6 +1188,244 @@ fn prop_cluster_partition_is_balanced_exactly_once_and_capability_safe() {
     );
 }
 
+/// Live strategy switching never changes the numbers: a random mixed
+/// trace whose arrival mix forces the [`dynpar::router::StrategyRouter`]
+/// through at least two strategy switches (chat → burst → chat) produces
+/// token streams bit-identical to a solo `Engine::generate` on the same
+/// weights — every switch is a fleet rebuild whose in-flight sessions
+/// migrate across strategies without perturbing a single token.
+#[test]
+fn prop_router_switches_keep_streams_bit_identical_to_solo_oracle() {
+    use dynpar::coordinator::{ExecMode, Lease};
+    use dynpar::engine::Engine;
+    use dynpar::model::{ModelConfig, ModelWeights};
+    use dynpar::router::{RouterConfig, ServingPolicy};
+    use dynpar::server::fleet::EngineFactory;
+    use dynpar::server::protocol::Request;
+    use dynpar::server::testing::{run_trace, TraceEvent};
+    use dynpar::sim::xpu::XpuDispatch;
+    use std::sync::Arc;
+
+    prop::check_with(
+        "router_switch_streams_identical",
+        PropConfig { iters: 6, seed: 0x5111C4 },
+        &mut |rng| {
+            let spec = presets::preset_by_name(
+                ["core_12900k", "ultra_125h"][rng.below(2) as usize],
+            )
+            .unwrap();
+            let cfg = ModelConfig::micro();
+            let weights = Arc::new(ModelWeights::random_init(&cfg, rng.next_u64()));
+            let factory: EngineFactory<SimExecutor> = {
+                let spec = spec.clone();
+                let cfg = cfg.clone();
+                let weights = Arc::clone(&weights);
+                Box::new(move |lease: &Lease, _dispatch: XpuDispatch| {
+                    let exec = lease.sim_executor(
+                        &spec,
+                        SimConfig { execute_real: true, ..SimConfig::noiseless() },
+                    );
+                    Engine::new(
+                        cfg.clone(),
+                        Arc::clone(&weights),
+                        exec,
+                        scheduler_by_name("dynamic").unwrap(),
+                        PerfConfig::default(),
+                    )
+                })
+            };
+            let policy = ServingPolicy::builder()
+                .max_batch(1 + rng.below(3) as usize)
+                .prefill_chunk(1 + rng.below(5) as usize)
+                .queue_depth(64)
+                .drift(f64::INFINITY, 0)
+                .router(RouterConfig { window: 4, cooldown_secs: 0.0, ..RouterConfig::default() })
+                .build()
+                .unwrap();
+            // three window-sized waves: decode-heavy (prefill share ~0.2),
+            // then prompt-heavy (~0.9), then decode-heavy again — the
+            // router must cross both Schmitt thresholds
+            let mut trace = vec![TraceEvent::Connect { at: 0.0, stream: 0 }];
+            let mut reqs = Vec::new();
+            for wave in 0..3u64 {
+                for i in 0..4u64 {
+                    let (plen, max_new) = if wave == 1 {
+                        (12 + rng.below(6) as usize, 1 + rng.below(2) as usize)
+                    } else {
+                        (1 + rng.below(3) as usize, 8 + rng.below(4) as usize)
+                    };
+                    let prompt: Vec<u32> = (0..plen).map(|_| rng.below(128) as u32).collect();
+                    let req = Request { id: wave * 4 + i, prompt, max_new_tokens: max_new };
+                    let at = wave as f64 * 2e-3 + rng.uniform(1e-6, 1e-4);
+                    trace.push(TraceEvent::arrive(at, 0, req.clone()));
+                    reqs.push(req);
+                }
+            }
+            let rep = run_trace(
+                Coordinator::new(spec.clone(), AllocPolicy::Balanced),
+                &factory,
+                &policy,
+                trace,
+            );
+            if !rep.all_finished() {
+                return Err("not every request finished".into());
+            }
+            // the property is about switches: the trace must actually force
+            // them, or the bit-identity claim is vacuous
+            let modes: Vec<ExecMode> =
+                rep.strategy_switches.iter().map(|(_, s)| s.mode).collect();
+            if modes.len() < 2 {
+                return Err(format!("router took {modes:?}, expected >= 2 switches"));
+            }
+            for r in &reqs {
+                let exec = SimExecutor::new(
+                    spec.clone(),
+                    SimConfig { execute_real: true, ..SimConfig::noiseless() },
+                );
+                let mut e = Engine::new(
+                    cfg.clone(),
+                    Arc::clone(&weights),
+                    exec,
+                    scheduler_by_name("dynamic").unwrap(),
+                    PerfConfig::default(),
+                );
+                let mut s = e.new_session();
+                let (expect, _) = e.generate(&mut s, &r.prompt, r.max_new_tokens);
+                if rep.tokens_of(r.id) != &expect[..] {
+                    return Err(format!(
+                        "request {} diverged across strategy switches {modes:?}",
+                        r.id
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The priority-classed admission queue under random interleavings of
+/// push / pop / front-requeue / eviction: pop always serves the
+/// highest-priority non-empty lane and never reorders within a class
+/// (FIFO-per-class), eviction only ever takes the newest item of a
+/// strictly lower-priority lane, and the shared depth bound is exact.
+#[test]
+fn prop_classed_queue_is_fifo_per_class() {
+    use dynpar::server::ClassedQueue;
+    use std::collections::VecDeque;
+
+    prop::check_with(
+        "classed_queue_fifo_per_class",
+        PropConfig { iters: 50, seed: 0xF1F0 },
+        &mut |rng| {
+            let n_classes = 1 + rng.below(4) as usize;
+            let depth = 2 + rng.below(14) as usize;
+            let mut q: ClassedQueue<u64> = ClassedQueue::new(n_classes, depth);
+            let mut model: Vec<VecDeque<u64>> = vec![VecDeque::new(); n_classes];
+            let mut next_seq = 0u64;
+            for _ in 0..150 {
+                match rng.below(6) {
+                    0..=2 => {
+                        // out-of-range classes must clamp to the lowest lane
+                        let class = rng.below(n_classes as u64 + 2) as usize;
+                        let lane = class.min(n_classes - 1);
+                        let seq = next_seq;
+                        next_seq += 1;
+                        match q.try_push(class, seq) {
+                            Ok(()) => model[lane].push_back(seq),
+                            Err(item) => {
+                                if item != seq {
+                                    return Err("bounced item mangled".into());
+                                }
+                                let total: usize = model.iter().map(|l| l.len()).sum();
+                                if total < depth {
+                                    return Err(format!(
+                                        "bounced at {total} of {depth} queued"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    3 | 4 => match q.pop() {
+                        Some((c, seq)) => {
+                            if model[..c].iter().any(|l| !l.is_empty()) {
+                                return Err(format!(
+                                    "pop served class {c} past a higher-priority lane"
+                                ));
+                            }
+                            if model[c].pop_front() != Some(seq) {
+                                return Err(format!("class {c} reordered within the lane"));
+                            }
+                            // the failed-admit path: requeue at the front,
+                            // which must restore the exact drain order
+                            if rng.chance(0.3) {
+                                q.push_front(c, seq);
+                                model[c].push_front(seq);
+                            }
+                        }
+                        None => {
+                            if model.iter().any(|l| !l.is_empty()) {
+                                return Err("pop returned None on a non-empty queue".into());
+                            }
+                        }
+                    },
+                    _ => {
+                        let class = rng.below(n_classes as u64) as usize;
+                        match q.evict_lower(class) {
+                            Some((c, seq)) => {
+                                if c <= class {
+                                    return Err(format!(
+                                        "evict_lower({class}) shed equal-or-higher class {c}"
+                                    ));
+                                }
+                                let lowest = (class + 1..n_classes)
+                                    .rev()
+                                    .find(|&i| !model[i].is_empty());
+                                if lowest != Some(c) {
+                                    return Err(format!(
+                                        "evicted class {c}, lowest-priority was {lowest:?}"
+                                    ));
+                                }
+                                if model[c].pop_back() != Some(seq) {
+                                    return Err(format!(
+                                        "evicted an older item of class {c}, not the newest"
+                                    ));
+                                }
+                            }
+                            None => {
+                                if model[class + 1..].iter().any(|l| !l.is_empty()) {
+                                    return Err(format!(
+                                        "evict_lower({class}) found nothing to shed"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+                if q.len() != model.iter().map(|l| l.len()).sum::<usize>() {
+                    return Err("queue length diverged from the model".into());
+                }
+                for (c, lane) in model.iter().enumerate() {
+                    if q.len_of(c) != lane.len() {
+                        return Err(format!("lane {c} length diverged"));
+                    }
+                }
+            }
+            // drain: the remaining order is exactly priority-major,
+            // FIFO-per-class minor
+            let drained: Vec<(usize, u64)> = std::iter::from_fn(|| q.pop()).collect();
+            let expect: Vec<(usize, u64)> = model
+                .iter()
+                .enumerate()
+                .flat_map(|(c, lane)| lane.iter().map(move |&s| (c, s)))
+                .collect();
+            if drained != expect {
+                return Err(format!("drain order {drained:?} != model {expect:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_cluster_repartition_moves_are_applicable_and_drain_dead_machines() {
     // repartition() after a capability change: the reported moves apply

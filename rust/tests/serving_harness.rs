@@ -268,6 +268,120 @@ fn mid_run_stream_arrival_and_departure_rebuild_the_fleet() {
     assert!(report.observations_accepted > 0);
 }
 
+// ---- strategy-router scenario ----
+
+/// Live strategy routing end-to-end through the policy API: a scripted
+/// chat → burst → chat trace drives the [`dynpar::router::StrategyRouter`]
+/// through both Schmitt thresholds (IntraKernel → Disaggregated → back),
+/// every switch is a fleet rebuild whose in-flight sessions migrate with
+/// bit-identical token streams, and a class-0 request landing inside the
+/// class-1 burst is admitted ahead of the queued lower-priority work.
+#[test]
+fn strategy_router_switches_live_with_bit_identical_streams() {
+    use dynpar::coordinator::ExecMode;
+    use dynpar::router::{RouterConfig, ServingPolicy};
+    use dynpar::server::testing::run_trace;
+
+    let machine = presets::core_12900k();
+    let factory = lease_factory();
+    let chat = |id: u64| Request {
+        id,
+        prompt: vec![id as u32 + 1, 3, 9],
+        max_new_tokens: 12,
+    };
+    let burst = |id: u64| Request {
+        id,
+        prompt: (0..20).map(|k| (id as u32 * 5 + k) % 128).collect(),
+        max_new_tokens: 2,
+    };
+    let mut trace = vec![TraceEvent::Connect { at: 0.0, stream: 0 }];
+    // phase A: decode-heavy (prefill share 0.2) — the router holds the
+    // blended strategy
+    for i in 0..4u64 {
+        trace.push(TraceEvent::arrive(1.0e-6 + i as f64 * 1.0e-5, 0, chat(i)));
+    }
+    // phase B: prompt-heavy class-1 burst (share 0.91) — switch to
+    // Disaggregated; one class-0 chat request lands inside the burst
+    for i in 0..4u64 {
+        trace.push(TraceEvent::arrive_class(2.0e-3 + i as f64 * 1.0e-6, 0, burst(4 + i), 1));
+    }
+    trace.push(TraceEvent::arrive(2.0e-3 + 5.0e-6, 0, chat(8)));
+    // phase C: decode-heavy again — switch back
+    for i in 0..4u64 {
+        trace.push(TraceEvent::arrive(4.0e-3 + i as f64 * 1.0e-5, 0, chat(9 + i)));
+    }
+    let policy = ServingPolicy::builder()
+        .max_batch(2)
+        .prefill_chunk(4)
+        .queue_depth(64)
+        .drift(f64::INFINITY, 0)
+        .slo(0, f64::INFINITY)
+        .class("batch", f64::INFINITY, true)
+        .router(RouterConfig { window: 4, cooldown_secs: 0.0, ..RouterConfig::default() })
+        .build()
+        .expect("test policy validates");
+    let report = run_trace(
+        Coordinator::new(machine, AllocPolicy::Balanced),
+        &factory,
+        &policy,
+        trace,
+    );
+
+    // the router crossed both thresholds, exactly once each
+    let modes: Vec<ExecMode> = report.strategy_switches.iter().map(|(_, s)| s.mode).collect();
+    assert_eq!(
+        modes,
+        vec![ExecMode::Disaggregated, ExecMode::IntraKernel],
+        "switches {:?}",
+        report.strategy_switches
+    );
+    assert!(
+        report.strategy_switches.windows(2).all(|w| w[1].0 > w[0].0),
+        "switch times not increasing: {:?}",
+        report.strategy_switches
+    );
+    // connect + two strategy switches, each a real rebuild
+    assert_eq!(report.rebuilds, 3);
+
+    // class-0 chat landed while both engine slots were chewing the burst:
+    // it must jump the two still-queued class-1 requests
+    let pos = |id: u64| {
+        report
+            .admit_order
+            .iter()
+            .position(|&(i, _)| i == id)
+            .unwrap_or_else(|| panic!("request {id} never admitted"))
+    };
+    assert!(
+        pos(8) < pos(6) && pos(8) < pos(7),
+        "class-0 request did not jump the class-1 backlog: {:?}",
+        report.admit_order
+    );
+    // nothing was shed: class 0 has no finite TTFT target to protect
+    assert!(report.shed.is_empty(), "unexpected sheds: {:?}", report.shed);
+
+    // every stream bit-identical to a solo run even though every in-flight
+    // session crossed at least one strategy migration
+    assert!(report.all_finished());
+    let oracle = |prompt: &[u32], max_new: usize| {
+        let mut engine = full_machine_engine();
+        let mut session = engine.new_session();
+        engine.generate(&mut session, prompt, max_new).0
+    };
+    for id in 0..13u64 {
+        let (prompt, max_new) = if (4..8).contains(&id) {
+            ((0..20).map(|k| (id as u32 * 5 + k) % 128).collect::<Vec<u32>>(), 2)
+        } else {
+            (vec![id as u32 + 1, 3, 9], 12)
+        };
+        assert_eq!(
+            report.tokens_of(id),
+            &oracle(&prompt, max_new)[..],
+            "request {id} diverged across a strategy switch"
+        );
+    }
+}
+
 // ---- background-drift scenario ----
 
 /// A 12900K with an abundant memory subsystem: every serving kernel of the
